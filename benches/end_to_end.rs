@@ -1,0 +1,77 @@
+//! Bench: Table 6.1 end to end — the three execution schemes at paper
+//! scale through the simulator, plus the *real* coordinator step (PJRT)
+//! on a reduced workload. `cargo bench --offline --bench end_to_end`
+
+use repro::coordinator::experiments::paper_mesh;
+use repro::coordinator::node::WorkerBackend;
+use repro::coordinator::HeteroRun;
+use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+use repro::partition::{nested_partition, splice, DeviceKind};
+use repro::runtime::ArtifactManifest;
+use repro::sim::{simulate, Cluster, Scheme};
+use repro::solver::analytic::standing_wave;
+use repro::solver::{BlockState, LglBasis};
+use repro::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new(1, 5);
+
+    // ---- simulated Table 6.1 at 1 and 64 nodes --------------------------
+    for nodes in [1usize, 64] {
+        let mesh = paper_mesh(nodes, 8192);
+        let cluster = Cluster::stampede(nodes);
+        let mut walls = (0.0, 0.0, 0.0);
+        let r = b.run(&format!("table6_1_sim_{nodes}nodes"), || {
+            let base = simulate(&cluster, &mesh, 7, 118, Scheme::BaselineMpi { ranks_per_node: 8 });
+            let nest = simulate(&cluster, &mesh, 7, 118, Scheme::Nested { mic_fraction: None });
+            let off = simulate(&cluster, &mesh, 7, 118, Scheme::TaskOffload);
+            walls = (base.wall_s, nest.wall_s, off.wall_s);
+        });
+        r.report();
+        println!(
+            "  {nodes} node(s): baseline {:.0} s | nested {:.0} s ({:.1}x) | task-offload {:.0} s",
+            walls.0,
+            walls.1,
+            walls.0 / walls.1,
+            walls.2
+        );
+    }
+
+    // ---- real coordinator step (PJRT) ------------------------------------
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP real-step bench: artifacts not built");
+        return;
+    }
+    let order = 3;
+    let mesh = unit_cube_geometry(4);
+    let node_part = splice(&mesh, 1);
+    let np = nested_partition(&mesh, &node_part, 0.12);
+    let owners = np.owners();
+    let (lblocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut states = Vec::new();
+    let mut devices = Vec::new();
+    for lb in &lblocks {
+        let meta = manifest.pick_stage(order, lb.len().max(1), lb.halo_len.max(1)).unwrap();
+        let mut st = BlockState::from_local_block(lb, order, meta.k, meta.halo);
+        st.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+        states.push(st);
+        devices.push(if lb.owner % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic });
+    }
+    let mut run = HeteroRun::launch(
+        &lblocks, states, plan, &devices,
+        WorkerBackend::Pjrt { artifact_dir: dir }, order,
+    )
+    .unwrap();
+    let r = b.run("hetero_step_pjrt_n3_64elems", || {
+        run.step(1e-4).unwrap();
+    });
+    r.report_throughput(mesh.len() * 5, "elem-stages");
+    println!(
+        "  stage wall {:.3} s, exchange wall {:.3} s over {} steps",
+        run.stage_wall_s, run.exchange_wall_s, run.steps_taken
+    );
+}

@@ -1,0 +1,41 @@
+//! Bench: the partitioning pipeline at paper scale — Morton splice,
+//! onion-peeling nested split, stats, local-block extraction.
+//! `cargo bench --offline --bench partitioner`
+
+use repro::mesh::build_local_blocks;
+use repro::mesh::geometry::sweep_dims;
+use repro::partition::{nested_partition, partition_stats, splice};
+use repro::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new(1, 5);
+    for nodes in [1usize, 8, 64] {
+        let (dims, extent) = sweep_dims(nodes, 8192);
+        let mesh = repro::mesh::geometry::discontinuous_brick(dims, extent);
+        let k = mesh.len();
+        let r = b.run(&format!("splice_{nodes}n_{k}elems"), || {
+            let p = splice(&mesh, nodes);
+            std::hint::black_box(p.sizes());
+        });
+        r.report_throughput(k, "elems");
+        let node_part = splice(&mesh, nodes);
+        let r = b.run(&format!("nested_{nodes}n_{k}elems"), || {
+            let np = nested_partition(&mesh, &node_part, 0.62);
+            std::hint::black_box(np.node_counts.len());
+        });
+        r.report_throughput(k, "elems");
+        let np = nested_partition(&mesh, &node_part, 0.62);
+        let r = b.run(&format!("stats_{nodes}n_{k}elems"), || {
+            std::hint::black_box(partition_stats(&mesh, &np).total_pci_faces());
+        });
+        r.report_throughput(k, "elems");
+        if nodes <= 8 {
+            let owners = np.owners();
+            let r = b.run(&format!("blocks_{nodes}n_{k}elems"), || {
+                let (blocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
+                std::hint::black_box((blocks.len(), plan.total_faces()));
+            });
+            r.report_throughput(k, "elems");
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Bench: Fig 5.3's measured analogue — real in-process buffer copies
+//! (the halo fabric) timed across sizes, next to the calibrated PCI model.
+//! `cargo bench --offline --bench pci_transfer`
+
+use repro::costmodel::calib::stampede_pci;
+use repro::costmodel::pci::Direction;
+use repro::util::bench::Bench;
+
+fn main() {
+    let pci = stampede_pci();
+    let b = Bench::new(2, 10);
+    println!("real in-process copies (this machine) vs modeled Stampede PCI:");
+    let mut mb = 1usize;
+    while mb <= 1024 {
+        let bytes = mb << 20;
+        let src = vec![1.3f32; bytes / 4];
+        let mut dst = vec![0f32; bytes / 4];
+        let r = b.run(&format!("memcpy_{mb}MB"), || {
+            dst.copy_from_slice(&src);
+            std::hint::black_box(dst[0]);
+        });
+        let model_to = pci.transfer_time(bytes, Direction::ToDevice);
+        let model_from = pci.transfer_time(bytes, Direction::FromDevice);
+        println!(
+            "  model: to_mic {:.3} ms, from_mic {:.3} ms ({:.1} GB/s measured here)",
+            model_to * 1e3,
+            model_from * 1e3,
+            bytes as f64 / r.mean() / 1e9
+        );
+        mb *= 4;
+    }
+}

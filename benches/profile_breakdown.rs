@@ -1,0 +1,29 @@
+//! Bench: regenerate Fig 4.1 (baseline kernel breakdown) and time the
+//! simulator itself. `cargo bench --offline --bench profile_breakdown`
+
+use repro::coordinator::experiments::paper_mesh;
+use repro::coordinator::ProfileReport;
+use repro::sim::{simulate, Cluster, Scheme};
+use repro::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new(1, 5);
+    for nodes in [1usize, 8, 64] {
+        let mesh = paper_mesh(nodes, 8192);
+        let cluster = Cluster::stampede(nodes);
+        let mut last = None;
+        let r = b.run(&format!("simulate_fig4_1_{nodes}nodes"), || {
+            let rep = simulate(
+                &cluster, &mesh, 7, 118, Scheme::BaselineMpi { ranks_per_node: 8 },
+            );
+            last = Some(rep);
+        });
+        r.report_throughput(118 * nodes, "node-steps");
+        let rep = last.unwrap();
+        println!(
+            "{}",
+            ProfileReport::from_breakdown(&rep.breakdown)
+                .render(&format!("Fig 4.1 breakdown, {nodes} node(s), wall {:.0} s", rep.wall_s))
+        );
+    }
+}

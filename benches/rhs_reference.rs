@@ -1,0 +1,29 @@
+//! Bench: the pure-rust reference stage (the scalar-CPU kernel path).
+//! Reports element throughput per order — the numerator of the paper's
+//! baseline column. `cargo bench --offline --bench rhs_reference`
+
+use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+use repro::solver::basis::LglBasis;
+use repro::solver::reference::{stage, RefScratch};
+use repro::solver::state::BlockState;
+use repro::util::bench::Bench;
+
+fn main() {
+    let b = Bench::new(2, 8);
+    for order in [2usize, 3, 7] {
+        let n = if order >= 7 { 4 } else { 6 };
+        let mesh = unit_cube_geometry(n);
+        let owners = vec![0usize; mesh.len()];
+        let (lblocks, _) = build_local_blocks(&mesh, &owners, 1);
+        let basis = LglBasis::new(order);
+        let mut st = BlockState::from_local_block(&lblocks[0], order, mesh.len(), 8);
+        st.set_initial_condition(&basis, |x| {
+            [x[0].sin(), 0.0, 0.0, 0.0, 0.0, 0.0, x[1].cos(), 0.0, 0.0]
+        });
+        let mut scratch = RefScratch::new(&st);
+        let r = b.run(&format!("ref_stage_n{order}_k{}", mesh.len()), || {
+            stage(&mut st, &basis, &mut scratch, 1e-4, -0.5, 0.3);
+        });
+        r.report_throughput(mesh.len(), "elem-stages");
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench: one AOT stage through PJRT per (order, bucket) — the L3 hot
+//! path's compute call. The before/after rows in EXPERIMENTS.md §Perf
+//! come from here. `cargo bench --offline --bench runtime_stage`
+
+use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+use repro::runtime::{ArtifactManifest, PjrtRuntime};
+use repro::solver::basis::LglBasis;
+use repro::solver::state::BlockState;
+use repro::solver::StageBackend;
+use repro::util::bench::Bench;
+
+fn main() {
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("SKIP: artifacts not built (make artifacts)");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let b = Bench::new(2, 10);
+    for (order, n_side) in [(2usize, 4usize), (3, 4), (7, 4)] {
+        let mesh = unit_cube_geometry(n_side);
+        let owners = vec![0usize; mesh.len()];
+        let (lblocks, _) = build_local_blocks(&mesh, &owners, 1);
+        let Ok(meta) = rt.manifest.pick_stage(order, mesh.len(), 1) else {
+            println!("skip order {order}: no artifact bucket");
+            continue;
+        };
+        let (kb, hb) = (meta.k, meta.halo);
+        let basis = LglBasis::new(order);
+        let mut st = BlockState::from_local_block(&lblocks[0], order, kb, hb);
+        st.set_initial_condition(&basis, |x| {
+            [x[0].sin(), 0.0, 0.0, 0.0, 0.0, 0.0, x[1].cos(), 0.0, 0.0]
+        });
+        let mut backend = rt.stage_backend(&st).unwrap();
+        let r = b.run(&format!("pjrt_stage_n{order}_k{kb}"), || {
+            backend.stage(&mut st, 1e-4, -0.5, 0.3).unwrap();
+        });
+        r.report_throughput(mesh.len(), "elem-stages");
+    }
+}

@@ -1,0 +1,79 @@
+//! Explore the nested partitioning scheme: sweep node counts and MIC
+//! fractions, print per-node statistics, the Fig 5.4-style slice, and how
+//! the onion-peeled MIC surface compares to the ideal-cube lower bound.
+//!
+//! ```bash
+//! cargo run --release --example partition_explorer
+//! ```
+
+use repro::costmodel::calib;
+use repro::mesh::geometry::discontinuous_brick;
+use repro::partition::{
+    balance::mic_surface_faces, nested_partition, partition_stats, solve_mic_fraction, splice,
+    DeviceKind,
+};
+
+fn main() -> repro::Result<()> {
+    let n = 16;
+    let mesh = discontinuous_brick([n, n, n], [1.0, 1.0, 1.0]);
+    println!("mesh: {}^3 = {} elements\n", n, mesh.len());
+
+    // ---- sweep node counts at the balanced fraction ----------------------
+    println!("nodes  k/node  mic-frac  pci/node  ideal-cube  mpi/node(max)");
+    for nodes in [1usize, 2, 4, 8] {
+        let node_part = splice(&mesh, nodes);
+        let k_node = mesh.len() / nodes;
+        let sol = solve_mic_fraction(&calib::stampede_node(), 7, k_node);
+        let frac = sol.k_mic as f64 / k_node as f64;
+        let np = nested_partition(&mesh, &node_part, frac);
+        let st = partition_stats(&mesh, &np);
+        let pci_avg: f64 =
+            st.per_node.iter().map(|s| s.pci_faces as f64).sum::<f64>() / nodes as f64;
+        let mic_avg: f64 =
+            st.per_node.iter().map(|s| s.k_mic as f64).sum::<f64>() / nodes as f64;
+        println!(
+            "{nodes:>5}  {k_node:>6}  {frac:>8.3}  {pci_avg:>8.0}  {:>10.0}  {:>13}",
+            mic_surface_faces(mic_avg),
+            st.max_mpi_faces(),
+        );
+    }
+
+    // ---- sweep fractions on 4 nodes --------------------------------------
+    println!("\nfraction sweep (4 nodes): realized mic share + pci surface");
+    let node_part = splice(&mesh, 4);
+    println!("requested  realized  pci_total  interior_clipped");
+    for f in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let np = nested_partition(&mesh, &node_part, f);
+        let st = partition_stats(&mesh, &np);
+        let mic: usize = np.node_counts.iter().map(|c| c.1).sum();
+        let realized = mic as f64 / mesh.len() as f64;
+        println!(
+            "{f:>9.2}  {realized:>8.3}  {:>9}  {}",
+            st.total_pci_faces(),
+            if realized + 1e-9 < f { "yes" } else { "no" }
+        );
+    }
+
+    // ---- Fig 5.4 slice ----------------------------------------------------
+    println!("\nFig 5.4 mid-plane: digits = owning node (CPU), '*' = MIC interior");
+    let sol = solve_mic_fraction(&calib::stampede_node(), 7, mesh.len() / 4);
+    let np = nested_partition(&mesh, &node_part, sol.k_mic as f64 / (mesh.len() / 4) as f64);
+    let mut grid = vec![vec![' '; n]; n];
+    for (e, elem) in mesh.elements.iter().enumerate() {
+        let ix = (elem.center[0] * n as f64).floor() as usize;
+        let iy = (elem.center[1] * n as f64).floor() as usize;
+        let iz = (elem.center[2] * n as f64).floor() as usize;
+        if iz == n / 2 {
+            grid[iy][ix] = if np.device[e] == DeviceKind::Mic {
+                '*'
+            } else {
+                char::from_digit((np.node.assignment[e] % 10) as u32, 10).unwrap()
+            };
+        }
+    }
+    for row in grid.iter().rev() {
+        println!("{}", row.iter().collect::<String>());
+    }
+    println!("\npartition_explorer OK");
+    Ok(())
+}

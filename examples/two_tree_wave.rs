@@ -1,0 +1,128 @@
+//! The paper's Fig 6.1 workload: coupled elastic-acoustic wave propagation
+//! across two glued trees — acoustic (c_p = 1, c_s = 0) | elastic
+//! (c_p = 3, c_s = 2) — with a material discontinuity at the interface.
+//!
+//! A pressure pulse launched in the acoustic tree partially transmits into
+//! the elastic tree; the example tracks per-tree energy to show the
+//! transmission, running the full nested-partition + PJRT stack.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example two_tree_wave
+//! ```
+
+use repro::coordinator::{node::WorkerBackend, HeteroRun};
+use repro::costmodel::calib;
+use repro::mesh::{build_local_blocks, geometry::two_tree_geometry};
+use repro::partition::{nested_partition, solve_mic_fraction, splice, DeviceKind};
+use repro::runtime::ArtifactManifest;
+use repro::solver::analytic::gaussian_pulse;
+use repro::solver::rk::stable_dt;
+use repro::solver::{BlockState, LglBasis};
+
+/// Per-tree (acoustic | elastic) energy split.
+fn tree_energy(run: &HeteroRun, order: usize) -> repro::Result<(f64, f64)> {
+    let basis = LglBasis::new(order);
+    let (mut ac, mut el) = (0.0, 0.0);
+    for &o in &run.owners() {
+        let st = run.read_block(o)?;
+        let m = st.m;
+        let vol = 9 * m * m * m;
+        for e in 0..st.k_real {
+            let mut one = st.clone();
+            one.k_real = 1;
+            one.q = st.q[e * vol..(e + 1) * vol].to_vec();
+            one.mats = st.mats[e * 3..e * 3 + 3].to_vec();
+            one.h = st.h[e * 3..e * 3 + 3].to_vec();
+            one.centers = vec![st.centers[e]];
+            let en = one.energy(&basis);
+            if st.centers[e][0] < 1.0 {
+                ac += en;
+            } else {
+                el += en;
+            }
+        }
+    }
+    Ok((ac, el))
+}
+
+fn main() -> repro::Result<()> {
+    let order = 3;
+    let n = 4; // 4^3 elements per tree
+    let mesh = two_tree_geometry(n);
+    println!(
+        "two-tree geometry: {} elements (acoustic cp=1 | elastic cp=3, cs=2)",
+        mesh.len()
+    );
+
+    // nested partition: one node, CPU boundary / MIC interior
+    let node_part = splice(&mesh, 1);
+    let sol = solve_mic_fraction(&calib::stampede_node(), order, mesh.len());
+    let np = nested_partition(&mesh, &node_part, sol.k_mic as f64 / mesh.len() as f64);
+    println!(
+        "nested partition: {} CPU (boundary) + {} MIC (interior) elements",
+        np.node_counts[0].0, np.node_counts[0].1
+    );
+    let owners = np.owners();
+    let (lblocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
+
+    let artifacts = ArtifactManifest::default_dir();
+    let (backend, manifest) = if artifacts.join("manifest.json").exists() {
+        (
+            WorkerBackend::Pjrt { artifact_dir: artifacts.clone() },
+            Some(ArtifactManifest::load(&artifacts)?),
+        )
+    } else {
+        println!("(no artifacts; using the rust reference backend)");
+        (WorkerBackend::RustRef, None)
+    };
+
+    let basis = LglBasis::new(order);
+    let mut states = Vec::new();
+    let mut devices = Vec::new();
+    for lb in &lblocks {
+        let (kb, hb) = match &manifest {
+            Some(m) => {
+                let meta = m.pick_stage(order, lb.len().max(1), lb.halo_len.max(1))?;
+                (meta.k, meta.halo)
+            }
+            None => (lb.len().max(1), lb.halo_len.max(1)),
+        };
+        let mut st = BlockState::from_local_block(lb, order, kb, hb);
+        // pulse centered in the acoustic tree
+        st.set_initial_condition(&basis, |x| gaussian_pulse(x, [0.5, 0.5, 0.5], 0.12, 1.0, 1.0));
+        states.push(st);
+        devices.push(if lb.owner % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic });
+    }
+
+    let dt = stable_dt(0.3, 1.0 / n as f64, 3.0, order);
+    let steps = (0.6 / dt).ceil() as usize; // pulse reaches + crosses interface
+    let mut run = HeteroRun::launch(&lblocks, states, plan, &devices, backend, order)?;
+
+    let (a0, e0) = tree_energy(&run, order)?;
+    println!("t=0.00: acoustic-tree energy {a0:.5}, elastic-tree energy {e0:.5}");
+    let t0 = std::time::Instant::now();
+    let half = steps / 2;
+    run.run(dt, half)?;
+    let (a1, e1) = tree_energy(&run, order)?;
+    println!(
+        "t={:.2}: acoustic {a1:.5}, elastic {e1:.5} (transmitted {:.1}%)",
+        half as f64 * dt,
+        100.0 * e1 / (a1 + e1)
+    );
+    run.run(dt, steps - half)?;
+    let (a2, e2) = tree_energy(&run, order)?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "t={:.2}: acoustic {a2:.5}, elastic {e2:.5} (transmitted {:.1}%)",
+        steps as f64 * dt,
+        100.0 * e2 / (a2 + e2)
+    );
+    println!("{steps} steps in {wall:.2} s ({:.1} ms/step)", wall * 1e3 / steps as f64);
+
+    let total0 = a0 + e0;
+    let total2 = a2 + e2;
+    assert!(total2 <= total0 * 1.000001, "energy must not grow");
+    assert!(e2 > e0, "energy must transmit into the elastic tree");
+    println!("two_tree_wave OK: wave crossed the material interface, energy non-increasing");
+    Ok(())
+}

@@ -1,0 +1,177 @@
+"""AOT-lower the L2 stage/energy functions to HLO text artifacts.
+
+The interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact is emitted per (order N, element bucket K, halo bucket H)
+combination, plus an energy artifact per (N, K). The rust runtime picks the
+smallest bucket that fits a partition and pads. ``manifest.json`` records
+every artifact with its input/output signature so the rust side never has
+to guess shapes.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+
+from . import model
+
+# Default shape buckets. K buckets are sized for the test/CI machine; the
+# paper-scale runs (K = 8192 per node) use the largest buckets. H (halo
+# faces) scales like the surface of a K-element cube: 6 K^{2/3} rounded up
+# generously to the next power of two.
+DEFAULT_ORDERS = (1, 2, 3, 7)
+DEFAULT_BUCKETS = (8, 32, 64, 128, 256, 512, 1024)
+
+
+def halo_bucket(k: int) -> int:
+    """Halo-slot bucket for a K-element block: >= 6 K^{2/3} + slack."""
+    need = int(6.0 * (k ** (2.0 / 3.0)) * 1.5) + 8
+    h = 8
+    while h < need:
+        h *= 2
+    return h
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is ESSENTIAL: the default printer elides
+    constants with >= 16 elements as ``constant({...})``, which the text
+    parser silently misreads — the LGL differentiation matrix (M x M, so 16
+    elements at order 3) would come back corrupted and the artifact would
+    integrate the wrong operator (caught by rust/tests/testvec_roundtrip).
+    """
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def shape_sig(sds) -> list[dict]:
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in sds
+    ]
+
+
+def lower_stage(order: int, k: int, h: int, use_pallas: bool = True) -> str:
+    fn = model.make_stage_fn(order, use_pallas=use_pallas)
+    shapes = model.stage_shapes(order, k, h)
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+def lower_energy(order: int, k: int) -> str:
+    fn = model.make_energy_fn(order)
+    m = order + 1
+    import jax.numpy as jnp
+
+    sd = jax.ShapeDtypeStruct
+    shapes = (
+        sd((k, 9, m, m, m), jnp.float32),
+        sd((k, 3), jnp.float32),
+        sd((k, 3), jnp.float32),
+    )
+    return to_hlo_text(jax.jit(fn).lower(*shapes))
+
+
+def build(outdir: str, orders, buckets, use_pallas: bool = True) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"format": "hlo-text", "artifacts": []}
+    for n in orders:
+        m = n + 1
+        for k in buckets:
+            h = halo_bucket(k)
+            name = f"stage_n{n}_k{k}_h{h}"
+            path = os.path.join(outdir, name + ".hlo.txt")
+            text = lower_stage(n, k, h, use_pallas)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "kind": "stage",
+                    "path": os.path.basename(path),
+                    "order": n,
+                    "k": k,
+                    "halo": h,
+                    "inputs": shape_sig(model.stage_shapes(n, k, h)),
+                    "outputs": [
+                        {"shape": [k, 9, m, m, m], "dtype": "float32"},
+                        {"shape": [k, 9, m, m, m], "dtype": "float32"},
+                        {"shape": [k, 6, 9, m, m], "dtype": "float32"},
+                    ],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+        # one energy artifact per (order, bucket)
+        for k in buckets:
+            name = f"energy_n{n}_k{k}"
+            path = os.path.join(outdir, name + ".hlo.txt")
+            text = lower_energy(n, k)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "kind": "energy",
+                    "path": os.path.basename(path),
+                    "order": n,
+                    "k": k,
+                    "halo": 0,
+                    "inputs": [
+                        {"shape": [k, 9, m, m, m], "dtype": "float32"},
+                        {"shape": [k, 3], "dtype": "float32"},
+                        {"shape": [k, 3], "dtype": "float32"},
+                    ],
+                    "outputs": [{"shape": [1], "dtype": "float32"}],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+    manifest["lsrk_a"] = list(model.LSRK_A)
+    manifest["lsrk_b"] = list(model.LSRK_B)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {outdir}/manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--orders", default=",".join(map(str, DEFAULT_ORDERS)),
+        help="comma-separated polynomial orders",
+    )
+    ap.add_argument(
+        "--buckets", default=",".join(map(str, DEFAULT_BUCKETS)),
+        help="comma-separated element-count buckets",
+    )
+    ap.add_argument(
+        "--no-pallas", action="store_true",
+        help="lower the pure-jnp reference path instead of the pallas kernels",
+    )
+    args = ap.parse_args()
+    orders = tuple(int(x) for x in args.orders.split(","))
+    buckets = tuple(int(x) for x in args.buckets.split(","))
+    build(args.out, orders, buckets, use_pallas=not args.no_pallas)
+
+
+if __name__ == "__main__":
+    main()

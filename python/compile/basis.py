@@ -1,0 +1,96 @@
+"""Legendre-Gauss-Lobatto collocation basis for the DG spectral element method.
+
+Provides the 1-D LGL nodes, quadrature weights, and the nodal differentiation
+matrix used by the tensor-product DGSEM (paper §3). Everything is computed in
+float64 and cast by callers; the rust side (rust/src/solver/basis.rs) has an
+independent implementation cross-checked against these values in tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def legendre_and_deriv(n: int, x: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Evaluate P_n(x) and P'_n(x) via the three-term recurrence."""
+    x = np.asarray(x, dtype=np.float64)
+    p0 = np.ones_like(x)
+    if n == 0:
+        return p0, np.zeros_like(x)
+    p1 = x.copy()
+    for k in range(1, n):
+        p0, p1 = p1, ((2 * k + 1) * x * p1 - k * p0) / (k + 1)
+    # derivative from the standard identity
+    dp = n * (x * p1 - p0) / (x * x - 1.0 + 1e-300)
+    return p1, dp
+
+
+def lgl_nodes(order: int) -> np.ndarray:
+    """The order+1 Legendre-Gauss-Lobatto points on [-1, 1].
+
+    Roots of (1 - x^2) P'_N(x), found by Newton iteration from the
+    Chebyshev-Gauss-Lobatto initial guess.
+    """
+    n = order
+    if n < 1:
+        raise ValueError("LGL requires order >= 1")
+    if n == 1:
+        return np.array([-1.0, 1.0])
+    # initial guess: CGL points
+    x = -np.cos(np.pi * np.arange(n + 1) / n)
+    for _ in range(100):
+        p, dp = legendre_and_deriv(n, x)
+        # g(x) = (1-x^2) P'_N ; interior roots are roots of P'_N.
+        # Newton on q(x) = P'_N using q' from Legendre ODE:
+        # (1-x^2) P''_N = 2x P'_N - N(N+1) P_N
+        with np.errstate(divide="ignore", invalid="ignore"):
+            d2p = (2.0 * x * dp - n * (n + 1) * p) / (1.0 - x * x)
+        dx = np.where(np.abs(1.0 - x * x) > 1e-12, dp / d2p, 0.0)
+        x_new = x - dx
+        x_new[0], x_new[-1] = -1.0, 1.0
+        if np.max(np.abs(x_new - x)) < 1e-15:
+            x = x_new
+            break
+        x = x_new
+    x[0], x[-1] = -1.0, 1.0
+    return x
+
+
+def lgl_weights(order: int, nodes: np.ndarray | None = None) -> np.ndarray:
+    """LGL quadrature weights w_j = 2 / (N (N+1) P_N(x_j)^2)."""
+    n = order
+    x = lgl_nodes(n) if nodes is None else nodes
+    p, _ = legendre_and_deriv(n, x)
+    return 2.0 / (n * (n + 1) * p * p)
+
+
+def diff_matrix(nodes: np.ndarray) -> np.ndarray:
+    """Nodal (Lagrange) differentiation matrix via barycentric weights.
+
+    D[i, j] = l'_j(x_i); exact for polynomials of degree <= N.
+    """
+    x = np.asarray(nodes, dtype=np.float64)
+    m = len(x)
+    # barycentric weights
+    c = np.ones(m)
+    for j in range(m):
+        for k in range(m):
+            if k != j:
+                c[j] *= x[j] - x[k]
+    d = np.zeros((m, m))
+    for i in range(m):
+        for j in range(m):
+            if i != j:
+                d[i, j] = (c[i] / c[j]) / (x[i] - x[j])
+    # negative-sum trick for stable diagonal
+    for i in range(m):
+        d[i, i] = -np.sum(d[i, :]) + d[i, i]
+    return d
+
+
+def lgl_basis(order: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Convenience: (nodes, weights, D) for a given polynomial order."""
+    x = lgl_nodes(order)
+    w = lgl_weights(order, x)
+    d = diff_matrix(x)
+    return x, w, d

@@ -1,0 +1,95 @@
+"""Structured element-block builders for tests and AOT examples.
+
+The rust coordinator (rust/src/mesh) is the production mesh path; this
+module builds the same (conn, halo_idx, mats, h) arrays for simple
+structured bricks so the python tests can exercise the L2 stage function
+stand-alone, and so rust<->python cross-checks share a layout.
+
+Element order is x-fastest (k = ix + nx*(iy + ny*iz)) which coincides with
+the Morton order restriction for power-of-two bricks traversed uniformly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import basis
+
+FACE_DIRS = ((-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1))
+
+
+def build_structured(nx: int, ny: int, nz: int, extent=(1.0, 1.0, 1.0)):
+    """Structured brick of nx*ny*nz elements with mirror BC on the hull.
+
+    Returns (conn (K,6) i32, h (K,3) f32, centers (K,3) f64).
+    """
+    k = nx * ny * nz
+    conn = np.full((k, 6), -2, dtype=np.int32)
+    hx = extent[0] / nx, extent[1] / ny, extent[2] / nz
+    centers = np.zeros((k, 3))
+    for iz in range(nz):
+        for iy in range(ny):
+            for ix in range(nx):
+                e = ix + nx * (iy + ny * iz)
+                centers[e] = (
+                    (ix + 0.5) * hx[0],
+                    (iy + 0.5) * hx[1],
+                    (iz + 0.5) * hx[2],
+                )
+                for f, (dx, dy, dz) in enumerate(FACE_DIRS):
+                    jx, jy, jz = ix + dx, iy + dy, iz + dz
+                    if 0 <= jx < nx and 0 <= jy < ny and 0 <= jz < nz:
+                        conn[e, f] = jx + nx * (jy + ny * jz)
+    h = np.tile(np.asarray(hx, dtype=np.float32), (k, 1))
+    return conn, h, centers
+
+
+def node_coords(order: int, centers: np.ndarray, h: np.ndarray) -> np.ndarray:
+    """Physical LGL node coordinates, (K, 3, M, M, M) float64."""
+    x1, _, _ = basis.lgl_basis(order)
+    m = order + 1
+    k = centers.shape[0]
+    out = np.zeros((k, 3, m, m, m))
+    ref = [x1[:, None, None], x1[None, :, None], x1[None, None, :]]
+    for a in range(3):
+        out[:, a] = (
+            centers[:, a, None, None, None]
+            + 0.5 * h[:, a, None, None, None].astype(np.float64) * ref[a]
+        )
+    return out
+
+
+def standing_wave(coords: np.ndarray, t: float, rho=1.0, lam=1.0, amp=1.0):
+    """Exact acoustic standing-wave solution on the unit cube.
+
+    p(x,t) = -amp cos(w t) S(x), S = sin(pi x) sin(pi y) sin(pi z),
+    w = pi sqrt(3) c, c^2 = lam/rho. Traction-free on the hull (S = 0 there).
+    Returns q (K, 9, M, M, M) float64 in the model's field layout.
+    """
+    c = np.sqrt(lam / rho)
+    w = np.pi * np.sqrt(3.0) * c
+    x, y, z = coords[:, 0], coords[:, 1], coords[:, 2]
+    sx, cx = np.sin(np.pi * x), np.cos(np.pi * x)
+    sy, cy = np.sin(np.pi * y), np.cos(np.pi * y)
+    sz, cz = np.sin(np.pi * z), np.cos(np.pi * z)
+    b = amp / (rho * w * w)
+    ct, st = np.cos(w * t), np.sin(w * t)
+    pi2 = np.pi * np.pi
+    # E = b cos(wt) Hess(S)
+    e11 = -pi2 * sx * sy * sz
+    e22 = e11
+    e33 = e11
+    e23 = pi2 * sx * cy * cz
+    e13 = pi2 * cx * sy * cz
+    e12 = pi2 * cx * cy * sz
+    # v = -(amp/(rho w)) sin(wt) grad S
+    gv = amp / (rho * w)
+    v1 = -gv * st * np.pi * cx * sy * sz
+    v2 = -gv * st * np.pi * sx * cy * sz
+    v3 = -gv * st * np.pi * sx * sy * cz
+    q = np.stack(
+        [b * ct * e11, b * ct * e22, b * ct * e33,
+         b * ct * e23, b * ct * e13, b * ct * e12, v1, v2, v3],
+        axis=1,
+    )
+    return q

@@ -1,0 +1,134 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the reference implementations of the two computational hot spots of
+the DGSEM solver (paper §4):
+
+  * ``deriv3_ref``   — the volume_loop tensor-product derivative (IIAX /
+    IAIX / AIIX applications of the 1-D differentiation matrix).
+  * ``riemann_ref``  — the godunov_flux pointwise exact elastic-acoustic
+    Riemann flux over a batch of face nodes (paper §3, Wilcox et al. [9]).
+
+The Pallas kernels in ``volume_deriv.py`` / ``riemann.py`` are asserted
+allclose against these in ``python/tests/``, and the L2 model can be built on
+either path (``use_pallas`` flag) so whole-model equivalence is also tested.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Field layout of the 9 unknowns (paper: "nine unknowns"), Voigt strain first:
+#   0: E11  1: E22  2: E33  3: E23  4: E13  5: E12  6: v1  7: v2  8: v3
+NFIELDS = 9
+E11, E22, E33, E23, E13, E12, V1, V2, V3 = range(9)
+# Stress column a (traction components for a face with normal e_a), as Voigt
+# indices: t_i = S[i, a] -> S_VOIGT_COL[a][i].
+S_VOIGT_COL = ((E11, E12, E13), (E12, E22, E23), (E13, E23, E33))
+
+
+def deriv3_ref(u: jnp.ndarray, d: jnp.ndarray):
+    """Reference tensor-product derivatives along the three axes.
+
+    u: (..., M, M, M) nodal values on the reference element(s)
+    d: (M, M) 1-D differentiation matrix
+    returns (du0, du1, du2), each (..., M, M, M), where du_a = derivative
+    along reference axis a (axis -3 + a of u).
+    """
+    du0 = jnp.einsum("ab,...bjk->...ajk", d, u)
+    du1 = jnp.einsum("ab,...ibk->...iak", d, u)
+    du2 = jnp.einsum("ab,...ijb->...ija", d, u)
+    return du0, du1, du2
+
+
+def stress_from_strain(q, lam, mu):
+    """Voigt stress (6, ...) from the 9-field state (9, ...), field-first.
+
+    lam/mu broadcast over the trailing axes.
+    S = lam tr(E) I + 2 mu E (isotropic; mu = 0 -> acoustic).
+    """
+    tr = q[E11] + q[E22] + q[E33]
+    return jnp.stack(
+        [
+            lam * tr + 2.0 * mu * q[E11],
+            lam * tr + 2.0 * mu * q[E22],
+            lam * tr + 2.0 * mu * q[E33],
+            2.0 * mu * q[E23],
+            2.0 * mu * q[E13],
+            2.0 * mu * q[E12],
+        ]
+    )
+
+
+def riemann_ref(qm, qp, matm, matp, axis: int, sign: float):
+    """Exact elastic-acoustic Riemann flux difference n.[(Fq)* - Fq].
+
+    qm, qp : (F, 9, M, M)  interior (-) and exterior (+) face traces
+    matm, matp : (F, 3)    (rho, lam, mu) on each side
+    axis, sign : face normal n = sign * e_axis (static)
+
+    Returns (F, 9, M, M): rows 0..5 are the Voigt strain-equation flux
+    difference (the tensor phi_p n(x)n + k1 sym(n(x)t_tan) + ...), rows 6..8
+    the velocity-equation flux difference (NOT yet divided by rho^-).
+
+    Sign conventions follow the paper: [q] = q^- - q^+, n outward from the
+    interior (-) side, and n x (n x a) = -a_tan.
+    """
+    f = qm.shape[0]
+    rho_m, lam_m, mu_m = (matm[:, i].reshape(f, 1, 1) for i in range(3))
+    rho_p, lam_p, mu_p = (matp[:, i].reshape(f, 1, 1) for i in range(3))
+    cp_m = jnp.sqrt((lam_m + 2.0 * mu_m) / rho_m)
+    cs_m = jnp.sqrt(mu_m / rho_m)
+    cp_p = jnp.sqrt((lam_p + 2.0 * mu_p) / rho_p)
+    cs_p = jnp.sqrt(mu_p / rho_p)
+    zp_m, zs_m = rho_m * cp_m, rho_m * cs_m
+    zp_p, zs_p = rho_p * cp_p, rho_p * cs_p
+
+    # tractions t = S n on each side (t[i] = sign * S[i, axis])
+    sm = stress_from_strain(jnp.moveaxis(qm, 1, 0), lam_m, mu_m)
+    sp = stress_from_strain(jnp.moveaxis(qp, 1, 0), lam_p, mu_p)
+    col = S_VOIGT_COL[axis]
+    t_m = sign * jnp.stack([sm[col[0]], sm[col[1]], sm[col[2]]])
+    t_p = sign * jnp.stack([sp[col[0]], sp[col[1]], sp[col[2]]])
+    t_jump = t_m - t_p  # (3, F, M, M)
+    v_jump = jnp.stack(
+        [qm[:, V1] - qp[:, V1], qm[:, V2] - qp[:, V2], qm[:, V3] - qp[:, V3]]
+    )
+
+    # normal/tangential split; n = sign * e_axis
+    tn = sign * t_jump[axis]
+    vn = sign * v_jump[axis]
+    n_vec = [0.0, 0.0, 0.0]
+    n_vec[axis] = sign
+    t_tan = t_jump - jnp.stack([n_vec[i] * tn for i in range(3)])
+    v_tan = v_jump - jnp.stack([n_vec[i] * vn for i in range(3)])
+
+    # impedance-average coefficients; k1 = 0 when the interior side is
+    # acoustic (mu^- = 0), per the paper. Guard the fully-acoustic interface
+    # (zs_m + zs_p = 0) against division by zero.
+    k0 = 1.0 / (zp_m + zp_p)
+    zs_sum = zs_m + zs_p
+    k1 = jnp.where(mu_m > 0.0, 1.0 / jnp.where(zs_sum > 0.0, zs_sum, 1.0), 0.0)
+
+    phi_p = k0 * tn + k0 * zp_p * vn  # p-wave jump strength (scalar field)
+
+    # strain-equation flux difference:
+    #   phi_p n(x)n + k1 sym(n (x) t_tan) + k1 zs_p sym(n (x) v_tan)
+    # written directly in Voigt components for n = sign*e_axis.
+    tang = k1 * t_tan + k1 * zs_p * v_tan  # (3, F, M, M)
+    de = [jnp.zeros_like(phi_p) for _ in range(6)]
+    de[axis] = phi_p  # n(x)n has a single 1 at (axis, axis)
+    # sym(n (x) a) with a tangential: contributes 0.5*sign*a_j at the Voigt
+    # off-diagonal slot for the pair {axis, j}.
+    voigt_pair = {(1, 2): E23, (0, 2): E13, (0, 1): E12}
+    for j in range(3):
+        if j == axis:
+            continue
+        vi = voigt_pair[(min(axis, j), max(axis, j))]
+        de[vi] = de[vi] + 0.5 * sign * tang[j]
+
+    # velocity-equation flux difference:
+    #   phi_p zp_m n + k1 zs_m t_tan + k1 zs_p zs_m v_tan
+    dv = [zs_m * (k1 * t_tan[i] + k1 * zs_p * v_tan[i]) for i in range(3)]
+    dv[axis] = dv[axis] + sign * phi_p * zp_m
+
+    return jnp.stack(de + dv, axis=1)  # (F, 9, M, M)

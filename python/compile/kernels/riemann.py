@@ -1,0 +1,77 @@
+"""Pallas kernel for the godunov_flux exact Riemann solve (paper §3-4).
+
+int_flux / bound_flux / parallel_flux all reduce to the same pointwise
+operation over batches of face nodes: given interior/exterior traces of the
+9 unknowns and the (rho, lambda, mu) material on each side, evaluate the
+exact elastic-acoustic Riemann flux difference n.[(Fq)* - Fq] of Wilcox et
+al. [9]. The face normal is axis-aligned (octree hexahedra), so (axis, sign)
+are static and six specializations cover all faces.
+
+This kernel is pure VPU work (elementwise transcendentals + mul/add, no
+contractions); the layout keeps the trailing M*M face-node axis contiguous
+as the lane axis. ``interpret=True`` as required for CPU PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _riemann_kernel(qm_ref, qp_ref, matm_ref, matp_ref, out_ref, *, axis, sign):
+    qm = qm_ref[...]
+    qp = qp_ref[...]
+    matm = matm_ref[...]
+    matp = matp_ref[...]
+    # The pointwise math is shared with the oracle on purpose: the kernel is
+    # the *scheduling* (BlockSpec tiling) of the same flux formulas; tests
+    # still cross-check pallas-vs-ref end to end through pallas_call.
+    out_ref[...] = ref.riemann_ref(qm, qp, matm, matp, axis, sign)
+
+
+def pick_tile(f: int, m: int, vmem_budget_bytes: int = 4 * 1024 * 1024) -> int:
+    """Face-tile size: largest divisor of f fitting 3 live (9, M, M)
+    panels — grid=1 whenever the face batch fits VMEM (same iteration as
+    volume_deriv.pick_tile; see EXPERIMENTS.md §Perf)."""
+    per_face = 9 * m * m * 4 * 3
+    cap = max(1, vmem_budget_bytes // per_face)
+    tf = 1
+    d = 1
+    while d * d <= f:
+        if f % d == 0:
+            for cand in (d, f // d):
+                if cand <= cap and cand > tf:
+                    tf = cand
+        d += 1
+    return tf
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "sign", "tile"))
+def riemann_pallas(qm, qp, matm, matp, axis: int, sign: float, tile: int | None = None):
+    """Exact Riemann flux over a face batch; matches ``ref.riemann_ref``.
+
+    qm, qp: (F, 9, M, M); matm, matp: (F, 3); returns (F, 9, M, M).
+    """
+    f, _, m, _ = qm.shape
+    tf = tile if tile is not None else pick_tile(f, m)
+    if f % tf != 0:
+        raise ValueError(f"tile {tf} must divide face batch {f}")
+    kern = functools.partial(_riemann_kernel, axis=axis, sign=float(sign))
+    return pl.pallas_call(
+        kern,
+        grid=(f // tf,),
+        in_specs=[
+            pl.BlockSpec((tf, 9, m, m), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((tf, 9, m, m), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((tf, 3), lambda i: (i, 0)),
+            pl.BlockSpec((tf, 3), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tf, 9, m, m), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((f, 9, m, m), qm.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(qm, qp, matm, matp)

@@ -1,0 +1,102 @@
+"""Pallas kernel for the volume_loop tensor-product derivative (paper §4).
+
+The DGSEM volume term applies the 1-D differentiation matrix D (M x M,
+M = N+1) along each of the three reference axes of every element — the
+IIAX / IAIX / AIIX applications that dominate the paper's baseline profile
+(Fig 4.1). For a block of B fields (B = elements x fields-to-differentiate)
+this is 3B batched small matrix products.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper hand-coded
+512-bit MIC intrinsics for these loops. On TPU the same insight — keep the
+M^3 element panel resident in fast memory and express the contraction as a
+dense matmul feeding the MXU — maps to a Pallas kernel with an element-tile
+BlockSpec (the HBM->VMEM schedule) whose body is three `jnp.dot` calls over
+reshaped panels:
+
+  axis 0:  (M, M) @ (M, M^2)      per field        — "AIIX"
+  axis 1:  per-slab (M, M) @ (M, M)                — "IAIX"
+  axis 2:  (M^2, M) @ (M, M)      per field        — "IIAX"
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated in DESIGN.md §Perf from the
+VMEM footprint (TB * M^3 * 4B * 4 buffers) and MXU utilization of the chosen
+tile TB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _deriv3_kernel(u_ref, d_ref, o0_ref, o1_ref, o2_ref):
+    """Kernel body: derivatives of a (TB, M, M, M) tile along all 3 axes."""
+    u = u_ref[...]
+    d = d_ref[...]
+    tb, m = u.shape[0], u.shape[1]
+    # axis 0: contract the first reference axis with D.
+    #   (TB, M, M*M) with D on the left of each panel.
+    u0 = u.reshape(tb, m, m * m)
+    d0 = jnp.einsum("ab,fbk->fak", d, u0, preferred_element_type=jnp.float32)
+    o0_ref[...] = d0.reshape(tb, m, m, m)
+    # axis 1: contract the middle axis; fold (TB, M) into the batch.
+    u1 = u.reshape(tb * m, m, m)
+    d1 = jnp.einsum("ab,fbk->fak", d, u1, preferred_element_type=jnp.float32)
+    o1_ref[...] = d1.reshape(tb, m, m, m)
+    # axis 2: contract the last axis; one (TB*M*M, M) @ (M, M) matmul.
+    u2 = u.reshape(tb * m * m, m)
+    d2 = jnp.dot(u2, d.T, preferred_element_type=jnp.float32)
+    o2_ref[...] = d2.reshape(tb, m, m, m)
+
+
+def pick_tile(b: int, m: int, vmem_budget_bytes: int = 8 * 1024 * 1024) -> int:
+    """Element-tile size: the LARGEST divisor of b whose 4 live buffers fit
+    the VMEM budget. Perf iteration log (EXPERIMENTS.md §Perf): restricting
+    candidates to powers of two <= 256 left a 9-iteration grid loop at
+    (N=7, K=64) whose interpret-mode overhead cost ~20% of the stage; the
+    largest-divisor rule collapses it to grid=1 whenever the panel fits.
+    On real TPU the same rule maximizes the MXU batch per VMEM residency.
+    """
+    per_field = m * m * m * 4 * 4  # u + 3 outputs, f32
+    cap = max(1, vmem_budget_bytes // per_field)
+    tb = 1
+    d = 1
+    while d * d <= b:
+        if b % d == 0:
+            for cand in (d, b // d):
+                if cand <= cap and cand > tb:
+                    tb = cand
+        d += 1
+    return tb
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def deriv3_pallas(u: jnp.ndarray, d: jnp.ndarray, tile: int | None = None):
+    """Tensor-product derivatives along the 3 trailing axes of ``u``.
+
+    u: (B, M, M, M) field panels; d: (M, M). Returns (du0, du1, du2).
+    Matches ``ref.deriv3_ref`` (asserted in python/tests/test_kernels.py).
+    """
+    b, m = u.shape[0], u.shape[1]
+    tb = tile if tile is not None else pick_tile(b, m)
+    if b % tb != 0:
+        raise ValueError(f"tile {tb} must divide batch {b}")
+    shape = jax.ShapeDtypeStruct(u.shape, u.dtype)
+    return pl.pallas_call(
+        _deriv3_kernel,
+        grid=(b // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, m, m, m), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((m, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tb, m, m, m), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((tb, m, m, m), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((tb, m, m, m), lambda i: (i, 0, 0, 0)),
+        ],
+        out_shape=[shape, shape, shape],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(u, d)

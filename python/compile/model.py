@@ -1,0 +1,258 @@
+"""L2: the DGSEM elastic-acoustic RHS + LSRK stage for one element block.
+
+This is the compute graph that runs (AOT-compiled, via PJRT) on every
+"device" — CPU partition and MIC partition alike — in the rust coordinator.
+It implements the collocation DGSEM of paper §3 on axis-aligned hexahedra:
+
+  volume term   tensor-product derivatives of stress/velocity (L1 pallas
+                kernel ``volume_deriv``), scaled by the affine metric 2/h_a
+  interp_q      face-trace extraction (slicing at LGL endpoints)
+  int_flux      exact Riemann flux on interior faces (L1 pallas ``riemann``)
+  bound_flux    traction-free mirror state (paper's mirror principle:
+                exterior = (-E, v), same material)
+  parallel_flux same Riemann kernel fed from the halo buffer exchanged by
+                the rust coordinator (inter-node MPI faces and intra-node
+                CPU<->MIC PCI faces)
+  lift          surface-to-volume lift: 2 / (h_a w_0) at face node layers
+  rk            one low-storage RK4(5) stage update
+
+Element connectivity is a *runtime input* (conn / halo_idx int32 arrays), so
+one AOT artifact serves any partition of matching (K, H) shape bucket; the
+rust side pads blocks up to the bucket. Padding elements are self-contained
+(all faces mirror-BC) and never read by real elements.
+
+conn encoding, face order f = [-x, +x, -y, +y, -z, +z]:
+  conn[k,f] >= 0  : interior neighbor (element index inside this block)
+  conn[k,f] == -1 : halo face, exterior trace at halo[halo_idx[k,f]]
+  conn[k,f] == -2 : physical boundary, traction-free mirror
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import basis
+from .kernels import ref
+from .kernels.ref import E11, E22, E33, E23, E13, E12, V1, V2, V3, S_VOIGT_COL
+from .kernels.riemann import riemann_pallas
+from .kernels.volume_deriv import deriv3_pallas
+
+# Low-storage 5-stage 4th-order RK (Carpenter & Kennedy 1994), the scheme
+# used by dgae. res <- a_s res + dt rhs(q); q <- q + b_s res.
+LSRK_A = np.array(
+    [
+        0.0,
+        -567301805773.0 / 1357537059087.0,
+        -2404267990393.0 / 2016746695238.0,
+        -3550918686646.0 / 2091501179385.0,
+        -1275806237668.0 / 842570457699.0,
+    ]
+)
+LSRK_B = np.array(
+    [
+        1432997174477.0 / 9575080441755.0,
+        5161836677717.0 / 13612068292357.0,
+        1720146321549.0 / 2090206949498.0,
+        3134564353537.0 / 4481467310338.0,
+        2277821191437.0 / 14882151754819.0,
+    ]
+)
+
+FACE_AXIS = (0, 0, 1, 1, 2, 2)
+FACE_SIGN = (-1.0, 1.0, -1.0, 1.0, -1.0, 1.0)
+
+
+def face_trace(q, f):
+    """Trace of q (K, 9, M, M, M) on face f -> (K, 9, M, M)."""
+    axis, sign = FACE_AXIS[f], FACE_SIGN[f]
+    idx = 0 if sign < 0 else q.shape[-1] - 1
+    # spatial axes of q are (2, 3, 4) = (r0, r1, r2)
+    return jax.lax.index_in_dim(q, idx, axis=2 + axis, keepdims=False)
+
+
+def all_face_traces(q):
+    """(K, 6, 9, M, M) traces in face order [-x,+x,-y,+y,-z,+z]."""
+    return jnp.stack([face_trace(q, f) for f in range(6)], axis=1)
+
+
+def mirror_state(tr):
+    """Traction-free mirror exterior state: (-E, v) (paper §3)."""
+    return jnp.concatenate([-tr[:, :6], tr[:, 6:]], axis=1)
+
+
+def rhs(q, halo, conn, halo_idx, mats, halo_mats, h, dmat, w0, use_pallas=True):
+    """Semi-discrete DGSEM right-hand side dq/dt for one element block.
+
+    q:         (K, 9, M, M, M) f32   nodal state
+    halo:      (H, 9, M, M)    f32   exterior traces for halo faces
+    conn:      (K, 6)          i32   neighbor indices / -1 halo / -2 BC
+    halo_idx:  (K, 6)          i32   slot into halo for conn == -1 faces
+    mats:      (K, 3)          f32   (rho, lambda, mu) per element
+    halo_mats: (H, 3)          f32   material on the far side of halo faces
+    h:         (K, 3)          f32   element extents (hx, hy, hz)
+    dmat:      (M, M)          f32   LGL differentiation matrix
+    w0:        ()              f32   LGL endpoint weight
+    """
+    k, m = q.shape[0], q.shape[2]
+    rho = mats[:, 0].reshape(k, 1, 1, 1)
+    lam = mats[:, 1].reshape(k, 1, 1, 1)
+    mu = mats[:, 2].reshape(k, 1, 1, 1)
+
+    # ---- volume term -----------------------------------------------------
+    # stress pointwise, then derivatives of the 6 stress + 3 velocity fields
+    s = ref.stress_from_strain(jnp.moveaxis(q, 1, 0), lam, mu)  # (6,K,M,M,M)
+    fields = jnp.concatenate([jnp.moveaxis(s, 0, 1), q[:, 6:9]], axis=1)
+    flat = fields.reshape(k * 9, m, m, m)
+    if use_pallas:
+        d0, d1, d2 = deriv3_pallas(flat, dmat)
+    else:
+        d0, d1, d2 = ref.deriv3_ref(flat, dmat)
+    d0 = d0.reshape(k, 9, m, m, m)
+    d1 = d1.reshape(k, 9, m, m, m)
+    d2 = d2.reshape(k, 9, m, m, m)
+    # physical derivative scale per axis (affine metric): 2 / h_a
+    sc = [(2.0 / h[:, a]).reshape(k, 1, 1, 1, 1) for a in range(3)]
+    dS = (d0[:, :6] * sc[0], d1[:, :6] * sc[1], d2[:, :6] * sc[2])
+    dv = (d0[:, 6:] * sc[0], d1[:, 6:] * sc[1], d2[:, 6:] * sc[2])
+    # dv[a][:, i] = d v_i / d x_a
+
+    # strain equation: dE/dt = sym(grad v)
+    parts = [
+        dv[0][:, 0],
+        dv[1][:, 1],
+        dv[2][:, 2],
+        0.5 * (dv[1][:, 2] + dv[2][:, 1]),
+        0.5 * (dv[0][:, 2] + dv[2][:, 0]),
+        0.5 * (dv[0][:, 1] + dv[1][:, 0]),
+    ]
+    # velocity equation: rho dv_i/dt = sum_a d S_ia / d x_a
+    rho3 = rho[..., None]
+    for i in range(3):
+        acc = (
+            dS[0][:, S_VOIGT_COL[0][i]]
+            + dS[1][:, S_VOIGT_COL[1][i]]
+            + dS[2][:, S_VOIGT_COL[2][i]]
+        )
+        parts.append(acc / rho3[:, 0])
+    dq = jnp.stack(parts, axis=1)  # (K, 9, M, M, M)
+
+    # ---- face terms ------------------------------------------------------
+    traces = all_face_traces(q)  # (K, 6, 9, M, M)
+    for f in range(6):
+        axis, sign = FACE_AXIS[f], FACE_SIGN[f]
+        tr_m = traces[:, f]
+        cf = conn[:, f]
+        # exterior trace: interior neighbor / halo / mirror
+        nb = jnp.clip(cf, 0, k - 1)
+        ext_int = traces[nb, f ^ 1]  # neighbor's opposite face, same layout
+        hidx = jnp.clip(halo_idx[:, f], 0, halo.shape[0] - 1)
+        ext_halo = halo[hidx]
+        ext_bc = mirror_state(tr_m)
+        is_int = (cf >= 0).reshape(k, 1, 1, 1)
+        is_halo = (cf == -1).reshape(k, 1, 1, 1)
+        tr_p = jnp.where(is_int, ext_int, jnp.where(is_halo, ext_halo, ext_bc))
+        mat_p = jnp.where(
+            (cf >= 0)[:, None],
+            mats[nb],
+            jnp.where((cf == -1)[:, None], halo_mats[hidx], mats),
+        )
+        if use_pallas:
+            df = riemann_pallas(tr_m, tr_p, mats, mat_p, axis, sign)
+        else:
+            df = ref.riemann_ref(tr_m, tr_p, mats, mat_p, axis, sign)
+        # velocity rows carry the 1/rho^- from Q^{-1}
+        df = jnp.concatenate([df[:, :6], df[:, 6:] / rho], axis=1)
+        # lift: subtract at the face node layer, scaled by 2 / (h_a w_0)
+        lift = (2.0 / (h[:, axis] * w0)).reshape(k, 1, 1, 1)
+        idx = 0 if sign < 0 else m - 1
+        layer = jax.lax.index_in_dim(dq, idx, axis=2 + axis, keepdims=False)
+        dq = jax.lax.dynamic_update_index_in_dim(
+            dq, layer - lift * df, idx, 2 + axis
+        )
+    return dq
+
+
+def lsrk_stage(
+    q, res, halo, conn, halo_idx, mats, halo_mats, h, scal, dmat, w0,
+    use_pallas=True,
+):
+    """One low-storage RK stage; scal = [dt, a_s, b_s] as a (3,) array.
+
+    Returns (q', res', traces') where traces' = all face traces of q' for
+    the coordinator to exchange before the next stage.
+    """
+    dt, a, b = scal[0], scal[1], scal[2]
+    dq = rhs(q, halo, conn, halo_idx, mats, halo_mats, h, dmat, w0, use_pallas)
+    res = a * res + dt * dq
+    q = q + b * res
+    return q, res, all_face_traces(q)
+
+
+def block_energy(q, mats, h, wts):
+    """Discrete energy 1/2 sum_e J w_lmn (rho|v|^2 + S:E) -> (1,) f32.
+
+    S:E = lam tr(E)^2 + 2 mu E:E (with the Voigt shear doubling).
+    """
+    k = q.shape[0]
+    rho = mats[:, 0].reshape(k, 1, 1, 1)
+    lam = mats[:, 1].reshape(k, 1, 1, 1)
+    mu = mats[:, 2].reshape(k, 1, 1, 1)
+    tr = q[:, E11] + q[:, E22] + q[:, E33]
+    ee = (
+        q[:, E11] ** 2
+        + q[:, E22] ** 2
+        + q[:, E33] ** 2
+        + 2.0 * (q[:, E23] ** 2 + q[:, E13] ** 2 + q[:, E12] ** 2)
+    )
+    v2 = q[:, V1] ** 2 + q[:, V2] ** 2 + q[:, V3] ** 2
+    dens = rho * v2 + lam * tr**2 + 2.0 * mu * ee
+    w3 = wts[:, None, None] * wts[None, :, None] * wts[None, None, :]
+    jac = (h[:, 0] * h[:, 1] * h[:, 2] / 8.0).reshape(k, 1, 1, 1)
+    tot = 0.5 * jnp.sum(jac * w3[None] * dens)
+    return tot.reshape(1)
+
+
+def make_stage_fn(order: int, use_pallas: bool = True):
+    """Close over the basis operators for a given polynomial order."""
+    _, w, d = basis.lgl_basis(order)
+    dmat = jnp.asarray(d, dtype=jnp.float32)
+    w0 = jnp.float32(w[0])
+
+    def stage(q, res, halo, conn, halo_idx, mats, halo_mats, h, scal):
+        return lsrk_stage(
+            q, res, halo, conn, halo_idx, mats, halo_mats, h, scal, dmat, w0,
+            use_pallas=use_pallas,
+        )
+
+    return stage
+
+
+def make_energy_fn(order: int):
+    """Energy functional for the same block layout (AOT'd alongside)."""
+    _, w, _ = basis.lgl_basis(order)
+    wts = jnp.asarray(w, dtype=jnp.float32)
+
+    def energy(q, mats, h):
+        return block_energy(q, mats, h, wts)
+
+    return energy
+
+
+def stage_shapes(order: int, k: int, hsize: int):
+    """ShapeDtypeStructs of the stage function inputs, in artifact order."""
+    m = order + 1
+    f32, i32 = jnp.float32, jnp.int32
+    sd = jax.ShapeDtypeStruct
+    return (
+        sd((k, 9, m, m, m), f32),  # q
+        sd((k, 9, m, m, m), f32),  # res
+        sd((hsize, 9, m, m), f32),  # halo
+        sd((k, 6), i32),  # conn
+        sd((k, 6), i32),  # halo_idx
+        sd((k, 3), f32),  # mats
+        sd((hsize, 3), f32),  # halo_mats
+        sd((k, 3), f32),  # h
+        sd((3,), f32),  # scal = [dt, a, b]
+    )

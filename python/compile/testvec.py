@@ -1,0 +1,93 @@
+"""Emit cross-language test vectors: stage inputs + jit outputs as raw f32.
+
+The rust integration tests execute the AOT artifact on these inputs and
+assert byte-tolerance agreement with the jax jit outputs recorded here —
+pinning the HLO-text round trip and the rust runtime against the python
+truth independently of the rust reference implementation.
+
+Layout: testvec_n<order>.json describes the arrays; each array is a raw
+little-endian blob in testvec_n<order>.bin, concatenated in order.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+
+def build_case(order: int, k: int, h: int, seed: int = 0):
+    m = order + 1
+    rng = np.random.RandomState(seed)
+    q = (0.1 * rng.randn(k, 9, m, m, m)).astype(np.float32)
+    res = (0.05 * rng.randn(k, 9, m, m, m)).astype(np.float32)
+    halo = (0.1 * rng.randn(h, 9, m, m)).astype(np.float32)
+    # mixed connectivity: a 2x2x2 sub-block interior, one halo face, rest BC
+    conn = -2 * np.ones((k, 6), np.int32)
+    hidx = np.zeros((k, 6), np.int32)
+    if k >= 8:
+        # elements 0..7 as a 2x2x2 cube (x-fastest order)
+        for e in range(8):
+            ix, iy, iz = e & 1, (e >> 1) & 1, (e >> 2) & 1
+            dirs = [(-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0), (0, 0, -1), (0, 0, 1)]
+            for f, (dx, dy, dz) in enumerate(dirs):
+                jx, jy, jz = ix + dx, iy + dy, iz + dz
+                if 0 <= jx < 2 and 0 <= jy < 2 and 0 <= jz < 2:
+                    conn[e, f] = jx + 2 * (jy + 2 * jz)
+        conn[0, 0] = -1  # one halo face
+        hidx[0, 0] = 3
+    mats = np.tile(np.array([[1.0, 1.0, 0.0]], np.float32), (k, 1))
+    mats[k // 2 :] = [1.0, 1.0, 4.0]  # elastic half
+    hmats = np.tile(np.array([[1.0, 2.0, 0.5]], np.float32), (h, 1))
+    hvec = np.tile(np.array([[1.0, 0.8, 1.2]], np.float32), (k, 1))
+    scal = np.array([1.3e-3, -0.7, 0.4], np.float32)
+    return (q, res, halo, conn, hidx, mats, hmats, hvec, scal)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--order", type=int, default=3)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--halo", type=int, default=64)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    inputs = build_case(args.order, args.k, args.halo)
+    stage = jax.jit(model.make_stage_fn(args.order, use_pallas=True))
+    outputs = stage(*[jnp.asarray(a) for a in inputs])
+    arrays = list(inputs) + [np.asarray(o) for o in outputs]
+    names = [
+        "q", "res", "halo", "conn", "halo_idx", "mats", "halo_mats", "h", "scal",
+        "out_q", "out_res", "out_traces",
+    ]
+    meta = {"order": args.order, "k": args.k, "halo": args.halo, "arrays": []}
+    blob = bytearray()
+    for name, arr in zip(names, arrays):
+        arr = np.ascontiguousarray(arr)
+        meta["arrays"].append(
+            {
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": str(arr.dtype),
+                "offset": len(blob),
+                "nbytes": arr.nbytes,
+            }
+        )
+        blob.extend(arr.tobytes())
+    os.makedirs(args.out, exist_ok=True)
+    base = os.path.join(args.out, f"testvec_n{args.order}")
+    with open(base + ".bin", "wb") as f:
+        f.write(bytes(blob))
+    with open(base + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote {base}.bin ({len(blob)} bytes) and {base}.json")
+
+
+if __name__ == "__main__":
+    main()

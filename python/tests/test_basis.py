@@ -1,0 +1,64 @@
+"""LGL basis: node/weight identities and differentiation exactness."""
+
+import numpy as np
+import pytest
+
+from compile import basis
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4, 5, 6, 7, 9, 12])
+def test_weights_sum_to_interval_length(order):
+    _, w, _ = basis.lgl_basis(order)
+    assert abs(w.sum() - 2.0) < 1e-12
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4, 5, 6, 7])
+def test_nodes_symmetric_and_bounded(order):
+    x, _, _ = basis.lgl_basis(order)
+    assert x[0] == -1.0 and x[-1] == 1.0
+    assert np.all(np.diff(x) > 0)
+    np.testing.assert_allclose(x, -x[::-1], atol=1e-14)
+
+
+@pytest.mark.parametrize("order", [2, 3, 5, 7])
+def test_weights_symmetric_positive(order):
+    _, w, _ = basis.lgl_basis(order)
+    assert np.all(w > 0)
+    np.testing.assert_allclose(w, w[::-1], atol=1e-14)
+
+
+@pytest.mark.parametrize("order", [1, 2, 3, 4, 5, 6, 7])
+def test_diff_matrix_exact_on_polynomials(order):
+    x, _, d = basis.lgl_basis(order)
+    for p in range(order + 1):
+        du = d @ (x**p)
+        exact = p * x ** max(p - 1, 0) if p > 0 else np.zeros_like(x)
+        np.testing.assert_allclose(du, exact, atol=1e-9)
+
+
+@pytest.mark.parametrize("order", [2, 3, 5, 7])
+def test_diff_matrix_kills_constants(order):
+    _, _, d = basis.lgl_basis(order)
+    np.testing.assert_allclose(d @ np.ones(order + 1), 0.0, atol=1e-11)
+
+
+@pytest.mark.parametrize("order", [2, 4, 7])
+def test_lgl_quadrature_exactness(order):
+    """LGL with N+1 points integrates degree 2N-1 exactly."""
+    x, w, _ = basis.lgl_basis(order)
+    for p in range(2 * order):
+        exact = (1 - (-1) ** (p + 1)) / (p + 1)
+        assert abs(np.sum(w * x**p) - exact) < 1e-11, p
+
+
+def test_known_lgl_order2():
+    x, w, _ = basis.lgl_basis(2)
+    np.testing.assert_allclose(x, [-1, 0, 1], atol=1e-14)
+    np.testing.assert_allclose(w, [1 / 3, 4 / 3, 1 / 3], atol=1e-14)
+
+
+def test_known_lgl_order3():
+    x, _, _ = basis.lgl_basis(3)
+    np.testing.assert_allclose(
+        x, [-1, -np.sqrt(1 / 5), np.sqrt(1 / 5), 1], atol=1e-12
+    )

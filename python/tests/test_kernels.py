@@ -1,0 +1,188 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+Hypothesis sweeps shapes (batch, order, tile) for the derivative kernel and
+face batches/materials for the Riemann kernel; every case asserts allclose
+against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import basis
+from compile.kernels import ref
+from compile.kernels.riemann import riemann_pallas
+from compile.kernels.volume_deriv import deriv3_pallas, pick_tile
+
+
+def dmat(order):
+    return jnp.asarray(basis.lgl_basis(order)[2], dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- deriv3 --
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 6, 9, 18, 36]),
+    order=st.integers(min_value=1, max_value=7),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_deriv3_matches_ref(b, order, seed):
+    m = order + 1
+    u = jax.random.normal(jax.random.PRNGKey(seed), (b, m, m, m), jnp.float32)
+    d = dmat(order)
+    got = deriv3_pallas(u, d)
+    want = ref.deriv3_ref(u, d)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("tile", [1, 2, 4])
+def test_deriv3_tile_invariance(tile):
+    """Result must not depend on the BlockSpec tiling."""
+    order, b = 3, 8
+    u = jax.random.normal(jax.random.PRNGKey(1), (b, 4, 4, 4), jnp.float32)
+    d = dmat(order)
+    base = deriv3_pallas(u, d, tile=8)
+    got = deriv3_pallas(u, d, tile=tile)
+    for g, w in zip(got, base):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6)
+
+
+def test_deriv3_exact_on_linear_field():
+    """d/dr of a linear nodal field is exactly constant."""
+    order = 4
+    x, _, _ = basis.lgl_basis(order)
+    m = order + 1
+    u = np.zeros((1, m, m, m), np.float32)
+    u[0] = x[:, None, None]  # field = r0
+    got = deriv3_pallas(jnp.asarray(u), dmat(order))
+    np.testing.assert_allclose(np.asarray(got[0]), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[1]), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got[2]), 0.0, atol=1e-5)
+
+
+def test_deriv3_rejects_bad_tile():
+    u = jnp.zeros((6, 3, 3, 3), jnp.float32)
+    with pytest.raises(ValueError):
+        deriv3_pallas(u, dmat(2), tile=4)
+
+
+def test_pick_tile_divides_batch_and_fits():
+    for b in (1, 2, 8, 36, 72, 4096):
+        for m in (2, 4, 8):
+            t = pick_tile(b, m)
+            assert b % t == 0
+            assert t * m**3 * 4 * 4 <= 8 * 1024 * 1024 or t == 1
+
+
+# --------------------------------------------------------------- riemann --
+
+
+def rand_mats(key, f, acoustic_prob=0.5):
+    """Random (rho, lam, mu) with a mix of acoustic (mu=0) and elastic."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    rho = jax.random.uniform(k1, (f,), minval=0.5, maxval=3.0)
+    lam = jax.random.uniform(k2, (f,), minval=0.5, maxval=4.0)
+    mu = jax.random.uniform(k3, (f,), minval=0.1, maxval=3.0)
+    is_ac = jax.random.uniform(k4, (f,)) < acoustic_prob
+    mu = jnp.where(is_ac, 0.0, mu)
+    return jnp.stack([rho, lam, mu], axis=1).astype(jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    f=st.sampled_from([1, 2, 4, 8, 16]),
+    order=st.integers(min_value=1, max_value=7),
+    face=st.integers(min_value=0, max_value=5),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_riemann_matches_ref(f, order, face, seed):
+    m = order + 1
+    axis, sign = face // 2, (-1.0, 1.0)[face % 2]
+    key = jax.random.PRNGKey(seed)
+    ka, kb, kc, kd = jax.random.split(key, 4)
+    qm = jax.random.normal(ka, (f, 9, m, m), jnp.float32)
+    qp = jax.random.normal(kb, (f, 9, m, m), jnp.float32)
+    matm, matp = rand_mats(kc, f), rand_mats(kd, f)
+    got = riemann_pallas(qm, qp, matm, matp, axis, sign)
+    want = ref.riemann_ref(qm, qp, matm, matp, axis, sign)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("axis,sign", [(0, 1.0), (1, -1.0), (2, 1.0)])
+def test_riemann_zero_jump_zero_flux(axis, sign):
+    """Continuous state + continuous material -> exactly zero correction."""
+    f, m = 4, 4
+    q = jax.random.normal(jax.random.PRNGKey(3), (f, 9, m, m), jnp.float32)
+    mats = rand_mats(jax.random.PRNGKey(4), f)
+    out = riemann_pallas(q, q, mats, mats, axis, sign)
+    np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)
+
+
+def test_riemann_acoustic_interior_has_no_shear_flux():
+    """mu^- = 0 forces k1 = 0: tangential rows vanish for normal jumps."""
+    f, m = 2, 3
+    key = jax.random.PRNGKey(5)
+    qm = jax.random.normal(key, (f, 9, m, m), jnp.float32)
+    qp = jnp.zeros_like(qm)
+    mat_ac = jnp.tile(jnp.array([[1.0, 2.0, 0.0]], jnp.float32), (f, 1))
+    mat_el = jnp.tile(jnp.array([[1.0, 2.0, 1.0]], jnp.float32), (f, 1))
+    out = np.asarray(riemann_pallas(qm, qp, mat_ac, mat_el, 0, 1.0))
+    # velocity tangential components (v2, v3 rows) receive only k1 terms
+    np.testing.assert_allclose(out[:, 7], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[:, 8], 0.0, atol=1e-6)
+    # strain shear rows involving the normal also vanish (E13, E12)
+    np.testing.assert_allclose(out[:, 4], 0.0, atol=1e-6)
+    np.testing.assert_allclose(out[:, 5], 0.0, atol=1e-6)
+
+
+def test_riemann_1d_acoustic_characteristic():
+    """Normal-incidence acoustic jump reproduces the exact characteristic
+    p-wave strength phi_p = (t_n + Z+ v_n) / (Z- + Z+)."""
+    m = 2
+    rho, lam = 1.0, 1.0  # Z = 1 both sides
+    mats = jnp.array([[rho, lam, 0.0]], jnp.float32)
+    qm = np.zeros((1, 9, m, m), np.float32)
+    qp = np.zeros((1, 9, m, m), np.float32)
+    qm[0, 0] = 1.0  # E11- = 1 -> t_n = lam*(trE- - trE+) = 1
+    qm[0, 6] = 0.5  # v1- = 0.5 -> v_n = 0.5
+    out = np.asarray(
+        riemann_pallas(jnp.asarray(qm), jnp.asarray(qp), mats, mats, 0, 1.0)
+    )
+    phi_p = (1.0 + 1.0 * 0.5) / 2.0
+    np.testing.assert_allclose(out[0, 0], phi_p, rtol=1e-6)  # E11 row
+    np.testing.assert_allclose(out[0, 6], phi_p, rtol=1e-6)  # v1 row (Z-=1)
+    # no transverse excitation
+    np.testing.assert_allclose(out[0, 1], 0.0, atol=1e-7)
+    np.testing.assert_allclose(out[0, 2], 0.0, atol=1e-7)
+
+
+def test_riemann_orientation_antisymmetry_acoustic():
+    """The two sides of one interface must see consistent physics: for equal
+    impedances the p-strengths seen from either side obey
+    phi_left + phi_right = [v.n terms cancel the traction terms]."""
+    m = 2
+    mats = jnp.array([[1.0, 1.0, 0.0]], jnp.float32)
+    qa = np.random.RandomState(0).randn(1, 9, m, m).astype(np.float32)
+    qb = np.random.RandomState(1).randn(1, 9, m, m).astype(np.float32)
+    qa_j, qb_j = jnp.asarray(qa), jnp.asarray(qb)
+    # left element: interior qa, n = +e0 ; right element: interior qb, n = -e0
+    out_l = np.asarray(riemann_pallas(qa_j, qb_j, mats, mats, 0, 1.0))
+    out_r = np.asarray(riemann_pallas(qb_j, qa_j, mats, mats, 0, -1.0))
+    # Conservation: the normal-velocity flux corrections must be equal and
+    # the strain corrections opposite in the n-weighted sense. For the
+    # acoustic case: phi_l = k0(tn + Z vn), phi_r = k0(-tn + Z vn) where
+    # tn, vn are evaluated with the left normal. Their sum = 2 k0 Z vn.
+    k0, z = 0.5, 1.0
+    tn = (qa[0, 0] + qa[0, 1] + qa[0, 2]) - (qb[0, 0] + qb[0, 1] + qb[0, 2])
+    vn = qa[0, 6] - qb[0, 6]
+    np.testing.assert_allclose(
+        out_l[0, 0] + out_r[0, 0], 2 * k0 * z * vn, rtol=1e-5, atol=1e-6
+    )
+    np.testing.assert_allclose(
+        out_l[0, 0] - out_r[0, 0], 2 * k0 * tn, rtol=1e-5, atol=1e-6
+    )

@@ -1,0 +1,198 @@
+"""L2 model: stage function invariants, connectivity handling, energy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import basis, blocks, model
+
+
+def make_block(n_elem_side, order, mats_val=(1.0, 1.0, 0.0), hsize=8):
+    n = n_elem_side
+    conn, h, centers = blocks.build_structured(n, n, n)
+    k, m = conn.shape[0], order + 1
+    return dict(
+        conn=jnp.asarray(conn),
+        h=jnp.asarray(h),
+        centers=centers,
+        halo=jnp.zeros((hsize, 9, m, m), jnp.float32),
+        halo_idx=jnp.zeros((k, 6), jnp.int32),
+        mats=jnp.tile(jnp.asarray([mats_val], jnp.float32), (k, 1)),
+        halo_mats=jnp.ones((hsize, 3), jnp.float32),
+        k=k,
+        m=m,
+    )
+
+
+def run_stage(blk, q, res, scal, order, use_pallas):
+    fn = jax.jit(model.make_stage_fn(order, use_pallas=use_pallas))
+    return fn(
+        q, res, blk["halo"], blk["conn"], blk["halo_idx"], blk["mats"],
+        blk["halo_mats"], blk["h"], scal,
+    )
+
+
+@pytest.mark.parametrize("order", [1, 2, 3])
+def test_stage_pallas_matches_ref_path(order):
+    blk = make_block(2, order)
+    key = jax.random.PRNGKey(7)
+    m = blk["m"]
+    q = 0.1 * jax.random.normal(key, (blk["k"], 9, m, m, m), jnp.float32)
+    res = 0.05 * jax.random.normal(key, (blk["k"], 9, m, m, m), jnp.float32)
+    scal = jnp.asarray([1e-3, -0.5, 0.3], jnp.float32)
+    out_p = run_stage(blk, q, res, scal, order, True)
+    out_r = run_stage(blk, q, res, scal, order, False)
+    for a, b in zip(out_p, out_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-5, atol=5e-6)
+
+
+def test_zero_state_stays_zero():
+    blk = make_block(2, 2)
+    m = blk["m"]
+    q = jnp.zeros((blk["k"], 9, m, m, m), jnp.float32)
+    res = jnp.zeros_like(q)
+    scal = jnp.asarray([1e-2, 0.0, 1.0], jnp.float32)
+    q2, res2, tr = run_stage(blk, q, res, scal, 2, True)
+    assert float(jnp.abs(q2).max()) == 0.0
+    assert float(jnp.abs(tr).max()) == 0.0
+
+
+def test_constant_velocity_rigid_motion_invariant():
+    """Uniform velocity + zero strain is a steady state of the interior
+    (strain grows only at the traction-free hull where the mirror keeps v
+    but reflects E; interior elements see zero jumps)."""
+    blk = make_block(3, 2)
+    m = blk["m"]
+    q = jnp.zeros((blk["k"], 9, m, m, m), jnp.float32)
+    q = q.at[:, 6].set(1.0)  # v1 = 1 everywhere
+    res = jnp.zeros_like(q)
+    scal = jnp.asarray([1e-3, 0.0, 1.0], jnp.float32)
+    q2, _, _ = run_stage(blk, q, res, scal, 2, True)
+    # the center element (fully interior) must be untouched
+    center = 1 + 3 * (1 + 3 * 1)
+    np.testing.assert_allclose(
+        np.asarray(q2[center]), np.asarray(q[center]), atol=1e-7
+    )
+
+
+def test_face_traces_match_state_slices():
+    blk = make_block(2, 3)
+    m = blk["m"]
+    q = jax.random.normal(jax.random.PRNGKey(0), (blk["k"], 9, m, m, m), jnp.float32)
+    tr = model.all_face_traces(q)
+    np.testing.assert_array_equal(np.asarray(tr[:, 0]), np.asarray(q[:, :, 0]))
+    np.testing.assert_array_equal(np.asarray(tr[:, 1]), np.asarray(q[:, :, m - 1]))
+    np.testing.assert_array_equal(np.asarray(tr[:, 2]), np.asarray(q[:, :, :, 0]))
+    np.testing.assert_array_equal(np.asarray(tr[:, 5]), np.asarray(q[..., m - 1]))
+
+
+def test_halo_equals_neighbor_consistency():
+    """Splitting a 2x1x1 mesh into two single-element blocks connected by a
+    halo must reproduce the monolithic result exactly."""
+    order = 2
+    m = order + 1
+    # monolithic 2x1x1
+    conn, h, centers = blocks.build_structured(2, 1, 1)
+    k = 2
+    key = jax.random.PRNGKey(11)
+    q = 0.1 * jax.random.normal(key, (k, 9, m, m, m), jnp.float32)
+    res = jnp.zeros_like(q)
+    mats = jnp.tile(jnp.asarray([[1.0, 2.0, 0.5]], jnp.float32), (k, 1))
+    hsize = 4
+    halo = jnp.zeros((hsize, 9, m, m), jnp.float32)
+    hmats = jnp.ones((hsize, 3), jnp.float32)
+    hidx = jnp.zeros((k, 6), jnp.int32)
+    scal = jnp.asarray([1e-3, 0.0, 1.0], jnp.float32)
+    stage = jax.jit(model.make_stage_fn(order, use_pallas=False))
+    q_mono, _, _ = stage(
+        q, res, halo, jnp.asarray(conn), hidx, mats, hmats, jnp.asarray(h), scal
+    )
+
+    # split: element 0 alone, its +x face is a halo fed with elem 1's -x trace
+    tr = model.all_face_traces(q)
+    for e in range(2):
+        conn_s = np.full((1, 6), -2, np.int32)
+        f_shared = 1 if e == 0 else 0  # +x for elem 0, -x for elem 1
+        conn_s[0, f_shared] = -1
+        hidx_s = np.zeros((1, 6), np.int32)
+        halo_s = jnp.zeros((hsize, 9, m, m), jnp.float32)
+        halo_s = halo_s.at[0].set(tr[1 - e, f_shared ^ 1])
+        hmats_s = jnp.tile(mats[1 - e : 2 - e], (hsize, 1))
+        q_split, _, _ = stage(
+            q[e : e + 1], res[e : e + 1], halo_s, jnp.asarray(conn_s),
+            jnp.asarray(hidx_s), mats[e : e + 1], hmats_s,
+            jnp.asarray(h[e : e + 1]), scal,
+        )
+        np.testing.assert_allclose(
+            np.asarray(q_split[0]), np.asarray(q_mono[e]), rtol=1e-6, atol=1e-7
+        )
+
+
+def test_padding_elements_do_not_affect_real_ones():
+    """Adding all-mirror padding elements must not change real elements."""
+    order = 2
+    m = order + 1
+    conn, h, centers = blocks.build_structured(2, 2, 2)
+    k = conn.shape[0]
+    key = jax.random.PRNGKey(13)
+    q = 0.1 * jax.random.normal(key, (k, 9, m, m, m), jnp.float32)
+    res = jnp.zeros_like(q)
+    mats = jnp.tile(jnp.asarray([[1.0, 1.0, 0.0]], jnp.float32), (k, 1))
+    hsize = 8
+    args = dict(
+        halo=jnp.zeros((hsize, 9, m, m), jnp.float32),
+        halo_mats=jnp.ones((hsize, 3), jnp.float32),
+        scal=jnp.asarray([1e-3, -0.2, 0.7], jnp.float32),
+    )
+    stage = jax.jit(model.make_stage_fn(order, use_pallas=False))
+    hidx = jnp.zeros((k, 6), jnp.int32)
+    q_a, _, _ = stage(
+        q, res, args["halo"], jnp.asarray(conn), hidx, mats,
+        args["halo_mats"], jnp.asarray(h), args["scal"],
+    )
+    # pad to k + 4
+    pad = 4
+    conn_p = np.concatenate([conn, np.full((pad, 6), -2, np.int32)])
+    q_p = jnp.concatenate([q, 17.0 * jnp.ones((pad, 9, m, m, m), jnp.float32)])
+    res_p = jnp.concatenate([res, jnp.zeros((pad, 9, m, m, m), jnp.float32)])
+    mats_p = jnp.concatenate([mats, jnp.ones((pad, 3), jnp.float32)])
+    h_p = jnp.concatenate([jnp.asarray(h), jnp.ones((pad, 3), jnp.float32)])
+    hidx_p = jnp.zeros((k + pad, 6), jnp.int32)
+    q_b, _, _ = stage(
+        q_p, res_p, args["halo"], jnp.asarray(conn_p), hidx_p, mats_p,
+        args["halo_mats"], h_p, args["scal"],
+    )
+    np.testing.assert_allclose(np.asarray(q_b[:k]), np.asarray(q_a), atol=1e-7)
+
+
+def test_energy_positive_and_scales():
+    blk = make_block(2, 3, mats_val=(2.0, 1.5, 0.7))
+    m = blk["m"]
+    q = jax.random.normal(jax.random.PRNGKey(1), (blk["k"], 9, m, m, m), jnp.float32)
+    efn = jax.jit(model.make_energy_fn(3))
+    e1 = float(efn(q, blk["mats"], blk["h"])[0])
+    e2 = float(efn(2.0 * q, blk["mats"], blk["h"])[0])
+    assert e1 > 0
+    np.testing.assert_allclose(e2, 4.0 * e1, rtol=1e-5)
+
+
+def test_energy_zero_for_zero_state():
+    blk = make_block(2, 2)
+    m = blk["m"]
+    q = jnp.zeros((blk["k"], 9, m, m, m), jnp.float32)
+    efn = jax.jit(model.make_energy_fn(2))
+    assert float(efn(q, blk["mats"], blk["h"])[0]) == 0.0
+
+
+def test_lsrk_coefficients():
+    """5-stage LSRK4: sum(b) ~ consistency; known first coefficient."""
+    assert model.LSRK_A[0] == 0.0
+    assert len(model.LSRK_A) == len(model.LSRK_B) == 5
+    # first-order consistency: the scheme integrates dq/dt = c exactly over
+    # one step: q1 = q0 + dt*c requires prod/sum identity; check numerically.
+    q, r = 0.0, 0.0
+    for a, b in zip(model.LSRK_A, model.LSRK_B):
+        r = a * r + 1.0  # dt * rhs with dt=1, rhs=1
+        q = q + b * r
+    np.testing.assert_allclose(q, 1.0, rtol=1e-12)

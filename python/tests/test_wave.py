@@ -1,0 +1,111 @@
+"""Physics validation: analytic standing wave, convergence, energy decay."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import blocks, model
+
+
+def evolve(order, n, T, cfl=0.25, use_pallas=False, mats_val=(1.0, 1.0, 0.0)):
+    conn, h, centers = blocks.build_structured(n, n, n)
+    k, m = conn.shape[0], order + 1
+    coords = blocks.node_coords(order, centers, h)
+    q = jnp.asarray(blocks.standing_wave(coords, 0.0), jnp.float32)
+    res = jnp.zeros_like(q)
+    hsize = 8
+    halo = jnp.zeros((hsize, 9, m, m), jnp.float32)
+    hidx = jnp.zeros((k, 6), jnp.int32)
+    mats = jnp.tile(jnp.asarray([mats_val], jnp.float32), (k, 1))
+    hmats = jnp.ones((hsize, 3), jnp.float32)
+    hj, connj = jnp.asarray(h), jnp.asarray(conn)
+    cmax = np.sqrt((mats_val[1] + 2 * mats_val[2]) / mats_val[0])
+    dt = cfl * (1.0 / n) / (cmax * (order * order + 1))
+    steps = max(int(np.ceil(T / dt)), 1)
+    dt = T / steps
+    stage = jax.jit(model.make_stage_fn(order, use_pallas=use_pallas))
+    efn = jax.jit(model.make_energy_fn(order))
+    e0 = float(efn(q, mats, hj)[0])
+    energies = [e0]
+    for _ in range(steps):
+        for i in range(5):
+            scal = jnp.asarray(
+                [dt, model.LSRK_A[i], model.LSRK_B[i]], jnp.float32
+            )
+            q, res, _ = stage(q, res, halo, connj, hidx, mats, hmats, hj, scal)
+        energies.append(float(efn(q, mats, hj)[0]))
+    qex = blocks.standing_wave(coords, T)
+    err = np.sqrt(np.mean((np.asarray(q, np.float64) - qex) ** 2))
+    ref = np.sqrt(np.mean(qex**2))
+    return err / max(ref, 1e-30), np.asarray(energies)
+
+
+def test_spectral_convergence_in_order():
+    errs = {}
+    for order in (2, 3, 4):
+        errs[order], _ = evolve(order, 2, T=0.25)
+    assert errs[3] < 0.35 * errs[2], errs
+    assert errs[4] < 0.35 * errs[3], errs
+    assert errs[4] < 5e-3, errs
+
+
+def test_h_convergence():
+    e_coarse, _ = evolve(2, 2, T=0.2)
+    e_fine, _ = evolve(2, 4, T=0.2)
+    # 3rd-order scheme: refining h by 2 should cut the error by >~ 4x
+    assert e_fine < e_coarse / 4.0, (e_coarse, e_fine)
+
+
+def test_energy_monotonically_nonincreasing():
+    """Upwind DG on a closed (traction-free) domain dissipates energy."""
+    _, energies = evolve(3, 2, T=0.3)
+    # f32 accumulation allows O(eps) wiggle on individual steps
+    assert np.all(np.diff(energies) <= 1e-7 * energies[0])
+    # ... but only slightly (resolved mode): < 0.2% loss
+    assert energies[-1] > 0.998 * energies[0]
+
+
+def test_pallas_path_matches_ref_path_through_time():
+    e_ref, en_ref = evolve(2, 2, T=0.1, use_pallas=False)
+    e_pal, en_pal = evolve(2, 2, T=0.1, use_pallas=True)
+    np.testing.assert_allclose(e_pal, e_ref, rtol=1e-3)
+    np.testing.assert_allclose(en_pal, en_ref, rtol=1e-4)
+
+
+def test_elastic_medium_stable():
+    """Elastic material (mu > 0): energy bounded and non-increasing."""
+    _, energies = evolve(2, 2, T=0.2, mats_val=(1.0, 1.0, 0.8))
+    assert np.all(np.diff(energies) <= 1e-9 * energies[0])
+    assert energies[-1] > 0.5 * energies[0]
+
+
+@pytest.mark.parametrize("mats_val", [(1.0, 1.0, 0.0), (2.0, 3.0, 1.0)])
+def test_heterogeneous_interface_stable(mats_val):
+    """Two-material block (paper Fig 6.1 style): stability across the
+    acoustic/elastic discontinuity."""
+    order, n = 2, 2
+    conn, h, centers = blocks.build_structured(n, n, n)
+    k, m = conn.shape[0], order + 1
+    coords = blocks.node_coords(order, centers, h)
+    q = jnp.asarray(blocks.standing_wave(coords, 0.0), jnp.float32)
+    res = jnp.zeros_like(q)
+    halo = jnp.zeros((8, 9, m, m), jnp.float32)
+    hidx = jnp.zeros((k, 6), jnp.int32)
+    # half acoustic, half the parametrized material
+    mats_np = np.tile([[1.0, 1.0, 0.0]], (k, 1)).astype(np.float32)
+    mats_np[centers[:, 0] > 0.5] = mats_val
+    mats = jnp.asarray(mats_np)
+    hmats = jnp.ones((8, 3), jnp.float32)
+    hj, connj = jnp.asarray(h), jnp.asarray(conn)
+    dt = 1e-3
+    stage = jax.jit(model.make_stage_fn(order, use_pallas=False))
+    efn = jax.jit(model.make_energy_fn(order))
+    e0 = float(efn(q, mats, hj)[0])
+    for _ in range(100):
+        for i in range(5):
+            scal = jnp.asarray([dt, model.LSRK_A[i], model.LSRK_B[i]], jnp.float32)
+            q, res, _ = stage(q, res, halo, connj, hidx, mats, hmats, hj, scal)
+    e1 = float(efn(q, mats, hj)[0])
+    assert np.isfinite(e1)
+    assert e1 <= e0 * (1 + 1e-6)

@@ -1,0 +1,17 @@
+//! The per-node host/offload coordination (paper Fig 5.1) and the
+//! experiment drivers that regenerate every table and figure.
+//!
+//! [`node`] implements the paper's execution flow in-process: the host
+//! (CPU block) and the offload worker (MIC block) run concurrently on
+//! dedicated threads, each owning its own PJRT runtime (the client is not
+//! `Send`); they synchronize once per RK stage to exchange shared-face
+//! traces, mirroring the host<->coprocessor dynamic the paper treats "in
+//! much the same way as the dynamic between compute nodes".
+
+pub mod experiments;
+pub mod node;
+pub mod profile;
+pub mod report;
+
+pub use node::{HeteroRun, WorkerBackend};
+pub use profile::ProfileReport;

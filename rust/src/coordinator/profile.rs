@@ -1,0 +1,91 @@
+//! Per-kernel profiling reports (the Fig 4.1 / Fig 6.2 data shape).
+
+use crate::costmodel::kernels::ALL_KERNELS;
+use crate::sim::KernelBreakdown;
+use crate::solver::reference::KernelTimes;
+
+/// A kernel-time table with total + percentage columns.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    /// (kernel, seconds) rows.
+    pub rows: Vec<(&'static str, f64)>,
+}
+
+impl ProfileReport {
+    pub fn from_kernel_times(t: &KernelTimes) -> Self {
+        ProfileReport { rows: t.rows().to_vec() }
+    }
+
+    pub fn from_breakdown(b: &KernelBreakdown) -> Self {
+        let rows = ALL_KERNELS
+            .iter()
+            .map(|k| {
+                let secs: f64 = b
+                    .entries
+                    .iter()
+                    .filter(|((_, kn), _)| *kn == k.name())
+                    .map(|(_, v)| *v)
+                    .sum();
+                (k.name(), secs)
+            })
+            .collect();
+        ProfileReport { rows }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.rows.iter().map(|(_, s)| s).sum()
+    }
+
+    /// (kernel, seconds, fraction) sorted by descending share.
+    pub fn fractions(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total().max(1e-300);
+        let mut v: Vec<_> =
+            self.rows.iter().map(|&(k, s)| (k, s, s / total)).collect();
+        v.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap());
+        v
+    }
+
+    pub fn render(&self, title: &str) -> String {
+        let rows: Vec<Vec<String>> = self
+            .fractions()
+            .iter()
+            .map(|(k, s, f)| {
+                vec![k.to_string(), super::report::fmt_secs(*s), format!("{:.1}%", f * 100.0)]
+            })
+            .collect();
+        format!("{title}\n{}", super::report::render_table(&["kernel", "time", "share"], &rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sorted_and_normalized() {
+        let t = KernelTimes {
+            volume_loop: 5.0,
+            int_flux: 2.0,
+            interp_q: 0.5,
+            lift: 0.5,
+            rk: 1.0,
+            bound_flux: 0.25,
+            parallel_flux: 0.75,
+        };
+        let p = ProfileReport::from_kernel_times(&t);
+        let f = p.fractions();
+        assert_eq!(f[0].0, "volume_loop");
+        let sum: f64 = f.iter().map(|x| x.2).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!((p.total() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let t = KernelTimes { volume_loop: 1.0, ..Default::default() };
+        let p = ProfileReport::from_kernel_times(&t);
+        let s = p.render("test");
+        assert!(s.contains("volume_loop"));
+        assert!(s.contains("100.0%"));
+    }
+}

@@ -1,0 +1,103 @@
+//! Plain-text table / CSV rendering for experiment outputs.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::Result;
+
+/// Render an aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let line = |out: &mut String, cells: &[String]| {
+        let mut first = true;
+        for (i, c) in cells.iter().enumerate().take(ncol) {
+            if !first {
+                out.push_str("  ");
+            }
+            let _ = write!(out, "{:>w$}", c, w = widths[i]);
+            first = false;
+        }
+        out.push('\n');
+    };
+    line(&mut out, &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+    out.push_str(&"-".repeat(total));
+    out.push('\n');
+    for row in rows {
+        line(&mut out, row);
+    }
+    out
+}
+
+/// Write rows as CSV (headers first).
+pub fn write_csv(path: impl AsRef<Path>, headers: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let mut s = String::new();
+    s.push_str(&headers.join(","));
+    s.push('\n');
+    for row in rows {
+        s.push_str(&row.join(","));
+        s.push('\n');
+    }
+    if let Some(parent) = path.as_ref().parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+/// Format seconds in a human scale.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["long-name".into(), "12345".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[3].contains("12345"));
+    }
+
+    #[test]
+    fn csv_roundtrip(){
+        let dir = std::env::temp_dir().join("repro_test_csv");
+        let p = dir.join("x.csv");
+        write_csv(&p, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn fmt_scales() {
+        assert_eq!(fmt_secs(250.0), "250");
+        assert_eq!(fmt_secs(2.5), "2.50");
+        assert!(fmt_secs(0.0025).ends_with("ms"));
+        assert!(fmt_secs(2.5e-5).ends_with("us"));
+    }
+}

@@ -1,0 +1,126 @@
+//! Per-device kernel timing functions T_device(kernel, N, count).
+
+use super::kernels::{work_flops, PaperKernel, ALL_KERNELS};
+
+/// The three execution resources of a Stampede node (paper §5.2/§5.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceClass {
+    /// Baseline: one scalar MPI rank per core, 8 per node.
+    CpuScalar,
+    /// Optimized host: 8 OpenMP threads + hand vectorization, one socket.
+    CpuVector,
+    /// Xeon Phi, 120 threads, 512-bit vectors.
+    Mic,
+}
+
+/// Effective per-kernel throughput of one device *pool* (a whole socket or
+/// the whole MIC): `time = count * work_flops(kernel, n) / rate`.
+///
+/// Rates are "effective" (achieved) flops — they absorb vectorization
+/// efficiency, threading overhead and memory-bandwidth limits per kernel,
+/// exactly like the paper's measured T(N, K) tables absorb them.
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub class: DeviceClass,
+    pub name: &'static str,
+    /// Aggregate peak of the pool, for roofline/utilization reporting.
+    pub peak_gflops: f64,
+    /// Effective rate in flops/s per kernel, indexed by ALL_KERNELS order.
+    rates: [f64; 7],
+}
+
+fn kidx(k: PaperKernel) -> usize {
+    ALL_KERNELS.iter().position(|&x| x == k).expect("kernel in ALL_KERNELS")
+}
+
+impl DeviceModel {
+    pub fn new(
+        class: DeviceClass,
+        name: &'static str,
+        peak_gflops: f64,
+        rates_gflops: [(PaperKernel, f64); 7],
+    ) -> Self {
+        let mut rates = [0.0; 7];
+        for (k, r) in rates_gflops {
+            rates[kidx(k)] = r * 1e9;
+        }
+        assert!(rates.iter().all(|&r| r > 0.0), "every kernel needs a rate");
+        DeviceModel { class, name, peak_gflops, rates }
+    }
+
+    /// Effective rate for a kernel (flops/s).
+    pub fn rate(&self, kernel: PaperKernel) -> f64 {
+        self.rates[kidx(kernel)]
+    }
+
+    /// Seconds to process `count` elements (volume kernels) or faces (flux
+    /// kernels) for one full timestep at order `n`.
+    pub fn time(&self, kernel: PaperKernel, n: usize, count: usize) -> f64 {
+        count as f64 * work_flops(kernel, n) / self.rate(kernel)
+    }
+
+    /// Achieved fraction of peak for a kernel — the utilization number
+    /// reported in EXPERIMENTS.md.
+    pub fn utilization(&self, kernel: PaperKernel) -> f64 {
+        self.rate(kernel) / (self.peak_gflops * 1e9)
+    }
+
+    /// Sum timestep time over the volume kernels for `k` elements plus the
+    /// face kernels with explicit counts.
+    pub fn step_time(
+        &self,
+        n: usize,
+        k_elems: usize,
+        int_faces: usize,
+        bound_faces: usize,
+        parallel_faces: usize,
+    ) -> f64 {
+        self.time(PaperKernel::VolumeLoop, n, k_elems)
+            + self.time(PaperKernel::InterpQ, n, k_elems)
+            + self.time(PaperKernel::Lift, n, k_elems)
+            + self.time(PaperKernel::Rk, n, k_elems)
+            + self.time(PaperKernel::IntFlux, n, int_faces)
+            + self.time(PaperKernel::BoundFlux, n, bound_faces)
+            + self.time(PaperKernel::ParallelFlux, n, parallel_faces)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::calib::stampede_node;
+
+    #[test]
+    fn time_linear_in_count() {
+        let node = stampede_node();
+        let t1 = node.mic.time(PaperKernel::VolumeLoop, 7, 1000);
+        let t2 = node.mic.time(PaperKernel::VolumeLoop, 7, 2000);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_below_one() {
+        let node = stampede_node();
+        for dev in [&node.cpu_scalar, &node.cpu_vec, &node.mic] {
+            for k in ALL_KERNELS {
+                let u = dev.utilization(k);
+                assert!(u > 0.0 && u < 1.0, "{} {k:?} {u}", dev.name);
+            }
+        }
+    }
+
+    #[test]
+    fn step_time_additive() {
+        let node = stampede_node();
+        let d = &node.cpu_vec;
+        let full = d.step_time(7, 100, 300, 60, 20);
+        let sum = d.time(PaperKernel::VolumeLoop, 7, 100)
+            + d.time(PaperKernel::InterpQ, 7, 100)
+            + d.time(PaperKernel::Lift, 7, 100)
+            + d.time(PaperKernel::Rk, 7, 100)
+            + d.time(PaperKernel::IntFlux, 7, 300)
+            + d.time(PaperKernel::BoundFlux, 7, 60)
+            + d.time(PaperKernel::ParallelFlux, 7, 20);
+        assert!((full - sum).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,148 @@
+//! The seven kernels of the dgae timestep (paper §4) and their work counts.
+//!
+//! Work formulas follow directly from the DGSEM operation counts with
+//! M = N + 1 nodes per direction:
+//!
+//! * `volume_loop`: "elemental tensor product application to each of the
+//!   nine unknowns. For each unknown, three tensor applications [...] each
+//!   amounts to M matrix multiplications of one MxM matrix by another" —
+//!   9 fields x 3 axes x M x (2 M^3) flops, plus the pointwise stress.
+//! * `int_flux` / `bound_flux` / `parallel_flux`: "various operations
+//!   performed with vectors of length NFP" per face-node; ~220 flops per
+//!   face node covers the Riemann solve (impedances, jumps, 9 outputs).
+//! * `interp_q`: trace extraction, 6 faces x 9 fields x M^2 moves.
+//! * `lift`: 6 faces x 9 fields x M^2 fused multiply-adds.
+//! * `rk`: 2 axpy over 9 M^3 values per stage, 5 stages per step.
+//!
+//! All counts are per *timestep* (5 RK stages) per element or per face.
+
+/// The kernels profiled in Fig 4.1 / compared in Fig 6.2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PaperKernel {
+    VolumeLoop,
+    IntFlux,
+    InterpQ,
+    Lift,
+    Rk,
+    BoundFlux,
+    ParallelFlux,
+}
+
+pub const ALL_KERNELS: [PaperKernel; 7] = [
+    PaperKernel::VolumeLoop,
+    PaperKernel::IntFlux,
+    PaperKernel::InterpQ,
+    PaperKernel::Lift,
+    PaperKernel::Rk,
+    PaperKernel::BoundFlux,
+    PaperKernel::ParallelFlux,
+];
+
+impl PaperKernel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PaperKernel::VolumeLoop => "volume_loop",
+            PaperKernel::IntFlux => "int_flux",
+            PaperKernel::InterpQ => "interp_q",
+            PaperKernel::Lift => "lift",
+            PaperKernel::Rk => "rk",
+            PaperKernel::BoundFlux => "bound_flux",
+            PaperKernel::ParallelFlux => "parallel_flux",
+        }
+    }
+
+    /// Is the kernel's work proportional to element count (vs face count)?
+    pub fn is_volume_kernel(&self) -> bool {
+        !matches!(self, PaperKernel::BoundFlux | PaperKernel::ParallelFlux)
+    }
+}
+
+const RK_STAGES: f64 = 5.0;
+/// Flops of one exact elastic-acoustic Riemann solve per face node.
+const RIEMANN_FLOPS: f64 = 220.0;
+
+/// Floating-point work (flops) of `kernel` for one element (volume kernels)
+/// or one face (flux kernels) for a full 5-stage timestep at order `n`.
+pub fn work_flops(kernel: PaperKernel, n: usize) -> f64 {
+    let m = (n + 1) as f64;
+    let per_stage = match kernel {
+        // 9 unknowns x 3 tensor applications x 2 M^4 flops + stress (13 M^3)
+        PaperKernel::VolumeLoop => 9.0 * 3.0 * 2.0 * m.powi(4) + 13.0 * m.powi(3),
+        // interior faces: one Riemann solve per face node, both sides lifted
+        // (per shared face, counted once)
+        PaperKernel::IntFlux => 2.0 * RIEMANN_FLOPS * m * m,
+        // trace extraction: 6 faces x 9 fields x M^2 copies (count as 1 flop)
+        PaperKernel::InterpQ => 6.0 * 9.0 * m * m,
+        // lift: 6 faces x 9 fields x M^2 fma = 2 flops
+        PaperKernel::Lift => 2.0 * 6.0 * 9.0 * m * m,
+        // low-storage RK: res = a res + dt rhs ; q += b res -> 4 flops/value
+        PaperKernel::Rk => 4.0 * 9.0 * m.powi(3),
+        // physical boundary: mirror + one-sided Riemann per face
+        PaperKernel::BoundFlux => (RIEMANN_FLOPS + 18.0) * m * m,
+        // off-node face: same Riemann + pack/unpack
+        PaperKernel::ParallelFlux => (RIEMANN_FLOPS + 36.0) * m * m,
+    };
+    per_stage * RK_STAGES
+}
+
+/// Bytes moved from/to main memory by `kernel` per element (or face) per
+/// timestep — used for roofline sanity checks of the calibration.
+pub fn work_bytes(kernel: PaperKernel, n: usize) -> f64 {
+    let m = (n + 1) as f64;
+    let per_stage = match kernel {
+        PaperKernel::VolumeLoop => 4.0 * (2.0 * 9.0 * m.powi(3) + 9.0 * m.powi(3)),
+        PaperKernel::IntFlux => 4.0 * (4.0 * 9.0 * m * m),
+        PaperKernel::InterpQ => 4.0 * (2.0 * 9.0 * 6.0 * m * m),
+        PaperKernel::Lift => 4.0 * (3.0 * 9.0 * 6.0 * m * m),
+        PaperKernel::Rk => 4.0 * (4.0 * 9.0 * m.powi(3)),
+        PaperKernel::BoundFlux => 4.0 * (3.0 * 9.0 * m * m),
+        PaperKernel::ParallelFlux => 4.0 * (4.0 * 9.0 * m * m),
+    };
+    per_stage * RK_STAGES
+}
+
+/// Bytes of one face trace (9 fields x M^2 nodes, f32) — the unit of halo,
+/// PCI and MPI traffic.
+pub fn face_trace_bytes(n: usize) -> usize {
+    9 * (n + 1) * (n + 1) * 4
+}
+
+/// Bytes of one element's full state (9 fields x M^3, f32).
+pub fn element_state_bytes(n: usize) -> usize {
+    9 * (n + 1).pow(3) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_dominates_at_high_order() {
+        // at N=7 the volume kernel must dominate all others per element
+        let n = 7;
+        let vol = work_flops(PaperKernel::VolumeLoop, n);
+        for k in [PaperKernel::IntFlux, PaperKernel::InterpQ, PaperKernel::Lift, PaperKernel::Rk] {
+            assert!(vol > 3.0 * work_flops(k, n), "{k:?}");
+        }
+    }
+
+    #[test]
+    fn work_grows_with_order() {
+        for k in ALL_KERNELS {
+            assert!(work_flops(k, 7) > work_flops(k, 3));
+            assert!(work_bytes(k, 7) > work_bytes(k, 3));
+        }
+    }
+
+    #[test]
+    fn trace_and_state_sizes() {
+        assert_eq!(face_trace_bytes(7), 9 * 64 * 4);
+        assert_eq!(element_state_bytes(7), 9 * 512 * 4);
+        // the paper's O(K (N+1)^3) vs O(6 K^{2/3} (N+1)^2) traffic argument
+        let k: f64 = 8192.0;
+        // ratio = K^{1/3} (N+1) / 6 = 20.2 * 8 / 6 ~ 27 at the paper's size
+        let task_offload = k * element_state_bytes(7) as f64;
+        let nested = 6.0 * k.powf(2.0 / 3.0) * face_trace_bytes(7) as f64;
+        assert!(task_offload > 20.0 * nested, "{}", task_offload / nested);
+    }
+}

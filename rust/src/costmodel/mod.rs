@@ -1,0 +1,41 @@
+//! Calibrated performance models for the Stampede-class node (paper §5.6).
+//!
+//! The paper builds per-kernel timing functions T_kernel(N, K) for the CPU
+//! and the MIC from measured experiments, plus a PCI transfer model, and
+//! solves T_MIC = T_CPU + T_PCI for the work split. With no Stampede
+//! available, this module encodes the same *functional forms* with
+//! constants calibrated to everything the paper reports (hardware specs in
+//! §5.2, the baseline profile of Fig 4.1, the per-kernel speedups of
+//! Fig 6.2, the transfer curve of Fig 5.3, and the end-to-end times of
+//! Table 6.1) — see `calib.rs` for the fit and DESIGN.md for the
+//! substitution rationale.
+
+pub mod calib;
+pub mod device;
+pub mod kernels;
+pub mod network;
+pub mod pci;
+
+pub use device::{DeviceClass, DeviceModel};
+pub use kernels::PaperKernel;
+pub use network::NetworkModel;
+pub use pci::PciModel;
+
+/// Everything the simulator / balancer needs about one compute node.
+#[derive(Debug, Clone)]
+pub struct NodeModel {
+    /// Baseline per-core scalar CPU (one MPI rank per core).
+    pub cpu_scalar: DeviceModel,
+    /// Optimized CPU socket: vectorized + OpenMP across `cpu_cores`.
+    pub cpu_vec: DeviceModel,
+    /// The accelerator (61-core MIC, 120 threads).
+    pub mic: DeviceModel,
+    pub pci: PciModel,
+    pub cores_per_socket: usize,
+}
+
+impl Default for NodeModel {
+    fn default() -> Self {
+        calib::stampede_node()
+    }
+}

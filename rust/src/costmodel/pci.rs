@@ -1,0 +1,122 @@
+//! PCI-bus transfer model (paper §5.6, Fig 5.3).
+//!
+//! The paper measured host<->MIC transfers of 1..4096 MB and fit the load
+//! balancer's PCI_time(K_MIC) term from them. The model here is the
+//! standard latency + size/bandwidth affine form with (a) asymmetric
+//! directions (KNC PCIe 2.0: ~6 GB/s to the device, ~5 GB/s back), (b) a
+//! small-transfer penalty floor (offload invocation overhead), and (c) a
+//! deterministic jitter hook reproducing Fig 5.3's error bars.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Direction {
+    ToDevice,
+    FromDevice,
+}
+
+#[derive(Debug, Clone)]
+pub struct PciModel {
+    /// Per-transfer latency (offload region setup), seconds.
+    pub latency_s: f64,
+    /// Sustained bandwidth host -> device, bytes/s.
+    pub bw_to_device: f64,
+    /// Sustained bandwidth device -> host, bytes/s.
+    pub bw_from_device: f64,
+    /// Relative std-dev of measured samples (Fig 5.3 error bars).
+    pub jitter_rel: f64,
+}
+
+impl PciModel {
+    /// Mean transfer time for `bytes` in `dir`.
+    pub fn transfer_time(&self, bytes: usize, dir: Direction) -> f64 {
+        let bw = match dir {
+            Direction::ToDevice => self.bw_to_device,
+            Direction::FromDevice => self.bw_from_device,
+        };
+        self.latency_s + bytes as f64 / bw
+    }
+
+    /// One noisy sample (deterministic in `seed`) — used to regenerate the
+    /// mean +/- sigma series of Fig 5.3.
+    pub fn sample(&self, bytes: usize, dir: Direction, seed: u64) -> f64 {
+        let mean = self.transfer_time(bytes, dir);
+        let mut rng = Rng::seed_from_u64(seed ^ bytes as u64);
+        // uniform +/- sqrt(3) sigma has std-dev sigma
+        let u: f64 = rng.range(-1.0, 1.0);
+        mean * (1.0 + self.jitter_rel * 3f64.sqrt() * u)
+    }
+
+    /// The per-timestep PCI cost of the nested scheme for `shared_faces`
+    /// CPU<->MIC faces at order `n`: both directions, once per step
+    /// (paper §5.5: "Synchronization is only required once per time step").
+    pub fn step_exchange_time(&self, shared_faces: usize, n: usize) -> f64 {
+        let bytes = shared_faces * super::kernels::face_trace_bytes(n);
+        self.transfer_time(bytes, Direction::ToDevice)
+            + self.transfer_time(bytes, Direction::FromDevice)
+    }
+
+    /// The per-timestep PCI cost of the task-offload strawman (paper §5.5):
+    /// the whole element state crosses the bus both ways every step.
+    pub fn step_task_offload_time(&self, k_elems: usize, n: usize) -> f64 {
+        let bytes = k_elems * super::kernels::element_state_bytes(n);
+        self.transfer_time(bytes, Direction::ToDevice)
+            + self.transfer_time(bytes, Direction::FromDevice)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::calib::stampede_node;
+
+    #[test]
+    fn affine_in_size() {
+        let pci = stampede_node().pci;
+        let t1 = pci.transfer_time(1 << 20, Direction::ToDevice);
+        let t2 = pci.transfer_time(2 << 20, Direction::ToDevice);
+        let t4 = pci.transfer_time(4 << 20, Direction::ToDevice);
+        // second differences vanish for affine
+        assert!(((t4 - t2) - 2.0 * (t2 - t1)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn asymmetric_directions() {
+        let pci = stampede_node().pci;
+        let big = 1 << 30;
+        assert!(
+            pci.transfer_time(big, Direction::FromDevice)
+                > pci.transfer_time(big, Direction::ToDevice)
+        );
+    }
+
+    #[test]
+    fn latency_floor_dominates_small() {
+        let pci = stampede_node().pci;
+        let t = pci.transfer_time(64, Direction::ToDevice);
+        assert!(t > 0.9 * pci.latency_s);
+    }
+
+    #[test]
+    fn samples_center_on_mean() {
+        let pci = stampede_node().pci;
+        let bytes = 64 << 20;
+        let mean = pci.transfer_time(bytes, Direction::ToDevice);
+        let n = 2000;
+        let avg: f64 = (0..n)
+            .map(|i| pci.sample(bytes, Direction::ToDevice, i))
+            .sum::<f64>()
+            / n as f64;
+        assert!((avg / mean - 1.0).abs() < 0.02, "avg {avg} mean {mean}");
+    }
+
+    #[test]
+    fn nested_traffic_far_below_task_offload() {
+        let pci = stampede_node().pci;
+        let k = 8192;
+        let shared = 6 * (k as f64).powf(2.0 / 3.0) as usize;
+        let nested = pci.step_exchange_time(shared, 7);
+        let offload = pci.step_task_offload_time(k, 7);
+        assert!(offload > 10.0 * nested, "nested {nested} offload {offload}");
+    }
+}

@@ -1,0 +1,39 @@
+//! Nested partitioning for parallel heterogeneous clusters.
+//!
+//! Reproduction of Kelly, Ghattas & Sundar (2013): a two-level partitioning
+//! scheme for clusters whose nodes pair a multicore CPU with an accelerator
+//! (Xeon Phi / MIC on TACC Stampede). Level 1 splices the Morton-ordered
+//! octree element array into one contiguous subdomain per *node*; level 2
+//! splits each node's subdomain asymmetrically into **interior** elements
+//! (offloaded to the accelerator with minimal exposed surface) and
+//! **boundary** elements (kept on the CPU, which also owns all inter-node
+//! communication). The CPU/accelerator work ratio is solved from calibrated
+//! per-kernel cost models so both finish a timestep simultaneously.
+//!
+//! The evaluation vehicle is an hp-discontinuous-Galerkin spectral element
+//! solver for coupled elastic-acoustic wave propagation. Its per-timestep
+//! compute graph is authored in JAX (+ Pallas kernels) and AOT-compiled to
+//! HLO at build time (`make artifacts`); this crate loads and executes the
+//! artifacts through PJRT ([`runtime`]) so python is never on the run path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`mesh`]       — Morton-ordered octree hexahedral meshes, connectivity
+//! * [`partition`]  — level-1 splice, level-2 nested CPU/MIC split, balance
+//! * [`costmodel`]  — calibrated Stampede kernel/PCI/network time models
+//! * [`sim`]        — discrete-event heterogeneous cluster simulator
+//! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels
+//! * [`runtime`]    — PJRT artifact registry, compile cache, execution
+//! * [`coordinator`]— host/offload per-node flow, experiments, reports
+
+pub mod coordinator;
+pub mod costmodel;
+pub mod mesh;
+pub mod partition;
+pub mod runtime;
+pub mod sim;
+pub mod solver;
+pub mod util;
+
+/// Crate-wide result type (anyhow for rich error context in the binaries).
+pub type Result<T> = anyhow::Result<T>;

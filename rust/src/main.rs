@@ -1,0 +1,389 @@
+//! `repro` — the leader binary: solve runs, partition inspection, and the
+//! paper's experiment drivers.
+//!
+//! ```text
+//! repro run         solve a wave problem end to end (PJRT or rust-ref)
+//! repro partition   print nested-partition statistics for a workload
+//! repro balance     solve the CPU/MIC load-balance split (paper §5.6)
+//! repro experiment  regenerate a paper table/figure (fig4-1, fig5-2, ...)
+//! repro validate    convergence study against the analytic solution
+//! repro ablation    once-per-step vs per-stage exchange accuracy
+//! ```
+//!
+//! Flag parsing is hand-rolled (the build is offline; no clap): every
+//! subcommand takes `--key value` pairs and boolean `--flag`s.
+
+use std::collections::HashMap;
+
+use repro::coordinator::{experiments, node::WorkerBackend};
+use repro::costmodel::calib;
+use repro::mesh::build_local_blocks;
+use repro::mesh::geometry::{discontinuous_brick, two_tree_geometry, unit_cube_geometry};
+use repro::partition::{nested_partition, partition_stats, solve_mic_fraction, splice};
+use repro::runtime::ArtifactManifest;
+use repro::solver::analytic::standing_wave;
+use repro::solver::rk::stable_dt;
+use repro::solver::{BlockState, LglBasis};
+
+const USAGE: &str = "\
+repro — nested partitioning for heterogeneous clusters (Kelly, Ghattas & Sundar 2013)
+
+USAGE: repro <command> [--key value] [--flag]
+
+COMMANDS
+  run         end-to-end wave solve on the CPU+MIC worker pair
+                --n 4  --order 2  --steps 20  --nodes 1  --artifacts artifacts
+                --rust-ref  --two-tree  --sync-per-step
+  partition   nested-partition statistics
+                --n 16  --nodes 4  --order 7  [--mic-fraction F]
+  balance     CPU/MIC load-balance solve   --order 7  --elems 8192
+  experiment  regenerate a paper artifact: fig4-1 fig5-2 fig5-3 fig5-4
+              table6-1 fig6-2 weak-scaling | all
+                                           [--out results] [--steps 118]
+  validate    convergence vs the analytic wave
+                --orders 2,3,4  --n 2  [--rust-ref] [--artifacts artifacts]
+  ablation    exchange-schedule ablation   --order 3 --n 2 [--artifacts ...]
+";
+
+/// Tiny argv parser: positional args + --key value + --flag.
+struct Args {
+    positional: Vec<String>,
+    kv: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String], flag_names: &[&str]) -> Self {
+        let mut positional = Vec::new();
+        let mut kv = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if flag_names.contains(&name) {
+                    flags.push(name.to_string());
+                    i += 1;
+                } else {
+                    let val = argv.get(i + 1).cloned().unwrap_or_default();
+                    kv.insert(name.to_string(), val);
+                    i += 2;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, kv, flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn get_opt<T: std::str::FromStr>(&self, key: &str) -> Option<T> {
+        self.kv.get(key).and_then(|v| v.parse().ok())
+    }
+
+    fn get_str(&self, key: &str, default: &str) -> String {
+        self.kv.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+fn main() -> repro::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "run" => {
+            let a = Args::parse(rest, &["rust-ref", "two-tree", "sync-per-step"]);
+            run_solve(
+                a.get("n", 4),
+                a.get("order", 2),
+                a.get("steps", 20),
+                a.get("nodes", 1),
+                a.flag("rust-ref"),
+                a.flag("two-tree"),
+                !a.flag("sync-per-step"),
+                &a.get_str("artifacts", "artifacts"),
+            )
+        }
+        "partition" => {
+            let a = Args::parse(rest, &[]);
+            let n = a.get("n", 16usize);
+            let nodes = a.get("nodes", 4usize);
+            let order = a.get("order", 7usize);
+            let mesh = discontinuous_brick([n, n, n], [1.0, 1.0, 1.0]);
+            let node_part = splice(&mesh, nodes);
+            let frac = a.get_opt::<f64>("mic-fraction").unwrap_or_else(|| {
+                let sol = solve_mic_fraction(&calib::stampede_node(), order, mesh.len() / nodes);
+                sol.k_mic as f64 / (mesh.len() / nodes) as f64
+            });
+            let np = nested_partition(&mesh, &node_part, frac);
+            let st = partition_stats(&mesh, &np);
+            println!("mesh: {} elements, {nodes} nodes, mic fraction {frac:.3}", mesh.len());
+            for (nd, s) in st.per_node.iter().enumerate() {
+                println!(
+                    "node {nd}: k_cpu {} k_mic {} (ratio {:.2}) pci {} mpi {} bound {}",
+                    s.k_cpu,
+                    s.k_mic,
+                    s.k_mic as f64 / s.k_cpu.max(1) as f64,
+                    s.pci_faces,
+                    s.mpi_faces,
+                    s.bound_faces(),
+                );
+            }
+            Ok(())
+        }
+        "balance" => {
+            let a = Args::parse(rest, &[]);
+            let order = a.get("order", calib::PAPER_ORDER);
+            let elems = a.get("elems", calib::PAPER_ELEMS_PER_NODE);
+            let sol = solve_mic_fraction(&calib::stampede_node(), order, elems);
+            println!(
+                "order {order}, K {elems}: K_MIC {} K_CPU {} ratio {:.2} \
+                 (paper: 1.6 at N=7, K=8192)\n t_cpu {:.4} s/step, t_mic {:.4} s/step",
+                sol.k_mic, sol.k_cpu, sol.ratio, sol.t_cpu_s, sol.t_mic_s
+            );
+            Ok(())
+        }
+        "experiment" => {
+            let a = Args::parse(rest, &[]);
+            let id = a.positional.first().cloned().unwrap_or_else(|| "all".into());
+            let out = a.get_str("out", "results");
+            let steps = a.get("steps", 118usize);
+            let run_one = |id: &str| -> repro::Result<()> {
+                let csv = |name: &str| format!("{out}/{name}.csv");
+                let text = match id {
+                    "fig4-1" => experiments::fig4_1(Some(&csv("fig4_1")))?,
+                    "fig5-2" => experiments::fig5_2(Some(&csv("fig5_2")))?,
+                    "fig5-3" => experiments::fig5_3(Some(&csv("fig5_3")), 64)?,
+                    "fig5-4" => experiments::fig5_4(Some(&csv("fig5_4")))?,
+                    "table6-1" => experiments::table6_1(Some(&csv("table6_1")), steps)?,
+                    "fig6-2" => experiments::fig6_2(Some(&csv("fig6_2")))?,
+                    "weak-scaling" => {
+                        experiments::weak_scaling(Some(&csv("weak_scaling")), steps.min(20))?
+                    }
+                    other => anyhow::bail!("unknown experiment {other}\n{USAGE}"),
+                };
+                println!("{text}");
+                Ok(())
+            };
+            if id == "all" {
+                for id in
+                    ["fig4-1", "fig5-2", "fig5-3", "fig5-4", "table6-1", "fig6-2", "weak-scaling"]
+                {
+                    println!("=== {id} ===");
+                    run_one(id)?;
+                }
+            } else {
+                run_one(&id)?;
+            }
+            Ok(())
+        }
+        "validate" => {
+            let a = Args::parse(rest, &["rust-ref"]);
+            let orders = a.get_str("orders", "2,3,4");
+            let n = a.get("n", 2usize);
+            let artifacts = a.get_str("artifacts", "artifacts");
+            let mut prev: Option<f64> = None;
+            for tok in orders.split(',') {
+                let order: usize = tok.trim().parse()?;
+                let err = validate_order(order, n, a.flag("rust-ref"), &artifacts)?;
+                let note = match prev {
+                    Some(p) if err < p => " (converging)",
+                    Some(_) => " (!! not converging)",
+                    None => "",
+                };
+                println!("order {order}: rel L2 error {err:.3e}{note}");
+                prev = Some(err);
+            }
+            Ok(())
+        }
+        "ablation" => {
+            let a = Args::parse(rest, &["rust-ref"]);
+            let order = a.get("order", 3usize);
+            let n = a.get("n", 2usize);
+            let artifacts = a.get_str("artifacts", "artifacts");
+            for (label, every_stage) in
+                [("exchange every stage", true), ("sync once per step (paper §5.5)", false)]
+            {
+                let err = validate_order_mode(
+                    order, n, a.flag("rust-ref"), &artifacts, every_stage,
+                )?;
+                println!("{label}: rel L2 error {err:.3e}");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown command {other}\n{USAGE}");
+        }
+    }
+}
+
+/// End-to-end solve on the two-worker heterogeneous coordinator.
+#[allow(clippy::too_many_arguments)]
+fn run_solve(
+    n: usize,
+    order: usize,
+    steps: usize,
+    nodes: usize,
+    rust_ref: bool,
+    two_tree: bool,
+    exchange_every_stage: bool,
+    artifacts: &str,
+) -> repro::Result<()> {
+    use repro::coordinator::HeteroRun;
+    let mesh = if two_tree { two_tree_geometry(n) } else { unit_cube_geometry(n) };
+    let node_part = splice(&mesh, nodes);
+    let k_node = mesh.len() / nodes;
+    let sol = solve_mic_fraction(&calib::stampede_node(), order, k_node);
+    let frac = sol.k_mic as f64 / k_node as f64;
+    let np = nested_partition(&mesh, &node_part, frac);
+    let owners = np.owners();
+    let (lblocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
+
+    let backend = if rust_ref {
+        WorkerBackend::RustRef
+    } else {
+        WorkerBackend::Pjrt { artifact_dir: artifacts.into() }
+    };
+    let manifest = (!rust_ref).then(|| ArtifactManifest::load(artifacts)).transpose()?;
+    let basis = LglBasis::new(order);
+    let mut states = Vec::new();
+    let mut device_of_owner = Vec::new();
+    for lb in &lblocks {
+        let (kb, hb) = match &manifest {
+            Some(m) => {
+                let meta = m.pick_stage(order, lb.len().max(1), lb.halo_len.max(1))?;
+                (meta.k, meta.halo)
+            }
+            None => (lb.len().max(1), lb.halo_len.max(1)),
+        };
+        let mut st = BlockState::from_local_block(lb, order, kb, hb);
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        st.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+        states.push(st);
+        device_of_owner.push(if lb.owner % 2 == 0 {
+            repro::partition::DeviceKind::Cpu
+        } else {
+            repro::partition::DeviceKind::Mic
+        });
+    }
+
+    let cmax = mesh.elements.iter().map(|e| e.material.cp()).fold(0.0f32, f32::max);
+    let hmin =
+        mesh.elements.iter().map(|e| e.h[0].min(e.h[1]).min(e.h[2])).fold(f64::MAX, f64::min);
+    let dt = stable_dt(0.3, hmin, cmax as f64, order);
+
+    let mut run = HeteroRun::launch(&lblocks, states, plan, &device_of_owner, backend, order)?;
+    run.exchange_every_stage = exchange_every_stage;
+    let e0 = run.energy()?;
+    println!(
+        "run: {} elements, order {order}, {} owners, dt {dt:.2e}, backend {}",
+        mesh.len(),
+        lblocks.len(),
+        if rust_ref { "rust-ref" } else { "pjrt" }
+    );
+    let t0 = std::time::Instant::now();
+    run.run(dt, steps)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let e1 = run.energy()?;
+    println!(
+        "{steps} steps in {wall:.2} s ({:.1} ms/step); energy {e0:.6} -> {e1:.6} (ratio {:.6})",
+        wall * 1e3 / steps as f64,
+        e1 / e0
+    );
+    println!(
+        "exchange: {} bytes/stage; stage wall {:.2} s, exchange wall {:.2} s",
+        run.exchange_bytes_per_stage(),
+        run.stage_wall_s,
+        run.exchange_wall_s
+    );
+    Ok(())
+}
+
+fn validate_order(order: usize, n: usize, rust_ref: bool, artifacts: &str) -> repro::Result<f64> {
+    validate_order_mode(order, n, rust_ref, artifacts, true)
+}
+
+/// Convergence of the full in-process stack against the analytic solution.
+fn validate_order_mode(
+    order: usize,
+    n: usize,
+    rust_ref: bool,
+    artifacts: &str,
+    exchange_every_stage: bool,
+) -> repro::Result<f64> {
+    use repro::coordinator::HeteroRun;
+    let mesh = unit_cube_geometry(n);
+    let node_part = splice(&mesh, 1);
+    let np = nested_partition(&mesh, &node_part, 0.5);
+    let owners = np.owners();
+    let (lblocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
+    let backend = if rust_ref {
+        WorkerBackend::RustRef
+    } else {
+        WorkerBackend::Pjrt { artifact_dir: artifacts.into() }
+    };
+    let manifest = (!rust_ref).then(|| ArtifactManifest::load(artifacts)).transpose()?;
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut states = Vec::new();
+    let mut device_of_owner = Vec::new();
+    for lb in &lblocks {
+        let (kb, hb) = match &manifest {
+            Some(m) => {
+                let meta = m.pick_stage(order, lb.len().max(1), lb.halo_len.max(1))?;
+                (meta.k, meta.halo)
+            }
+            None => (lb.len().max(1), lb.halo_len.max(1)),
+        };
+        let mut st = BlockState::from_local_block(lb, order, kb, hb);
+        st.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+        states.push(st);
+        device_of_owner.push(if lb.owner % 2 == 0 {
+            repro::partition::DeviceKind::Cpu
+        } else {
+            repro::partition::DeviceKind::Mic
+        });
+    }
+    let t_end = 0.25f64;
+    let dt0 = stable_dt(0.3, 1.0 / n as f64, 1.0, order);
+    let steps = (t_end / dt0).ceil() as usize;
+    let dt = t_end / steps as f64;
+    let mut run = HeteroRun::launch(&lblocks, states, plan, &device_of_owner, backend, order)?;
+    run.exchange_every_stage = exchange_every_stage;
+    run.run(dt, steps)?;
+    // reassemble the global error over all owners
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for &o in &run.owners() {
+        let st = run.read_block(o)?;
+        let e = st.rel_l2_error(&basis, |x| standing_wave(x, t_end, 1.0, 1.0, w));
+        let norm: f64 = (0..st.k_real)
+            .map(|ei| {
+                st.node_coords(ei, &basis)
+                    .iter()
+                    .map(|&x| {
+                        standing_wave(x, t_end, 1.0, 1.0, w).iter().map(|v| v * v).sum::<f64>()
+                    })
+                    .sum::<f64>()
+            })
+            .sum();
+        num += e * e * norm;
+        den += norm;
+    }
+    Ok((num / den.max(1e-300)).sqrt())
+}

@@ -1,0 +1,267 @@
+//! Element arrays and conforming face connectivity.
+//!
+//! A [`Mesh`] is the Morton-ordered element array the partitioner consumes:
+//! geometry (center, extents), material, and 6-face conforming neighbor
+//! connectivity. Faces are ordered `[-x, +x, -y, +y, -z, +z]`, matching the
+//! L2 model's `conn` encoding.
+
+use std::collections::HashMap;
+
+use super::morton::MortonKey;
+
+/// Isotropic linear material: density and the two Lame constants.
+/// `mu = 0` marks an acoustic region (c_s = 0, paper §2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Material {
+    pub rho: f32,
+    pub lambda: f32,
+    pub mu: f32,
+}
+
+impl Material {
+    pub fn acoustic(rho: f32, cp: f32) -> Self {
+        Material { rho, lambda: rho * cp * cp, mu: 0.0 }
+    }
+
+    /// Elastic material from wave speeds: lambda = rho(cp^2 - 2 cs^2).
+    pub fn elastic(rho: f32, cp: f32, cs: f32) -> Self {
+        assert!(cp * cp >= 2.0 * cs * cs, "cp^2 must exceed 2 cs^2 for lambda >= 0");
+        Material { rho, lambda: rho * (cp * cp - 2.0 * cs * cs), mu: rho * cs * cs }
+    }
+
+    pub fn cp(&self) -> f32 {
+        ((self.lambda + 2.0 * self.mu) / self.rho).sqrt()
+    }
+
+    pub fn cs(&self) -> f32 {
+        (self.mu / self.rho).sqrt()
+    }
+
+    pub fn as_array(&self) -> [f32; 3] {
+        [self.rho, self.lambda, self.mu]
+    }
+}
+
+/// Neighbor encoding in the global mesh: index, or `BOUNDARY` for the
+/// physical (traction) boundary.
+pub const BOUNDARY: i64 = -2;
+
+/// One hexahedral element (axis-aligned, affine map).
+#[derive(Debug, Clone)]
+pub struct Element {
+    /// Physical center.
+    pub center: [f64; 3],
+    /// Physical extents (hx, hy, hz).
+    pub h: [f64; 3],
+    pub material: Material,
+    /// Morton key for ordering/partition locality.
+    pub key: MortonKey,
+}
+
+/// A conforming hexahedral mesh in Morton order.
+#[derive(Debug, Clone)]
+pub struct Mesh {
+    pub elements: Vec<Element>,
+    /// `conn[e][f]` = neighbor element index or [`BOUNDARY`].
+    pub conn: Vec<[i64; 6]>,
+}
+
+impl Mesh {
+    pub fn len(&self) -> usize {
+        self.elements.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.elements.is_empty()
+    }
+
+    /// Structured brick of `nx x ny x nz` equal elements over `extent`,
+    /// material assigned per element center, elements sorted in Morton
+    /// order (grid indices used as integer coordinates).
+    pub fn structured_brick(
+        dims: [usize; 3],
+        origin: [f64; 3],
+        extent: [f64; 3],
+        material: impl Fn([f64; 3]) -> Material,
+    ) -> Mesh {
+        let [nx, ny, nz] = dims;
+        let h = [extent[0] / nx as f64, extent[1] / ny as f64, extent[2] / nz as f64];
+        // enumerate ix,iy,iz; sort by morton of the grid indices
+        let mut cells: Vec<(MortonKey, [usize; 3])> = Vec::with_capacity(nx * ny * nz);
+        for iz in 0..nz {
+            for iy in 0..ny {
+                for ix in 0..nx {
+                    cells.push((MortonKey::encode(ix as u32, iy as u32, iz as u32), [ix, iy, iz]));
+                }
+            }
+        }
+        cells.sort_by_key(|c| c.0);
+        let mut grid_to_elem: HashMap<[usize; 3], usize> = HashMap::with_capacity(cells.len());
+        for (e, (_, idx)) in cells.iter().enumerate() {
+            grid_to_elem.insert(*idx, e);
+        }
+        let mut elements = Vec::with_capacity(cells.len());
+        let mut conn = Vec::with_capacity(cells.len());
+        for (key, [ix, iy, iz]) in &cells {
+            let center = [
+                origin[0] + (*ix as f64 + 0.5) * h[0],
+                origin[1] + (*iy as f64 + 0.5) * h[1],
+                origin[2] + (*iz as f64 + 0.5) * h[2],
+            ];
+            elements.push(Element { center, h, material: material(center), key: *key });
+            let mut c = [BOUNDARY; 6];
+            let idx = [*ix as i64, *iy as i64, *iz as i64];
+            let lims = [nx as i64, ny as i64, nz as i64];
+            for (f, (axis, delta)) in
+                [(0usize, -1i64), (0, 1), (1, -1), (1, 1), (2, -1), (2, 1)].iter().enumerate()
+            {
+                let mut j = idx;
+                j[*axis] += delta;
+                if j[*axis] >= 0 && j[*axis] < lims[*axis] {
+                    let g = [j[0] as usize, j[1] as usize, j[2] as usize];
+                    c[f] = grid_to_elem[&g] as i64;
+                }
+            }
+            conn.push(c);
+        }
+        Mesh { elements, conn }
+    }
+
+    /// Glue two meshes along the +x face of `a` / -x face of `b`.
+    /// `b` must sit exactly to the right of `a` with matching (ny, nz)
+    /// layer structure; faces are matched geometrically by center.
+    pub fn glue_x(a: Mesh, b: Mesh) -> Mesh {
+        let na = a.len();
+        let mut elements = a.elements;
+        elements.extend(b.elements);
+        let mut conn = a.conn;
+        conn.extend(b.conn.iter().map(|c| {
+            let mut c2 = *c;
+            for v in c2.iter_mut() {
+                if *v >= 0 {
+                    *v += na as i64;
+                }
+            }
+            c2
+        }));
+        // geometric matching of the interface: +x boundary faces of a
+        // against -x boundary faces of b by (y, z) center and size
+        let keyf = |c: &[f64; 3], h: &[f64; 3]| {
+            (
+                (c[1] / h[1] * 2.0).round() as i64,
+                (c[2] / h[2] * 2.0).round() as i64,
+            )
+        };
+        let xmax = elements[..na]
+            .iter()
+            .map(|e| e.center[0] + e.h[0] / 2.0)
+            .fold(f64::MIN, f64::max);
+        let mut right_faces: HashMap<(i64, i64), usize> = HashMap::new();
+        for (i, e) in elements.iter().enumerate().skip(na) {
+            if conn[i][0] == BOUNDARY && (e.center[0] - e.h[0] / 2.0 - xmax).abs() < 1e-9 {
+                right_faces.insert(keyf(&e.center, &e.h), i);
+            }
+        }
+        for i in 0..na {
+            if conn[i][1] == BOUNDARY
+                && (elements[i].center[0] + elements[i].h[0] / 2.0 - xmax).abs() < 1e-9
+            {
+                if let Some(&j) = right_faces.get(&keyf(&elements[i].center, &elements[i].h)) {
+                    conn[i][1] = j as i64;
+                    conn[j][0] = i as i64;
+                }
+            }
+        }
+        Mesh { elements, conn }
+    }
+
+    /// Count interior faces (each counted once) and boundary faces.
+    pub fn face_counts(&self) -> (usize, usize) {
+        let mut interior = 0;
+        let mut boundary = 0;
+        for c in &self.conn {
+            for &v in c {
+                if v == BOUNDARY {
+                    boundary += 1;
+                } else {
+                    interior += 1;
+                }
+            }
+        }
+        (interior / 2, boundary)
+    }
+
+    /// Validate symmetry of the connectivity: if e lists j across face f,
+    /// j must list e across the opposite face f^1.
+    pub fn check_consistency(&self) -> bool {
+        for (e, c) in self.conn.iter().enumerate() {
+            for (f, &v) in c.iter().enumerate() {
+                if v >= 0 {
+                    let back = self.conn[v as usize][f ^ 1];
+                    if back != e as i64 {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(_c: [f64; 3]) -> Material {
+        Material::acoustic(1.0, 1.0)
+    }
+
+    #[test]
+    fn brick_counts_and_consistency() {
+        let m = Mesh::structured_brick([4, 4, 4], [0.0; 3], [1.0; 3], mat);
+        assert_eq!(m.len(), 64);
+        assert!(m.check_consistency());
+        let (int, bnd) = m.face_counts();
+        assert_eq!(int, 3 * 4 * 4 * 3); // 3 directions x 3 planes x 16
+        assert_eq!(bnd, 6 * 16);
+    }
+
+    #[test]
+    fn brick_morton_sorted() {
+        let m = Mesh::structured_brick([4, 4, 4], [0.0; 3], [1.0; 3], mat);
+        for w in m.elements.windows(2) {
+            assert!(w[0].key < w[1].key);
+        }
+    }
+
+    #[test]
+    fn non_pow2_brick_still_consistent() {
+        let m = Mesh::structured_brick([3, 5, 2], [0.0; 3], [1.5, 2.5, 1.0], mat);
+        assert_eq!(m.len(), 30);
+        assert!(m.check_consistency());
+    }
+
+    #[test]
+    fn glue_two_bricks() {
+        let a = Mesh::structured_brick([2, 2, 2], [0.0; 3], [1.0; 3], mat);
+        let b = Mesh::structured_brick([2, 2, 2], [1.0, 0.0, 0.0], [1.0; 3], |_| {
+            Material::elastic(1.0, 3.0, 2.0)
+        });
+        let g = Mesh::glue_x(a, b);
+        assert_eq!(g.len(), 16);
+        assert!(g.check_consistency());
+        let (int, bnd) = g.face_counts();
+        assert_eq!(int, 2 * (3 * 2 * 2) + 4); // two bricks' interiors + 4 glued
+        assert_eq!(bnd, 2 * 24 - 8);
+    }
+
+    #[test]
+    fn material_constructors() {
+        let a = Material::acoustic(2.0, 3.0);
+        assert!((a.cp() - 3.0).abs() < 1e-6);
+        assert_eq!(a.cs(), 0.0);
+        let e = Material::elastic(1.0, 3.0, 2.0);
+        assert!((e.cp() - 3.0).abs() < 1e-6);
+        assert!((e.cs() - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,123 @@
+//! Canned geometries used by the paper's experiments.
+
+use super::element::{Material, Mesh};
+
+/// Unit cube, uniform acoustic material, `n^3` elements.
+pub fn unit_cube_geometry(n: usize) -> Mesh {
+    Mesh::structured_brick([n, n, n], [0.0; 3], [1.0; 3], |_| Material::acoustic(1.0, 1.0))
+}
+
+/// Unit cube with an arbitrary material field.
+pub fn unit_cube_with(n: usize, material: impl Fn([f64; 3]) -> Material) -> Mesh {
+    Mesh::structured_brick([n, n, n], [0.0; 3], [1.0; 3], material)
+}
+
+/// The paper's Fig 6.1 geometry: a brick-like domain built from two glued
+/// trees with a material discontinuity at the interface. First tree is
+/// acoustic (c_p = 1, c_s = 0), second elastic (c_p = 3, c_s = 2).
+pub fn two_tree_geometry(n_per_tree: usize) -> Mesh {
+    let n = n_per_tree;
+    let acoustic = Mesh::structured_brick([n, n, n], [0.0; 3], [1.0; 3], |_| {
+        Material::acoustic(1.0, 1.0)
+    });
+    let elastic = Mesh::structured_brick([n, n, n], [1.0, 0.0, 0.0], [1.0; 3], |_| {
+        Material::elastic(1.0, 3.0, 2.0)
+    });
+    Mesh::glue_x(acoustic, elastic)
+}
+
+/// Brick with a centered material discontinuity (Table 6.1's workload):
+/// acoustic on the left half, elastic on the right.
+pub fn discontinuous_brick(dims: [usize; 3], extent: [f64; 3]) -> Mesh {
+    let half = extent[0] / 2.0;
+    Mesh::structured_brick(dims, [0.0; 3], extent, move |c| {
+        if c[0] < half {
+            Material::acoustic(1.0, 1.0)
+        } else {
+            Material::elastic(1.0, 3.0, 2.0)
+        }
+    })
+}
+
+/// Near-cubic factorization of `n` into three factors (a >= b >= c),
+/// greedily peeling powers of two then distributing odd remainders.
+pub fn near_cube_dims(n: usize) -> [usize; 3] {
+    let mut dims = [1usize; 3];
+    let mut rem = n;
+    // peel small prime factors, assigning each to the smallest dim
+    let mut f = 2;
+    while rem > 1 {
+        while rem % f == 0 {
+            let i = (0..3).min_by_key(|&i| dims[i]).unwrap();
+            dims[i] *= f;
+            rem /= f;
+        }
+        f += if f == 2 { 1 } else { 2 };
+        if f * f > rem && rem > 1 {
+            let i = (0..3).min_by_key(|&i| dims[i]).unwrap();
+            dims[i] *= rem;
+            rem = 1;
+        }
+    }
+    dims.sort_unstable_by(|a, b| b.cmp(a));
+    dims
+}
+
+/// Global brick dimensions + extent for a `nodes`-node run with
+/// `elems_per_node` elements each: per-node near-cube chunks arranged on a
+/// near-cube node grid, unit-sized elements.
+pub fn sweep_dims(nodes: usize, elems_per_node: usize) -> ([usize; 3], [f64; 3]) {
+    let nd = near_cube_dims(elems_per_node);
+    let pg = near_cube_dims(nodes);
+    let dims = [nd[0] * pg[0], nd[1] * pg[1], nd[2] * pg[2]];
+    let extent = [dims[0] as f64, dims[1] as f64, dims[2] as f64];
+    (dims, extent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn near_cube_products() {
+        for n in [1usize, 8, 64, 100, 8192, 1024, 27, 30] {
+            let d = near_cube_dims(n);
+            assert_eq!(d[0] * d[1] * d[2], n, "{n} -> {d:?}");
+            assert!(d[0] >= d[1] && d[1] >= d[2]);
+        }
+    }
+
+    #[test]
+    fn near_cube_is_cubic_for_8192() {
+        let d = near_cube_dims(8192);
+        assert_eq!(d, [32, 16, 16]);
+    }
+
+    #[test]
+    fn sweep_dims_scale() {
+        let (d, _) = sweep_dims(64, 8192);
+        assert_eq!(d[0] * d[1] * d[2], 64 * 8192);
+    }
+
+    #[test]
+    fn two_tree_has_discontinuity() {
+        let m = two_tree_geometry(2);
+        assert_eq!(m.len(), 16);
+        assert!(m.check_consistency());
+        let mus: Vec<f32> = m.elements.iter().map(|e| e.material.mu).collect();
+        assert!(mus.iter().any(|&x| x == 0.0));
+        assert!(mus.iter().any(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn discontinuous_brick_split_along_x() {
+        let m = discontinuous_brick([4, 2, 2], [2.0, 1.0, 1.0]);
+        for e in &m.elements {
+            if e.center[0] < 1.0 {
+                assert_eq!(e.material.mu, 0.0);
+            } else {
+                assert!(e.material.mu > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Local block extraction and halo exchange plans.
+//!
+//! Given a global mesh and an owner id per element (node rank for the
+//! baseline, `node*2 + device` for the nested scheme), build for every
+//! owner the local element block the L2 stage function consumes — local
+//! connectivity with `-1` halo faces and `-2` physical-boundary faces —
+//! plus the [`ExchangePlan`] the coordinator applies between RK stages:
+//! for every halo slot, which (owner, local element, face) trace fills it.
+
+use super::element::{Mesh, BOUNDARY};
+
+/// Face-local connectivity codes for the L2 model (see model.py docstring).
+pub const LOCAL_HALO: i32 = -1;
+pub const LOCAL_BOUNDARY: i32 = -2;
+
+/// One owner's element block, in the exact layout the stage artifact takes.
+#[derive(Debug, Clone)]
+pub struct LocalBlock {
+    pub owner: usize,
+    /// local index -> global element index (ascending == Morton order).
+    pub global_ids: Vec<usize>,
+    /// (K, 6) local connectivity: local neighbor / LOCAL_HALO / LOCAL_BOUNDARY.
+    pub conn: Vec<[i32; 6]>,
+    /// (K, 6) halo slot per LOCAL_HALO face (0 elsewhere).
+    pub halo_idx: Vec<[i32; 6]>,
+    /// Number of live halo slots.
+    pub halo_len: usize,
+    /// Per slot: (source owner, source local element, source face) — the
+    /// face is on the *source* element, i.e. the opposite of the consumer's.
+    pub halo_src: Vec<(usize, usize, usize)>,
+    /// Material on the far side of each halo slot (rho, lambda, mu).
+    pub halo_mats: Vec<[f32; 3]>,
+    /// (K, 3) per-element material.
+    pub mats: Vec<[f32; 3]>,
+    /// (K, 3) per-element extents, f32 for the artifact.
+    pub h: Vec<[f32; 3]>,
+    /// (K, 3) element centers (f64, for initial conditions / errors).
+    pub centers: Vec<[f64; 3]>,
+}
+
+impl LocalBlock {
+    pub fn len(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.global_ids.is_empty()
+    }
+}
+
+/// The per-stage trace routing between blocks:
+/// `copies[dst_owner]` = list of (src_owner, src_local, src_face, dst_slot).
+#[derive(Debug, Clone, Default)]
+pub struct ExchangePlan {
+    pub copies: Vec<Vec<(usize, usize, usize, usize)>>,
+}
+
+impl ExchangePlan {
+    /// Total number of face copies per stage (both directions).
+    pub fn total_faces(&self) -> usize {
+        self.copies.iter().map(|c| c.len()).sum()
+    }
+
+    /// Faces crossing between a pair of owners (either direction).
+    pub fn faces_between(&self, a: usize, b: usize) -> usize {
+        let mut n = 0;
+        if b < self.copies.len() {
+            n += self.copies[b].iter().filter(|c| c.0 == a).count();
+        }
+        if a < self.copies.len() {
+            n += self.copies[a].iter().filter(|c| c.0 == b).count();
+        }
+        n
+    }
+}
+
+/// Build one [`LocalBlock`] per owner plus the global [`ExchangePlan`].
+///
+/// `owners[e]` assigns every global element to exactly one owner in
+/// `0..n_owners`. Empty owners produce empty blocks (legal; skipped by the
+/// coordinator).
+pub fn build_local_blocks(
+    mesh: &Mesh,
+    owners: &[usize],
+    n_owners: usize,
+) -> (Vec<LocalBlock>, ExchangePlan) {
+    assert_eq!(owners.len(), mesh.len());
+    // local index of each global element within its owner, preserving order
+    let mut local_of = vec![usize::MAX; mesh.len()];
+    let mut counts = vec![0usize; n_owners];
+    for (g, &o) in owners.iter().enumerate() {
+        local_of[g] = counts[o];
+        counts[o] += 1;
+    }
+    let mut blocks: Vec<LocalBlock> = (0..n_owners)
+        .map(|owner| LocalBlock {
+            owner,
+            global_ids: Vec::with_capacity(counts[owner]),
+            conn: Vec::with_capacity(counts[owner]),
+            halo_idx: Vec::with_capacity(counts[owner]),
+            halo_len: 0,
+            halo_src: Vec::new(),
+            halo_mats: Vec::new(),
+            mats: Vec::with_capacity(counts[owner]),
+            h: Vec::with_capacity(counts[owner]),
+            centers: Vec::with_capacity(counts[owner]),
+        })
+        .collect();
+    let mut plan = ExchangePlan { copies: vec![Vec::new(); n_owners] };
+
+    for (g, elem) in mesh.elements.iter().enumerate() {
+        let o = owners[g];
+        let blk = &mut blocks[o];
+        blk.global_ids.push(g);
+        blk.mats.push(elem.material.as_array());
+        blk.h.push([elem.h[0] as f32, elem.h[1] as f32, elem.h[2] as f32]);
+        blk.centers.push(elem.center);
+        let mut lc = [LOCAL_BOUNDARY; 6];
+        let mut hi = [0i32; 6];
+        for f in 0..6 {
+            match mesh.conn[g][f] {
+                BOUNDARY => {}
+                nb => {
+                    let nb = nb as usize;
+                    if owners[nb] == o {
+                        lc[f] = local_of[nb] as i32;
+                    } else {
+                        // halo face: allocate a slot, fed by the neighbor's
+                        // opposite-face trace each stage
+                        lc[f] = LOCAL_HALO;
+                        let slot = blk.halo_len;
+                        hi[f] = slot as i32;
+                        blk.halo_len += 1;
+                        blk.halo_src.push((owners[nb], local_of[nb], f ^ 1));
+                        blk.halo_mats.push(mesh.elements[nb].material.as_array());
+                        plan.copies[o].push((owners[nb], local_of[nb], f ^ 1, slot));
+                    }
+                }
+            }
+        }
+        blk.conn.push(lc);
+        blk.halo_idx.push(hi);
+    }
+    (blocks, plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::element::Material;
+    use crate::mesh::Mesh;
+
+    fn mesh4() -> Mesh {
+        Mesh::structured_brick([4, 4, 4], [0.0; 3], [1.0; 3], |_| Material::acoustic(1.0, 1.0))
+    }
+
+    #[test]
+    fn single_owner_no_halo() {
+        let m = mesh4();
+        let owners = vec![0usize; m.len()];
+        let (blocks, plan) = build_local_blocks(&m, &owners, 1);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].len(), 64);
+        assert_eq!(blocks[0].halo_len, 0);
+        assert_eq!(plan.total_faces(), 0);
+        // local conn must mirror global conn exactly (identity mapping,
+        // since a single owner preserves order)
+        for (g, c) in m.conn.iter().enumerate() {
+            for f in 0..6 {
+                let expect = match c[f] {
+                    BOUNDARY => LOCAL_BOUNDARY,
+                    v => v as i32,
+                };
+                assert_eq!(blocks[0].conn[g][f], expect);
+            }
+        }
+    }
+
+    #[test]
+    fn two_owner_split_halo_symmetry() {
+        let m = mesh4();
+        // split by morton half (the level-1 splice)
+        let owners: Vec<usize> = (0..m.len()).map(|e| if e < 32 { 0 } else { 1 }).collect();
+        let (blocks, plan) = build_local_blocks(&m, &owners, 2);
+        assert_eq!(blocks[0].len() + blocks[1].len(), 64);
+        // every halo face in block 0 has a matching copy directive
+        assert_eq!(plan.copies[0].len(), blocks[0].halo_len);
+        assert_eq!(plan.copies[1].len(), blocks[1].halo_len);
+        // cross-owner faces are symmetric
+        assert_eq!(
+            plan.copies[0].len(),
+            plan.copies[1].len(),
+            "conforming mesh: same number of halo faces each way"
+        );
+        // each copy's source face is the opposite of some consumer face
+        for &(src_owner, src_local, src_face, slot) in &plan.copies[0] {
+            assert_eq!(src_owner, 1);
+            assert!(src_local < blocks[1].len());
+            assert!(src_face < 6);
+            assert!(slot < blocks[0].halo_len);
+        }
+    }
+
+    #[test]
+    fn halo_src_points_back_to_consumer() {
+        let m = mesh4();
+        let owners: Vec<usize> = (0..m.len()).map(|e| e % 2).collect(); // pathological split
+        let (blocks, _) = build_local_blocks(&m, &owners, 2);
+        for blk in &blocks {
+            for (k, c) in blk.conn.iter().enumerate() {
+                for f in 0..6 {
+                    if c[f] == LOCAL_HALO {
+                        let slot = blk.halo_idx[k][f] as usize;
+                        let (src_o, src_l, src_f) = blk.halo_src[slot];
+                        // the source element's global neighbor across src_f
+                        // must be this very element
+                        let src_g = blocks[src_o].global_ids[src_l];
+                        assert_eq!(m.conn[src_g][src_f], blk.global_ids[k] as i64);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn owners_partition_elements() {
+        let m = mesh4();
+        let owners: Vec<usize> = (0..m.len()).map(|e| e / 16).collect();
+        let (blocks, _) = build_local_blocks(&m, &owners, 4);
+        let total: usize = blocks.iter().map(|b| b.len()).sum();
+        assert_eq!(total, m.len());
+        let mut seen = vec![false; m.len()];
+        for b in &blocks {
+            for &g in &b.global_ids {
+                assert!(!seen[g]);
+                seen[g] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,21 @@
+//! Hexahedral octree meshes in Morton order.
+//!
+//! The baseline dgae/mangll pipeline discretizes the domain with octrees of
+//! hexahedral elements, orders the leaves along the global Morton (Z-order)
+//! curve, and splices that 1-D array into contiguous chunks — "approximately
+//! optimal with respect to minimizing communication" (paper §5.1, [6]).
+//! This module provides the same substrate: Morton codes, octree leaf
+//! enumeration, multi-tree forests with per-tree materials (the paper's
+//! Fig 6.1 two-tree geometry), conforming face connectivity, and the local
+//! block/halo extraction the solver consumes.
+
+pub mod element;
+pub mod geometry;
+pub mod halo;
+pub mod morton;
+pub mod octree;
+
+pub use element::{Material, Mesh};
+pub use geometry::{two_tree_geometry, unit_cube_geometry};
+pub use halo::{build_local_blocks, ExchangePlan, LocalBlock};
+pub use morton::MortonKey;

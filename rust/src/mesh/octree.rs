@@ -1,0 +1,191 @@
+//! Linear octrees: octant arithmetic, uniform & adaptive leaf enumeration,
+//! and 2:1 balance checking.
+//!
+//! The compute path of this reproduction uses conforming (same-level)
+//! leaves, matching the paper's uniform-brick experiments; adaptive
+//! refinement is provided for partition-quality studies (the partitioner
+//! operates on any Morton-sorted leaf array).
+
+use super::morton::{MortonKey, MAX_LEVEL};
+
+/// An octant: anchor (integer coords at `MAX_LEVEL` resolution) + level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Octant {
+    pub x: u32,
+    pub y: u32,
+    pub z: u32,
+    pub level: u32,
+}
+
+impl Octant {
+    /// Root octant covering the whole tree domain.
+    pub fn root() -> Self {
+        Octant { x: 0, y: 0, z: 0, level: 0 }
+    }
+
+    /// Edge length in integer units at `MAX_LEVEL` resolution.
+    pub fn extent(&self) -> u32 {
+        1 << (MAX_LEVEL - self.level)
+    }
+
+    /// The eight children in Morton order.
+    pub fn children(&self) -> [Octant; 8] {
+        let h = self.extent() / 2;
+        let mut out = [*self; 8];
+        for (i, c) in out.iter_mut().enumerate() {
+            c.level = self.level + 1;
+            c.x = self.x + if i & 1 != 0 { h } else { 0 };
+            c.y = self.y + if i & 2 != 0 { h } else { 0 };
+            c.z = self.z + if i & 4 != 0 { h } else { 0 };
+        }
+        out
+    }
+
+    /// Morton key of the anchor (ties broken by level elsewhere).
+    pub fn key(&self) -> MortonKey {
+        MortonKey::encode(self.x, self.y, self.z)
+    }
+
+    /// Face-neighbor anchor in direction `dir` (0..6: -x,+x,-y,+y,-z,+z),
+    /// or None if it would leave the unit tree.
+    pub fn face_neighbor(&self, dir: usize) -> Option<Octant> {
+        let e = self.extent() as i64;
+        let lim = 1i64 << MAX_LEVEL;
+        let (mut x, mut y, mut z) = (self.x as i64, self.y as i64, self.z as i64);
+        match dir {
+            0 => x -= e,
+            1 => x += e,
+            2 => y -= e,
+            3 => y += e,
+            4 => z -= e,
+            5 => z += e,
+            _ => unreachable!(),
+        }
+        if x < 0 || y < 0 || z < 0 || x >= lim || y >= lim || z >= lim {
+            return None;
+        }
+        Some(Octant { x: x as u32, y: y as u32, z: z as u32, level: self.level })
+    }
+}
+
+/// Uniformly refine the root to `level`, returning leaves in Morton order.
+pub fn uniform_leaves(level: u32) -> Vec<Octant> {
+    assert!(level <= 10, "uniform refinement beyond 2^30 leaves is a mistake");
+    let n = 1u32 << level;
+    let e = 1u32 << (MAX_LEVEL - level);
+    let mut leaves = Vec::with_capacity((n as usize).pow(3));
+    for z in 0..n {
+        for y in 0..n {
+            for x in 0..n {
+                leaves.push(Octant { x: x * e, y: y * e, z: z * e, level });
+            }
+        }
+    }
+    leaves.sort_by_key(|o| (o.key(), o.level));
+    leaves
+}
+
+/// Adaptively refine: split every leaf for which `pred` returns true,
+/// starting from the root, up to `max_level`. Leaves in Morton order.
+pub fn adaptive_leaves(max_level: u32, pred: impl Fn(&Octant) -> bool) -> Vec<Octant> {
+    let mut stack = vec![Octant::root()];
+    let mut leaves = Vec::new();
+    while let Some(o) = stack.pop() {
+        if o.level < max_level && pred(&o) {
+            stack.extend_from_slice(&o.children());
+        } else {
+            leaves.push(o);
+        }
+    }
+    leaves.sort_by_key(|o| (o.key(), o.level));
+    leaves
+}
+
+/// Check the 2:1 balance condition: face-adjacent leaves differ by at most
+/// one level. (mangll guarantees this by construction [6]; we verify.)
+pub fn is_two_to_one_balanced(leaves: &[Octant]) -> bool {
+    use std::collections::HashMap;
+    // map anchor -> level for quick containment queries
+    let by_anchor: HashMap<(u32, u32, u32), u32> =
+        leaves.iter().map(|o| ((o.x, o.y, o.z), o.level)).collect();
+    for o in leaves {
+        for dir in 0..6 {
+            if let Some(nb) = o.face_neighbor(dir) {
+                // find the leaf containing nb's anchor at any coarser level
+                let mut found = None;
+                for lvl in (0..=MAX_LEVEL).rev() {
+                    let mask = !((1u32 << (MAX_LEVEL - lvl)) - 1);
+                    let key = (nb.x & mask, nb.y & mask, nb.z & mask);
+                    if let Some(&l) = by_anchor.get(&key) {
+                        if l == lvl {
+                            found = Some(l);
+                            break;
+                        }
+                    }
+                }
+                if let Some(l) = found {
+                    if (l as i64 - o.level as i64).abs() > 1 {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_counts() {
+        assert_eq!(uniform_leaves(0).len(), 1);
+        assert_eq!(uniform_leaves(1).len(), 8);
+        assert_eq!(uniform_leaves(3).len(), 512);
+    }
+
+    #[test]
+    fn uniform_leaves_are_morton_sorted() {
+        let leaves = uniform_leaves(2);
+        for w in leaves.windows(2) {
+            assert!(w[0].key() < w[1].key());
+        }
+    }
+
+    #[test]
+    fn children_partition_parent() {
+        let root = Octant::root();
+        let kids = root.children();
+        let e = root.extent();
+        // each child has half extent, anchors tile the corners
+        for k in &kids {
+            assert_eq!(k.extent(), e / 2);
+        }
+        let anchors: std::collections::HashSet<_> =
+            kids.iter().map(|k| (k.x, k.y, k.z)).collect();
+        assert_eq!(anchors.len(), 8);
+    }
+
+    #[test]
+    fn face_neighbor_boundary() {
+        let leaves = uniform_leaves(1);
+        // first leaf (corner) has no -x neighbor
+        assert!(leaves[0].face_neighbor(0).is_none());
+        assert!(leaves[0].face_neighbor(1).is_some());
+    }
+
+    #[test]
+    fn uniform_is_balanced() {
+        assert!(is_two_to_one_balanced(&uniform_leaves(2)));
+    }
+
+    #[test]
+    fn adaptive_refinement_respects_predicate() {
+        // refine only the first octant chain: leaves at mixed levels
+        let leaves = adaptive_leaves(3, |o| o.x == 0 && o.y == 0 && o.z == 0);
+        assert!(leaves.len() > 8);
+        let levels: std::collections::HashSet<_> = leaves.iter().map(|o| o.level).collect();
+        assert!(levels.len() > 1, "expected mixed levels, got {levels:?}");
+    }
+}

@@ -1,0 +1,163 @@
+//! Heterogeneous CPU/MIC load balancing (paper §5.6).
+//!
+//! Solve, for a node owning K elements at order N:
+//!
+//! ```text
+//!   T_MIC(N, K_mic)  =  T_CPU(N, K - K_mic) + PCI_time(K_mic)
+//! ```
+//!
+//! where PCI_time assumes the MIC partition's surface is minimal (a cube:
+//! 6 K_mic^{2/3} shared faces). The computation on the MIC runs
+//! asynchronously, so the optimum is the equal-finish point — the crossing
+//! of the two curves in Fig 5.2. Solved by bisection on K_mic (both sides
+//! are monotone in K_mic).
+
+use crate::costmodel::pci::PciModel;
+use crate::costmodel::{DeviceModel, NodeModel};
+
+/// Estimated per-step time of the CPU side: its elements' volume work,
+/// its share of interior faces (~3 per element), boundary faces, the
+/// PCI-adjacent faces it co-computes, plus the PCI exchange itself
+/// (the host drives the bus, paper §5.6 puts PCI_time in T_CPU).
+pub fn t_cpu(dev: &DeviceModel, pci: &PciModel, n: usize, k_cpu: f64, k_mic: f64) -> f64 {
+    let shared = mic_surface_faces(k_mic);
+    let int_faces = 3.0 * k_cpu;
+    let bound_faces = 6.0 * k_cpu.powf(2.0 / 3.0);
+    dev.step_time(n, k_cpu.round() as usize, int_faces as usize, bound_faces as usize, shared as usize)
+        + pci.step_exchange_time(shared as usize, n)
+}
+
+/// Estimated per-step time of the MIC side.
+pub fn t_mic(dev: &DeviceModel, n: usize, k_mic: f64) -> f64 {
+    let shared = mic_surface_faces(k_mic);
+    let int_faces = 3.0 * k_mic;
+    dev.step_time(n, k_mic.round() as usize, int_faces as usize, 0, shared as usize)
+}
+
+/// Minimal-surface face count of a K-element partition (cube ansatz).
+pub fn mic_surface_faces(k_mic: f64) -> f64 {
+    if k_mic <= 0.0 {
+        0.0
+    } else {
+        6.0 * k_mic.powf(2.0 / 3.0)
+    }
+}
+
+/// Result of the balance solve.
+#[derive(Debug, Clone, Copy)]
+pub struct BalanceSolution {
+    pub k_mic: usize,
+    pub k_cpu: usize,
+    /// K_MIC / K_CPU — the paper reports 1.6 at N=7, K=8192.
+    pub ratio: f64,
+    /// Predicted per-step times at the optimum.
+    pub t_cpu_s: f64,
+    pub t_mic_s: f64,
+}
+
+/// Bisection solve of T_MIC(K_mic) = T_CPU(K - K_mic) over K_mic in [0, K].
+pub fn solve_mic_fraction(node: &NodeModel, n: usize, k: usize) -> BalanceSolution {
+    let kf = k as f64;
+    let f = |k_mic: f64| {
+        t_mic(&node.mic, n, k_mic) - t_cpu(&node.cpu_vec, &node.pci, n, kf - k_mic, k_mic)
+    };
+    // f(0) < 0 (idle MIC), f(K) > 0 (idle CPU): bisect the sign change
+    let (mut lo, mut hi) = (0.0, kf);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if f(mid) < 0.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    let k_mic = (0.5 * (lo + hi)).round() as usize;
+    let k_cpu = k - k_mic;
+    BalanceSolution {
+        k_mic,
+        k_cpu,
+        ratio: k_mic as f64 / k_cpu.max(1) as f64,
+        t_cpu_s: t_cpu(&node.cpu_vec, &node.pci, n, k_cpu as f64, k_mic as f64),
+        t_mic_s: t_mic(&node.mic, n, k_mic as f64),
+    }
+}
+
+/// Sweep the MIC load fraction (Fig 5.2): returns (fraction, t_cpu, t_mic)
+/// rows for plotting/printing the crossover.
+pub fn sweep_fractions(
+    node: &NodeModel,
+    n: usize,
+    k: usize,
+    points: usize,
+) -> Vec<(f64, f64, f64)> {
+    (0..=points)
+        .map(|i| {
+            let frac = i as f64 / points as f64;
+            let k_mic = frac * k as f64;
+            (
+                frac,
+                t_cpu(&node.cpu_vec, &node.pci, n, k as f64 - k_mic, k_mic),
+                t_mic(&node.mic, n, k_mic),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::calib::{stampede_node, PAPER_ELEMS_PER_NODE, PAPER_ORDER};
+
+    #[test]
+    fn paper_operating_point_ratio() {
+        let node = stampede_node();
+        let sol = solve_mic_fraction(&node, PAPER_ORDER, PAPER_ELEMS_PER_NODE);
+        assert!(
+            (1.35..=1.85).contains(&sol.ratio),
+            "K_MIC/K_CPU = {:.2}, paper says 1.6",
+            sol.ratio
+        );
+        // equal finish within 2%
+        let rel = (sol.t_cpu_s - sol.t_mic_s).abs() / sol.t_cpu_s;
+        assert!(rel < 0.02, "imbalance {rel}");
+    }
+
+    #[test]
+    fn balance_conserves_elements() {
+        let node = stampede_node();
+        for k in [512, 4096, 8192, 32768] {
+            let sol = solve_mic_fraction(&node, 7, k);
+            assert_eq!(sol.k_mic + sol.k_cpu, k);
+        }
+    }
+
+    #[test]
+    fn curves_cross_once() {
+        let node = stampede_node();
+        let rows = sweep_fractions(&node, 7, 8192, 64);
+        let mut signs = Vec::new();
+        for (_, tc, tm) in &rows {
+            signs.push(tm > tc);
+        }
+        let flips = signs.windows(2).filter(|w| w[0] != w[1]).count();
+        assert_eq!(flips, 1, "exactly one crossover (Fig 5.2)");
+    }
+
+    #[test]
+    fn mic_fraction_shrinks_at_low_order() {
+        // at low N the flux/PCI overheads weigh more; the MIC should get
+        // a smaller relative share than at N=7
+        let node = stampede_node();
+        let hi = solve_mic_fraction(&node, 7, 8192);
+        let lo = solve_mic_fraction(&node, 1, 8192);
+        assert!(lo.ratio < hi.ratio, "lo {} hi {}", lo.ratio, hi.ratio);
+    }
+
+    #[test]
+    fn t_cpu_monotone_in_k() {
+        let node = stampede_node();
+        let t1 = t_cpu(&node.cpu_vec, &node.pci, 7, 1000.0, 500.0);
+        let t2 = t_cpu(&node.cpu_vec, &node.pci, 7, 2000.0, 500.0);
+        assert!(t2 > t1);
+    }
+}

@@ -1,0 +1,24 @@
+//! The paper's nested two-level partitioning scheme (§5.5).
+//!
+//! Level 1 ([`splice`]): the Morton-ordered global element array is spliced
+//! into one contiguous, (weight-)balanced chunk per compute node — mangll's
+//! existing homogeneous load balancing, reused unchanged.
+//!
+//! Level 2 ([`nested`]): each node's chunk is split asymmetrically between
+//! its CPU and its accelerator under three constraints (paper §5.5):
+//!   1. only *interior* elements (no face shared with another node) may be
+//!      offloaded to the MIC — the accelerator never talks to the network;
+//!   2. the CPU<->MIC shared surface (PCI traffic) is minimized;
+//!   3. the element-count ratio comes from the heterogeneous load balance
+//!      solve T_MIC(N, K_mic) = T_CPU(N, K_cpu) + T_PCI(K_mic)
+//!      ([`balance`], paper §5.6).
+
+pub mod balance;
+pub mod nested;
+pub mod splice;
+pub mod stats;
+
+pub use balance::solve_mic_fraction;
+pub use nested::{nested_partition, DeviceKind, NestedPartition};
+pub use splice::{splice, splice_weighted, Partition};
+pub use stats::{partition_stats, PartitionStats};

@@ -1,0 +1,289 @@
+//! Level-2 partitioning: the asymmetric CPU/MIC split inside each node.
+//!
+//! Paper §5.5: "we only allow interior elements [...] to be offloaded to
+//! the MIC", "minimizing communication over the PCI bus [...] by minimizing
+//! the surface area of the partition offloaded to the MIC", and the count
+//! comes from the load-balance solve (§5.6).
+//!
+//! The selection is an onion-peeling heuristic: BFS layers inward from the
+//! node-subdomain boundary (any element with a face shared with another
+//! node or with depth-0 neighbors), then offload the K_mic *deepest*
+//! elements, breaking depth ties in Morton order so the MIC set stays
+//! contiguous along the curve. Deepest-first growth keeps the exposed
+//! CPU<->MIC interface close to the minimal enclosing surface.
+
+use std::collections::VecDeque;
+
+use super::splice::Partition;
+use crate::mesh::Mesh;
+
+/// Which device of the owning node executes an element.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    Cpu,
+    Mic,
+}
+
+/// The full two-level assignment.
+#[derive(Debug, Clone)]
+pub struct NestedPartition {
+    pub node: Partition,
+    pub device: Vec<DeviceKind>,
+    /// Per node: (k_cpu, k_mic).
+    pub node_counts: Vec<(usize, usize)>,
+}
+
+impl NestedPartition {
+    /// Owner id for block extraction: node*2 (CPU) / node*2+1 (MIC).
+    pub fn owners(&self) -> Vec<usize> {
+        self.node
+            .assignment
+            .iter()
+            .zip(&self.device)
+            .map(|(&n, &d)| n * 2 + usize::from(d == DeviceKind::Mic))
+            .collect()
+    }
+
+    pub fn n_owners(&self) -> usize {
+        self.node.nparts * 2
+    }
+}
+
+/// Distance-to-boundary layers within one node's element set.
+///
+/// Depth 0 = element with at least one face owned by another node (an MPI
+/// boundary element, pinned to the CPU); physical-boundary faces do NOT
+/// count (paper: interior means "faces not shared with other compute
+/// nodes"). Returns `usize::MAX` for nodes whose subdomain has no MPI
+/// boundary at all (single-node runs) — callers treat every element as
+/// offloadable then, with depth measured from the physical hull instead so
+/// surface minimization still has a gradient.
+pub fn boundary_depths(mesh: &Mesh, node_of: &[usize], node: usize) -> Vec<(usize, usize)> {
+    // collect this node's elements
+    let elems: Vec<usize> =
+        (0..mesh.len()).filter(|&e| node_of[e] == node).collect();
+    let mut depth = vec![usize::MAX; mesh.len()];
+    let mut queue = VecDeque::new();
+    for &e in &elems {
+        let mpi_boundary = mesh.conn[e]
+            .iter()
+            .any(|&v| v >= 0 && node_of[v as usize] != node);
+        if mpi_boundary {
+            depth[e] = 0;
+            queue.push_back(e);
+        }
+    }
+    if queue.is_empty() {
+        // single-node case: seed from the physical hull instead
+        for &e in &elems {
+            if mesh.conn[e].iter().any(|&v| v < 0) {
+                depth[e] = 0;
+                queue.push_back(e);
+            }
+        }
+    }
+    while let Some(e) = queue.pop_front() {
+        for &v in &mesh.conn[e] {
+            if v >= 0 {
+                let v = v as usize;
+                if node_of[v] == node && depth[v] == usize::MAX {
+                    depth[v] = depth[e] + 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    elems.into_iter().map(|e| (e, depth[e])).collect()
+}
+
+/// Build the nested partition: per node, offload the `mic_fraction` share
+/// of elements (deepest-first) to the MIC, subject to the interior-only
+/// constraint. Returns the assignment plus realized per-node counts (the
+/// realized MIC count can fall short of the request if a node has too few
+/// interior elements — exactly the regime where the paper's scheme degrades
+/// to CPU-only).
+pub fn nested_partition(mesh: &Mesh, node: &Partition, mic_fraction: f64) -> NestedPartition {
+    assert!((0.0..=1.0).contains(&mic_fraction));
+    let node_of = &node.assignment;
+    let mut device = vec![DeviceKind::Cpu; mesh.len()];
+    let mut node_counts = vec![(0usize, 0usize); node.nparts];
+    let single_node = node.nparts == 1;
+    for nd in 0..node.nparts {
+        let depths = boundary_depths(mesh, node_of, nd);
+        let k = depths.len();
+        let want = (k as f64 * mic_fraction).round() as usize;
+        // offloadable = strictly interior (depth >= 1); in the single-node
+        // case there is no MPI boundary, so depth-0 (hull) elements remain
+        // on the CPU too — they still carry bound_flux work.
+        let mut cand: Vec<(usize, usize)> = depths
+            .iter()
+            .copied()
+            .filter(|&(_, d)| if single_node { d >= 1 } else { d >= 1 })
+            .collect();
+        // deepest first; ties by Morton position (= global index order)
+        cand.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let take = want.min(cand.len());
+        for &(e, _) in cand.iter().take(take) {
+            device[e] = DeviceKind::Mic;
+        }
+        node_counts[nd] = (k - take, take);
+    }
+    NestedPartition { node: node.clone(), device, node_counts }
+}
+
+/// Count faces between CPU- and MIC-owned elements of the same node — the
+/// per-step PCI surface (each shared face transfers one trace each way).
+pub fn pci_faces(mesh: &Mesh, np: &NestedPartition) -> Vec<usize> {
+    let mut out = vec![0usize; np.node.nparts];
+    for (e, c) in mesh.conn.iter().enumerate() {
+        for &v in c {
+            if v >= 0 {
+                let v = v as usize;
+                if np.node.assignment[e] == np.node.assignment[v]
+                    && np.device[e] == DeviceKind::Mic
+                    && np.device[v] == DeviceKind::Cpu
+                {
+                    out[np.node.assignment[e]] += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Verify the interior-only invariant: no MIC element touches another node.
+pub fn check_interior_only(mesh: &Mesh, np: &NestedPartition) -> bool {
+    for (e, c) in mesh.conn.iter().enumerate() {
+        if np.device[e] == DeviceKind::Mic {
+            for &v in c {
+                if v >= 0 && np.node.assignment[v as usize] != np.node.assignment[e] {
+                    return false;
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::element::Material;
+    use crate::partition::splice::splice;
+
+    fn mesh(n: usize) -> Mesh {
+        Mesh::structured_brick([n, n, n], [0.0; 3], [1.0; 3], |_| Material::acoustic(1.0, 1.0))
+    }
+
+    #[test]
+    fn interior_only_invariant() {
+        let m = mesh(8);
+        let node = splice(&m, 4);
+        for frac in [0.1, 0.3, 0.6, 0.9] {
+            let np = nested_partition(&m, &node, frac);
+            assert!(check_interior_only(&m, &np), "frac {frac}");
+        }
+    }
+
+    #[test]
+    fn counts_match_assignment() {
+        let m = mesh(8);
+        let node = splice(&m, 4);
+        let np = nested_partition(&m, &node, 0.5);
+        for nd in 0..4 {
+            let cpu = (0..m.len())
+                .filter(|&e| node.assignment[e] == nd && np.device[e] == DeviceKind::Cpu)
+                .count();
+            let mic = (0..m.len())
+                .filter(|&e| node.assignment[e] == nd && np.device[e] == DeviceKind::Mic)
+                .count();
+            assert_eq!((cpu, mic), np.node_counts[nd]);
+        }
+    }
+
+    #[test]
+    fn requested_fraction_realized_when_feasible() {
+        // single node: offloadable = strict interior (6^3 = 216 of 8^3)
+        let m = mesh(8);
+        let node = splice(&m, 1);
+        let np = nested_partition(&m, &node, 0.25);
+        assert_eq!(np.node_counts[0].1, 128, "feasible request fully realized");
+        // an infeasible request clips to the interior count
+        let np2 = nested_partition(&m, &node, 0.9);
+        assert_eq!(np2.node_counts[0].1, 216, "clipped to interior elements");
+    }
+
+    #[test]
+    fn zero_and_full_fraction() {
+        let m = mesh(4);
+        let node = splice(&m, 2);
+        let np0 = nested_partition(&m, &node, 0.0);
+        assert!(np0.device.iter().all(|&d| d == DeviceKind::Cpu));
+        let np1 = nested_partition(&m, &node, 1.0);
+        // full request: every interior element offloaded, boundary stays
+        assert!(check_interior_only(&m, &np1));
+        for nd in 0..2 {
+            let (cpu, _) = np1.node_counts[nd];
+            assert!(cpu > 0, "MPI-boundary elements must stay on the CPU");
+        }
+    }
+
+    #[test]
+    fn mic_surface_smaller_than_random_selection() {
+        // onion peeling must beat random interior selection on PCI faces;
+        // needs a mesh large enough that the choice matters (interior 1000,
+        // selecting 518)
+        let m = mesh(12);
+        let node = splice(&m, 1);
+        let np = nested_partition(&m, &node, 0.3);
+        let pci = pci_faces(&m, &np)[0];
+        // random baseline
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        let depths = boundary_depths(&m, &node.assignment, 0);
+        let mut interior: Vec<usize> =
+            depths.iter().filter(|&&(_, d)| d >= 1).map(|&(e, _)| e).collect();
+        rng.shuffle(&mut interior);
+        let k_mic = np.node_counts[0].1;
+        let mut device = vec![DeviceKind::Cpu; m.len()];
+        for &e in interior.iter().take(k_mic) {
+            device[e] = DeviceKind::Mic;
+        }
+        let rand_np = NestedPartition {
+            node: node.clone(),
+            device,
+            node_counts: vec![(m.len() - k_mic, k_mic)],
+        };
+        let pci_rand = pci_faces(&m, &rand_np)[0];
+        assert!(
+            (pci as f64) < 0.7 * pci_rand as f64,
+            "onion {pci} vs random {pci_rand}"
+        );
+    }
+
+    #[test]
+    fn owners_encoding() {
+        let m = mesh(4);
+        let node = splice(&m, 2);
+        let np = nested_partition(&m, &node, 0.3);
+        let owners = np.owners();
+        for (e, &o) in owners.iter().enumerate() {
+            assert_eq!(o / 2, node.assignment[e]);
+            assert_eq!(o % 2 == 1, np.device[e] == DeviceKind::Mic);
+        }
+    }
+
+    #[test]
+    fn depths_zero_on_mpi_boundary() {
+        let m = mesh(4);
+        let node = splice(&m, 2);
+        let depths = boundary_depths(&m, &node.assignment, 0);
+        for (e, d) in depths {
+            let mpi = m.conn[e]
+                .iter()
+                .any(|&v| v >= 0 && node.assignment[v as usize] != 0);
+            if mpi {
+                assert_eq!(d, 0);
+            }
+        }
+    }
+}

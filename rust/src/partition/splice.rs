@@ -1,0 +1,167 @@
+//! Level-1 partitioning: splice the Morton-ordered element array.
+//!
+//! "The elements can be ordered according to a global Morton ordering, in
+//! effect producing a one-dimensional array of elements which is then
+//! spliced into roughly equally-sized sub-arrays. [...] This procedure is
+//! approximately optimal with respect to minimizing communication between
+//! subdomains." (paper §5.1)
+
+use crate::mesh::Mesh;
+
+/// An element -> part assignment.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub assignment: Vec<usize>,
+    pub nparts: usize,
+}
+
+impl Partition {
+    /// Element count per part.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.nparts];
+        for &p in &self.assignment {
+            s[p] += 1;
+        }
+        s
+    }
+
+    /// Max/min size imbalance ratio (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let s = self.sizes();
+        let max = *s.iter().max().unwrap_or(&0) as f64;
+        let min = *s.iter().min().unwrap_or(&0) as f64;
+        if min == 0.0 {
+            f64::INFINITY
+        } else {
+            max / min
+        }
+    }
+}
+
+/// Equal-count contiguous splice of the (already Morton-sorted) mesh.
+pub fn splice(mesh: &Mesh, nparts: usize) -> Partition {
+    let n = mesh.len();
+    assert!(nparts >= 1 && nparts <= n, "need 1 <= nparts ({nparts}) <= n ({n})");
+    let mut assignment = vec![0usize; n];
+    // distribute the remainder one extra element to the first (n % p) parts,
+    // exactly like an MPI block distribution
+    let base = n / nparts;
+    let extra = n % nparts;
+    let mut e = 0;
+    for p in 0..nparts {
+        let count = base + usize::from(p < extra);
+        for _ in 0..count {
+            assignment[e] = p;
+            e += 1;
+        }
+    }
+    Partition { assignment, nparts }
+}
+
+/// Weighted splice: chunk boundaries chosen so per-part weight is balanced
+/// (used when element cost varies, e.g. mixed polynomial orders in hp).
+pub fn splice_weighted(weights: &[f64], nparts: usize) -> Partition {
+    let n = weights.len();
+    assert!(nparts >= 1 && nparts <= n);
+    let total: f64 = weights.iter().sum();
+    let target = total / nparts as f64;
+    let mut assignment = vec![0usize; n];
+    let mut part = 0usize;
+    let mut acc = 0.0;
+    for (e, &w) in weights.iter().enumerate() {
+        // close the chunk when adding the next element would overshoot the
+        // running target more than it undershoots, but never leave fewer
+        // elements than parts remaining
+        let remaining_elems = n - e;
+        let remaining_parts = nparts - part;
+        if part + 1 < nparts
+            && remaining_elems > remaining_parts - 1
+            && acc + w / 2.0 > target * (part + 1) as f64
+        {
+            part += 1;
+        }
+        assignment[e] = part;
+        acc += w;
+    }
+    Partition { assignment, nparts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::element::Material;
+    use crate::mesh::Mesh;
+
+    fn mesh(n: usize) -> Mesh {
+        Mesh::structured_brick([n, n, n], [0.0; 3], [1.0; 3], |_| Material::acoustic(1.0, 1.0))
+    }
+
+    #[test]
+    fn splice_equal_sizes() {
+        let m = mesh(4);
+        let p = splice(&m, 8);
+        assert_eq!(p.sizes(), vec![8; 8]);
+        assert!((p.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn splice_remainder_distribution() {
+        let m = mesh(3); // 27 elements
+        let p = splice(&m, 4);
+        let mut sizes = p.sizes();
+        sizes.sort();
+        assert_eq!(sizes, vec![6, 7, 7, 7]);
+    }
+
+    #[test]
+    fn splice_is_contiguous() {
+        let m = mesh(4);
+        let p = splice(&m, 5);
+        for w in p.assignment.windows(2) {
+            assert!(w[1] == w[0] || w[1] == w[0] + 1);
+        }
+    }
+
+    #[test]
+    fn splice_locality_beats_random() {
+        // morton splice should expose far fewer cross-part faces than a
+        // random assignment — the property the paper relies on
+        let m = mesh(8);
+        let p = splice(&m, 8);
+        let cross_splice = cross_faces(&m, &p.assignment);
+        let mut rng = crate::util::Rng::seed_from_u64(42);
+        let mut shuffled = p.assignment.clone();
+        rng.shuffle(&mut shuffled);
+        let cross_rand = cross_faces(&m, &shuffled);
+        assert!(
+            (cross_splice as f64) < 0.5 * cross_rand as f64,
+            "splice {cross_splice} vs random {cross_rand}"
+        );
+    }
+
+    fn cross_faces(m: &Mesh, owners: &[usize]) -> usize {
+        let mut n = 0;
+        for (e, c) in m.conn.iter().enumerate() {
+            for &v in c {
+                if v >= 0 && owners[v as usize] != owners[e] {
+                    n += 1;
+                }
+            }
+        }
+        n / 2
+    }
+
+    #[test]
+    fn weighted_splice_balances_weight() {
+        let weights: Vec<f64> = (0..100).map(|i| 1.0 + (i % 7) as f64).collect();
+        let p = splice_weighted(&weights, 4);
+        let mut wsum = vec![0.0; 4];
+        for (e, &part) in p.assignment.iter().enumerate() {
+            wsum[part] += weights[e];
+        }
+        let total: f64 = weights.iter().sum();
+        for w in &wsum {
+            assert!((w - total / 4.0).abs() < total * 0.05, "{wsum:?}");
+        }
+    }
+}

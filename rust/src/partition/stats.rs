@@ -1,0 +1,161 @@
+//! Partition quality metrics: the quantities the cost models consume.
+
+use super::nested::{DeviceKind, NestedPartition};
+use crate::mesh::Mesh;
+
+/// Per-node face/element counts for one nested partition.
+#[derive(Debug, Clone, Default)]
+pub struct NodeStats {
+    pub k_cpu: usize,
+    pub k_mic: usize,
+    /// CPU-side element faces against same-node CPU elements (counted once).
+    pub cpu_int_faces: usize,
+    /// MIC-side element faces against same-node MIC elements (counted once).
+    pub mic_int_faces: usize,
+    /// CPU<->MIC faces inside the node (PCI traffic, counted once).
+    pub pci_faces: usize,
+    /// Faces against other nodes (MPI traffic, counted once per node side).
+    pub mpi_faces: usize,
+    /// Physical boundary faces handled by the CPU partition.
+    pub bound_faces_cpu: usize,
+    /// Physical boundary faces handled by the MIC partition (possible in
+    /// multi-node runs: "interior" excludes only MPI faces).
+    pub bound_faces_mic: usize,
+}
+
+impl NodeStats {
+    pub fn bound_faces(&self) -> usize {
+        self.bound_faces_cpu + self.bound_faces_mic
+    }
+}
+
+/// Aggregate stats for the whole cluster partition.
+#[derive(Debug, Clone)]
+pub struct PartitionStats {
+    pub per_node: Vec<NodeStats>,
+}
+
+impl PartitionStats {
+    pub fn total_pci_faces(&self) -> usize {
+        self.per_node.iter().map(|s| s.pci_faces).sum()
+    }
+
+    pub fn total_mpi_faces(&self) -> usize {
+        self.per_node.iter().map(|s| s.mpi_faces).sum()
+    }
+
+    pub fn max_mpi_faces(&self) -> usize {
+        self.per_node.iter().map(|s| s.mpi_faces).max().unwrap_or(0)
+    }
+}
+
+/// Count every face class of a nested partition.
+pub fn partition_stats(mesh: &Mesh, np: &NestedPartition) -> PartitionStats {
+    let mut per_node = vec![NodeStats::default(); np.node.nparts];
+    for nd in 0..np.node.nparts {
+        per_node[nd].k_cpu = np.node_counts[nd].0;
+        per_node[nd].k_mic = np.node_counts[nd].1;
+    }
+    for (e, c) in mesh.conn.iter().enumerate() {
+        let nd = np.node.assignment[e];
+        let dev = np.device[e];
+        let s = &mut per_node[nd];
+        for &v in c {
+            if v < 0 {
+                match dev {
+                    DeviceKind::Cpu => s.bound_faces_cpu += 1,
+                    DeviceKind::Mic => s.bound_faces_mic += 1,
+                }
+                continue;
+            }
+            let v = v as usize;
+            let nd2 = np.node.assignment[v];
+            if nd2 != nd {
+                s.mpi_faces += 1; // counted from this node's side
+                continue;
+            }
+            // same node: count each interior pair once (e < v)
+            match (dev, np.device[v]) {
+                (DeviceKind::Cpu, DeviceKind::Cpu) => {
+                    if e < v {
+                        s.cpu_int_faces += 1;
+                    }
+                }
+                (DeviceKind::Mic, DeviceKind::Mic) => {
+                    if e < v {
+                        s.mic_int_faces += 1;
+                    }
+                }
+                (DeviceKind::Mic, DeviceKind::Cpu) => s.pci_faces += 1,
+                (DeviceKind::Cpu, DeviceKind::Mic) => {} // counted from MIC side
+            }
+        }
+    }
+    PartitionStats { per_node }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::element::Material;
+    use crate::partition::nested::nested_partition;
+    use crate::partition::splice::splice;
+
+    fn mesh(n: usize) -> Mesh {
+        Mesh::structured_brick([n, n, n], [0.0; 3], [1.0; 3], |_| Material::acoustic(1.0, 1.0))
+    }
+
+    #[test]
+    fn face_classes_partition_all_faces() {
+        let m = mesh(8);
+        let node = splice(&m, 4);
+        let np = nested_partition(&m, &node, 0.5);
+        let st = partition_stats(&m, &np);
+        let (int_total, bound_total) = m.face_counts();
+        let counted: usize = st
+            .per_node
+            .iter()
+            .map(|s| s.cpu_int_faces + s.mic_int_faces + s.pci_faces)
+            .sum::<usize>()
+            + st.total_mpi_faces() / 2; // mpi faces counted from both sides
+        assert_eq!(counted, int_total);
+        let bounds: usize = st.per_node.iter().map(|s| s.bound_faces()).sum();
+        assert_eq!(bounds, bound_total);
+    }
+
+    #[test]
+    fn elements_match_counts() {
+        let m = mesh(8);
+        let node = splice(&m, 2);
+        let np = nested_partition(&m, &node, 0.4);
+        let st = partition_stats(&m, &np);
+        let k: usize = st.per_node.iter().map(|s| s.k_cpu + s.k_mic).sum();
+        assert_eq!(k, m.len());
+    }
+
+    #[test]
+    fn mic_surface_close_to_cube_ansatz() {
+        // the onion-peeled MIC set should expose a surface within ~2.5x of
+        // the ideal cube (it is constrained inside the node's chunk shape)
+        let m = mesh(8);
+        let node = splice(&m, 1);
+        let np = nested_partition(&m, &node, 0.4);
+        let st = partition_stats(&m, &np);
+        let k_mic = st.per_node[0].k_mic as f64;
+        let ideal = 6.0 * k_mic.powf(2.0 / 3.0);
+        let actual = st.per_node[0].pci_faces as f64;
+        assert!(
+            actual < 2.5 * ideal,
+            "pci faces {actual} vs ideal cube {ideal}"
+        );
+    }
+
+    #[test]
+    fn no_mic_no_pci() {
+        let m = mesh(4);
+        let node = splice(&m, 2);
+        let np = nested_partition(&m, &node, 0.0);
+        let st = partition_stats(&m, &np);
+        assert_eq!(st.total_pci_faces(), 0);
+    }
+}

@@ -1,0 +1,243 @@
+//! artifacts/manifest.json parsing and shape-bucket selection.
+//!
+//! Parsed with the in-tree JSON parser (`util::json`) — the offline build
+//! carries no serde.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context};
+
+use crate::util::Json;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct ShapeSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub path: String,
+    pub order: usize,
+    pub k: usize,
+    pub halo: usize,
+    pub inputs: Vec<ShapeSig>,
+    pub outputs: Vec<ShapeSig>,
+    pub sha256: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub format: String,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub lsrk_a: Vec<f64>,
+    pub lsrk_b: Vec<f64>,
+    pub dir: PathBuf,
+}
+
+fn shape_sigs(j: Option<&Json>) -> Result<Vec<ShapeSig>> {
+    let mut out = Vec::new();
+    if let Some(arr) = j.and_then(|v| v.as_arr()) {
+        for s in arr {
+            out.push(ShapeSig {
+                shape: s
+                    .get("shape")
+                    .and_then(|v| v.as_arr())
+                    .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                    .unwrap_or_default(),
+                dtype: s
+                    .get("dtype")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            });
+        }
+    }
+    Ok(out)
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let format = j
+            .get("format")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("manifest missing format"))?
+            .to_string();
+        if format != "hlo-text" {
+            bail!("unsupported artifact format {format}");
+        }
+        let mut artifacts = Vec::new();
+        for a in j.get("artifacts").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+            let gets = |k: &str| {
+                a.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            let getn = |k: &str| {
+                a.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("artifact missing {k}"))
+            };
+            artifacts.push(ArtifactMeta {
+                name: gets("name")?,
+                kind: gets("kind")?,
+                path: gets("path")?,
+                order: getn("order")?,
+                k: getn("k")?,
+                halo: getn("halo")?,
+                inputs: shape_sigs(a.get("inputs"))?,
+                outputs: shape_sigs(a.get("outputs"))?,
+                sha256: a
+                    .get("sha256")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or_default()
+                    .to_string(),
+            });
+        }
+        let nums = |k: &str| -> Vec<f64> {
+            j.get(k)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default()
+        };
+        let m = ArtifactManifest {
+            format,
+            artifacts,
+            lsrk_a: nums("lsrk_a"),
+            lsrk_b: nums("lsrk_b"),
+            dir,
+        };
+        // the rust LSRK tableau must agree with what the artifacts embed
+        for (a, b) in m.lsrk_a.iter().zip(crate::solver::LSRK_A.iter()) {
+            if (a - b).abs() > 1e-12 {
+                bail!("LSRK 'a' tableau mismatch between python and rust");
+            }
+        }
+        for (a, b) in m.lsrk_b.iter().zip(crate::solver::LSRK_B.iter()) {
+            if (a - b).abs() > 1e-12 {
+                bail!("LSRK 'b' tableau mismatch between python and rust");
+            }
+        }
+        Ok(m)
+    }
+
+    /// Default artifact directory: $REPRO_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("REPRO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest stage artifact bucket fitting (order, k_real, halo_real).
+    pub fn pick_stage(&self, order: usize, k: usize, halo: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "stage" && a.order == order && a.k >= k && a.halo >= halo)
+            .min_by_key(|a| (a.k, a.halo))
+            .ok_or_else(|| {
+                anyhow!(
+                    "no stage artifact for order {order}, k >= {k}, halo >= {halo}; \
+                     regenerate with `python -m compile.aot --orders ... --buckets ...`"
+                )
+            })
+    }
+
+    /// Smallest energy artifact fitting (order, k_real).
+    pub fn pick_energy(&self, order: usize, k: usize) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "energy" && a.order == order && a.k >= k)
+            .min_by_key(|a| a.k)
+            .ok_or_else(|| anyhow!("no energy artifact for order {order}, k >= {k}"))
+    }
+
+    pub fn file_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.path)
+    }
+
+    /// Orders available in this artifact set.
+    pub fn orders(&self) -> Vec<usize> {
+        let mut v: Vec<usize> =
+            self.artifacts.iter().filter(|a| a.kind == "stage").map(|a| a.order).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> Option<PathBuf> {
+        let d = ArtifactManifest::default_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn load_and_pick() {
+        let Some(dir) = manifest_dir() else {
+            eprintln!("skipping: no artifacts built");
+            return;
+        };
+        let m = ArtifactManifest::load(dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        let orders = m.orders();
+        assert!(!orders.is_empty());
+        let o = orders[0];
+        let smallest_k = m
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "stage" && a.order == o)
+            .map(|a| a.k)
+            .min()
+            .unwrap();
+        let a = m.pick_stage(o, 1, 1).unwrap();
+        assert_eq!(a.k, smallest_k, "must pick the smallest fitting bucket");
+        assert!(m.pick_stage(o, usize::MAX / 2, 1).is_err());
+        // input signature sanity: stage artifacts carry 9 inputs, f32/i32
+        assert_eq!(a.inputs.len(), 9);
+        assert_eq!(a.inputs[3].dtype, "int32");
+    }
+
+    #[test]
+    fn synthetic_manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("repro_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = format!(
+            r#"{{"format":"hlo-text","artifacts":[
+                {{"name":"stage_n1_k8_h32","kind":"stage","path":"x.hlo.txt",
+                  "order":1,"k":8,"halo":32,
+                  "inputs":[{{"shape":[8,9,2,2,2],"dtype":"float32"}}],
+                  "outputs":[{{"shape":[8,9,2,2,2],"dtype":"float32"}}]}}],
+               "lsrk_a":{:?},"lsrk_b":{:?}}}"#,
+            crate::solver::LSRK_A.to_vec(),
+            crate::solver::LSRK_B.to_vec()
+        );
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        assert_eq!(m.pick_stage(1, 5, 10).unwrap().name, "stage_n1_k8_h32");
+        assert!(m.pick_stage(1, 9, 10).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_tableau_rejected() {
+        let dir = std::env::temp_dir().join(format!("repro_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{"format":"hlo-text","artifacts":[],
+                       "lsrk_a":[0.5,0,0,0,0],"lsrk_b":[0,0,0,0,0]}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        assert!(ArtifactManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

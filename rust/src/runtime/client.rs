@@ -1,0 +1,207 @@
+//! The PJRT execution wrapper: compile-once per artifact, execute per stage.
+//!
+//! One [`PjrtRuntime`] owns a PJRT CPU client plus a compile cache keyed by
+//! artifact name; [`PjrtBackend`] binds one compiled stage executable to a
+//! block's shape bucket and implements [`StageBackend`]. The underlying
+//! `xla::PjRtClient` is `Rc`-based (not `Send`), so each device worker
+//! thread owns its own runtime — matching the paper's process model, where
+//! the host and the offloaded MIC process are separate executors.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, Context};
+use xla::{ElementType, Literal, PjRtLoadedExecutable};
+
+use super::artifacts::{ArtifactManifest, ArtifactMeta};
+use crate::solver::reference::KernelTimes;
+use crate::solver::state::{BlockState, NFIELDS};
+use crate::solver::StageBackend;
+use crate::Result;
+
+/// A PJRT CPU client + artifact registry + compile cache.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    cache: HashMap<String, Rc<PjRtLoadedExecutable>>,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// Load with the default artifact directory.
+    pub fn from_env() -> Result<Self> {
+        Self::new(ArtifactManifest::default_dir())
+    }
+
+    fn compile(&mut self, meta: &ArtifactMeta) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.get(&meta.name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.file_path(meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).context("PJRT compile")?);
+        self.cache.insert(meta.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Build a stage backend for a block (the block must already be padded
+    /// to the chosen artifact's buckets — use [`Self::buckets_for`]).
+    pub fn stage_backend(&mut self, st: &BlockState) -> Result<PjrtBackend> {
+        let meta = self
+            .manifest
+            .pick_stage(st.order, st.k_real, st.halo_real)?
+            .clone();
+        if meta.k != st.k_pad || meta.halo != st.halo_pad {
+            return Err(anyhow!(
+                "block padded to (k={}, h={}) but artifact {} expects (k={}, h={})",
+                st.k_pad, st.halo_pad, meta.name, meta.k, meta.halo
+            ));
+        }
+        let exe = self.compile(&meta)?;
+        PjrtBackend::new(exe, meta, self.client.clone(), st)
+    }
+
+    /// The (k, halo) bucket a block of this size will be padded to.
+    pub fn buckets_for(&self, order: usize, k: usize, halo: usize) -> Result<(usize, usize)> {
+        let meta = self.manifest.pick_stage(order, k, halo)?;
+        Ok((meta.k, meta.halo))
+    }
+
+    /// Evaluate the energy artifact on a block.
+    pub fn energy(&mut self, st: &BlockState) -> Result<f64> {
+        let meta = self.manifest.pick_energy(st.order, st.k_pad)?.clone();
+        if meta.k != st.k_pad {
+            return Err(anyhow!(
+                "energy artifact bucket {} != block padding {}",
+                meta.k, st.k_pad
+            ));
+        }
+        let exe = self.compile(&meta)?;
+        let m = st.m;
+        let q = lit_f32(&st.q, &[st.k_pad, NFIELDS, m, m, m])?;
+        let mats = lit_f32(&st.mats, &[st.k_pad, 3])?;
+        let h = lit_f32(&st.h, &[st.k_pad, 3])?;
+        let result = exe.execute::<Literal>(&[q, mats, h])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        Ok(v[0] as f64)
+    }
+}
+
+fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    debug_assert_eq!(n, data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
+}
+
+fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    debug_assert_eq!(n, data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)?)
+}
+
+/// One compiled stage executable bound to a shape bucket.
+///
+/// The five inputs that never change across a run (connectivity, materials,
+/// extents) are built as literals once at construction and reused —
+/// `execute` clones them internally; rebuilding them every stage cost ~10%
+/// at k=64 (EXPERIMENTS.md §Perf). NOTE a pure-device path via
+/// `execute_b` + persistent `PjRtBuffer`s was attempted and reverted: the
+/// crate's `execute_b` segfaults on this 9-parameter executable (works on
+/// 2-parameter toys) — see DESIGN.md §Perf. q/res round-trip through the
+/// host each stage regardless, since PJRT returns the output tuple as one
+/// host-fetchable buffer.
+pub struct PjrtBackend {
+    exe: Rc<PjRtLoadedExecutable>,
+    pub meta: ArtifactMeta,
+    pub calls: usize,
+    /// (conn, halo_idx, mats, halo_mats, h) literals, fixed per run.
+    static_lits: Vec<Literal>,
+}
+
+impl PjrtBackend {
+    fn new(
+        exe: Rc<PjRtLoadedExecutable>,
+        meta: ArtifactMeta,
+        _client: xla::PjRtClient,
+        st: &BlockState,
+    ) -> Result<Self> {
+        let k = st.k_pad;
+        let hs = st.halo_pad;
+        let static_lits = vec![
+            lit_i32(&st.conn, &[k, 6])?,
+            lit_i32(&st.halo_idx, &[k, 6])?,
+            lit_f32(&st.mats, &[k, 3])?,
+            lit_f32(&st.halo_mats, &[hs, 3])?,
+            lit_f32(&st.h, &[k, 3])?,
+        ];
+        Ok(PjrtBackend { exe, meta, calls: 0, static_lits })
+    }
+
+    /// Execute one LSRK stage on the block through the artifact:
+    /// inputs (q, res, halo, conn, halo_idx, mats, halo_mats, h, scal),
+    /// outputs (q', res', traces').
+    fn run_stage(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> Result<()> {
+        let m = st.m;
+        let k = st.k_pad;
+        let hs = st.halo_pad;
+        let q = lit_f32(&st.q, &[k, NFIELDS, m, m, m])?;
+        let res = lit_f32(&st.res, &[k, NFIELDS, m, m, m])?;
+        let halo = lit_f32(&st.halo, &[hs, NFIELDS, m, m])?;
+        let scal = lit_f32(&[dt, a, b], &[3])?;
+        let args: Vec<&Literal> = vec![
+            &q,
+            &res,
+            &halo,
+            &self.static_lits[0],
+            &self.static_lits[1],
+            &self.static_lits[2],
+            &self.static_lits[3],
+            &self.static_lits[4],
+            &scal,
+        ];
+        let result = self.exe.execute::<&Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        if outs.len() != 3 {
+            return Err(anyhow!("stage artifact returned {} outputs, want 3", outs.len()));
+        }
+        let traces = outs.pop().unwrap();
+        let res = outs.pop().unwrap();
+        let q = outs.pop().unwrap();
+        q.copy_raw_to(&mut st.q)?;
+        res.copy_raw_to(&mut st.res)?;
+        traces.copy_raw_to(&mut st.traces)?;
+        self.calls += 1;
+        Ok(())
+    }
+}
+
+impl StageBackend for PjrtBackend {
+    fn stage(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> Result<KernelTimes> {
+        let t0 = std::time::Instant::now();
+        self.run_stage(st, dt, a, b)?;
+        // the artifact fuses all kernels into one executable: attribute the
+        // wall time to volume_loop (dominant) for coarse accounting; the
+        // fine-grained split comes from the cost models / reference path.
+        let mut t = KernelTimes::default();
+        t.volume_loop = t0.elapsed().as_secs_f64();
+        Ok(t)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT artifacts and execute them.
+//!
+//! Python (jax + pallas) runs once at build time (`make artifacts`),
+//! lowering the L2 stage function to HLO **text** (xla_extension 0.5.1
+//! rejects jax>=0.5 serialized protos — 64-bit instruction ids; the text
+//! parser reassigns them). This module loads those files, compiles them on
+//! the PJRT CPU client and exposes a [`crate::solver::StageBackend`] so
+//! the coordinator's hot path never touches python.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactManifest, ArtifactMeta};
+pub use client::{PjrtBackend, PjrtRuntime};

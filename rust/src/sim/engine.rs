@@ -1,0 +1,496 @@
+//! The simulation engine: run a workload under one of the three execution
+//! schemes and report wall time + per-kernel breakdown.
+//!
+//! Per-timestep flow (paper Fig 5.1, nested scheme):
+//!
+//! ```text
+//!   host: CPU kernels  ---\                       /--> MPI exchange --> next
+//!                          >-- PCI face exchange -
+//!   mic:  MIC kernels  ---/                       \--> (idle)
+//! ```
+//!
+//! Baseline: 8 scalar ranks per node compute, then exchange (intra-node
+//! via shared memory — compute cost only; inter-node over the network).
+//! Task-offload: volume_loop ships to the MIC each step with the full
+//! element state over PCI; everything else stays on the CPU (serialized —
+//! exactly the "common paradigm" of §5.5 the paper argues against).
+
+use std::collections::HashMap;
+
+use crate::costmodel::kernels::{element_state_bytes, PaperKernel, ALL_KERNELS};
+use crate::costmodel::pci::Direction;
+use crate::costmodel::DeviceModel;
+use crate::mesh::Mesh;
+use crate::partition::{
+    nested_partition, partition_stats, splice, Partition,
+};
+use crate::sim::events::{EventKind, EventQueue};
+use crate::sim::topology::Cluster;
+
+/// Execution scheme under simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scheme {
+    /// Paper baseline: pure MPI, `ranks_per_node` scalar ranks.
+    BaselineMpi { ranks_per_node: usize },
+    /// §5.5 strawman: offload volume_loop wholesale each step.
+    TaskOffload,
+    /// The paper's contribution. `mic_fraction` overrides the balance
+    /// solve when Some (used by the Fig 5.2 sweep).
+    Nested { mic_fraction: Option<f64> },
+    /// Extension (paper's implicit future work): the PCI face exchange is
+    /// overlapped with interior compute — each device orders its boundary
+    /// elements first, ships their traces asynchronously, and computes its
+    /// interior while the bus drains; only the invocation latency remains
+    /// on the critical path.
+    NestedOverlap { mic_fraction: Option<f64> },
+}
+
+impl Scheme {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::BaselineMpi { .. } => "baseline-mpi",
+            Scheme::TaskOffload => "task-offload",
+            Scheme::Nested { .. } => "nested",
+            Scheme::NestedOverlap { .. } => "nested-overlap",
+        }
+    }
+}
+
+/// Busy-seconds per (device label, kernel) over the whole run.
+#[derive(Debug, Clone, Default)]
+pub struct KernelBreakdown {
+    pub entries: HashMap<(&'static str, &'static str), f64>,
+}
+
+impl KernelBreakdown {
+    fn add(&mut self, dev: &'static str, k: PaperKernel, secs: f64) {
+        *self.entries.entry((dev, k.name())).or_default() += secs;
+    }
+
+    /// Fraction of total busy time per kernel (summed over devices) —
+    /// the Fig 4.1 "Average" series.
+    pub fn fractions(&self) -> Vec<(&'static str, f64)> {
+        let total: f64 = self.entries.values().sum();
+        let mut per_kernel: HashMap<&'static str, f64> = HashMap::new();
+        for ((_, k), &v) in &self.entries {
+            *per_kernel.entry(k).or_default() += v;
+        }
+        let mut out: Vec<_> = ALL_KERNELS
+            .iter()
+            .map(|k| (k.name(), per_kernel.get(k.name()).copied().unwrap_or(0.0) / total))
+            .collect();
+        out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        out
+    }
+
+    pub fn device_kernel_seconds(&self, dev: &str, kernel: &str) -> f64 {
+        self.entries
+            .iter()
+            .filter(|((d, k), _)| *d == dev && *k == kernel)
+            .map(|(_, v)| *v)
+            .sum()
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub scheme: &'static str,
+    pub nodes: usize,
+    pub steps: usize,
+    pub order: usize,
+    pub elems: usize,
+    pub wall_s: f64,
+    pub breakdown: KernelBreakdown,
+    /// Per-node realized (k_cpu, k_mic) for the nested scheme.
+    pub node_counts: Vec<(usize, usize)>,
+    /// Mean per-step PCI and MPI time on the critical path.
+    pub pci_step_s: f64,
+    pub mpi_step_s: f64,
+    /// Mean utilization of both devices during compute (nested only).
+    pub cpu_busy_frac: f64,
+    pub mic_busy_frac: f64,
+}
+
+/// Per-node precomputed step times for the event engine.
+struct NodeStep {
+    cpu_compute: f64,
+    mic_compute: f64,
+    pci: f64,
+    mpi: f64,
+}
+
+/// Simulate `steps` timesteps of the DG solver on `mesh` across the
+/// cluster under `scheme`.
+pub fn simulate(
+    cluster: &Cluster,
+    mesh: &Mesh,
+    order: usize,
+    steps: usize,
+    scheme: Scheme,
+) -> SimReport {
+    let nodes = cluster.nodes;
+    let node_part = splice(mesh, nodes);
+    let mut breakdown = KernelBreakdown::default();
+    let mut node_counts = Vec::new();
+    let mut per_node: Vec<NodeStep> = Vec::with_capacity(nodes);
+    let hetero = !matches!(scheme, Scheme::BaselineMpi { .. });
+
+    match scheme {
+        Scheme::BaselineMpi { ranks_per_node } => {
+            let ranks = splice(mesh, nodes * ranks_per_node);
+            let per_rank = rank_face_stats(mesh, &ranks, ranks_per_node);
+            let dev = &cluster.node_model.cpu_scalar;
+            for nd in 0..nodes {
+                let mut k = 0usize;
+                let (mut intf, mut bndf, mut parf, mut mpif) = (0usize, 0, 0, 0);
+                for r in nd * ranks_per_node..(nd + 1) * ranks_per_node {
+                    let s = &per_rank[r];
+                    k += s.k;
+                    intf += s.int_faces;
+                    bndf += s.bound_faces;
+                    parf += s.cross_faces; // inter-rank faces = parallel_flux
+                    mpif += s.cross_node;
+                }
+                let t = add_volume_kernels(&mut breakdown, dev, order, k, steps)
+                    + add_face_kernels(&mut breakdown, dev, order, intf, bndf, parf, steps);
+                per_node.push(NodeStep {
+                    cpu_compute: t / steps as f64,
+                    mic_compute: 0.0,
+                    pci: 0.0,
+                    mpi: cluster.network.exchange_time(mpif, order),
+                });
+                node_counts.push((k, 0));
+            }
+        }
+        Scheme::TaskOffload => {
+            let np = nested_partition(mesh, &node_part, 0.0); // all CPU, stats only
+            let st = partition_stats(mesh, &np);
+            let cpu = &cluster.node_model.cpu_vec;
+            let micd = &cluster.node_model.mic;
+            for nd in 0..nodes {
+                let s = &st.per_node[nd];
+                let k = s.k_cpu + s.k_mic;
+                // volume on the MIC, everything else on the CPU, serialized
+                let t_vol = micd.time(PaperKernel::VolumeLoop, order, k);
+                breakdown.add(micd.name, PaperKernel::VolumeLoop, t_vol * steps as f64);
+                let mut t_cpu = 0.0;
+                for kern in [PaperKernel::InterpQ, PaperKernel::Lift, PaperKernel::Rk] {
+                    let t = cpu.time(kern, order, k);
+                    breakdown.add(cpu.name, kern, t * steps as f64);
+                    t_cpu += t;
+                }
+                let intf = s.cpu_int_faces + s.mic_int_faces + s.pci_faces;
+                t_cpu += add_face_kernels(
+                    &mut breakdown, cpu, order, intf, s.bound_faces(), s.mpi_faces, steps,
+                ) / steps as f64;
+                // full state both ways, every step (the O(K (N+1)^3) cost)
+                let state = k * element_state_bytes(order);
+                let pci = cluster.node_model.pci.transfer_time(state, Direction::ToDevice)
+                    + cluster.node_model.pci.transfer_time(state, Direction::FromDevice);
+                per_node.push(NodeStep {
+                    // serialized: CPU waits for transfer + MIC volume
+                    cpu_compute: t_cpu + t_vol + pci,
+                    mic_compute: 0.0,
+                    pci: 0.0,
+                    mpi: cluster.network.exchange_time(s.mpi_faces, order),
+                });
+                node_counts.push((k, 0));
+            }
+        }
+        Scheme::Nested { mic_fraction } | Scheme::NestedOverlap { mic_fraction } => {
+            let overlap = matches!(scheme, Scheme::NestedOverlap { .. });
+            let frac = mic_fraction.unwrap_or_else(|| {
+                let k_node = mesh.len() / nodes;
+                let sol = crate::partition::solve_mic_fraction(
+                    &cluster.node_model,
+                    order,
+                    k_node,
+                );
+                sol.k_mic as f64 / k_node as f64
+            });
+            let np = nested_partition(mesh, &node_part, frac);
+            let st = partition_stats(mesh, &np);
+            let cpu = &cluster.node_model.cpu_vec;
+            let micd = &cluster.node_model.mic;
+            for nd in 0..nodes {
+                let s = &st.per_node[nd];
+                let t_cpu = add_volume_kernels(&mut breakdown, cpu, order, s.k_cpu, steps)
+                    + add_face_kernels(
+                        &mut breakdown, cpu, order, s.cpu_int_faces, s.bound_faces_cpu,
+                        s.mpi_faces + s.pci_faces, steps,
+                    );
+                let t_mic = add_volume_kernels(&mut breakdown, micd, order, s.k_mic, steps)
+                    + add_face_kernels(
+                        &mut breakdown, micd, order, s.mic_int_faces, s.bound_faces_mic,
+                        s.pci_faces, steps,
+                    );
+                let pci_full = cluster.node_model.pci.step_exchange_time(s.pci_faces, order);
+                // overlapped: the transfer hides under interior compute as
+                // long as it is shorter than the smaller device's interior
+                // work; the invocation latency cannot be hidden.
+                let pci = if overlap {
+                    let hideable = (t_cpu / steps as f64).min(t_mic / steps as f64) * 0.5;
+                    (pci_full - hideable).max(2.0 * cluster.node_model.pci.latency_s)
+                } else {
+                    pci_full
+                };
+                per_node.push(NodeStep {
+                    cpu_compute: t_cpu / steps as f64,
+                    mic_compute: t_mic / steps as f64,
+                    pci,
+                    mpi: cluster.network.exchange_time(s.mpi_faces, order),
+                });
+                node_counts.push((s.k_cpu, s.k_mic));
+            }
+        }
+    }
+
+    // ---- event-driven per-step schedule --------------------------------
+    let straggler = cluster.network.straggler_factor(nodes, hetero);
+    let mut wall = 0.0;
+    let mut pci_total = 0.0;
+    let mut mpi_total = 0.0;
+    let mut cpu_busy = 0.0;
+    let mut mic_busy = 0.0;
+    for _ in 0..steps {
+        let (step, pci_s, mpi_s) = simulate_one_step(&per_node);
+        wall += step * straggler;
+        pci_total += pci_s;
+        mpi_total += mpi_s;
+        let compute_span: f64 = per_node
+            .iter()
+            .map(|s| s.cpu_compute.max(s.mic_compute))
+            .fold(0.0, f64::max);
+        if compute_span > 0.0 {
+            cpu_busy += per_node.iter().map(|s| s.cpu_compute).sum::<f64>()
+                / (per_node.len() as f64 * compute_span);
+            mic_busy += per_node.iter().map(|s| s.mic_compute).sum::<f64>()
+                / (per_node.len() as f64 * compute_span);
+        }
+    }
+
+    SimReport {
+        scheme: scheme.name(),
+        nodes,
+        steps,
+        order,
+        elems: mesh.len(),
+        wall_s: wall,
+        breakdown,
+        node_counts,
+        pci_step_s: pci_total / steps as f64,
+        mpi_step_s: mpi_total / steps as f64,
+        cpu_busy_frac: cpu_busy / steps as f64,
+        mic_busy_frac: mic_busy / steps as f64,
+    }
+}
+
+/// Event-driven execution of one step: device compute in parallel per
+/// node, then PCI sync, then the network exchange; the step completes when
+/// every node is done (bulk-synchronous neighbor exchange).
+fn simulate_one_step(per_node: &[NodeStep]) -> (f64, f64, f64) {
+    let mut q = EventQueue::new();
+    let n = per_node.len();
+    let mut devices_pending: Vec<u8> = per_node
+        .iter()
+        .map(|s| if s.mic_compute > 0.0 { 2 } else { 1 })
+        .collect();
+    for (nd, s) in per_node.iter().enumerate() {
+        q.schedule(s.cpu_compute, EventKind::ComputeDone { node: nd, device: "cpu" });
+        if s.mic_compute > 0.0 {
+            q.schedule(s.mic_compute, EventKind::ComputeDone { node: nd, device: "mic" });
+        }
+    }
+    let mut remaining = n;
+    let mut max_pci = 0.0f64;
+    while let Some(ev) = q.next() {
+        match ev.kind {
+            EventKind::ComputeDone { node, .. } => {
+                devices_pending[node] -= 1;
+                if devices_pending[node] == 0 {
+                    q.schedule_after(per_node[node].pci, EventKind::PciDone { node });
+                    max_pci = max_pci.max(per_node[node].pci);
+                }
+            }
+            EventKind::PciDone { node } => {
+                q.schedule_after(per_node[node].mpi, EventKind::MpiDone { node });
+            }
+            EventKind::MpiDone { .. } => {
+                remaining -= 1;
+                if remaining == 0 {
+                    break;
+                }
+            }
+            EventKind::Marker(_) => {}
+        }
+    }
+    let step = q.now;
+    let mpi_max = per_node.iter().map(|s| s.mpi).fold(0.0, f64::max);
+    (step, max_pci, mpi_max)
+}
+
+fn add_volume_kernels(
+    breakdown: &mut KernelBreakdown,
+    dev: &DeviceModel,
+    order: usize,
+    k: usize,
+    steps: usize,
+) -> f64 {
+    let mut total = 0.0;
+    for kern in [
+        PaperKernel::VolumeLoop,
+        PaperKernel::InterpQ,
+        PaperKernel::Lift,
+        PaperKernel::Rk,
+    ] {
+        let t = dev.time(kern, order, k) * steps as f64;
+        breakdown.add(dev.name, kern, t);
+        total += t;
+    }
+    total
+}
+
+fn add_face_kernels(
+    breakdown: &mut KernelBreakdown,
+    dev: &DeviceModel,
+    order: usize,
+    int_faces: usize,
+    bound_faces: usize,
+    parallel_faces: usize,
+    steps: usize,
+) -> f64 {
+    let mut total = 0.0;
+    for (kern, count) in [
+        (PaperKernel::IntFlux, int_faces),
+        (PaperKernel::BoundFlux, bound_faces),
+        (PaperKernel::ParallelFlux, parallel_faces),
+    ] {
+        let t = dev.time(kern, order, count) * steps as f64;
+        breakdown.add(dev.name, kern, t);
+        total += t;
+    }
+    total
+}
+
+/// Per-rank stats for the baseline scheme; ranks `nd*rpn..(nd+1)*rpn`
+/// belong to node `nd`.
+struct RankStats {
+    k: usize,
+    int_faces: usize,
+    bound_faces: usize,
+    /// Faces against any other rank (intra- or inter-node).
+    cross_faces: usize,
+    /// Of those, faces whose neighbor rank lives on another node.
+    cross_node: usize,
+}
+
+fn rank_face_stats(mesh: &Mesh, ranks: &Partition, rpn: usize) -> Vec<RankStats> {
+    let mut out: Vec<RankStats> = (0..ranks.nparts)
+        .map(|_| RankStats { k: 0, int_faces: 0, bound_faces: 0, cross_faces: 0, cross_node: 0 })
+        .collect();
+    for (e, c) in mesh.conn.iter().enumerate() {
+        let r = ranks.assignment[e];
+        out[r].k += 1;
+        for &v in c {
+            if v < 0 {
+                out[r].bound_faces += 1;
+            } else {
+                let r2 = ranks.assignment[v as usize];
+                if r2 == r {
+                    if (v as usize) > e {
+                        out[r].int_faces += 1;
+                    }
+                } else {
+                    out[r].cross_faces += 1;
+                    if r2 / rpn != r / rpn {
+                        out[r].cross_node += 1;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::geometry::discontinuous_brick;
+
+    fn small_mesh() -> Mesh {
+        discontinuous_brick([8, 8, 8], [2.0, 1.0, 1.0])
+    }
+
+    #[test]
+    fn nested_beats_baseline_single_node() {
+        let c = Cluster::stampede(1);
+        let m = small_mesh();
+        let base = simulate(&c, &m, 7, 10, Scheme::BaselineMpi { ranks_per_node: 8 });
+        let nest = simulate(&c, &m, 7, 10, Scheme::Nested { mic_fraction: None });
+        let speedup = base.wall_s / nest.wall_s;
+        assert!(speedup > 3.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn nested_beats_task_offload() {
+        let c = Cluster::stampede(1);
+        let m = small_mesh();
+        let off = simulate(&c, &m, 7, 10, Scheme::TaskOffload);
+        let nest = simulate(&c, &m, 7, 10, Scheme::Nested { mic_fraction: None });
+        assert!(nest.wall_s < off.wall_s, "nested {} offload {}", nest.wall_s, off.wall_s);
+    }
+
+    #[test]
+    fn wall_time_linear_in_steps() {
+        let c = Cluster::stampede(1);
+        let m = small_mesh();
+        let t10 = simulate(&c, &m, 7, 10, Scheme::Nested { mic_fraction: None }).wall_s;
+        let t20 = simulate(&c, &m, 7, 20, Scheme::Nested { mic_fraction: None }).wall_s;
+        assert!((t20 / t10 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let c = Cluster::stampede(1);
+        let m = small_mesh();
+        let rep = simulate(&c, &m, 7, 5, Scheme::BaselineMpi { ranks_per_node: 8 });
+        let total: f64 = rep.breakdown.fractions().iter().map(|(_, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn volume_loop_dominates_baseline_profile() {
+        let c = Cluster::stampede(1);
+        let m = small_mesh();
+        let rep = simulate(&c, &m, 7, 5, Scheme::BaselineMpi { ranks_per_node: 8 });
+        let fracs = rep.breakdown.fractions();
+        assert_eq!(fracs[0].0, "volume_loop", "{fracs:?}");
+        assert!(fracs[0].1 > 0.4);
+    }
+
+    #[test]
+    fn zero_mic_fraction_equals_cpu_only() {
+        let c = Cluster::stampede(1);
+        let m = small_mesh();
+        let rep = simulate(&c, &m, 7, 5, Scheme::Nested { mic_fraction: Some(0.0) });
+        assert!(rep.node_counts.iter().all(|&(_, mic)| mic == 0));
+        assert_eq!(rep.pci_step_s, stampede_pci_floor());
+    }
+
+    fn stampede_pci_floor() -> f64 {
+        // zero faces still pay two latency hits in step_exchange_time
+        2.0 * crate::costmodel::calib::stampede_pci().latency_s
+    }
+
+    #[test]
+    fn utilization_high_for_nested() {
+        // needs a workload big enough that the interior-only constraint
+        // doesn't cap the MIC share (16^3: interior 2744 >> balanced need)
+        let c = Cluster::stampede(1);
+        let m = discontinuous_brick([16, 16, 16], [2.0, 1.0, 1.0]);
+        let rep = simulate(&c, &m, 7, 5, Scheme::Nested { mic_fraction: None });
+        assert!(rep.cpu_busy_frac > 0.85, "cpu busy {}", rep.cpu_busy_frac);
+        assert!(rep.mic_busy_frac > 0.85, "mic busy {}", rep.mic_busy_frac);
+    }
+}

@@ -1,0 +1,128 @@
+//! A minimal discrete-event queue.
+//!
+//! The per-step schedule of Fig 5.1 is a small static DAG, but modeling it
+//! through an explicit event queue keeps the engine extensible (overlapped
+//! PCI transfers, pipelined exchanges — the paper's future-work items) and
+//! makes device busy-intervals available for utilization accounting.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// What completes at a point in simulated time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A device finished its compute phase for the step.
+    ComputeDone { node: usize, device: &'static str },
+    /// A PCI transfer finished on a node.
+    PciDone { node: usize },
+    /// The inter-node exchange finished for a node.
+    MpiDone { node: usize },
+    /// Generic marker.
+    Marker(&'static str),
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub time: f64,
+    pub kind: EventKind,
+    /// Monotone sequence number: deterministic FIFO tie-breaking.
+    pub seq: u64,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, seq): reverse for BinaryHeap
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue with deterministic ordering.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    seq: u64,
+    pub now: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn schedule(&mut self, at: f64, kind: EventKind) {
+        debug_assert!(at >= self.now, "cannot schedule in the past");
+        self.heap.push(Event { time: at, kind, seq: self.seq });
+        self.seq += 1;
+    }
+
+    pub fn schedule_after(&mut self, delay: f64, kind: EventKind) {
+        self.schedule(self.now + delay, kind);
+    }
+
+    /// Pop the next event, advancing simulated time.
+    pub fn next(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?;
+        self.now = ev.time;
+        Some(ev)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, EventKind::Marker("c"));
+        q.schedule(1.0, EventKind::Marker("a"));
+        q.schedule(2.0, EventKind::Marker("b"));
+        let order: Vec<f64> = std::iter::from_fn(|| q.next().map(|e| e.time)).collect();
+        assert_eq!(order, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, EventKind::Marker("first"));
+        q.schedule(1.0, EventKind::Marker("second"));
+        assert_eq!(q.next().unwrap().kind, EventKind::Marker("first"));
+        assert_eq!(q.next().unwrap().kind, EventKind::Marker("second"));
+    }
+
+    #[test]
+    fn now_advances() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, EventKind::Marker("x"));
+        assert_eq!(q.now, 0.0);
+        q.next();
+        assert_eq!(q.now, 5.0);
+        q.schedule_after(2.0, EventKind::Marker("y"));
+        q.next();
+        assert_eq!(q.now, 7.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! Discrete-event simulator for heterogeneous clusters.
+//!
+//! Replaces the Stampede testbed (see DESIGN.md §Hardware substitution):
+//! virtual nodes with a CPU device, a MIC device and a PCI link, connected
+//! by an InfiniBand-like network, all clocked by the calibrated cost
+//! models. The engine executes the paper's per-timestep flow (Fig 5.1):
+//! host and offload processes compute concurrently, exchange shared faces
+//! once per step over PCI, then the hosts run the MPI neighbor exchange.
+//!
+//! Three execution schemes are modeled, matching the paper's comparisons:
+//! the pure-MPI baseline (8 scalar ranks/node), the task-offload strawman
+//! (§5.5's "common paradigm"), and the nested partitioning contribution.
+
+pub mod engine;
+pub mod events;
+pub mod topology;
+
+pub use engine::{simulate, KernelBreakdown, Scheme, SimReport};
+pub use events::{Event, EventKind, EventQueue};
+pub use topology::Cluster;

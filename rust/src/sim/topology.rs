@@ -1,0 +1,44 @@
+//! Virtual cluster topology.
+
+use crate::costmodel::{calib, NetworkModel, NodeModel};
+
+/// A simulated cluster: homogeneous nodes (the Stampede assumption) plus
+/// an interconnect model.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    pub nodes: usize,
+    pub node_model: NodeModel,
+    pub network: NetworkModel,
+}
+
+impl Cluster {
+    /// Stampede-calibrated cluster of `nodes` nodes.
+    pub fn stampede(nodes: usize) -> Self {
+        Cluster {
+            nodes,
+            node_model: calib::stampede_node(),
+            network: calib::stampede_node_network(),
+        }
+    }
+
+    /// Aggregate theoretical peak in GFLOPs (paper §6: 1173 GF/node).
+    pub fn peak_gflops(&self) -> f64 {
+        self.nodes as f64 * calib::NODE_PEAK_GFLOPS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stampede_peak_per_node() {
+        let c = Cluster::stampede(1);
+        assert!((c.peak_gflops() - 1173.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn peak_scales_with_nodes() {
+        assert_eq!(Cluster::stampede(64).peak_gflops(), 64.0 * Cluster::stampede(1).peak_gflops());
+    }
+}

@@ -1,0 +1,77 @@
+//! Analytic solutions for validation (mirrors python/compile/blocks.py).
+
+/// Acoustic standing wave on the unit cube with traction-free walls:
+/// p(x, t) = -amp cos(w t) S(x), S = sin(pi x) sin(pi y) sin(pi z),
+/// w = pi sqrt(3) c. Returns the 9 fields at (x, t) for material
+/// (rho, lam) with c^2 = lam / rho; pass `w` = pi sqrt(3) c.
+pub fn standing_wave(x: [f64; 3], t: f64, rho: f64, amp: f64, w: f64) -> [f64; 9] {
+    let pi = std::f64::consts::PI;
+    let (sx, cx) = ((pi * x[0]).sin(), (pi * x[0]).cos());
+    let (sy, cy) = ((pi * x[1]).sin(), (pi * x[1]).cos());
+    let (sz, cz) = ((pi * x[2]).sin(), (pi * x[2]).cos());
+    let b = amp / (rho * w * w);
+    let (ct, st) = ((w * t).cos(), (w * t).sin());
+    let pi2 = pi * pi;
+    // E = b cos(wt) Hess(S)
+    let e_diag = -pi2 * sx * sy * sz;
+    let e23 = pi2 * sx * cy * cz;
+    let e13 = pi2 * cx * sy * cz;
+    let e12 = pi2 * cx * cy * sz;
+    // v = -(amp / (rho w)) sin(wt) grad S
+    let gv = amp / (rho * w);
+    [
+        b * ct * e_diag,
+        b * ct * e_diag,
+        b * ct * e_diag,
+        b * ct * e23,
+        b * ct * e13,
+        b * ct * e12,
+        -gv * st * pi * cx * sy * sz,
+        -gv * st * pi * sx * cy * sz,
+        -gv * st * pi * sx * sy * cz,
+    ]
+}
+
+/// A smooth localized pressure pulse (gaussian), acoustic initial state at
+/// rest — the generic "interesting" IC for demos on arbitrary geometry.
+pub fn gaussian_pulse(x: [f64; 3], center: [f64; 3], width: f64, amp: f64, lam: f64) -> [f64; 9] {
+    let r2 = (x[0] - center[0]).powi(2) + (x[1] - center[1]).powi(2) + (x[2] - center[2]).powi(2);
+    let p = amp * (-r2 / (2.0 * width * width)).exp();
+    // isotropic strain with tr(E) = p / lam (pressure p = lam tr E)
+    let e = p / (3.0 * lam);
+    [e, e, e, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standing_wave_zero_velocity_at_t0() {
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        let q = standing_wave([0.3, 0.4, 0.6], 0.0, 1.0, 1.0, w);
+        assert_eq!(q[6], 0.0);
+        assert_eq!(q[7], 0.0);
+        assert_eq!(q[8], 0.0);
+    }
+
+    #[test]
+    fn standing_wave_periodicity() {
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        let t_period = 2.0 * std::f64::consts::PI / w;
+        let x = [0.23, 0.71, 0.52];
+        let q0 = standing_wave(x, 0.0, 1.0, 1.0, w);
+        let q1 = standing_wave(x, t_period, 1.0, 1.0, w);
+        for (a, b) in q0.iter().zip(&q1) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pulse_is_centered() {
+        let q_c = gaussian_pulse([0.5; 3], [0.5; 3], 0.1, 2.0, 1.0);
+        let q_o = gaussian_pulse([0.9; 3], [0.5; 3], 0.1, 2.0, 1.0);
+        assert!(q_c[0] > q_o[0]);
+        assert!((q_c[0] - 2.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,161 @@
+//! Legendre-Gauss-Lobatto basis, independent of the python implementation
+//! (python/compile/basis.py); the two are cross-checked in tests via
+//! hard-coded reference values and identities.
+
+/// Evaluate P_n(x) and P'_n(x) by the three-term recurrence.
+fn legendre_and_deriv(n: usize, x: f64) -> (f64, f64) {
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    let (mut p0, mut p1) = (1.0, x);
+    for k in 1..n {
+        let kf = k as f64;
+        let p2 = ((2.0 * kf + 1.0) * x * p1 - kf * p0) / (kf + 1.0);
+        p0 = p1;
+        p1 = p2;
+    }
+    let dp = if (x * x - 1.0).abs() < 1e-14 {
+        // endpoint limit: P'_N(+-1) = (+-1)^{N-1} N(N+1)/2
+        let s = if x > 0.0 { 1.0 } else { (-1.0f64).powi(n as i32 - 1) };
+        s * (n * (n + 1)) as f64 / 2.0
+    } else {
+        n as f64 * (x * p1 - p0) / (x * x - 1.0)
+    };
+    (p1, dp)
+}
+
+/// The LGL collocation basis of a given polynomial order.
+#[derive(Debug, Clone)]
+pub struct LglBasis {
+    pub order: usize,
+    /// Nodes on [-1, 1], ascending.
+    pub nodes: Vec<f64>,
+    /// Quadrature weights.
+    pub weights: Vec<f64>,
+    /// Differentiation matrix, row-major (M x M): D[i][j] = l'_j(x_i).
+    pub d: Vec<f64>,
+}
+
+impl LglBasis {
+    pub fn new(order: usize) -> Self {
+        assert!(order >= 1, "LGL needs order >= 1");
+        let n = order;
+        let m = n + 1;
+        // Newton from Chebyshev-Gauss-Lobatto guesses on the interior roots
+        // of P'_N; endpoints fixed at +-1.
+        let mut nodes = vec![0.0; m];
+        nodes[0] = -1.0;
+        nodes[n] = 1.0;
+        for i in 1..n {
+            let mut x = -(std::f64::consts::PI * i as f64 / n as f64).cos();
+            for _ in 0..100 {
+                let (p, dp) = legendre_and_deriv(n, x);
+                // Newton on g = P'_N with g' from the Legendre ODE
+                let d2p = (2.0 * x * dp - (n * (n + 1)) as f64 * p) / (1.0 - x * x);
+                let dx = dp / d2p;
+                x -= dx;
+                if dx.abs() < 1e-15 {
+                    break;
+                }
+            }
+            nodes[i] = x;
+        }
+        let weights: Vec<f64> = nodes
+            .iter()
+            .map(|&x| {
+                let (p, _) = legendre_and_deriv(n, x);
+                2.0 / ((n * (n + 1)) as f64 * p * p)
+            })
+            .collect();
+        // barycentric differentiation matrix
+        let mut c = vec![1.0f64; m];
+        for j in 0..m {
+            for k in 0..m {
+                if k != j {
+                    c[j] *= nodes[j] - nodes[k];
+                }
+            }
+        }
+        let mut d = vec![0.0f64; m * m];
+        for i in 0..m {
+            let mut rowsum = 0.0;
+            for j in 0..m {
+                if i != j {
+                    let v = (c[i] / c[j]) / (nodes[i] - nodes[j]);
+                    d[i * m + j] = v;
+                    rowsum += v;
+                }
+            }
+            d[i * m + i] = -rowsum; // negative-sum trick
+        }
+        LglBasis { order, nodes, weights, d }
+    }
+
+    pub fn m(&self) -> usize {
+        self.order + 1
+    }
+
+    /// Endpoint weight w_0 (= w_N), the lift denominator.
+    pub fn w0(&self) -> f64 {
+        self.weights[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_two() {
+        for order in 1..=9 {
+            let b = LglBasis::new(order);
+            let s: f64 = b.weights.iter().sum();
+            assert!((s - 2.0).abs() < 1e-12, "order {order}: {s}");
+        }
+    }
+
+    #[test]
+    fn diff_exact_on_monomials() {
+        for order in 1..=7 {
+            let b = LglBasis::new(order);
+            let m = b.m();
+            for p in 0..=order {
+                for i in 0..m {
+                    let mut du = 0.0;
+                    for j in 0..m {
+                        du += b.d[i * m + j] * b.nodes[j].powi(p as i32);
+                    }
+                    let exact = if p == 0 {
+                        0.0
+                    } else {
+                        p as f64 * b.nodes[i].powi(p as i32 - 1)
+                    };
+                    assert!((du - exact).abs() < 1e-8, "order {order} p {p} i {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn known_order2_values() {
+        let b = LglBasis::new(2);
+        assert!((b.nodes[1]).abs() < 1e-14);
+        assert!((b.weights[0] - 1.0 / 3.0).abs() < 1e-14);
+        assert!((b.weights[1] - 4.0 / 3.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn known_order3_interior_nodes() {
+        let b = LglBasis::new(3);
+        let x = (1.0f64 / 5.0).sqrt();
+        assert!((b.nodes[1] + x).abs() < 1e-12);
+        assert!((b.nodes[2] - x).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matches_python_basis_order7_w0() {
+        // python: lgl_weights(7)[0] = 2/(7*8*P7(-1)^2) = 2/56
+        let b = LglBasis::new(7);
+        assert!((b.w0() - 2.0 / 56.0).abs() < 1e-13);
+    }
+}

@@ -1,0 +1,258 @@
+//! Multi-block time-stepping driver.
+//!
+//! Owns the per-owner [`BlockState`]s and an [`ExchangePlan`]; advances the
+//! coupled system stage by stage: every block computes one LSRK stage
+//! (through whatever [`StageBackend`] it was given — pure rust or a PJRT
+//! executable), then halo traces are exchanged so the next stage sees
+//! same-stage neighbor data. This is the numerically-exact schedule; the
+//! *simulated* once-per-step PCI accounting of the paper lives in
+//! [`crate::sim`], not here.
+
+use std::collections::HashMap;
+
+use super::basis::LglBasis;
+use super::exchange::apply_exchange;
+use super::reference::{stage as ref_stage, KernelTimes, RefScratch};
+use super::rk::{LSRK_A, LSRK_B, N_STAGES};
+use super::state::BlockState;
+use crate::mesh::ExchangePlan;
+use crate::Result;
+
+/// Anything that can advance one block by one LSRK stage.
+pub trait StageBackend {
+    fn stage(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> Result<KernelTimes>;
+    fn name(&self) -> &'static str;
+}
+
+/// The pure-rust reference backend (scalar CPU kernels).
+pub struct RustRefBackend {
+    basis: LglBasis,
+    scratch: HashMap<(usize, usize), RefScratch>,
+}
+
+impl RustRefBackend {
+    pub fn new(order: usize) -> Self {
+        RustRefBackend { basis: LglBasis::new(order), scratch: HashMap::new() }
+    }
+}
+
+impl StageBackend for RustRefBackend {
+    fn stage(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> Result<KernelTimes> {
+        let key = (st.k_pad, st.m);
+        let scratch = self
+            .scratch
+            .entry(key)
+            .or_insert_with(|| RefScratch::new(st));
+        Ok(ref_stage(st, &self.basis, scratch, dt, a, b))
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-ref"
+    }
+}
+
+/// The coupled multi-block system.
+pub struct Driver {
+    pub blocks: Vec<BlockState>,
+    pub plan: ExchangePlan,
+    pub backends: Vec<Box<dyn StageBackend>>,
+    pub basis: LglBasis,
+    /// Accumulated per-kernel wall times per block.
+    pub times: Vec<KernelTimes>,
+    pub steps_taken: usize,
+}
+
+impl Driver {
+    /// One backend per block (blocks and backends are index-aligned).
+    pub fn new(
+        blocks: Vec<BlockState>,
+        plan: ExchangePlan,
+        backends: Vec<Box<dyn StageBackend>>,
+        order: usize,
+    ) -> Self {
+        assert_eq!(blocks.len(), backends.len());
+        let n = blocks.len();
+        Driver {
+            blocks,
+            plan,
+            backends,
+            basis: LglBasis::new(order),
+            times: vec![KernelTimes::default(); n],
+            steps_taken: 0,
+        }
+    }
+
+    /// Prime the halos from current traces (call once after ICs).
+    pub fn prime(&mut self) {
+        for b in self.blocks.iter_mut() {
+            b.refresh_traces();
+        }
+        apply_exchange(&mut self.blocks, &self.plan);
+    }
+
+    /// Advance one full LSRK timestep.
+    pub fn step(&mut self, dt: f64) -> Result<()> {
+        for s in 0..N_STAGES {
+            let (a, b) = (LSRK_A[s] as f32, LSRK_B[s] as f32);
+            for (i, blk) in self.blocks.iter_mut().enumerate() {
+                let t = self.backends[i].stage(blk, dt as f32, a, b)?;
+                acc(&mut self.times[i], &t);
+            }
+            apply_exchange(&mut self.blocks, &self.plan);
+        }
+        self.steps_taken += 1;
+        Ok(())
+    }
+
+    /// Advance `n` steps.
+    pub fn run(&mut self, dt: f64, n: usize) -> Result<()> {
+        for _ in 0..n {
+            self.step(dt)?;
+        }
+        Ok(())
+    }
+
+    /// Total energy over all blocks.
+    pub fn energy(&self) -> f64 {
+        self.blocks.iter().map(|b| b.energy(&self.basis)).sum()
+    }
+
+    /// Global relative L2 error against an exact solution.
+    pub fn rel_l2_error(&self, exact: impl Fn([f64; 3]) -> [f64; 9] + Copy) -> f64 {
+        // combine per-block num/den via errors weighted by dof counts:
+        // recompute directly for exactness
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for b in &self.blocks {
+            let e = b.rel_l2_error(&self.basis, exact);
+            // rel = sqrt(num/den); recover num, den via den from exact norm
+            let d = block_exact_norm2(b, &self.basis, exact);
+            num += e * e * d;
+            den += d;
+        }
+        (num / den.max(1e-300)).sqrt()
+    }
+
+    /// Summed kernel-time breakdown across blocks.
+    pub fn total_times(&self) -> KernelTimes {
+        let mut out = KernelTimes::default();
+        for t in &self.times {
+            acc(&mut out, t);
+        }
+        out
+    }
+}
+
+fn acc(into: &mut KernelTimes, from: &KernelTimes) {
+    into.volume_loop += from.volume_loop;
+    into.int_flux += from.int_flux;
+    into.interp_q += from.interp_q;
+    into.lift += from.lift;
+    into.rk += from.rk;
+    into.bound_flux += from.bound_flux;
+    into.parallel_flux += from.parallel_flux;
+}
+
+fn block_exact_norm2(
+    b: &BlockState,
+    basis: &LglBasis,
+    exact: impl Fn([f64; 3]) -> [f64; 9],
+) -> f64 {
+    let m = b.m;
+    let vol = m * m * m;
+    let mut den = 0.0;
+    for e in 0..b.k_real {
+        let coords = b.node_coords(e, basis);
+        for &x in coords.iter().take(vol) {
+            for v in exact(x) {
+                den += v * v;
+            }
+        }
+    }
+    den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+    use crate::solver::analytic::standing_wave;
+
+    /// The decisive split-consistency test: a 2-block run must match the
+    /// monolithic single-block run to f32 roundoff, which proves the halo
+    /// plumbing end to end.
+    #[test]
+    fn split_matches_monolithic() {
+        let order = 2;
+        let n = 2;
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        let dt = 2e-3;
+
+        let run = |owners: Vec<usize>, n_owners: usize| -> Vec<f32> {
+            let mesh = unit_cube_geometry(n);
+            let (lblocks, plan) = build_local_blocks(&mesh, &owners, n_owners);
+            let basis = LglBasis::new(order);
+            let mut blocks: Vec<BlockState> = lblocks
+                .iter()
+                .map(|b| BlockState::from_local_block(b, order, b.len().max(1), b.halo_len.max(1)))
+                .collect();
+            for b in blocks.iter_mut() {
+                b.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+            }
+            let backends: Vec<Box<dyn StageBackend>> = (0..n_owners)
+                .map(|_| Box::new(RustRefBackend::new(order)) as Box<dyn StageBackend>)
+                .collect();
+            let mut drv = Driver::new(blocks, plan, backends, order);
+            drv.prime();
+            drv.run(dt, 5).unwrap();
+            // reassemble global q in owner-then-local order keyed by global id
+            let mut out: Vec<(usize, Vec<f32>)> = Vec::new();
+            for (bi, lb) in lblocks.iter().enumerate() {
+                let st = &drv.blocks[bi];
+                let vol = st.m * st.m * st.m;
+                for (li, &g) in lb.global_ids.iter().enumerate() {
+                    out.push((g, st.q[li * 9 * vol..(li + 1) * 9 * vol].to_vec()));
+                }
+            }
+            out.sort_by_key(|x| x.0);
+            out.into_iter().flat_map(|x| x.1).collect()
+        };
+
+        let mono = run(vec![0usize; 8], 1);
+        let split = run((0..8).map(|e| e % 2).collect(), 2);
+        assert_eq!(mono.len(), split.len());
+        let max_diff = mono
+            .iter()
+            .zip(&split)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 5e-6, "split vs monolithic diff {max_diff}");
+    }
+
+    #[test]
+    fn energy_decays_across_blocks() {
+        let order = 2;
+        let mesh = unit_cube_geometry(2);
+        let owners: Vec<usize> = (0..8).map(|e| e / 4).collect();
+        let (lblocks, plan) = build_local_blocks(&mesh, &owners, 2);
+        let basis = LglBasis::new(order);
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        let mut blocks: Vec<BlockState> = lblocks
+            .iter()
+            .map(|b| BlockState::from_local_block(b, order, b.len(), b.halo_len.max(1)))
+            .collect();
+        for b in blocks.iter_mut() {
+            b.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+        }
+        let backends: Vec<Box<dyn StageBackend>> = (0..2)
+            .map(|_| Box::new(RustRefBackend::new(order)) as Box<dyn StageBackend>)
+            .collect();
+        let mut drv = Driver::new(blocks, plan, backends, order);
+        drv.prime();
+        let e0 = drv.energy();
+        drv.run(1e-3, 20).unwrap();
+        let e1 = drv.energy();
+        assert!(e1 <= e0 * (1.0 + 1e-6), "{e0} -> {e1}");
+        assert!(e1 > 0.9 * e0);
+    }
+}

@@ -1,0 +1,24 @@
+//! The DGSEM elastic-acoustic solver substrate on the rust side.
+//!
+//! The production compute path executes the AOT-compiled L2 stage artifact
+//! through PJRT ([`crate::runtime`]); this module provides everything
+//! around it — block state in the artifact's exact memory layout, the LGL
+//! basis (independent implementation, cross-checked against python in
+//! tests), halo exchange, analytic solutions and energy/error norms — plus
+//! a pure-rust **reference backend** implementing the same stage math,
+//! used (a) to validate the PJRT path end to end, (b) as the
+//! scalar-CPU-kernel stand-in when profiling the paper's baseline on this
+//! machine.
+
+pub mod analytic;
+pub mod basis;
+pub mod driver;
+pub mod exchange;
+pub mod reference;
+pub mod rk;
+pub mod state;
+
+pub use basis::LglBasis;
+pub use driver::{Driver, StageBackend};
+pub use rk::{LSRK_A, LSRK_B, N_STAGES};
+pub use state::BlockState;

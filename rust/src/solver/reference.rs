@@ -1,0 +1,475 @@
+//! Pure-rust reference implementation of the DGSEM stage.
+//!
+//! Math-identical to python/compile/model.py (same strong-form volume
+//! term, exact Riemann fluxes, mirror BC, lift scaling and LSRK update),
+//! written as straightforward scalar loops. Three roles:
+//!
+//! 1. end-to-end oracle for the PJRT artifact path (rust/tests),
+//! 2. the "scalar CPU kernel" when profiling the paper's baseline on this
+//!    machine (coordinator::profile) — its per-kernel timer split mirrors
+//!    Fig 4.1's kernel taxonomy,
+//! 3. a fallback backend when artifacts are absent.
+
+use std::time::Instant;
+
+use super::basis::LglBasis;
+use super::state::{BlockState, NFIELDS};
+
+/// Voigt order: E11 E22 E33 E23 E13 E12 | v1 v2 v3.
+/// Stress column a (traction for normal e_a) as Voigt indices.
+const S_COL: [[usize; 3]; 3] = [[0, 5, 4], [5, 1, 3], [4, 3, 2]];
+/// Voigt slot of the symmetric pair {i, j}, i != j.
+const VOIGT_PAIR: [[usize; 3]; 3] = [[usize::MAX, 5, 4], [5, usize::MAX, 3], [4, 3, usize::MAX]];
+
+/// Wall-clock per paper kernel, accumulated across calls (Fig 4.1 taxonomy).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelTimes {
+    pub volume_loop: f64,
+    pub int_flux: f64,
+    pub interp_q: f64,
+    pub lift: f64,
+    pub rk: f64,
+    pub bound_flux: f64,
+    pub parallel_flux: f64,
+}
+
+impl KernelTimes {
+    pub fn total(&self) -> f64 {
+        self.volume_loop + self.int_flux + self.interp_q + self.lift + self.rk
+            + self.bound_flux + self.parallel_flux
+    }
+
+    pub fn rows(&self) -> [(&'static str, f64); 7] {
+        [
+            ("volume_loop", self.volume_loop),
+            ("int_flux", self.int_flux),
+            ("interp_q", self.interp_q),
+            ("lift", self.lift),
+            ("rk", self.rk),
+            ("bound_flux", self.bound_flux),
+            ("parallel_flux", self.parallel_flux),
+        ]
+    }
+}
+
+/// Scratch buffers reused across stages (no allocation on the hot path).
+pub struct RefScratch {
+    dq: Vec<f32>,
+    stress: Vec<f32>,
+    tr_p: Vec<f32>,
+    flux: Vec<f32>,
+}
+
+impl RefScratch {
+    pub fn new(st: &BlockState) -> Self {
+        let m = st.m;
+        let vol = m * m * m;
+        RefScratch {
+            dq: vec![0.0; st.k_pad * NFIELDS * vol],
+            stress: vec![0.0; 6 * vol],
+            tr_p: vec![0.0; NFIELDS * m * m],
+            flux: vec![0.0; NFIELDS * m * m],
+        }
+    }
+}
+
+/// One LSRK stage: res <- a res + dt rhs(q); q <- q + b res; refresh traces.
+/// Returns per-kernel wall times for this call.
+pub fn stage(
+    st: &mut BlockState,
+    basis: &LglBasis,
+    scratch: &mut RefScratch,
+    dt: f32,
+    a: f32,
+    b: f32,
+) -> KernelTimes {
+    let mut times = KernelTimes::default();
+    rhs(st, basis, scratch, &mut times);
+
+    // ---- rk update (low-storage) ---------------------------------------
+    let t0 = Instant::now();
+    let m = st.m;
+    let vol = m * m * m;
+    let live = st.k_real * NFIELDS * vol;
+    for (r, d) in st.res[..live].iter_mut().zip(&scratch.dq[..live]) {
+        *r = a * *r + dt * *d;
+    }
+    for (qv, r) in st.q[..live].iter_mut().zip(&st.res[..live]) {
+        *qv += b * *r;
+    }
+    times.rk += t0.elapsed().as_secs_f64();
+
+    // ---- interp_q: refresh face traces of the updated state ------------
+    let t0 = Instant::now();
+    st.refresh_traces();
+    times.interp_q += t0.elapsed().as_secs_f64();
+    times
+}
+
+/// dq/dt into scratch.dq (real elements only; padding untouched).
+fn rhs(st: &BlockState, basis: &LglBasis, scratch: &mut RefScratch, times: &mut KernelTimes) {
+    let m = st.m;
+    let vol = m * m * m;
+    let face = m * m;
+    let d = &basis.d;
+    let w0 = basis.w0() as f32;
+
+    for e in 0..st.k_real {
+        let qb = e * NFIELDS * vol;
+        let rho = st.mats[e * 3];
+        let lam = st.mats[e * 3 + 1];
+        let mu = st.mats[e * 3 + 2];
+        let he = [st.h[e * 3], st.h[e * 3 + 1], st.h[e * 3 + 2]];
+        let dq = &mut scratch.dq[qb..qb + NFIELDS * vol];
+        dq.iter_mut().for_each(|v| *v = 0.0);
+
+        // ---- volume_loop: stress + tensor-product derivatives ----------
+        let t0 = Instant::now();
+        let q = &st.q[qb..qb + NFIELDS * vol];
+        // pointwise stress (Voigt)
+        for n in 0..vol {
+            let tr = q[n] + q[vol + n] + q[2 * vol + n];
+            scratch.stress[n] = lam * tr + 2.0 * mu * q[n];
+            scratch.stress[vol + n] = lam * tr + 2.0 * mu * q[vol + n];
+            scratch.stress[2 * vol + n] = lam * tr + 2.0 * mu * q[2 * vol + n];
+            scratch.stress[3 * vol + n] = 2.0 * mu * q[3 * vol + n];
+            scratch.stress[4 * vol + n] = 2.0 * mu * q[4 * vol + n];
+            scratch.stress[5 * vol + n] = 2.0 * mu * q[5 * vol + n];
+        }
+        // derivative of field `src` along `axis`, accumulated into
+        // dq[dst] with scale; axis strides: 0 -> m*m, 1 -> m, 2 -> 1
+        let stride = [face, m, 1usize];
+        let mut deriv_acc = |src: &[f32], axis: usize, dst: usize, scale: f32| {
+            let sa = stride[axis];
+            for i in 0..m {
+                for j in 0..m {
+                    for l in 0..m {
+                        let idx = [i, j, l];
+                        let n = i * face + j * m + l;
+                        let along = idx[axis];
+                        let base = n - along * sa;
+                        let mut acc = 0.0f32;
+                        for t in 0..m {
+                            acc += (d[along * m + t] as f32) * src[base + t * sa];
+                        }
+                        dq[dst * vol + n] += scale * acc;
+                    }
+                }
+            }
+        };
+        let sc = [2.0 / he[0], 2.0 / he[1], 2.0 / he[2]];
+        // strain eq: dE = sym(grad v); v fields are q[6..9]
+        let (v1, v2, v3) = (&q[6 * vol..7 * vol], &q[7 * vol..8 * vol], &q[8 * vol..9 * vol]);
+        deriv_acc(v1, 0, 0, sc[0]); // E11 = d v1 / dx
+        deriv_acc(v2, 1, 1, sc[1]); // E22
+        deriv_acc(v3, 2, 2, sc[2]); // E33
+        deriv_acc(v3, 1, 3, 0.5 * sc[1]); // E23 = (dv3/dy + dv2/dz)/2
+        deriv_acc(v2, 2, 3, 0.5 * sc[2]);
+        deriv_acc(v3, 0, 4, 0.5 * sc[0]); // E13
+        deriv_acc(v1, 2, 4, 0.5 * sc[2]);
+        deriv_acc(v2, 0, 5, 0.5 * sc[0]); // E12
+        deriv_acc(v1, 1, 5, 0.5 * sc[1]);
+        // velocity eq: rho dv_i = sum_a dS_ia/dx_a
+        for i in 0..3 {
+            for axis in 0..3 {
+                let sv = S_COL[axis][i];
+                let stress_f = &scratch.stress[sv * vol..(sv + 1) * vol];
+                deriv_acc(stress_f, axis, 6 + i, sc[axis] / rho);
+            }
+        }
+        times.volume_loop += t0.elapsed().as_secs_f64();
+
+        // ---- face terms -------------------------------------------------
+        for f in 0..6 {
+            let axis = f / 2;
+            let sign = if f % 2 == 0 { -1.0f32 } else { 1.0 };
+            let cf = st.conn[e * 6 + f];
+            let tr_m = st.trace_slice(e, f);
+            // exterior trace + material
+            let (matp, timer): ([f32; 3], &mut f64) = match cf {
+                c if c >= 0 => {
+                    let nb = c as usize;
+                    let src = st.trace_slice(nb, f ^ 1);
+                    scratch.tr_p[..NFIELDS * face].copy_from_slice(src);
+                    (
+                        [st.mats[nb * 3], st.mats[nb * 3 + 1], st.mats[nb * 3 + 2]],
+                        &mut times.int_flux,
+                    )
+                }
+                -1 => {
+                    let slot = st.halo_idx[e * 6 + f] as usize;
+                    let sz = NFIELDS * face;
+                    scratch.tr_p[..sz].copy_from_slice(&st.halo[slot * sz..(slot + 1) * sz]);
+                    (
+                        [
+                            st.halo_mats[slot * 3],
+                            st.halo_mats[slot * 3 + 1],
+                            st.halo_mats[slot * 3 + 2],
+                        ],
+                        &mut times.parallel_flux,
+                    )
+                }
+                _ => {
+                    // mirror: (-E, v), same material
+                    for fld in 0..6 {
+                        for n in 0..face {
+                            scratch.tr_p[fld * face + n] = -tr_m[fld * face + n];
+                        }
+                    }
+                    for fld in 6..9 {
+                        for n in 0..face {
+                            scratch.tr_p[fld * face + n] = tr_m[fld * face + n];
+                        }
+                    }
+                    ([rho, lam, mu], &mut times.bound_flux)
+                }
+            };
+            let t0 = Instant::now();
+            riemann_face(
+                tr_m,
+                &scratch.tr_p,
+                [rho, lam, mu],
+                matp,
+                axis,
+                sign,
+                face,
+                &mut scratch.flux,
+            );
+            *timer += t0.elapsed().as_secs_f64();
+
+            // ---- lift: subtract at the face node layer -----------------
+            let t0 = Instant::now();
+            let lift = 2.0 / (he[axis] * w0);
+            let layer = if sign < 0.0 { 0 } else { m - 1 };
+            for fld in 0..NFIELDS {
+                let scale = if fld >= 6 { lift / rho } else { lift };
+                for fa in 0..m {
+                    for fb in 0..m {
+                        let n = node_on_face(axis, layer, fa, fb, m);
+                        dq[fld * vol + n] -= scale * scratch.flux[fld * face + fa * m + fb];
+                    }
+                }
+            }
+            times.lift += t0.elapsed().as_secs_f64();
+        }
+    }
+}
+
+/// Volume node index for face-layer coordinates: the face plane fixes
+/// `axis` at `layer`; (a, b) run over the remaining axes in order.
+#[inline]
+fn node_on_face(axis: usize, layer: usize, a: usize, b: usize, m: usize) -> usize {
+    match axis {
+        0 => layer * m * m + a * m + b,
+        1 => a * m * m + layer * m + b,
+        _ => a * m * m + b * m + layer,
+    }
+}
+
+/// Exact elastic-acoustic Riemann flux difference over one face
+/// (math-identical to kernels/ref.py::riemann_ref; see its docstring for
+/// the conventions). `out` rows 6..8 are NOT divided by rho^- (the lift
+/// applies Q^{-1}).
+#[allow(clippy::too_many_arguments)]
+pub fn riemann_face(
+    tr_m: &[f32],
+    tr_p: &[f32],
+    matm: [f32; 3],
+    matp: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) {
+    let (rho_m, lam_m, mu_m) = (matm[0], matm[1], matm[2]);
+    let (rho_p, lam_p, mu_p) = (matp[0], matp[1], matp[2]);
+    let cp_m = ((lam_m + 2.0 * mu_m) / rho_m).sqrt();
+    let cs_m = (mu_m / rho_m).sqrt();
+    let cp_p = ((lam_p + 2.0 * mu_p) / rho_p).sqrt();
+    let cs_p = (mu_p / rho_p).sqrt();
+    let (zp_m, zs_m) = (rho_m * cp_m, rho_m * cs_m);
+    let (zp_p, zs_p) = (rho_p * cp_p, rho_p * cs_p);
+    let k0 = 1.0 / (zp_m + zp_p);
+    let zs_sum = zs_m + zs_p;
+    let k1 = if mu_m > 0.0 && zs_sum > 0.0 { 1.0 / zs_sum } else { 0.0 };
+
+    for n in 0..face {
+        let q_m = |f: usize| tr_m[f * face + n];
+        let q_p = |f: usize| tr_p[f * face + n];
+        // tractions t_i = sign * S[i, axis]
+        let tr_e_m = q_m(0) + q_m(1) + q_m(2);
+        let tr_e_p = q_p(0) + q_p(1) + q_p(2);
+        let s_m = |i: usize| {
+            let sv = S_COL[axis][i];
+            if sv < 3 {
+                lam_m * tr_e_m + 2.0 * mu_m * q_m(sv)
+            } else {
+                2.0 * mu_m * q_m(sv)
+            }
+        };
+        let s_p = |i: usize| {
+            let sv = S_COL[axis][i];
+            if sv < 3 {
+                lam_p * tr_e_p + 2.0 * mu_p * q_p(sv)
+            } else {
+                2.0 * mu_p * q_p(sv)
+            }
+        };
+        let t_jump = [
+            sign * (s_m(0) - s_p(0)),
+            sign * (s_m(1) - s_p(1)),
+            sign * (s_m(2) - s_p(2)),
+        ];
+        let v_jump = [q_m(6) - q_p(6), q_m(7) - q_p(7), q_m(8) - q_p(8)];
+        let tn = sign * t_jump[axis];
+        let vn = sign * v_jump[axis];
+        // tangential parts: a_tan = a - (n.a) n with n = sign * e_axis
+        let mut t_tan = t_jump;
+        let mut v_tan = v_jump;
+        t_tan[axis] = t_jump[axis] - tn * sign;
+        v_tan[axis] = v_jump[axis] - vn * sign;
+
+        let phi_p = k0 * tn + k0 * zp_p * vn;
+
+        // strain rows
+        for fld in 0..6 {
+            out[fld * face + n] = 0.0;
+        }
+        out[axis * face + n] = phi_p;
+        for j in 0..3 {
+            if j == axis {
+                continue;
+            }
+            let tang = k1 * t_tan[j] + k1 * zs_p * v_tan[j];
+            let vi = VOIGT_PAIR[axis][j];
+            out[vi * face + n] += 0.5 * sign * tang;
+        }
+        // velocity rows
+        for i in 0..3 {
+            let mut v = zs_m * (k1 * t_tan[i] + k1 * zs_p * v_tan[i]);
+            if i == axis {
+                v += sign * phi_p * zp_m;
+            }
+            out[(6 + i) * face + n] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+    use crate::solver::rk::{LSRK_A, LSRK_B, N_STAGES};
+
+    fn state(order: usize, n: usize) -> BlockState {
+        let mesh = unit_cube_geometry(n);
+        let owners = vec![0usize; mesh.len()];
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 1);
+        let k = blocks[0].len();
+        BlockState::from_local_block(&blocks[0], order, k, 8)
+    }
+
+    #[test]
+    fn zero_state_stays_zero() {
+        let basis = LglBasis::new(2);
+        let mut st = state(2, 2);
+        let mut scratch = RefScratch::new(&st);
+        stage(&mut st, &basis, &mut scratch, 1e-3, 0.0, 1.0);
+        assert!(st.q.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn riemann_zero_jump_zero_flux() {
+        let face = 9;
+        let tr: Vec<f32> = (0..9 * face).map(|i| (i as f32) * 0.1).collect();
+        let mut out = vec![0.0f32; 9 * face];
+        riemann_face(&tr, &tr, [1.0, 2.0, 0.5], [1.0, 2.0, 0.5], 1, -1.0, face, &mut out);
+        assert!(out.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn riemann_1d_acoustic_characteristic() {
+        // same scenario as python test_kernels.py::test_riemann_1d_...
+        let face = 4;
+        let mut tr_m = vec![0.0f32; 9 * face];
+        let tr_p = vec![0.0f32; 9 * face];
+        for n in 0..face {
+            tr_m[n] = 1.0; // E11 = 1
+            tr_m[6 * face + n] = 0.5; // v1 = 0.5
+        }
+        let mats = [1.0, 1.0, 0.0];
+        let mut out = vec![0.0f32; 9 * face];
+        riemann_face(&tr_m, &tr_p, mats, mats, 0, 1.0, face, &mut out);
+        let phi = (1.0 + 0.5) / 2.0;
+        for n in 0..face {
+            assert!((out[n] - phi).abs() < 1e-6); // E11 row
+            assert!((out[6 * face + n] - phi).abs() < 1e-6); // v1 row
+            assert!(out[face + n].abs() < 1e-7); // E22 row untouched
+        }
+    }
+
+    #[test]
+    fn standing_wave_energy_decays_slowly() {
+        let order = 3;
+        let basis = LglBasis::new(order);
+        let mut st = state(order, 2);
+        let pi = std::f64::consts::PI;
+        let w = pi * 3f64.sqrt();
+        st.set_initial_condition(&basis, |x| {
+            crate::solver::analytic::standing_wave(x, 0.0, 1.0, 1.0, w)
+        });
+        let mut scratch = RefScratch::new(&st);
+        let e0 = st.energy(&basis);
+        let dt = 1e-3f32;
+        for _ in 0..50 {
+            for s in 0..N_STAGES {
+                stage(&mut st, &basis, &mut scratch, dt, LSRK_A[s] as f32, LSRK_B[s] as f32);
+            }
+        }
+        let e1 = st.energy(&basis);
+        assert!(e1 <= e0 * (1.0 + 1e-5), "energy must not grow: {e0} -> {e1}");
+        assert!(e1 >= 0.995 * e0, "resolved mode barely dissipates: {e0} -> {e1}");
+    }
+
+    #[test]
+    fn standing_wave_converges_with_order() {
+        let mut errs = Vec::new();
+        for order in [2usize, 4] {
+            let basis = LglBasis::new(order);
+            let mut st = state(order, 2);
+            let pi = std::f64::consts::PI;
+            let w = pi * 3f64.sqrt();
+            st.set_initial_condition(&basis, |x| {
+                crate::solver::analytic::standing_wave(x, 0.0, 1.0, 1.0, w)
+            });
+            let mut scratch = RefScratch::new(&st);
+            let t_end = 0.2f64;
+            let dt = 0.25 * 0.5 / (1.0 * (order * order + 1) as f64);
+            let steps = (t_end / dt).ceil() as usize;
+            let dt = (t_end / steps as f64) as f32;
+            for _ in 0..steps {
+                for s in 0..N_STAGES {
+                    stage(&mut st, &basis, &mut scratch, dt, LSRK_A[s] as f32, LSRK_B[s] as f32);
+                }
+            }
+            let err = st.rel_l2_error(&basis, |x| {
+                crate::solver::analytic::standing_wave(x, t_end, 1.0, 1.0, w)
+            });
+            errs.push(err);
+        }
+        assert!(errs[1] < 0.15 * errs[0], "spectral convergence: {errs:?}");
+        assert!(errs[1] < 5e-3, "{errs:?}");
+    }
+
+    #[test]
+    fn kernel_times_accumulate() {
+        let basis = LglBasis::new(2);
+        let mut st = state(2, 2);
+        st.set_initial_condition(&basis, |x| [x[0], 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        let mut scratch = RefScratch::new(&st);
+        let t = stage(&mut st, &basis, &mut scratch, 1e-3, 0.0, 1.0);
+        assert!(t.volume_loop > 0.0);
+        assert!(t.bound_flux > 0.0);
+        assert!(t.total() > 0.0);
+    }
+}

@@ -1,0 +1,63 @@
+//! Low-storage 5-stage 4th-order Runge-Kutta (Carpenter & Kennedy 1994),
+//! the integrator used by dgae. Must match python/compile/model.py (the
+//! tableau also ships in artifacts/manifest.json; the runtime asserts
+//! agreement at load time).
+
+pub const N_STAGES: usize = 5;
+
+pub const LSRK_A: [f64; N_STAGES] = [
+    0.0,
+    -567301805773.0 / 1357537059087.0,
+    -2404267990393.0 / 2016746695238.0,
+    -3550918686646.0 / 2091501179385.0,
+    -1275806237668.0 / 842570457699.0,
+];
+
+pub const LSRK_B: [f64; N_STAGES] = [
+    1432997174477.0 / 9575080441755.0,
+    5161836677717.0 / 13612068292357.0,
+    1720146321549.0 / 2090206949498.0,
+    3134564353537.0 / 4481467310338.0,
+    2277821191437.0 / 14882151754819.0,
+];
+
+/// CFL-limited timestep for order `n`, mesh size `h_min`, max wave speed.
+pub fn stable_dt(cfl: f64, h_min: f64, c_max: f64, order: usize) -> f64 {
+    cfl * h_min / (c_max * (order * order + 1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_order_consistency() {
+        // integrating dq/dt = 1 over dt = 1 must give exactly 1
+        let (mut q, mut r) = (0.0f64, 0.0f64);
+        for s in 0..N_STAGES {
+            r = LSRK_A[s] * r + 1.0;
+            q += LSRK_B[s] * r;
+        }
+        assert!((q - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fourth_order_on_linear_ode() {
+        // dq/dt = l q: one step error ~ (l dt)^5 / 5!-ish
+        let l = 1.0f64;
+        for &dt in &[0.1f64, 0.05] {
+            let (mut q, mut r) = (1.0f64, 0.0f64);
+            for s in 0..N_STAGES {
+                r = LSRK_A[s] * r + dt * l * q;
+                q += LSRK_B[s] * r;
+            }
+            let err = (q - (l * dt).exp()).abs();
+            assert!(err < (l * dt).powi(5), "dt {dt} err {err}");
+        }
+    }
+
+    #[test]
+    fn stable_dt_decreases_with_order() {
+        assert!(stable_dt(0.5, 0.1, 1.0, 7) < stable_dt(0.5, 0.1, 1.0, 2));
+    }
+}

@@ -1,0 +1,358 @@
+//! Element-block state in the exact memory layout of the AOT artifact.
+//!
+//! Arrays are row-major, matching the jax defaults the artifact was
+//! lowered with:
+//!   q, res    (K, 9, M, M, M) f32
+//!   traces    (K, 6, 9, M, M) f32   (face order -x,+x,-y,+y,-z,+z)
+//!   halo      (H, 9, M, M)    f32
+//!   conn      (K, 6)          i32   local idx | -1 halo | -2 boundary
+//!   halo_idx  (K, 6)          i32
+//!   mats      (K, 3)          f32   (rho, lambda, mu)
+//!   halo_mats (H, 3)          f32
+//!   h         (K, 3)          f32
+//!
+//! Blocks are padded from their real element count up to the artifact's
+//! bucket size; padding elements are fully mirror-bounded and inert
+//! (python/tests/test_model.py::test_padding_elements_do_not_affect_real_ones
+//! proves non-interference).
+
+use crate::mesh::LocalBlock;
+use crate::solver::basis::LglBasis;
+
+/// Number of solution fields (Voigt strain 6 + velocity 3).
+pub const NFIELDS: usize = 9;
+
+#[derive(Debug, Clone)]
+pub struct BlockState {
+    pub order: usize,
+    pub m: usize,
+    /// Real / padded element counts.
+    pub k_real: usize,
+    pub k_pad: usize,
+    /// Real / padded halo slot counts.
+    pub halo_real: usize,
+    pub halo_pad: usize,
+    pub q: Vec<f32>,
+    pub res: Vec<f32>,
+    pub traces: Vec<f32>,
+    pub halo: Vec<f32>,
+    pub conn: Vec<i32>,
+    pub halo_idx: Vec<i32>,
+    pub mats: Vec<f32>,
+    pub halo_mats: Vec<f32>,
+    pub h: Vec<f32>,
+    /// Element centers (real elements only), for ICs and error norms.
+    pub centers: Vec<[f64; 3]>,
+}
+
+impl BlockState {
+    /// Build a padded state from a [`LocalBlock`]; `k_bucket`/`h_bucket`
+    /// must be at least the real counts (artifact shape bucket).
+    pub fn from_local_block(
+        blk: &LocalBlock,
+        order: usize,
+        k_bucket: usize,
+        h_bucket: usize,
+    ) -> Self {
+        let k_real = blk.len();
+        let halo_real = blk.halo_len;
+        assert!(k_bucket >= k_real, "bucket {k_bucket} < block {k_real}");
+        assert!(h_bucket >= halo_real, "halo bucket {h_bucket} < {halo_real}");
+        let m = order + 1;
+        let vol = m * m * m;
+        let face = m * m;
+        let mut conn = vec![-2i32; k_bucket * 6];
+        let mut halo_idx = vec![0i32; k_bucket * 6];
+        let mut mats = vec![0f32; k_bucket * 3];
+        let mut hvec = vec![1f32; k_bucket * 3];
+        for e in 0..k_real {
+            conn[e * 6..e * 6 + 6].copy_from_slice(&blk.conn[e]);
+            halo_idx[e * 6..e * 6 + 6].copy_from_slice(&blk.halo_idx[e]);
+            mats[e * 3..e * 3 + 3].copy_from_slice(&blk.mats[e]);
+            hvec[e * 3..e * 3 + 3].copy_from_slice(&blk.h[e]);
+        }
+        // inert padding material (rho=1, lambda=1, mu=0)
+        for e in k_real..k_bucket {
+            mats[e * 3] = 1.0;
+            mats[e * 3 + 1] = 1.0;
+        }
+        let mut halo_mats = vec![1f32; h_bucket * 3];
+        for s in 0..halo_real {
+            halo_mats[s * 3..s * 3 + 3].copy_from_slice(&blk.halo_mats[s]);
+        }
+        BlockState {
+            order,
+            m,
+            k_real,
+            k_pad: k_bucket,
+            halo_real,
+            halo_pad: h_bucket,
+            q: vec![0.0; k_bucket * NFIELDS * vol],
+            res: vec![0.0; k_bucket * NFIELDS * vol],
+            traces: vec![0.0; k_bucket * 6 * NFIELDS * face],
+            halo: vec![0.0; h_bucket * NFIELDS * face],
+            conn,
+            halo_idx,
+            mats,
+            halo_mats,
+            h: hvec,
+            centers: blk.centers.clone(),
+        }
+    }
+
+    /// Physical coordinates of every LGL node of real element `e`.
+    pub fn node_coords(&self, e: usize, basis: &LglBasis) -> Vec<[f64; 3]> {
+        let m = self.m;
+        let c = self.centers[e];
+        let hx = [
+            self.h[e * 3] as f64,
+            self.h[e * 3 + 1] as f64,
+            self.h[e * 3 + 2] as f64,
+        ];
+        let mut out = Vec::with_capacity(m * m * m);
+        for i in 0..m {
+            for j in 0..m {
+                for l in 0..m {
+                    out.push([
+                        c[0] + 0.5 * hx[0] * basis.nodes[i],
+                        c[1] + 0.5 * hx[1] * basis.nodes[j],
+                        c[2] + 0.5 * hx[2] * basis.nodes[l],
+                    ]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Initialize q from a function of physical position returning the 9
+    /// fields; also zeroes res and refreshes traces.
+    pub fn set_initial_condition(
+        &mut self,
+        basis: &LglBasis,
+        f: impl Fn([f64; 3]) -> [f64; NFIELDS],
+    ) {
+        let m = self.m;
+        let vol = m * m * m;
+        for e in 0..self.k_real {
+            let coords = self.node_coords(e, basis);
+            for (n, &x) in coords.iter().enumerate() {
+                let vals = f(x);
+                for fld in 0..NFIELDS {
+                    self.q[(e * NFIELDS + fld) * vol + n] = vals[fld] as f32;
+                }
+            }
+        }
+        self.res.iter_mut().for_each(|v| *v = 0.0);
+        self.refresh_traces();
+    }
+
+    /// Recompute `traces` from `q` (slices at the face node layers) —
+    /// same as the artifact's traces output, used before the first stage.
+    pub fn refresh_traces(&mut self) {
+        let m = self.m;
+        let vol = m * m * m;
+        let face = m * m;
+        for e in 0..self.k_pad {
+            for fld in 0..NFIELDS {
+                let qb = (e * NFIELDS + fld) * vol;
+                for a in 0..m {
+                    for b in 0..m {
+                        let fb = ((e * 6) * NFIELDS + fld) * face;
+                        // face 0 (-x): q[0, a, b]; face 1 (+x): q[m-1, a, b]
+                        self.traces[fb + a * m + b] = self.q[qb + a * m + b];
+                        self.traces[fb + (NFIELDS * face) + a * m + b] =
+                            self.q[qb + (m - 1) * face + a * m + b];
+                        // face 2 (-y): q[a, 0, b]; face 3 (+y): q[a, m-1, b]
+                        self.traces[fb + 2 * (NFIELDS * face) + a * m + b] =
+                            self.q[qb + a * face + b];
+                        self.traces[fb + 3 * (NFIELDS * face) + a * m + b] =
+                            self.q[qb + a * face + (m - 1) * m + b];
+                        // face 4 (-z): q[a, b, 0]; face 5 (+z): q[a, b, m-1]
+                        self.traces[fb + 4 * (NFIELDS * face) + a * m + b] =
+                            self.q[qb + a * face + b * m];
+                        self.traces[fb + 5 * (NFIELDS * face) + a * m + b] =
+                            self.q[qb + a * face + b * m + (m - 1)];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Immutable view of one face trace (9 x M x M values) of an element.
+    pub fn trace_slice(&self, e: usize, f: usize) -> &[f32] {
+        let m = self.m;
+        let sz = NFIELDS * m * m;
+        let base = (e * 6 + f) * sz;
+        &self.traces[base..base + sz]
+    }
+
+    /// Write one halo slot from a trace slice.
+    pub fn set_halo_slot(&mut self, slot: usize, trace: &[f32]) {
+        let m = self.m;
+        let sz = NFIELDS * m * m;
+        debug_assert_eq!(trace.len(), sz);
+        self.halo[slot * sz..(slot + 1) * sz].copy_from_slice(trace);
+    }
+
+    /// Discrete block energy (real elements only):
+    /// 1/2 sum J w_lmn (rho |v|^2 + lam tr(E)^2 + 2 mu E:E).
+    pub fn energy(&self, basis: &LglBasis) -> f64 {
+        let m = self.m;
+        let vol = m * m * m;
+        let mut total = 0.0f64;
+        for e in 0..self.k_real {
+            let rho = self.mats[e * 3] as f64;
+            let lam = self.mats[e * 3 + 1] as f64;
+            let mu = self.mats[e * 3 + 2] as f64;
+            let jac = (self.h[e * 3] as f64) * (self.h[e * 3 + 1] as f64)
+                * (self.h[e * 3 + 2] as f64)
+                / 8.0;
+            let qb = e * NFIELDS * vol;
+            let mut n = 0;
+            for i in 0..m {
+                for j in 0..m {
+                    for l in 0..m {
+                        let w = basis.weights[i] * basis.weights[j] * basis.weights[l];
+                        let fld = |f: usize| self.q[qb + f * vol + n] as f64;
+                        let tr = fld(0) + fld(1) + fld(2);
+                        let ee = fld(0) * fld(0)
+                            + fld(1) * fld(1)
+                            + fld(2) * fld(2)
+                            + 2.0 * (fld(3) * fld(3) + fld(4) * fld(4) + fld(5) * fld(5));
+                        let v2 = fld(6) * fld(6) + fld(7) * fld(7) + fld(8) * fld(8);
+                        total += 0.5 * jac * w * (rho * v2 + lam * tr * tr + 2.0 * mu * ee);
+                        n += 1;
+                    }
+                }
+            }
+        }
+        total
+    }
+
+    /// Relative L2 error of q against an exact solution (real elements).
+    pub fn rel_l2_error(
+        &self,
+        basis: &LglBasis,
+        exact: impl Fn([f64; 3]) -> [f64; NFIELDS],
+    ) -> f64 {
+        let m = self.m;
+        let vol = m * m * m;
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for e in 0..self.k_real {
+            let coords = self.node_coords(e, basis);
+            for (n, &x) in coords.iter().enumerate() {
+                let ex = exact(x);
+                for fld in 0..NFIELDS {
+                    let got = self.q[(e * NFIELDS + fld) * vol + n] as f64;
+                    num += (got - ex[fld]).powi(2);
+                    den += ex[fld].powi(2);
+                }
+            }
+        }
+        (num / den.max(1e-300)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+
+    fn block(order: usize) -> BlockState {
+        let mesh = unit_cube_geometry(2);
+        let owners = vec![0usize; mesh.len()];
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 1);
+        BlockState::from_local_block(&blocks[0], order, 8, 8)
+    }
+
+    #[test]
+    fn shapes_and_padding() {
+        let st = block(2);
+        assert_eq!(st.k_real, 8);
+        assert_eq!(st.k_pad, 8);
+        assert_eq!(st.q.len(), 8 * 9 * 27);
+        assert_eq!(st.traces.len(), 8 * 6 * 9 * 9);
+    }
+
+    #[test]
+    fn padding_is_mirror_bounded() {
+        let mesh = unit_cube_geometry(2);
+        let owners = vec![0usize; mesh.len()];
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 1);
+        let st = BlockState::from_local_block(&blocks[0], 2, 16, 8);
+        for e in 8..16 {
+            for f in 0..6 {
+                assert_eq!(st.conn[e * 6 + f], -2);
+            }
+            assert_eq!(st.mats[e * 3], 1.0);
+        }
+    }
+
+    #[test]
+    fn traces_match_q_slices() {
+        let mut st = block(1); // m=2 keeps indexing easy to verify
+        for (i, v) in st.q.iter_mut().enumerate() {
+            *v = i as f32;
+        }
+        st.refresh_traces();
+        let m = st.m;
+        let vol = m * m * m;
+        let face = m * m;
+        // face 1 (+x) of element 0, field 0: q[0,0,{m-1},a,b]
+        for a in 0..m {
+            for b in 0..m {
+                let want = st.q[(m - 1) * face + a * m + b];
+                let got = st.trace_slice(0, 1)[a * m + b];
+                assert_eq!(got, want);
+            }
+        }
+        // face 4 (-z), field 2: q[2*vol + a*face + b*m + 0]
+        for a in 0..m {
+            for b in 0..m {
+                let want = st.q[2 * vol + a * face + b * m];
+                let got = st.trace_slice(0, 4)[2 * face + a * m + b];
+                assert_eq!(got, want);
+            }
+        }
+    }
+
+    #[test]
+    fn energy_quadratic_scaling() {
+        let basis = LglBasis::new(2);
+        let mut st = block(2);
+        st.set_initial_condition(&basis, |x| {
+            let s = (x[0] * 3.0).sin();
+            [s, 0.0, 0.0, 0.0, 0.0, 0.0, s * 0.5, 0.0, 0.0]
+        });
+        let e1 = st.energy(&basis);
+        assert!(e1 > 0.0);
+        for v in st.q.iter_mut() {
+            *v *= 2.0;
+        }
+        let e2 = st.energy(&basis);
+        assert!((e2 / e1 - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn ic_then_error_is_zero() {
+        let basis = LglBasis::new(3);
+        let mut st = block(3);
+        let f = |x: [f64; 3]| {
+            [
+                x[0], x[1], x[2], 0.1, 0.2, 0.3,
+                x[0] * x[1], 0.0, 1.0,
+            ]
+        };
+        st.set_initial_condition(&basis, f);
+        assert!(st.rel_l2_error(&basis, f) < 1e-6);
+    }
+
+    #[test]
+    fn halo_slot_roundtrip() {
+        let mut st = block(2);
+        let sz = 9 * st.m * st.m;
+        let data: Vec<f32> = (0..sz).map(|i| i as f32).collect();
+        st.set_halo_slot(3, &data);
+        assert_eq!(&st.halo[3 * sz..4 * sz], &data[..]);
+    }
+}

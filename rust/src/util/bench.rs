@@ -1,0 +1,116 @@
+//! A small criterion-style bench harness (the offline build has no
+//! criterion). `cargo bench` runs the `benches/*.rs` binaries, which use
+//! [`Bench`] for warmup + timed sampling and print mean / p50 / p95 /
+//! throughput lines that the perf log in EXPERIMENTS.md quotes directly.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((s.len() - 1) as f64 * p).round() as usize;
+        s[idx]
+    }
+
+    pub fn report(&self) {
+        println!(
+            "{:<44} mean {:>11} p50 {:>11} p95 {:>11} ({} samples)",
+            self.name,
+            fmt_t(self.mean()),
+            fmt_t(self.percentile(0.5)),
+            fmt_t(self.percentile(0.95)),
+            self.samples.len(),
+        );
+    }
+
+    /// Report with an items/sec throughput line.
+    pub fn report_throughput(&self, items: usize, unit: &str) {
+        self.report();
+        println!(
+            "{:<44} {:>10.0} {unit}/s",
+            "",
+            items as f64 / self.mean()
+        );
+    }
+}
+
+fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup_iters: 3, sample_iters: 10 }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, samples: usize) -> Self {
+        Bench { warmup_iters: warmup, sample_iters: samples }
+    }
+
+    /// Time `f` (one sample per call) after warmup.
+    pub fn run(&self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let r = BenchResult { name: name.to_string(), samples };
+        r.report();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        };
+        assert_eq!(r.percentile(0.0), 1.0);
+        assert_eq!(r.percentile(1.0), 5.0);
+        assert_eq!(r.percentile(0.5), 3.0);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn run_collects_samples() {
+        let b = Bench::new(1, 5);
+        let mut n = 0u64;
+        let r = b.run("noop", || n += 1);
+        assert_eq!(r.samples.len(), 5);
+        assert_eq!(n, 6);
+    }
+}

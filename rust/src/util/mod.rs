@@ -1,0 +1,9 @@
+//! Self-contained utilities (the build is offline; everything beyond
+//! xla + anyhow is implemented here).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

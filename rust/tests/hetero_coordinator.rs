@@ -1,0 +1,181 @@
+//! Integration tests for the host/offload coordinator (HeteroRun):
+//! split-consistency across worker threads, the exchange-schedule
+//! ablation, and failure handling.
+
+use repro::coordinator::node::WorkerBackend;
+use repro::coordinator::HeteroRun;
+use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry, geometry::two_tree_geometry};
+use repro::partition::{nested_partition, splice, DeviceKind};
+use repro::solver::analytic::standing_wave;
+use repro::solver::driver::{Driver, RustRefBackend, StageBackend};
+use repro::solver::{BlockState, LglBasis};
+
+fn build_states(
+    mesh: &repro::mesh::Mesh,
+    owners: &[usize],
+    n_owners: usize,
+    order: usize,
+) -> (Vec<repro::mesh::LocalBlock>, Vec<BlockState>, repro::mesh::ExchangePlan, Vec<DeviceKind>) {
+    let (lblocks, plan) = build_local_blocks(mesh, owners, n_owners);
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut states = Vec::new();
+    let mut devices = Vec::new();
+    for lb in &lblocks {
+        let mut st =
+            BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1));
+        st.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+        states.push(st);
+        devices.push(if lb.owner % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic });
+    }
+    (lblocks, states, plan, devices)
+}
+
+/// The two-worker threaded coordinator must reproduce the single-threaded
+/// Driver exactly (same backend, same schedule).
+#[test]
+fn hetero_run_matches_driver() {
+    let order = 2;
+    let mesh = unit_cube_geometry(2);
+    let node_part = splice(&mesh, 1);
+    let np = nested_partition(&mesh, &node_part, 0.5);
+    let owners = np.owners();
+
+    // single-threaded driver
+    let (lblocks, states, plan, _) = build_states(&mesh, &owners, np.n_owners(), order);
+    let backends: Vec<Box<dyn StageBackend>> = (0..np.n_owners())
+        .map(|_| Box::new(RustRefBackend::new(order)) as Box<dyn StageBackend>)
+        .collect();
+    let mut drv = Driver::new(states.clone(), plan.clone(), backends, order);
+    drv.prime();
+    drv.run(1e-3, 8).unwrap();
+
+    // threaded coordinator
+    let (lblocks2, states2, plan2, devices) = build_states(&mesh, &owners, np.n_owners(), order);
+    assert_eq!(lblocks.len(), lblocks2.len());
+    let mut run = HeteroRun::launch(
+        &lblocks2, states2, plan2, &devices, WorkerBackend::RustRef, order,
+    )
+    .unwrap();
+    run.run(1e-3, 8).unwrap();
+
+    for (o, _) in lblocks.iter().enumerate() {
+        let st = run.read_block(o).unwrap();
+        let max_diff = drv.blocks[o]
+            .q
+            .iter()
+            .zip(&st.q)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-6, "owner {o}: threaded vs driver diff {max_diff}");
+    }
+}
+
+/// Exchange-schedule ablation: once-per-step sync (the paper's §5.5
+/// schedule) must stay stable but differ measurably from per-stage.
+#[test]
+fn once_per_step_sync_is_stable_but_approximate() {
+    let order = 2;
+    // 4^3 so the MIC partition is non-empty (2^3 = 8 has no interior)
+    let mesh = unit_cube_geometry(4);
+    let node_part = splice(&mesh, 1);
+    let np = nested_partition(&mesh, &node_part, 0.12);
+    assert!(np.node_counts[0].1 > 0, "MIC partition must be non-empty");
+    let owners = np.owners();
+    let basis = LglBasis::new(order);
+
+    let run_mode = |every_stage: bool| -> (f64, Vec<f32>) {
+        let (lblocks, states, plan, devices) =
+            build_states(&mesh, &owners, np.n_owners(), order);
+        let mut run = HeteroRun::launch(
+            &lblocks, states, plan, &devices, WorkerBackend::RustRef, order,
+        )
+        .unwrap();
+        run.exchange_every_stage = every_stage;
+        run.run(1e-3, 10).unwrap();
+        let e = run.energy().unwrap();
+        let q = run.read_block(0).unwrap().q.clone();
+        (e, q)
+    };
+    let (e_exact, q_exact) = run_mode(true);
+    let (e_lazy, q_lazy) = run_mode(false);
+    assert!(e_lazy.is_finite() && e_lazy > 0.0);
+    // bounded: lazy sync cannot blow up over 10 steps
+    assert!((e_lazy - e_exact).abs() < 0.05 * e_exact, "{e_exact} vs {e_lazy}");
+    // ...but it is a genuinely different schedule
+    let diff = q_exact
+        .iter()
+        .zip(&q_lazy)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(diff > 0.0, "schedules must differ");
+    let _ = basis;
+}
+
+/// Two-tree geometry (paper Fig 6.1) through the full coordinator:
+/// stable across the acoustic/elastic interface.
+#[test]
+fn two_tree_coupled_run_stable() {
+    let order = 2;
+    let mesh = two_tree_geometry(2);
+    let node_part = splice(&mesh, 2); // two "nodes" across the interface
+    let np = nested_partition(&mesh, &node_part, 0.4);
+    let owners = np.owners();
+    let (lblocks, mut states, plan, devices) =
+        build_states(&mesh, &owners, np.n_owners(), order);
+    // gaussian pulse in the acoustic tree instead of the standing wave
+    let basis = LglBasis::new(order);
+    for st in states.iter_mut() {
+        st.set_initial_condition(&basis, |x| {
+            repro::solver::analytic::gaussian_pulse(x, [0.5, 0.5, 0.5], 0.15, 1.0, 1.0)
+        });
+    }
+    let mut run =
+        HeteroRun::launch(&lblocks, states, plan, &devices, WorkerBackend::RustRef, order)
+            .unwrap();
+    let e0 = run.energy().unwrap();
+    run.run(5e-4, 40).unwrap();
+    let e1 = run.energy().unwrap();
+    assert!(e1.is_finite());
+    assert!(e1 <= e0 * (1.0 + 1e-6), "energy grew across the interface: {e0} -> {e1}");
+    assert!(e1 > 0.3 * e0, "unphysical dissipation: {e0} -> {e1}");
+}
+
+/// Empty MIC partitions (fraction 0) still run: all work on the CPU worker.
+#[test]
+fn zero_mic_fraction_runs() {
+    let order = 1;
+    let mesh = unit_cube_geometry(2);
+    let node_part = splice(&mesh, 1);
+    let np = nested_partition(&mesh, &node_part, 0.0);
+    let owners = np.owners();
+    let (lblocks, states, plan, devices) = build_states(&mesh, &owners, np.n_owners(), order);
+    let mut run =
+        HeteroRun::launch(&lblocks, states, plan, &devices, WorkerBackend::RustRef, order)
+            .unwrap();
+    run.run(1e-3, 3).unwrap();
+    assert!(run.energy().unwrap() > 0.0);
+}
+
+/// Kernel-time accounting flows back from both workers.
+#[test]
+fn take_times_reports_work() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let node_part = splice(&mesh, 1);
+    let np = nested_partition(&mesh, &node_part, 0.12);
+    assert!(np.node_counts[0].1 > 0, "MIC partition must be non-empty");
+    let owners = np.owners();
+    let (lblocks, states, plan, devices) = build_states(&mesh, &owners, np.n_owners(), order);
+    let mut run =
+        HeteroRun::launch(&lblocks, states, plan, &devices, WorkerBackend::RustRef, order)
+            .unwrap();
+    run.run(1e-3, 2).unwrap();
+    let (cpu_t, mic_t) = run.take_times().unwrap();
+    assert!(cpu_t.total() > 0.0, "cpu worker did work");
+    assert!(mic_t.total() > 0.0, "mic worker did work");
+    assert!(cpu_t.volume_loop > 0.0 && mic_t.volume_loop > 0.0);
+    // after take, counters reset
+    let (cpu_t2, _) = run.take_times().unwrap();
+    assert_eq!(cpu_t2.total(), 0.0);
+}

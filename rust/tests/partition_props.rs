@@ -1,0 +1,182 @@
+//! Property-style tests on partitioner invariants (the offline build has
+//! no proptest; cases are generated with the in-tree deterministic RNG —
+//! shrinking is traded for a printed failing seed).
+
+use repro::mesh::element::Material;
+use repro::mesh::{build_local_blocks, Mesh};
+use repro::partition::nested::{check_interior_only, pci_faces};
+use repro::partition::{nested_partition, partition_stats, splice, splice_weighted, DeviceKind};
+use repro::util::Rng;
+
+fn random_mesh(rng: &mut Rng) -> Mesh {
+    let nx = 2 + rng.below(7);
+    let ny = 2 + rng.below(7);
+    let nz = 2 + rng.below(7);
+    Mesh::structured_brick([nx, ny, nz], [0.0; 3], [1.0, 1.5, 0.7], |c| {
+        if c[0] < 0.5 {
+            Material::acoustic(1.0, 1.0)
+        } else {
+            Material::elastic(1.0, 3.0, 2.0)
+        }
+    })
+}
+
+/// Every element is owned exactly once, by a valid part.
+#[test]
+fn prop_splice_is_partition() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mesh = random_mesh(&mut rng);
+        let nparts = 1 + rng.below(mesh.len().min(9));
+        let p = splice(&mesh, nparts);
+        assert_eq!(p.assignment.len(), mesh.len(), "seed {seed}");
+        assert!(p.assignment.iter().all(|&a| a < nparts), "seed {seed}");
+        let sizes = p.sizes();
+        let max = sizes.iter().max().unwrap();
+        let min = sizes.iter().min().unwrap();
+        assert!(max - min <= 1, "splice must be balanced to 1: seed {seed} {sizes:?}");
+    }
+}
+
+/// Weighted splice: per-part weight within one max-element-weight of target.
+#[test]
+fn prop_weighted_splice_bounded_imbalance() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::seed_from_u64(1000 + seed);
+        let n = 20 + rng.below(200);
+        let weights: Vec<f64> = (0..n).map(|_| rng.range(0.5, 4.0)).collect();
+        let nparts = 2 + rng.below(6.min(n - 1));
+        let p = splice_weighted(&weights, nparts);
+        assert_eq!(p.nparts, nparts);
+        let mut wsum = vec![0.0; nparts];
+        for (e, &part) in p.assignment.iter().enumerate() {
+            wsum[part] += weights[e];
+        }
+        let target: f64 = weights.iter().sum::<f64>() / nparts as f64;
+        let wmax = weights.iter().cloned().fold(0.0, f64::max);
+        for (i, w) in wsum.iter().enumerate() {
+            assert!(
+                (w - target).abs() <= target + wmax,
+                "seed {seed} part {i}: weight {w} target {target}"
+            );
+        }
+        // contiguity
+        for w in p.assignment.windows(2) {
+            assert!(w[1] == w[0] || w[1] == w[0] + 1, "seed {seed}");
+        }
+    }
+}
+
+/// Nested partition invariants for random meshes/parts/fractions.
+#[test]
+fn prop_nested_invariants() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::seed_from_u64(2000 + seed);
+        let mesh = random_mesh(&mut rng);
+        let nparts = 1 + rng.below(5.min(mesh.len()));
+        let frac = rng.uniform();
+        let node = splice(&mesh, nparts);
+        let np = nested_partition(&mesh, &node, frac);
+        // 1. interior-only
+        assert!(check_interior_only(&mesh, &np), "seed {seed}");
+        // 2. counts consistent
+        let total: usize = np.node_counts.iter().map(|&(c, m)| c + m).sum();
+        assert_eq!(total, mesh.len(), "seed {seed}");
+        // 3. pci faces match the assignment
+        let pci = pci_faces(&mesh, &np);
+        let st = partition_stats(&mesh, &np);
+        for nd in 0..nparts {
+            assert_eq!(pci[nd], st.per_node[nd].pci_faces, "seed {seed} node {nd}");
+        }
+        // 4. owners encode (node, device)
+        for (e, &o) in np.owners().iter().enumerate() {
+            assert_eq!(o / 2, np.node.assignment[e], "seed {seed}");
+            assert_eq!(o % 2 == 1, np.device[e] == DeviceKind::Mic, "seed {seed}");
+        }
+    }
+}
+
+/// Local block extraction: halo plumbing is globally consistent.
+#[test]
+fn prop_local_blocks_consistent() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::seed_from_u64(3000 + seed);
+        let mesh = random_mesh(&mut rng);
+        let nparts = 1 + rng.below(4.min(mesh.len()));
+        let frac = rng.uniform();
+        let node = splice(&mesh, nparts);
+        let np = nested_partition(&mesh, &node, frac);
+        let owners = np.owners();
+        let (blocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
+        // every element appears exactly once
+        let total: usize = blocks.iter().map(|b| b.len()).sum();
+        assert_eq!(total, mesh.len(), "seed {seed}");
+        // every halo slot is fed exactly once per stage
+        for (o, blk) in blocks.iter().enumerate() {
+            let mut fed = vec![0usize; blk.halo_len];
+            for &(_, _, _, slot) in &plan.copies[o] {
+                fed[slot] += 1;
+            }
+            assert!(fed.iter().all(|&f| f == 1), "seed {seed} owner {o}: {fed:?}");
+        }
+        // local conn values are in range
+        for blk in &blocks {
+            for (k, c) in blk.conn.iter().enumerate() {
+                for f in 0..6 {
+                    let v = c[f];
+                    assert!(v >= -2 && (v < blk.len() as i32), "seed {seed}: conn[{k}][{f}] = {v}");
+                    if v == -1 {
+                        assert!((blk.halo_idx[k][f] as usize) < blk.halo_len, "seed {seed}");
+                    }
+                }
+            }
+        }
+        // cross-owner face symmetry: the plan copies each shared face once
+        // in each direction
+        let mut shared = 0usize;
+        for (e, c) in mesh.conn.iter().enumerate() {
+            for &v in c {
+                if v >= 0 && owners[v as usize] != owners[e] {
+                    shared += 1;
+                }
+            }
+        }
+        assert_eq!(plan.total_faces(), shared, "seed {seed}");
+    }
+}
+
+/// Balance solver: monotone in K, conserves elements, bounded ratio.
+#[test]
+fn prop_balance_solver() {
+    use repro::costmodel::calib::stampede_node;
+    use repro::partition::solve_mic_fraction;
+    let node = stampede_node();
+    let mut prev_kmic = 0usize;
+    for k in [256usize, 512, 1024, 2048, 4096, 8192, 16384] {
+        for order in [1usize, 3, 7] {
+            let sol = solve_mic_fraction(&node, order, k);
+            assert_eq!(sol.k_mic + sol.k_cpu, k, "k {k} order {order}");
+            assert!(
+                sol.ratio > 0.3 && sol.ratio < 4.0,
+                "ratio {} k {k} order {order}",
+                sol.ratio
+            );
+        }
+        let sol7 = solve_mic_fraction(&node, 7, k);
+        assert!(sol7.k_mic >= prev_kmic, "k_mic monotone in k");
+        prev_kmic = sol7.k_mic;
+    }
+}
+
+/// Morton keys of a mesh are strictly increasing (the level-1 premise).
+#[test]
+fn prop_mesh_morton_sorted() {
+    for seed in 0..20u64 {
+        let mut rng = Rng::seed_from_u64(4000 + seed);
+        let mesh = random_mesh(&mut rng);
+        assert!(mesh.check_consistency(), "seed {seed}");
+        for w in mesh.elements.windows(2) {
+            assert!(w[0].key <= w[1].key, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: the AOT artifact executed through PJRT must match the
+//! pure-rust reference stage to f32 tolerance, block by block, through
+//! full multi-step heterogeneous runs. Skips (with a notice) when
+//! artifacts are not built.
+
+use repro::coordinator::node::WorkerBackend;
+use repro::coordinator::HeteroRun;
+use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+use repro::partition::{nested_partition, splice, DeviceKind};
+use repro::runtime::{ArtifactManifest, PjrtRuntime};
+use repro::solver::analytic::standing_wave;
+use repro::solver::driver::RustRefBackend;
+use repro::solver::reference::RefScratch;
+use repro::solver::rk::{LSRK_A, LSRK_B, N_STAGES};
+use repro::solver::{BlockState, LglBasis, StageBackend};
+
+fn artifacts_available() -> Option<std::path::PathBuf> {
+    let dir = ArtifactManifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+/// A single all-mirror block: stage through PJRT vs the rust reference,
+/// for EVERY order shipped in the artifact set.
+#[test]
+fn single_block_stage_matches_reference() {
+    let Some(dir) = artifacts_available() else { return };
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    for order in rt.manifest.orders() {
+        let basis = LglBasis::new(order);
+
+        let mesh = unit_cube_geometry(2);
+        let owners = vec![0usize; mesh.len()];
+        let (lblocks, _) = build_local_blocks(&mesh, &owners, 1);
+        let meta = rt.manifest.pick_stage(order, 8, 1).unwrap();
+        let (kb, hb) = (meta.k, meta.halo);
+
+        let mut st_pjrt = BlockState::from_local_block(&lblocks[0], order, kb, hb);
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        st_pjrt.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+        let mut st_ref = st_pjrt.clone();
+
+        let mut pjrt = rt.stage_backend(&st_pjrt).unwrap();
+        let mut rref = RustRefBackend::new(order);
+        let dt = 1e-3f32;
+        for s in 0..N_STAGES {
+            pjrt.stage(&mut st_pjrt, dt, LSRK_A[s] as f32, LSRK_B[s] as f32).unwrap();
+            rref.stage(&mut st_ref, dt, LSRK_A[s] as f32, LSRK_B[s] as f32).unwrap();
+        }
+        let max_q = max_diff(&st_pjrt.q[..live(&st_pjrt)], &st_ref.q[..live(&st_ref)]);
+        assert!(max_q < 5e-5, "order {order}: q diff after 5 stages: {max_q}");
+        let max_tr = max_diff(&st_pjrt.traces, &st_ref.traces);
+        assert!(max_tr < 5e-5, "order {order}: trace diff: {max_tr}");
+    }
+}
+
+fn live(st: &BlockState) -> usize {
+    st.k_real * 9 * st.m * st.m * st.m
+}
+
+fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// Full heterogeneous run (CPU worker + MIC worker, PJRT backend) vs the
+/// same run on the rust reference backend: identical physics.
+#[test]
+fn hetero_run_pjrt_matches_rust_ref() {
+    let Some(dir) = artifacts_available() else { return };
+    let rt = PjrtRuntime::new(&dir).unwrap();
+    let order = *rt.manifest.orders().first().unwrap();
+    drop(rt);
+
+    let energies: Vec<(f64, f64)> = [
+        WorkerBackend::Pjrt { artifact_dir: dir.clone() },
+        WorkerBackend::RustRef,
+    ]
+    .into_iter()
+    .map(|backend| run_once(order, backend, &dir))
+    .collect();
+    let (e0_p, e1_p) = energies[0];
+    let (e0_r, e1_r) = energies[1];
+    assert!((e0_p - e0_r).abs() < 1e-9 * e0_r.abs().max(1.0), "initial energies differ");
+    let rel = (e1_p - e1_r).abs() / e1_r.abs().max(1e-12);
+    assert!(rel < 1e-4, "final energies diverge: pjrt {e1_p} ref {e1_r}");
+    // physics: dissipative but conservative to ~0.5%
+    assert!(e1_p <= e0_p * (1.0 + 1e-6));
+    assert!(e1_p > 0.99 * e0_p);
+}
+
+fn run_once(
+    order: usize,
+    backend: WorkerBackend,
+    dir: &std::path::Path,
+) -> (f64, f64) {
+    let mesh = unit_cube_geometry(2);
+    let node_part = splice(&mesh, 1);
+    let np = nested_partition(&mesh, &node_part, 0.5);
+    let owners = np.owners();
+    let (lblocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
+    let manifest = ArtifactManifest::load(dir).unwrap();
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut states = Vec::new();
+    let mut devices = Vec::new();
+    for lb in &lblocks {
+        let meta = manifest.pick_stage(order, lb.len().max(1), lb.halo_len.max(1)).unwrap();
+        let mut st = BlockState::from_local_block(lb, order, meta.k, meta.halo);
+        st.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+        states.push(st);
+        devices.push(if lb.owner % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic });
+    }
+    let mut run =
+        HeteroRun::launch(&lblocks, states, plan, &devices, backend, order).unwrap();
+    let e0 = run.energy().unwrap();
+    run.run(2e-3, 10).unwrap();
+    let e1 = run.energy().unwrap();
+    (e0, e1)
+}
+
+/// The RefScratch shape-bucket reuse must not leak state across blocks.
+#[test]
+fn reference_scratch_isolated_between_blocks() {
+    let order = 2;
+    let basis = LglBasis::new(order);
+    let mesh = unit_cube_geometry(2);
+    let owners = vec![0usize; mesh.len()];
+    let (lblocks, _) = build_local_blocks(&mesh, &owners, 1);
+    let mut st1 = BlockState::from_local_block(&lblocks[0], order, 8, 8);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    st1.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+    let mut st2 = st1.clone();
+    let mut scratch = RefScratch::new(&st1);
+    // interleave two identical blocks through one scratch: identical results
+    repro::solver::reference::stage(&mut st1, &basis, &mut scratch, 1e-3, 0.0, 1.0);
+    let mut scratch2 = RefScratch::new(&st2);
+    repro::solver::reference::stage(&mut st2, &basis, &mut scratch2, 1e-3, 0.0, 1.0);
+    assert_eq!(st1.q, st2.q);
+}

@@ -1,0 +1,153 @@
+//! Integration tests on the simulator + experiment drivers: the paper's
+//! quantitative *shapes* must hold (speedup bands, crossover location,
+//! profile ordering, traffic asymptotics).
+
+use repro::coordinator::experiments;
+use repro::costmodel::calib::{
+    stampede_node, PAPER_ELEMS_PER_NODE, PAPER_MIC_RATIO, PAPER_ORDER,
+};
+use repro::partition::solve_mic_fraction;
+use repro::sim::{simulate, Cluster, Scheme};
+
+/// Table 6.1's headline: single-node speedup in the 6-7x band.
+#[test]
+fn single_node_speedup_band() {
+    let mesh = experiments::paper_mesh(1, PAPER_ELEMS_PER_NODE);
+    let c = Cluster::stampede(1);
+    let base = simulate(&c, &mesh, PAPER_ORDER, 10, Scheme::BaselineMpi { ranks_per_node: 8 });
+    let nest = simulate(&c, &mesh, PAPER_ORDER, 10, Scheme::Nested { mic_fraction: None });
+    let speedup = base.wall_s / nest.wall_s;
+    assert!(
+        (5.3..7.5).contains(&speedup),
+        "paper: 6.3x; simulated {speedup:.2}x"
+    );
+}
+
+/// Scale-up shape: the speedup *drops* from 1 to 64 nodes (6.3 -> 5.6).
+#[test]
+fn speedup_drops_at_scale() {
+    let c1 = Cluster::stampede(1);
+    let m1 = experiments::paper_mesh(1, PAPER_ELEMS_PER_NODE);
+    let base1 = simulate(&c1, &m1, PAPER_ORDER, 5, Scheme::BaselineMpi { ranks_per_node: 8 });
+    let nest1 = simulate(&c1, &m1, PAPER_ORDER, 5, Scheme::Nested { mic_fraction: None });
+    let s1 = base1.wall_s / nest1.wall_s;
+
+    let c64 = Cluster::stampede(64);
+    let m64 = experiments::paper_mesh(64, PAPER_ELEMS_PER_NODE);
+    let base64 = simulate(&c64, &m64, PAPER_ORDER, 5, Scheme::BaselineMpi { ranks_per_node: 8 });
+    let nest64 = simulate(&c64, &m64, PAPER_ORDER, 5, Scheme::Nested { mic_fraction: None });
+    let s64 = base64.wall_s / nest64.wall_s;
+
+    assert!(s64 < s1, "speedup must drop at scale: {s1:.2} -> {s64:.2}");
+    assert!((4.8..6.6).contains(&s64), "paper: 5.6x at 64 nodes; got {s64:.2}");
+    // absolute walls in the right neighborhood at paper steps (118):
+    let scale = 118.0 / 5.0;
+    let b64 = base64.wall_s * scale;
+    assert!((300.0..550.0).contains(&b64), "baseline 64-node ~413 s, got {b64:.0}");
+}
+
+/// The balance solve lands near the paper's 1.6 ratio.
+#[test]
+fn mic_ratio_matches_paper() {
+    let sol = solve_mic_fraction(&stampede_node(), PAPER_ORDER, PAPER_ELEMS_PER_NODE);
+    assert!(
+        (sol.ratio - PAPER_MIC_RATIO).abs() < 0.25,
+        "K_MIC/K_CPU {:.2} vs paper {PAPER_MIC_RATIO}",
+        sol.ratio
+    );
+}
+
+/// Task-offload loses to nested at the paper's size — and the gap is the
+/// PCI traffic asymmetry (paper §5.5's core argument).
+#[test]
+fn task_offload_pci_dominated() {
+    let mesh = experiments::paper_mesh(1, PAPER_ELEMS_PER_NODE);
+    let c = Cluster::stampede(1);
+    let off = simulate(&c, &mesh, PAPER_ORDER, 5, Scheme::TaskOffload);
+    let nest = simulate(&c, &mesh, PAPER_ORDER, 5, Scheme::Nested { mic_fraction: None });
+    assert!(off.wall_s > 1.15 * nest.wall_s, "off {} nest {}", off.wall_s, nest.wall_s);
+}
+
+/// Fig 4.1 ordering: volume_loop > int_flux > each of the others.
+#[test]
+fn baseline_profile_ordering() {
+    let mesh = experiments::paper_mesh(1, PAPER_ELEMS_PER_NODE);
+    let c = Cluster::stampede(1);
+    let rep = simulate(&c, &mesh, PAPER_ORDER, 3, Scheme::BaselineMpi { ranks_per_node: 8 });
+    let fr = rep.breakdown.fractions();
+    assert_eq!(fr[0].0, "volume_loop");
+    assert_eq!(fr[1].0, "int_flux");
+    assert!(fr[0].1 > 0.4 && fr[0].1 < 0.75, "volume share {}", fr[0].1);
+}
+
+/// Fig 5.2: the sweep's crossover equals the solver's optimum.
+#[test]
+fn sweep_crossover_consistent_with_solver() {
+    let node = stampede_node();
+    let rows =
+        repro::partition::balance::sweep_fractions(&node, PAPER_ORDER, PAPER_ELEMS_PER_NODE, 200);
+    let sol = solve_mic_fraction(&node, PAPER_ORDER, PAPER_ELEMS_PER_NODE);
+    // find the sweep crossing
+    let mut crossing = None;
+    for w in rows.windows(2) {
+        let (f0, tc0, tm0) = w[0];
+        let (f1, _, _) = w[1];
+        let (_, tc1, tm1) = w[1];
+        if (tm0 - tc0).signum() != (tm1 - tc1).signum() {
+            crossing = Some(0.5 * (f0 + f1));
+            break;
+        }
+    }
+    let crossing = crossing.expect("sweep must cross");
+    let sol_frac = sol.k_mic as f64 / PAPER_ELEMS_PER_NODE as f64;
+    assert!(
+        (crossing - sol_frac).abs() < 0.02,
+        "sweep {crossing:.3} vs solver {sol_frac:.3}"
+    );
+}
+
+/// Fig 5.3 shape: latency floor at small sizes, linear growth at large.
+#[test]
+fn pci_curve_shape() {
+    let pci = repro::costmodel::calib::stampede_pci();
+    use repro::costmodel::pci::Direction::ToDevice;
+    let t1 = pci.transfer_time(1 << 20, ToDevice);
+    let t4096 = pci.transfer_time(4096 << 20, ToDevice);
+    // 4096x the bytes must NOT cost 4096x (latency floor) but must cost
+    // >1000x (bandwidth regime reached)
+    assert!(t4096 / t1 > 1000.0);
+    assert!(t4096 / t1 < 4096.0);
+}
+
+/// Every experiment driver runs end to end and emits its CSV.
+#[test]
+fn experiment_drivers_produce_output() {
+    let dir = std::env::temp_dir().join(format!("repro_exp_{}", std::process::id()));
+    let csv = |n: &str| dir.join(n).to_str().unwrap().to_string();
+    let t = experiments::fig5_2(Some(&csv("f52.csv"))).unwrap();
+    assert!(t.contains("crossover"));
+    let t = experiments::fig5_3(Some(&csv("f53.csv")), 8).unwrap();
+    assert!(t.contains("to_mic"));
+    let t = experiments::fig5_4(Some(&csv("f54.csv"))).unwrap();
+    assert!(t.contains("mid-plane"));
+    let t = experiments::fig6_2(Some(&csv("f62.csv"))).unwrap();
+    assert!(t.contains("volume_loop"));
+    let t = experiments::table6_1(Some(&csv("t61.csv")), 4).unwrap();
+    assert!(t.contains("speedup"));
+    for f in ["f52.csv", "f53.csv", "f54.csv", "f62.csv", "t61.csv"] {
+        assert!(dir.join(f).exists(), "{f} missing");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Nested wall time is monotone in the MIC fraction error: the balanced
+/// fraction beats both 0 (idle MIC) and the max-interior fraction when
+/// over-committed... at minimum it must beat fraction 0.
+#[test]
+fn balanced_fraction_beats_cpu_only() {
+    let mesh = experiments::paper_mesh(1, PAPER_ELEMS_PER_NODE);
+    let c = Cluster::stampede(1);
+    let balanced = simulate(&c, &mesh, PAPER_ORDER, 3, Scheme::Nested { mic_fraction: None });
+    let cpu_only = simulate(&c, &mesh, PAPER_ORDER, 3, Scheme::Nested { mic_fraction: Some(0.0) });
+    assert!(balanced.wall_s < 0.6 * cpu_only.wall_s);
+}

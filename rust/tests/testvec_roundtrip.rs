@@ -1,0 +1,134 @@
+//! Cross-language regression: execute the AOT artifact on python-recorded
+//! inputs and compare against the python jit outputs (artifacts/testvec_*).
+//! This pins the HLO-text round trip + rust runtime against python truth,
+//! independently of the rust reference implementation. Also cross-checks
+//! the rust reference against the same vectors.
+
+use repro::runtime::{ArtifactManifest, PjrtRuntime};
+use repro::solver::driver::RustRefBackend;
+use repro::solver::state::BlockState;
+use repro::solver::StageBackend;
+use repro::util::Json;
+
+struct TestVec {
+    order: usize,
+    k: usize,
+    halo: usize,
+    arrays: Vec<(String, Vec<usize>, Vec<u8>)>,
+}
+
+fn load_testvec(dir: &std::path::Path, order: usize) -> Option<TestVec> {
+    let base = dir.join(format!("testvec_n{order}"));
+    let meta = std::fs::read_to_string(base.with_extension("json")).ok()?;
+    let blob = std::fs::read(base.with_extension("bin")).ok()?;
+    let j = Json::parse(&meta).ok()?;
+    let mut arrays = Vec::new();
+    for a in j.get("arrays")?.as_arr()? {
+        let name = a.get("name")?.as_str()?.to_string();
+        let shape: Vec<usize> =
+            a.get("shape")?.as_arr()?.iter().filter_map(|x| x.as_usize()).collect();
+        let off = a.get("offset")?.as_usize()?;
+        let nb = a.get("nbytes")?.as_usize()?;
+        arrays.push((name, shape, blob[off..off + nb].to_vec()));
+    }
+    Some(TestVec {
+        order: j.get("order")?.as_usize()?,
+        k: j.get("k")?.as_usize()?,
+        halo: j.get("halo")?.as_usize()?,
+        arrays,
+    })
+}
+
+fn f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn i32s(bytes: &[u8]) -> Vec<i32> {
+    bytes.chunks_exact(4).map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn state_from_vec(tv: &TestVec) -> BlockState {
+    let get = |n: &str| &tv.arrays.iter().find(|(name, _, _)| name == n).unwrap().2;
+    let m = tv.order + 1;
+    BlockState {
+        order: tv.order,
+        m,
+        k_real: tv.k,
+        k_pad: tv.k,
+        halo_real: tv.halo,
+        halo_pad: tv.halo,
+        q: f32s(get("q")),
+        res: f32s(get("res")),
+        traces: vec![0.0; tv.k * 6 * 9 * m * m],
+        halo: f32s(get("halo")),
+        conn: i32s(get("conn")),
+        halo_idx: i32s(get("halo_idx")),
+        mats: f32s(get("mats")),
+        halo_mats: f32s(get("halo_mats")),
+        h: f32s(get("h")),
+        centers: vec![[0.0; 3]; tv.k],
+    }
+}
+
+fn max_rel(a: &[f32], b: &[f32]) -> f32 {
+    let scale = b.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-6);
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max) / scale
+}
+
+#[test]
+fn artifact_matches_python_jit_outputs() {
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let mut rt = PjrtRuntime::new(&dir).unwrap();
+    let mut tested = 0;
+    for order in rt.manifest.orders() {
+        let Some(tv) = load_testvec(&dir, order) else { continue };
+        let mut st = state_from_vec(&tv);
+        let scal = f32s(&tv.arrays.iter().find(|(n, _, _)| n == "scal").unwrap().2);
+        let mut backend = rt.stage_backend(&st).unwrap();
+        backend.stage(&mut st, scal[0], scal[1], scal[2]).unwrap();
+        for (out_name, field) in
+            [("out_q", &st.q), ("out_res", &st.res), ("out_traces", &st.traces)]
+        {
+            let want = f32s(&tv.arrays.iter().find(|(n, _, _)| n == out_name).unwrap().2);
+            let rel = max_rel(field, &want);
+            assert!(
+                rel < 2e-6,
+                "order {order} {out_name}: max rel diff {rel} (HLO round trip broke)"
+            );
+        }
+        tested += 1;
+    }
+    assert!(tested >= 3, "expected test vectors for at least 3 orders, ran {tested}");
+}
+
+#[test]
+fn rust_reference_matches_python_jit_outputs() {
+    let dir = ArtifactManifest::default_dir();
+    let mut tested = 0;
+    for order in [1usize, 2, 3, 7] {
+        let Some(tv) = load_testvec(&dir, order) else { continue };
+        let mut st = state_from_vec(&tv);
+        st.refresh_traces(); // reference reads traces of the current q
+        let scal = f32s(&tv.arrays.iter().find(|(n, _, _)| n == "scal").unwrap().2);
+        let mut backend = RustRefBackend::new(order);
+        backend.stage(&mut st, scal[0], scal[1], scal[2]).unwrap();
+        for (out_name, field) in
+            [("out_q", &st.q), ("out_res", &st.res), ("out_traces", &st.traces)]
+        {
+            let want = f32s(&tv.arrays.iter().find(|(n, _, _)| n == out_name).unwrap().2);
+            let rel = max_rel(field, &want);
+            assert!(
+                rel < 5e-5,
+                "order {order} {out_name}: max rel diff {rel} (rust reference diverges)"
+            );
+        }
+        tested += 1;
+    }
+    if tested == 0 {
+        eprintln!("SKIP: no test vectors present");
+    }
+}
