@@ -1,20 +1,84 @@
 //! Bench: Table 6.1 end to end — the three execution schemes at paper
-//! scale through the simulator, plus the *real* coordinator step (PJRT)
-//! on a reduced workload. `cargo bench --offline --bench end_to_end`
+//! scale through the simulator, the real multi-block driver scalar vs
+//! parallel-with-overlap (the in-node nested split), plus the *real*
+//! coordinator step (PJRT) on a reduced workload.
+//! `cargo bench --offline --bench end_to_end`
 
 use repro::coordinator::experiments::paper_mesh;
 use repro::coordinator::node::WorkerBackend;
-use repro::coordinator::HeteroRun;
+use repro::coordinator::{HeteroRun, ProfileReport};
 use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
 use repro::partition::{nested_partition, splice, DeviceKind};
 use repro::runtime::ArtifactManifest;
 use repro::sim::{simulate, Cluster, Scheme};
 use repro::solver::analytic::standing_wave;
-use repro::solver::{BlockState, LglBasis};
+use repro::solver::driver::{Driver, RustRefBackend, StageBackend};
+use repro::solver::{BlockState, LglBasis, ParallelRefBackend};
 use repro::util::bench::Bench;
+
+/// Two-owner coupled driver over a unit cube, one backend per block.
+fn coupled_driver(order: usize, n: usize, parallel: bool, overlap: bool) -> Driver {
+    let mesh = unit_cube_geometry(n);
+    let owners: Vec<usize> = (0..mesh.len()).map(|e| usize::from(e >= mesh.len() / 2)).collect();
+    let (lblocks, plan) = build_local_blocks(&mesh, &owners, 2);
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut blocks: Vec<BlockState> = lblocks
+        .iter()
+        .map(|lb| BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1)))
+        .collect();
+    for blk in blocks.iter_mut() {
+        blk.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+    }
+    let backends: Vec<Box<dyn StageBackend>> = (0..2)
+        .map(|_| -> Box<dyn StageBackend> {
+            if parallel {
+                Box::new(ParallelRefBackend::new(order))
+            } else {
+                Box::new(RustRefBackend::new(order))
+            }
+        })
+        .collect();
+    let mut drv = Driver::new(blocks, plan, backends, order);
+    drv.overlap = overlap;
+    drv.prime();
+    drv
+}
 
 fn main() {
     let b = Bench::new(1, 5);
+
+    // ---- real multi-block driver: scalar vs parallel+overlap -----------
+    for order in [3usize, 7] {
+        let n = if order >= 7 { 4 } else { 6 };
+        let k = n * n * n;
+        let mut scalar_mean = None;
+        let mut scalar_profile = None;
+        for (label, parallel, overlap) in [
+            ("scalar", false, false),
+            ("parallel", true, false),
+            ("parallel+overlap", true, true),
+        ] {
+            let mut drv = coupled_driver(order, n, parallel, overlap);
+            let r = b.run(&format!("driver_step_{label}_n{order}_k{k}"), || {
+                drv.step(1e-4).unwrap();
+            });
+            r.report_throughput(k * 5, "elem-stages");
+            let profile = ProfileReport::from_kernel_times(&drv.total_times());
+            match (&scalar_mean, &scalar_profile) {
+                (None, _) => {
+                    scalar_mean = Some(r.mean());
+                    scalar_profile = Some(profile);
+                }
+                (Some(s), Some(base)) => println!(
+                    "  {label}: {:.2}x wall vs scalar ({:.2}x by kernel CPU time)",
+                    s / r.mean(),
+                    profile.speedup_over(base),
+                ),
+                _ => unreachable!(),
+            }
+        }
+    }
 
     // ---- simulated Table 6.1 at 1 and 64 nodes --------------------------
     for nodes in [1usize, 64] {
@@ -38,6 +102,10 @@ fn main() {
     }
 
     // ---- real coordinator step (PJRT) ------------------------------------
+    if !cfg!(feature = "pjrt") {
+        println!("SKIP real-step bench: built without the `pjrt` feature");
+        return;
+    }
     let dir = ArtifactManifest::default_dir();
     if !dir.join("manifest.json").exists() {
         println!("SKIP real-step bench: artifacts not built");

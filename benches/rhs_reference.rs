@@ -1,29 +1,68 @@
-//! Bench: the pure-rust reference stage (the scalar-CPU kernel path).
-//! Reports element throughput per order — the numerator of the paper's
-//! baseline column. `cargo bench --offline --bench rhs_reference`
+//! Bench: the pure-rust reference stage, scalar vs the multithreaded
+//! boundary/interior backend, per order — the numerator of the paper's
+//! baseline column plus the speedup this repo's level-2 in-node split
+//! buys. Writes `BENCH_rhs.json` (see PERF.md for the schema).
+//! `cargo bench --offline --bench rhs_reference`
 
 use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
 use repro::solver::basis::LglBasis;
 use repro::solver::reference::{stage, RefScratch};
 use repro::solver::state::BlockState;
-use repro::util::bench::Bench;
+use repro::solver::{ParallelRefBackend, StageBackend};
+use repro::util::bench::{Bench, JsonSink};
 
 fn main() {
     let b = Bench::new(2, 8);
+    let mut sink = JsonSink::new();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host parallelism: {hw} threads");
+
     for order in [2usize, 3, 7] {
         let n = if order >= 7 { 4 } else { 6 };
         let mesh = unit_cube_geometry(n);
         let owners = vec![0usize; mesh.len()];
         let (lblocks, _) = build_local_blocks(&mesh, &owners, 1);
         let basis = LglBasis::new(order);
+        let ic = |x: [f64; 3]| [x[0].sin(), 0.0, 0.0, 0.0, 0.0, 0.0, x[1].cos(), 0.0, 0.0];
+
+        // ---- scalar reference ------------------------------------------
         let mut st = BlockState::from_local_block(&lblocks[0], order, mesh.len(), 8);
-        st.set_initial_condition(&basis, |x| {
-            [x[0].sin(), 0.0, 0.0, 0.0, 0.0, 0.0, x[1].cos(), 0.0, 0.0]
-        });
+        st.set_initial_condition(&basis, ic);
         let mut scratch = RefScratch::new(&st);
-        let r = b.run(&format!("ref_stage_n{order}_k{}", mesh.len()), || {
+        let scalar = b.run(&format!("ref_stage_scalar_n{order}_k{}", mesh.len()), || {
             stage(&mut st, &basis, &mut scratch, 1e-4, -0.5, 0.3);
         });
-        r.report_throughput(mesh.len(), "elem-stages");
+        scalar.report_throughput(mesh.len(), "elem-stages");
+        sink.push(&scalar, Some((mesh.len(), "elem-stages")));
+
+        // ---- parallel backend, thread sweep ----------------------------
+        let mut counts = vec![1usize, 2, 4, hw];
+        counts.sort_unstable();
+        counts.dedup();
+        let mut best: Option<f64> = None;
+        for threads in counts {
+            let mut st = BlockState::from_local_block(&lblocks[0], order, mesh.len(), 8);
+            st.set_initial_condition(&basis, ic);
+            let mut backend = ParallelRefBackend::with_threads(order, threads);
+            let par = b.run(
+                &format!("ref_stage_parallel_n{order}_k{}_t{threads}", mesh.len()),
+                || {
+                    backend.stage(&mut st, 1e-4, -0.5, 0.3).unwrap();
+                },
+            );
+            par.report_throughput(mesh.len(), "elem-stages");
+            sink.push(&par, Some((mesh.len(), "elem-stages")));
+            let speedup = scalar.mean() / par.mean();
+            println!("  order {order}, {threads} thread(s): {speedup:.2}x vs scalar");
+            best = Some(best.map_or(speedup, |s: f64| s.max(speedup)));
+        }
+        if let Some(s) = best {
+            println!("order {order}: best parallel speedup {s:.2}x over scalar");
+        }
+    }
+
+    match sink.write("BENCH_rhs.json") {
+        Ok(()) => println!("wrote BENCH_rhs.json"),
+        Err(e) => eprintln!("could not write BENCH_rhs.json: {e}"),
     }
 }

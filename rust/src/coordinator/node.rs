@@ -12,6 +12,12 @@
 //! (exchange after every RK stage) and the paper's once-per-timestep
 //! synchronization (§5.5) — kept as an ablation; EXPERIMENTS.md quantifies
 //! the accuracy difference.
+//!
+//! Workers advance each stage in two phases (boundary, then interior — see
+//! [`crate::solver::parallel`]) and ship their outbound traces *between*
+//! the phases, so the coordinator routes halo data while the interior
+//! sweep is still computing; the halo install message simply queues behind
+//! the sweep. Backends without a real split degrade to full-stage-first.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -21,8 +27,10 @@ use anyhow::anyhow;
 
 use crate::mesh::{ExchangePlan, LocalBlock};
 use crate::partition::DeviceKind;
+#[cfg(feature = "pjrt")]
 use crate::runtime::PjrtRuntime;
 use crate::solver::driver::RustRefBackend;
+use crate::solver::parallel::ParallelRefBackend;
 use crate::solver::reference::KernelTimes;
 use crate::solver::rk::{LSRK_A, LSRK_B, N_STAGES};
 use crate::solver::state::BlockState;
@@ -34,7 +42,12 @@ use crate::Result;
 pub enum WorkerBackend {
     /// Pure-rust reference kernels (no artifacts needed).
     RustRef,
-    /// AOT artifacts through PJRT (the production path).
+    /// Multithreaded reference kernels with the in-node boundary/interior
+    /// split; `threads == 0` auto-sizes to half the hardware threads per
+    /// worker (the two workers stage concurrently).
+    RustParallel { threads: usize },
+    /// AOT artifacts through PJRT (the production path; needs the `pjrt`
+    /// cargo feature).
     Pjrt { artifact_dir: std::path::PathBuf },
 }
 
@@ -94,12 +107,35 @@ fn worker_main(
                 backends.push(Box::new(RustRefBackend::new(order)));
             }
         }
+        WorkerBackend::RustParallel { threads } => {
+            // threads == 0: split the hardware budget between the two
+            // concurrently-staging workers instead of oversubscribing 2x
+            let auto = std::thread::available_parallelism()
+                .map(|n| (n.get() / 2).max(1))
+                .unwrap_or(1);
+            let t = if *threads == 0 { auto } else { *threads };
+            for _ in &blocks {
+                backends.push(Box::new(ParallelRefBackend::with_threads(order, t)));
+            }
+        }
         WorkerBackend::Pjrt { artifact_dir } => {
-            let mut rt = PjrtRuntime::new(artifact_dir).expect("worker: loading artifacts");
-            for b in &blocks {
-                backends.push(Box::new(
-                    rt.stage_backend(b).expect("worker: compiling stage artifact"),
-                ));
+            #[cfg(feature = "pjrt")]
+            {
+                let mut rt = PjrtRuntime::new(artifact_dir).expect("worker: loading artifacts");
+                for b in &blocks {
+                    backends.push(Box::new(
+                        rt.stage_backend(b).expect("worker: compiling stage artifact"),
+                    ));
+                }
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                let _ = artifact_dir;
+                panic!(
+                    "worker: PJRT backend requested but the binary was built \
+                     without the `pjrt` feature; use --rust-ref/--parallel or \
+                     rebuild with --features pjrt"
+                );
             }
         }
     }
@@ -107,10 +143,16 @@ fn worker_main(
     while let Ok(cmd) = rx.recv() {
         match cmd {
             Cmd::Stage { dt, a, b } => {
+                // boundary phase (full stage for non-split backends): after
+                // this every outbound trace is final
                 for (i, blk) in blocks.iter_mut().enumerate() {
-                    let t = backends[i].stage(blk, dt, a, b).expect("stage failed");
-                    acc(&mut times, &t);
+                    let t = backends[i].stage_boundary(blk, dt, a, b).expect("stage failed");
+                    times.accumulate(&t);
                 }
+                // ship traces before the interior sweep so the coordinator
+                // routes them while this worker keeps computing; the halo
+                // install (Cmd::SetHalo) queues behind the sweep, exactly
+                // the paper's compute/communication overlap
                 let out: Vec<OutTrace> = outbound
                     .iter()
                     .map(|&(bi, elem, face, dst, slot)| {
@@ -118,6 +160,13 @@ fn worker_main(
                     })
                     .collect();
                 tx.send(Resp::Staged(out)).ok();
+                for (blk, backend) in blocks.iter_mut().zip(backends.iter_mut()) {
+                    let (mut v, _halo) = blk.split_for_overlap();
+                    let t = backend
+                        .stage_interior(&mut v, dt, a, b)
+                        .expect("interior stage failed");
+                    times.accumulate(&t);
+                }
             }
             Cmd::SetHalo(updates) => {
                 for (bi, slot, data) in updates {
@@ -141,16 +190,6 @@ fn worker_main(
     }
 }
 
-fn acc(into: &mut KernelTimes, from: &KernelTimes) {
-    into.volume_loop += from.volume_loop;
-    into.int_flux += from.int_flux;
-    into.interp_q += from.interp_q;
-    into.lift += from.lift;
-    into.rk += from.rk;
-    into.bound_flux += from.bound_flux;
-    into.parallel_flux += from.parallel_flux;
-}
-
 /// A heterogeneous run: CPU worker + MIC worker + the routing fabric.
 pub struct HeteroRun {
     workers: Vec<Worker>,
@@ -161,9 +200,11 @@ pub struct HeteroRun {
     pub order: usize,
     pub exchange_every_stage: bool,
     pub steps_taken: usize,
-    /// wall time spent inside Stage round-trips (both workers, overlapped)
+    /// wall time until every worker has shipped its outbound traces (the
+    /// boundary phase; the full stage for non-split backends)
     pub stage_wall_s: f64,
-    /// wall time spent routing traces (the "PCI/MPI" fabric)
+    /// wall time to route traces and install halos — overlapped with the
+    /// workers' interior sweeps, so this includes any wait for them
     pub exchange_wall_s: f64,
 }
 

@@ -36,6 +36,13 @@ impl ProfileReport {
         self.rows.iter().map(|(_, s)| s).sum()
     }
 
+    /// Speedup of this profile over a baseline (baseline total / this
+    /// total); `benches/end_to_end.rs` uses it to compare the scalar and
+    /// parallel drivers' accumulated kernel times.
+    pub fn speedup_over(&self, baseline: &ProfileReport) -> f64 {
+        baseline.total() / self.total().max(1e-300)
+    }
+
     /// (kernel, seconds, fraction) sorted by descending share.
     pub fn fractions(&self) -> Vec<(&'static str, f64, f64)> {
         let total = self.total().max(1e-300);
@@ -78,6 +85,19 @@ mod tests {
         let sum: f64 = f.iter().map(|x| x.2).sum();
         assert!((sum - 1.0).abs() < 1e-12);
         assert!((p.total() - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let slow = ProfileReport::from_kernel_times(&KernelTimes {
+            volume_loop: 4.0,
+            ..Default::default()
+        });
+        let fast = ProfileReport::from_kernel_times(&KernelTimes {
+            volume_loop: 1.0,
+            ..Default::default()
+        });
+        assert!((fast.speedup_over(&slow) - 4.0).abs() < 1e-12);
     }
 
     #[test]

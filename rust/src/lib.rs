@@ -14,17 +14,26 @@
 //! solver for coupled elastic-acoustic wave propagation. Its per-timestep
 //! compute graph is authored in JAX (+ Pallas kernels) and AOT-compiled to
 //! HLO at build time (`make artifacts`); this crate loads and executes the
-//! artifacts through PJRT ([`runtime`]) so python is never on the run path.
+//! artifacts through PJRT ([`runtime`], behind the off-by-default `pjrt`
+//! cargo feature) so python is never on the run path. Without artifacts
+//! the pure-rust kernels serve as both oracle and production CPU path.
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`mesh`]       — Morton-ordered octree hexahedral meshes, connectivity
-//! * [`partition`]  — level-1 splice, level-2 nested CPU/MIC split, balance
+//! * [`partition`]  — level-1 splice, level-2 nested CPU/MIC split (also
+//!   applied block-locally: `partition::nested::split_block_elements`),
+//!   balance
 //! * [`costmodel`]  — calibrated Stampede kernel/PCI/network time models
 //! * [`sim`]        — discrete-event heterogeneous cluster simulator
-//! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels
+//! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels;
+//!   `solver::parallel` is the multithreaded boundary/interior CPU backend
+//!   and `solver::driver` the multi-block driver with optional
+//!   compute/exchange overlap (see PERF.md)
 //! * [`runtime`]    — PJRT artifact registry, compile cache, execution
-//! * [`coordinator`]— host/offload per-node flow, experiments, reports
+//!   (`runtime::client` needs `--features pjrt`)
+//! * [`coordinator`]— host/offload per-node flow (workers ship traces
+//!   between the boundary and interior phases), experiments, reports
 
 pub mod coordinator;
 pub mod costmodel;

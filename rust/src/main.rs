@@ -33,7 +33,8 @@ USAGE: repro <command> [--key value] [--flag]
 COMMANDS
   run         end-to-end wave solve on the CPU+MIC worker pair
                 --n 4  --order 2  --steps 20  --nodes 1  --artifacts artifacts
-                --rust-ref  --two-tree  --sync-per-step
+                --rust-ref  --parallel [--threads N]  --two-tree
+                --sync-per-step
   partition   nested-partition statistics
                 --n 16  --nodes 4  --order 7  [--mic-fraction F]
   balance     CPU/MIC load-balance solve   --order 7  --elems 8192
@@ -41,7 +42,8 @@ COMMANDS
               table6-1 fig6-2 weak-scaling | all
                                            [--out results] [--steps 118]
   validate    convergence vs the analytic wave
-                --orders 2,3,4  --n 2  [--rust-ref] [--artifacts artifacts]
+                --orders 2,3,4  --n 2  [--rust-ref | --parallel]
+                [--artifacts artifacts]
   ablation    exchange-schedule ablation   --order 3 --n 2 [--artifacts ...]
 ";
 
@@ -103,16 +105,15 @@ fn main() -> repro::Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "run" => {
-            let a = Args::parse(rest, &["rust-ref", "two-tree", "sync-per-step"]);
+            let a = Args::parse(rest, &["rust-ref", "parallel", "two-tree", "sync-per-step"]);
             run_solve(
                 a.get("n", 4),
                 a.get("order", 2),
                 a.get("steps", 20),
                 a.get("nodes", 1),
-                a.flag("rust-ref"),
+                worker_backend(&a),
                 a.flag("two-tree"),
                 !a.flag("sync-per-step"),
-                &a.get_str("artifacts", "artifacts"),
             )
         }
         "partition" => {
@@ -189,14 +190,13 @@ fn main() -> repro::Result<()> {
             Ok(())
         }
         "validate" => {
-            let a = Args::parse(rest, &["rust-ref"]);
+            let a = Args::parse(rest, &["rust-ref", "parallel"]);
             let orders = a.get_str("orders", "2,3,4");
             let n = a.get("n", 2usize);
-            let artifacts = a.get_str("artifacts", "artifacts");
             let mut prev: Option<f64> = None;
             for tok in orders.split(',') {
                 let order: usize = tok.trim().parse()?;
-                let err = validate_order(order, n, a.flag("rust-ref"), &artifacts)?;
+                let err = validate_order(order, n, worker_backend(&a))?;
                 let note = match prev {
                     Some(p) if err < p => " (converging)",
                     Some(_) => " (!! not converging)",
@@ -208,16 +208,13 @@ fn main() -> repro::Result<()> {
             Ok(())
         }
         "ablation" => {
-            let a = Args::parse(rest, &["rust-ref"]);
+            let a = Args::parse(rest, &["rust-ref", "parallel"]);
             let order = a.get("order", 3usize);
             let n = a.get("n", 2usize);
-            let artifacts = a.get_str("artifacts", "artifacts");
             for (label, every_stage) in
                 [("exchange every stage", true), ("sync once per step (paper §5.5)", false)]
             {
-                let err = validate_order_mode(
-                    order, n, a.flag("rust-ref"), &artifacts, every_stage,
-                )?;
+                let err = validate_order_mode(order, n, worker_backend(&a), every_stage)?;
                 println!("{label}: rel L2 error {err:.3e}");
             }
             Ok(())
@@ -232,6 +229,34 @@ fn main() -> repro::Result<()> {
     }
 }
 
+/// Backend selection shared by run/validate/ablation:
+/// --parallel beats --rust-ref beats the PJRT artifact path.
+fn worker_backend(a: &Args) -> WorkerBackend {
+    if a.flag("parallel") {
+        WorkerBackend::RustParallel { threads: a.get("threads", 0usize) }
+    } else if a.flag("rust-ref") {
+        WorkerBackend::RustRef
+    } else {
+        WorkerBackend::Pjrt { artifact_dir: a.get_str("artifacts", "artifacts").into() }
+    }
+}
+
+fn backend_label(b: &WorkerBackend) -> &'static str {
+    match b {
+        WorkerBackend::RustRef => "rust-ref",
+        WorkerBackend::RustParallel { .. } => "rust-parallel",
+        WorkerBackend::Pjrt { .. } => "pjrt",
+    }
+}
+
+/// Load the artifact manifest when the backend needs one (PJRT only).
+fn manifest_for(b: &WorkerBackend) -> repro::Result<Option<ArtifactManifest>> {
+    match b {
+        WorkerBackend::Pjrt { artifact_dir } => Ok(Some(ArtifactManifest::load(artifact_dir)?)),
+        _ => Ok(None),
+    }
+}
+
 /// End-to-end solve on the two-worker heterogeneous coordinator.
 #[allow(clippy::too_many_arguments)]
 fn run_solve(
@@ -239,10 +264,9 @@ fn run_solve(
     order: usize,
     steps: usize,
     nodes: usize,
-    rust_ref: bool,
+    backend: WorkerBackend,
     two_tree: bool,
     exchange_every_stage: bool,
-    artifacts: &str,
 ) -> repro::Result<()> {
     use repro::coordinator::HeteroRun;
     let mesh = if two_tree { two_tree_geometry(n) } else { unit_cube_geometry(n) };
@@ -254,12 +278,7 @@ fn run_solve(
     let owners = np.owners();
     let (lblocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
 
-    let backend = if rust_ref {
-        WorkerBackend::RustRef
-    } else {
-        WorkerBackend::Pjrt { artifact_dir: artifacts.into() }
-    };
-    let manifest = (!rust_ref).then(|| ArtifactManifest::load(artifacts)).transpose()?;
+    let manifest = manifest_for(&backend)?;
     let basis = LglBasis::new(order);
     let mut states = Vec::new();
     let mut device_of_owner = Vec::new();
@@ -287,14 +306,14 @@ fn run_solve(
         mesh.elements.iter().map(|e| e.h[0].min(e.h[1]).min(e.h[2])).fold(f64::MAX, f64::min);
     let dt = stable_dt(0.3, hmin, cmax as f64, order);
 
+    let label = backend_label(&backend);
     let mut run = HeteroRun::launch(&lblocks, states, plan, &device_of_owner, backend, order)?;
     run.exchange_every_stage = exchange_every_stage;
     let e0 = run.energy()?;
     println!(
-        "run: {} elements, order {order}, {} owners, dt {dt:.2e}, backend {}",
+        "run: {} elements, order {order}, {} owners, dt {dt:.2e}, backend {label}",
         mesh.len(),
         lblocks.len(),
-        if rust_ref { "rust-ref" } else { "pjrt" }
     );
     let t0 = std::time::Instant::now();
     run.run(dt, steps)?;
@@ -314,16 +333,15 @@ fn run_solve(
     Ok(())
 }
 
-fn validate_order(order: usize, n: usize, rust_ref: bool, artifacts: &str) -> repro::Result<f64> {
-    validate_order_mode(order, n, rust_ref, artifacts, true)
+fn validate_order(order: usize, n: usize, backend: WorkerBackend) -> repro::Result<f64> {
+    validate_order_mode(order, n, backend, true)
 }
 
 /// Convergence of the full in-process stack against the analytic solution.
 fn validate_order_mode(
     order: usize,
     n: usize,
-    rust_ref: bool,
-    artifacts: &str,
+    backend: WorkerBackend,
     exchange_every_stage: bool,
 ) -> repro::Result<f64> {
     use repro::coordinator::HeteroRun;
@@ -332,12 +350,7 @@ fn validate_order_mode(
     let np = nested_partition(&mesh, &node_part, 0.5);
     let owners = np.owners();
     let (lblocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
-    let backend = if rust_ref {
-        WorkerBackend::RustRef
-    } else {
-        WorkerBackend::Pjrt { artifact_dir: artifacts.into() }
-    };
-    let manifest = (!rust_ref).then(|| ArtifactManifest::load(artifacts)).transpose()?;
+    let manifest = manifest_for(&backend)?;
     let basis = LglBasis::new(order);
     let w = std::f64::consts::PI * 3f64.sqrt();
     let mut states = Vec::new();

@@ -131,6 +131,28 @@ pub fn nested_partition(mesh: &Mesh, node: &Partition, mic_fraction: f64) -> Nes
     NestedPartition { node: node.clone(), device, node_counts }
 }
 
+/// The level-2 split applied *inside one extracted block*: partition the
+/// block's real elements into **boundary** (any face is a halo face, i.e.
+/// touches an element owned by someone else — exactly the elements that
+/// own communication) and **interior** (all faces local or physical
+/// boundary). This is the same depth-0 / depth>=1 distinction as
+/// [`boundary_depths`], but computed from the block-local `(K, 6)`
+/// connectivity (`LOCAL_HALO` faces) so the in-node parallel backend can
+/// classify without the global mesh. Both vectors preserve Morton order.
+pub fn split_block_elements(conn: &[i32], k_real: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut boundary = Vec::new();
+    let mut interior = Vec::new();
+    for e in 0..k_real {
+        let faces = &conn[e * 6..e * 6 + 6];
+        if faces.iter().any(|&c| c == crate::mesh::halo::LOCAL_HALO) {
+            boundary.push(e);
+        } else {
+            interior.push(e);
+        }
+    }
+    (boundary, interior)
+}
+
 /// Count faces between CPU- and MIC-owned elements of the same node — the
 /// per-step PCI surface (each shared face transfers one trace each way).
 pub fn pci_faces(mesh: &Mesh, np: &NestedPartition) -> Vec<usize> {
@@ -269,6 +291,27 @@ mod tests {
         for (e, &o) in owners.iter().enumerate() {
             assert_eq!(o / 2, node.assignment[e]);
             assert_eq!(o % 2 == 1, np.device[e] == DeviceKind::Mic);
+        }
+    }
+
+    #[test]
+    fn block_split_matches_depth_zero() {
+        // block-local classification must agree with the global depth-0 set
+        let m = mesh(4);
+        let node = splice(&m, 2);
+        let (blocks, _) = crate::mesh::build_local_blocks(&m, &node.assignment, 2);
+        for (nd, blk) in blocks.iter().enumerate() {
+            let flat: Vec<i32> = blk.conn.iter().flatten().copied().collect();
+            let (boundary, interior) = split_block_elements(&flat, blk.len());
+            assert_eq!(boundary.len() + interior.len(), blk.len());
+            let depths = boundary_depths(&m, &node.assignment, nd);
+            let depth_of: std::collections::HashMap<usize, usize> = depths.into_iter().collect();
+            for &e in &boundary {
+                assert_eq!(depth_of[&blk.global_ids[e]], 0, "boundary elements sit at depth 0");
+            }
+            for &e in &interior {
+                assert!(depth_of[&blk.global_ids[e]] >= 1, "interior elements sit deeper");
+            }
         }
     }
 

@@ -1,5 +1,10 @@
 //! PJRT runtime: load the AOT artifacts and execute them.
 //!
+//! The execution half ([`client`]) depends on the `xla` crate (a git-only
+//! dependency the offline build cannot fetch) and is therefore gated
+//! behind the off-by-default `pjrt` cargo feature; manifest parsing and
+//! bucket selection ([`artifacts`]) are always available.
+//!
 //! Python (jax + pallas) runs once at build time (`make artifacts`),
 //! lowering the L2 stage function to HLO **text** (xla_extension 0.5.1
 //! rejects jax>=0.5 serialized protos — 64-bit instruction ids; the text
@@ -8,7 +13,9 @@
 //! the coordinator's hot path never touches python.
 
 pub mod artifacts;
+#[cfg(feature = "pjrt")]
 pub mod client;
 
 pub use artifacts::{ArtifactManifest, ArtifactMeta};
+#[cfg(feature = "pjrt")]
 pub use client::{PjrtBackend, PjrtRuntime};

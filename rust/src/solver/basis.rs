@@ -34,6 +34,9 @@ pub struct LglBasis {
     pub weights: Vec<f64>,
     /// Differentiation matrix, row-major (M x M): D[i][j] = l'_j(x_i).
     pub d: Vec<f64>,
+    /// `d` pre-cast to f32 once — the reference kernels work in f32 and
+    /// used to pay an f64->f32 convert in the innermost derivative loop.
+    pub d32: Vec<f32>,
 }
 
 impl LglBasis {
@@ -88,7 +91,8 @@ impl LglBasis {
             }
             d[i * m + i] = -rowsum; // negative-sum trick
         }
-        LglBasis { order, nodes, weights, d }
+        let d32 = d.iter().map(|&v| v as f32).collect();
+        LglBasis { order, nodes, weights, d, d32 }
     }
 
     pub fn m(&self) -> usize {
@@ -150,6 +154,17 @@ mod tests {
         let x = (1.0f64 / 5.0).sqrt();
         assert!((b.nodes[1] + x).abs() < 1e-12);
         assert!((b.nodes[2] - x).abs() < 1e-12);
+    }
+
+    #[test]
+    fn d32_mirrors_d() {
+        for order in [2usize, 3, 7] {
+            let b = LglBasis::new(order);
+            assert_eq!(b.d32.len(), b.d.len());
+            for (lo, hi) in b.d32.iter().zip(&b.d) {
+                assert_eq!(*lo, *hi as f32);
+            }
+        }
     }
 
     #[test]

@@ -31,6 +31,52 @@ pub fn apply_exchange(blocks: &mut [BlockState], plan: &ExchangePlan) {
     }
 }
 
+/// Staging area for the overlapped schedule: outbound halo traces are
+/// gathered (copied out) right after the boundary phase, then scattered
+/// into destination halos *while* the interior sweep runs — the in-process
+/// stand-in for posting sends as soon as boundary data is ready (paper
+/// §5.5). Buffers are reused across stages.
+#[derive(Debug, Default)]
+pub struct ExchangeStaging {
+    /// Per destination owner: the halo slots to fill and the packed trace
+    /// data, one `9*M*M` span per slot, in the same order.
+    pub per_dst: Vec<(Vec<usize>, Vec<f32>)>,
+}
+
+/// Copy every outbound trace of the plan into `staging`. After this call
+/// the source blocks' traces may be rewritten freely.
+pub fn gather_exchange(blocks: &[BlockState], plan: &ExchangePlan, staging: &mut ExchangeStaging) {
+    staging.per_dst.resize_with(plan.copies.len(), Default::default);
+    for (dst, copies) in plan.copies.iter().enumerate() {
+        let (slots, data) = &mut staging.per_dst[dst];
+        slots.clear();
+        data.clear();
+        if dst >= blocks.len() {
+            continue;
+        }
+        for &(src_owner, src_elem, src_face, slot) in copies {
+            slots.push(slot);
+            data.extend_from_slice(blocks[src_owner].trace_slice(src_elem, src_face));
+        }
+    }
+}
+
+/// Scatter previously gathered traces into per-destination halo storage.
+/// `halos[dst]` is destination block `dst`'s halo array, `sz` the face
+/// trace size (`9*M*M`). Safe to run concurrently with interior compute:
+/// nothing in the interior sweep reads or writes the halo.
+pub fn scatter_exchange(halos: &mut [&mut [f32]], sz: usize, staging: &ExchangeStaging) {
+    for (dst, (slots, data)) in staging.per_dst.iter().enumerate() {
+        if dst >= halos.len() {
+            continue;
+        }
+        let halo = &mut *halos[dst];
+        for (i, &slot) in slots.iter().enumerate() {
+            halo[slot * sz..(slot + 1) * sz].copy_from_slice(&data[i * sz..(i + 1) * sz]);
+        }
+    }
+}
+
 /// Total bytes moved by one application of the plan (for traffic accounting).
 pub fn exchange_bytes(blocks: &[BlockState], plan: &ExchangePlan) -> usize {
     let mut total = 0;
@@ -70,6 +116,38 @@ mod tests {
         assert!(blocks[0].halo[..live].iter().all(|&v| v == 2.0));
         let live1 = blocks[1].halo_real * 9 * blocks[1].m * blocks[1].m;
         assert!(blocks[1].halo[..live1].iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn gather_scatter_equals_apply() {
+        let mesh = unit_cube_geometry(2);
+        let owners: Vec<usize> = (0..8).map(|e| e % 2).collect();
+        let (lblocks, plan) = build_local_blocks(&mesh, &owners, 2);
+        let mk = || -> Vec<BlockState> {
+            let mut blocks: Vec<BlockState> = lblocks
+                .iter()
+                .map(|b| BlockState::from_local_block(b, 2, b.len(), b.halo_len.max(1)))
+                .collect();
+            for (i, b) in blocks.iter_mut().enumerate() {
+                for (j, v) in b.q.iter_mut().enumerate() {
+                    *v = (i * 1000 + j % 97) as f32 * 0.01;
+                }
+                b.refresh_traces();
+            }
+            blocks
+        };
+        let mut direct = mk();
+        apply_exchange(&mut direct, &plan);
+
+        let mut staged = mk();
+        let mut staging = ExchangeStaging::default();
+        gather_exchange(&staged, &plan, &mut staging);
+        let sz = 9 * staged[0].m * staged[0].m;
+        let mut halos: Vec<&mut [f32]> = staged.iter_mut().map(|b| b.halo.as_mut_slice()).collect();
+        scatter_exchange(&mut halos, sz, &staging);
+        for (a, b) in direct.iter().zip(&staged) {
+            assert_eq!(a.halo, b.halo);
+        }
     }
 
     #[test]

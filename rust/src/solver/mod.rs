@@ -8,17 +8,21 @@
 //! a pure-rust **reference backend** implementing the same stage math,
 //! used (a) to validate the PJRT path end to end, (b) as the
 //! scalar-CPU-kernel stand-in when profiling the paper's baseline on this
-//! machine.
+//! machine — plus a **multithreaded backend** ([`parallel`]) that applies
+//! the paper's level-2 boundary/interior split inside a block and overlaps
+//! halo exchange with interior compute ([`driver`] `overlap = true`).
 
 pub mod analytic;
 pub mod basis;
 pub mod driver;
 pub mod exchange;
+pub mod parallel;
 pub mod reference;
 pub mod rk;
 pub mod state;
 
 pub use basis::LglBasis;
 pub use driver::{Driver, StageBackend};
+pub use parallel::ParallelRefBackend;
 pub use rk::{LSRK_A, LSRK_B, N_STAGES};
-pub use state::BlockState;
+pub use state::{BlockState, InteriorView};

@@ -1,0 +1,509 @@
+//! Multithreaded CPU stage backend with the paper's level-2 nested split
+//! applied *inside* a block.
+//!
+//! [`ParallelRefBackend`] advances the same DGSEM stage math as the scalar
+//! reference backend (it shares `reference::rhs_element`, so results are
+//! bitwise identical), but sweeps elements from a scoped thread pool with
+//! per-thread scratch, in two phases mirroring Fig 4.1's CPU/accelerator
+//! concurrency:
+//!
+//! 1. **boundary phase** — elements with at least one halo face (the
+//!    communication-owning elements, `partition::nested::split_block_elements`)
+//!    are advanced first: RHS, RK update, and a refresh of exactly their
+//!    halo-facing face traces. After this phase every outbound trace of the
+//!    exchange plan is final.
+//! 2. **interior phase** — the remaining elements (which never touch the
+//!    halo) are advanced while the driver concurrently scatters the
+//!    gathered boundary traces into neighbor halos
+//!    ([`crate::solver::driver::Driver`] with `overlap = true`, or the
+//!    [`crate::coordinator::node`] workers, which ship traces between the
+//!    phases).
+//!
+//! Phase ordering is exact, not approximate: all RHS evaluations read the
+//! pre-stage traces (the boundary phase refreshes only halo-facing faces,
+//! which same-block elements never read), and element updates are
+//! per-element independent.
+//!
+//! Reported [`KernelTimes`] sum the per-thread RHS kernel timers (CPU
+//! seconds, so they can exceed wall time) and attribute rk/interp_q by
+//! phase wall time.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use super::basis::LglBasis;
+use super::driver::StageBackend;
+use super::reference::{rhs_element, ElemScratch, KernelTimes, RhsCtx};
+use super::state::{refresh_elem_face, refresh_elem_traces, BlockState, InteriorView, NFIELDS};
+use crate::mesh::halo::LOCAL_HALO;
+use crate::partition::nested::split_block_elements;
+use crate::Result;
+
+/// Boundary/interior element split of one block, plus the halo-facing
+/// (element, face) pairs whose traces feed the exchange plan.
+#[derive(Debug, Clone, Default)]
+pub struct BlockSplit {
+    pub boundary: Vec<usize>,
+    pub interior: Vec<usize>,
+    pub halo_faces: Vec<(usize, usize)>,
+}
+
+/// Classify a block's real elements from its local connectivity.
+pub fn classify_elements(conn: &[i32], k_real: usize) -> BlockSplit {
+    let (boundary, interior) = split_block_elements(conn, k_real);
+    let mut halo_faces = Vec::new();
+    for &e in &boundary {
+        for f in 0..6 {
+            if conn[e * 6 + f] == LOCAL_HALO {
+                halo_faces.push((e, f));
+            }
+        }
+    }
+    BlockSplit { boundary, interior, halo_faces }
+}
+
+/// The multithreaded reference backend (see module docs).
+pub struct ParallelRefBackend {
+    basis: LglBasis,
+    threads: usize,
+    /// dq accumulator keyed by (k_pad, m), reused across stages.
+    dq: HashMap<(usize, usize), Vec<f32>>,
+    /// One element-scratch per worker thread.
+    pool: Vec<ElemScratch>,
+    /// Split computed by the boundary phase, consumed by the interior one.
+    pending: Option<BlockSplit>,
+    /// Identity element list 0..k_real, grown on demand (avoids a per-stage
+    /// allocation in the full trace refresh).
+    all_elems: Vec<usize>,
+}
+
+impl ParallelRefBackend {
+    /// Backend with one worker per available hardware thread.
+    pub fn new(order: usize) -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::with_threads(order, threads)
+    }
+
+    /// Backend with an explicit worker count (>= 1).
+    pub fn with_threads(order: usize, threads: usize) -> Self {
+        ParallelRefBackend {
+            basis: LglBasis::new(order),
+            threads: threads.max(1),
+            dq: HashMap::new(),
+            pool: Vec::new(),
+            pending: None,
+            all_elems: Vec::new(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn ensure_pool(&mut self, m: usize) {
+        // scratch is sized by m; the basis fixes m for every block this
+        // backend can legally stage
+        debug_assert_eq!(m, self.basis.m());
+        while self.pool.len() < self.threads {
+            self.pool.push(ElemScratch::new(m));
+        }
+    }
+
+    /// Boundary phase on a full state (RHS + RK + halo-face trace refresh
+    /// for boundary elements). Returns the computed split for reuse.
+    fn phase_boundary(
+        &mut self,
+        st: &mut BlockState,
+        split: &BlockSplit,
+        dt: f32,
+        a: f32,
+        b: f32,
+    ) -> KernelTimes {
+        let m = st.m;
+        let vol = m * m * m;
+        let esz = NFIELDS * vol;
+        self.ensure_pool(m);
+        let dq = self
+            .dq
+            .entry((st.k_pad, m))
+            .or_insert_with(|| vec![0.0; st.k_pad * esz]);
+        let cx = RhsCtx::of(st);
+        let mut times =
+            par_rhs(&self.basis, self.threads, &mut self.pool, dq, &cx, &split.boundary);
+        let t0 = Instant::now();
+        par_update(self.threads, &mut st.q, &mut st.res, dq, &split.boundary, esz, dt, a, b);
+        times.rk += t0.elapsed().as_secs_f64();
+        // refresh exactly the halo-facing traces: same-block elements never
+        // read these faces, so the pre-stage trace invariant holds for the
+        // interior sweep while the exchange plan sees final data
+        let t0 = Instant::now();
+        let tsz = 6 * NFIELDS * m * m;
+        for &(e, f) in &split.halo_faces {
+            let q_e = &st.q[e * esz..(e + 1) * esz];
+            let tr_e = &mut st.traces[e * tsz..(e + 1) * tsz];
+            refresh_elem_face(m, q_e, tr_e, f);
+        }
+        times.interp_q += t0.elapsed().as_secs_f64();
+        times
+    }
+
+    /// Interior phase on a split view (RHS + RK for interior elements,
+    /// then a full trace refresh of every real element).
+    fn phase_interior(
+        &mut self,
+        v: &mut InteriorView<'_>,
+        split: &BlockSplit,
+        dt: f32,
+        a: f32,
+        b: f32,
+    ) -> KernelTimes {
+        let m = v.m;
+        let vol = m * m * m;
+        let esz = NFIELDS * vol;
+        self.ensure_pool(m);
+        let dq = self
+            .dq
+            .entry((v.k_pad, m))
+            .or_insert_with(|| vec![0.0; v.k_pad * esz]);
+        let cx = RhsCtx {
+            m,
+            q: &*v.q,
+            traces: &*v.traces,
+            // interior elements have no halo faces by construction
+            halo: &[],
+            conn: v.conn,
+            halo_idx: v.halo_idx,
+            mats: v.mats,
+            halo_mats: v.halo_mats,
+            h: v.h,
+        };
+        let mut times =
+            par_rhs(&self.basis, self.threads, &mut self.pool, dq, &cx, &split.interior);
+        let t0 = Instant::now();
+        par_update(self.threads, v.q, v.res, dq, &split.interior, esz, dt, a, b);
+        times.rk += t0.elapsed().as_secs_f64();
+        // full refresh of every real element: interior faces get their
+        // post-update traces; boundary halo faces are rewritten with the
+        // values the boundary phase already published (idempotent)
+        let t0 = Instant::now();
+        while self.all_elems.len() < v.k_real {
+            self.all_elems.push(self.all_elems.len());
+        }
+        par_refresh(self.threads, m, v.q, v.traces, &self.all_elems[..v.k_real]);
+        times.interp_q += t0.elapsed().as_secs_f64();
+        times
+    }
+}
+
+impl StageBackend for ParallelRefBackend {
+    fn stage(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> Result<KernelTimes> {
+        self.pending = None;
+        let split = classify_elements(&st.conn, st.k_real);
+        let mut times = self.phase_boundary(st, &split, dt, a, b);
+        let (mut view, _halo) = st.split_for_overlap();
+        times.accumulate(&self.phase_interior(&mut view, &split, dt, a, b));
+        Ok(times)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-parallel"
+    }
+
+    fn supports_overlap(&self) -> bool {
+        true
+    }
+
+    fn stage_boundary(
+        &mut self,
+        st: &mut BlockState,
+        dt: f32,
+        a: f32,
+        b: f32,
+    ) -> Result<KernelTimes> {
+        let split = classify_elements(&st.conn, st.k_real);
+        let times = self.phase_boundary(st, &split, dt, a, b);
+        self.pending = Some(split);
+        Ok(times)
+    }
+
+    fn stage_interior(
+        &mut self,
+        v: &mut InteriorView<'_>,
+        dt: f32,
+        a: f32,
+        b: f32,
+    ) -> Result<KernelTimes> {
+        let split = match self.pending.take() {
+            Some(s) => s,
+            None => classify_elements(v.conn, v.k_real),
+        };
+        Ok(self.phase_interior(v, &split, dt, a, b))
+    }
+}
+
+/// RHS sweep over an element subset from up to `threads` scoped workers.
+/// Each worker owns one [`ElemScratch`] and a disjoint set of per-element
+/// `dq` slices (handed out through a take-once slot table, so no unsafe
+/// aliasing anywhere). Returns the per-thread kernel timers summed.
+fn par_rhs(
+    basis: &LglBasis,
+    threads: usize,
+    pool: &mut [ElemScratch],
+    dq: &mut [f32],
+    cx: &RhsCtx<'_>,
+    elems: &[usize],
+) -> KernelTimes {
+    let mut total = KernelTimes::default();
+    if elems.is_empty() {
+        return total;
+    }
+    let esz = NFIELDS * cx.m * cx.m * cx.m;
+    let nt = threads.min(elems.len()).max(1);
+    if nt == 1 {
+        let scr = &mut pool[0];
+        for &e in elems {
+            rhs_element(cx, basis, e, &mut dq[e * esz..(e + 1) * esz], scr, &mut total);
+        }
+        return total;
+    }
+    let mut slots: Vec<Option<&mut [f32]>> = dq.chunks_mut(esz).map(Some).collect();
+    let chunk = elems.len().div_euclid(nt) + usize::from(elems.len() % nt != 0);
+    let mut jobs: Vec<(Vec<(usize, &mut [f32])>, &mut ElemScratch)> = Vec::new();
+    let mut pool_iter = pool.iter_mut();
+    for ids in elems.chunks(chunk) {
+        let items: Vec<(usize, &mut [f32])> = ids
+            .iter()
+            .map(|&e| (e, slots[e].take().expect("element listed twice")))
+            .collect();
+        jobs.push((items, pool_iter.next().expect("scratch pool smaller than thread count")));
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .map(|(items, scr)| {
+                let cx = *cx;
+                s.spawn(move || {
+                    let mut t = KernelTimes::default();
+                    for (e, dq_e) in items {
+                        rhs_element(&cx, basis, e, dq_e, scr, &mut t);
+                    }
+                    t
+                })
+            })
+            .collect();
+        for h in handles {
+            total.accumulate(&h.join().expect("rhs worker panicked"));
+        }
+    });
+    total
+}
+
+/// Low-storage RK update of an element subset, threaded the same way.
+#[allow(clippy::too_many_arguments)]
+fn par_update(
+    threads: usize,
+    q: &mut [f32],
+    res: &mut [f32],
+    dq: &[f32],
+    elems: &[usize],
+    esz: usize,
+    dt: f32,
+    a: f32,
+    b: f32,
+) {
+    if elems.is_empty() {
+        return;
+    }
+    let nt = threads.min(elems.len()).max(1);
+    if nt == 1 {
+        for &e in elems {
+            update_elem(
+                &mut q[e * esz..(e + 1) * esz],
+                &mut res[e * esz..(e + 1) * esz],
+                &dq[e * esz..(e + 1) * esz],
+                dt,
+                a,
+                b,
+            );
+        }
+        return;
+    }
+    let mut q_slots: Vec<Option<&mut [f32]>> = q.chunks_mut(esz).map(Some).collect();
+    let mut r_slots: Vec<Option<&mut [f32]>> = res.chunks_mut(esz).map(Some).collect();
+    let chunk = elems.len().div_euclid(nt) + usize::from(elems.len() % nt != 0);
+    std::thread::scope(|s| {
+        for ids in elems.chunks(chunk) {
+            let items: Vec<(&mut [f32], &mut [f32], &[f32])> = ids
+                .iter()
+                .map(|&e| {
+                    (
+                        q_slots[e].take().expect("element listed twice"),
+                        r_slots[e].take().expect("element listed twice"),
+                        &dq[e * esz..(e + 1) * esz],
+                    )
+                })
+                .collect();
+            s.spawn(move || {
+                for (q_e, r_e, dq_e) in items {
+                    update_elem(q_e, r_e, dq_e, dt, a, b);
+                }
+            });
+        }
+    });
+}
+
+#[inline]
+fn update_elem(q_e: &mut [f32], r_e: &mut [f32], dq_e: &[f32], dt: f32, a: f32, b: f32) {
+    for (r, d) in r_e.iter_mut().zip(dq_e) {
+        *r = a * *r + dt * *d;
+    }
+    for (qv, r) in q_e.iter_mut().zip(r_e.iter()) {
+        *qv += b * *r;
+    }
+}
+
+/// Threaded trace refresh of an element subset.
+fn par_refresh(threads: usize, m: usize, q: &[f32], traces: &mut [f32], elems: &[usize]) {
+    if elems.is_empty() {
+        return;
+    }
+    let esz = NFIELDS * m * m * m;
+    let tsz = 6 * NFIELDS * m * m;
+    let nt = threads.min(elems.len()).max(1);
+    if nt == 1 {
+        for &e in elems {
+            refresh_elem_traces(m, &q[e * esz..(e + 1) * esz], &mut traces[e * tsz..(e + 1) * tsz]);
+        }
+        return;
+    }
+    let mut t_slots: Vec<Option<&mut [f32]>> = traces.chunks_mut(tsz).map(Some).collect();
+    let chunk = elems.len().div_euclid(nt) + usize::from(elems.len() % nt != 0);
+    std::thread::scope(|s| {
+        for ids in elems.chunks(chunk) {
+            let items: Vec<(&[f32], &mut [f32])> = ids
+                .iter()
+                .map(|&e| {
+                    (
+                        &q[e * esz..(e + 1) * esz],
+                        t_slots[e].take().expect("element listed twice"),
+                    )
+                })
+                .collect();
+            s.spawn(move || {
+                for (q_e, tr_e) in items {
+                    refresh_elem_traces(m, q_e, tr_e);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+    use crate::solver::reference::{stage as ref_stage, RefScratch};
+    use crate::solver::rk::{LSRK_A, LSRK_B, N_STAGES};
+
+    fn state(order: usize, n: usize) -> BlockState {
+        let mesh = unit_cube_geometry(n);
+        let owners = vec![0usize; mesh.len()];
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 1);
+        let k = blocks[0].len();
+        BlockState::from_local_block(&blocks[0], order, k, 8)
+    }
+
+    #[test]
+    fn classify_single_block_is_all_interior() {
+        let st = state(2, 2);
+        let split = classify_elements(&st.conn, st.k_real);
+        assert!(split.boundary.is_empty());
+        assert_eq!(split.interior.len(), st.k_real);
+        assert!(split.halo_faces.is_empty());
+    }
+
+    #[test]
+    fn classify_two_owner_split() {
+        let mesh = unit_cube_geometry(2);
+        let owners: Vec<usize> = (0..8).map(|e| e % 2).collect();
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 2);
+        for lb in &blocks {
+            let st = BlockState::from_local_block(lb, 1, lb.len(), lb.halo_len.max(1));
+            let split = classify_elements(&st.conn, st.k_real);
+            // the pathological parity split makes every element a halo owner
+            assert_eq!(split.boundary.len(), st.k_real);
+            assert!(split.interior.is_empty());
+            assert_eq!(split.halo_faces.len(), lb.halo_len);
+        }
+    }
+
+    #[test]
+    fn parallel_stage_matches_scalar_bitwise() {
+        for (order, threads) in [(2usize, 1usize), (2, 4), (3, 2), (3, 4)] {
+            let basis = LglBasis::new(order);
+            let w = std::f64::consts::PI * 3f64.sqrt();
+            let ic =
+                |x: [f64; 3]| crate::solver::analytic::standing_wave(x, 0.0, 1.0, 1.0, w);
+            let mut st_s = state(order, 2);
+            st_s.set_initial_condition(&basis, ic);
+            let mut st_p = st_s.clone();
+            let mut scratch = RefScratch::new(&st_s);
+            let mut par = ParallelRefBackend::with_threads(order, threads);
+            for step in 0..3 {
+                for s in 0..N_STAGES {
+                    let (a, b) = (LSRK_A[s] as f32, LSRK_B[s] as f32);
+                    ref_stage(&mut st_s, &basis, &mut scratch, 1e-3, a, b);
+                    par.stage(&mut st_p, 1e-3, a, b).unwrap();
+                }
+                assert_eq!(st_s.q, st_p.q, "order {order} threads {threads} step {step}");
+                assert_eq!(st_s.res, st_p.res);
+                let live = st_s.k_real * 6 * NFIELDS * st_s.m * st_s.m;
+                assert_eq!(st_s.traces[..live], st_p.traces[..live]);
+            }
+        }
+    }
+
+    #[test]
+    fn split_stage_equals_fused_stage() {
+        // stage_boundary + scatter-free stage_interior == stage()
+        let order = 2;
+        let mesh = unit_cube_geometry(2);
+        let owners: Vec<usize> = (0..8).map(|e| usize::from(e >= 4)).collect();
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 2);
+        let basis = LglBasis::new(order);
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        let mut a_state =
+            BlockState::from_local_block(&blocks[0], order, blocks[0].len(), blocks[0].halo_len);
+        a_state.set_initial_condition(&basis, |x| {
+            crate::solver::analytic::standing_wave(x, 0.0, 1.0, 1.0, w)
+        });
+        let mut b_state = a_state.clone();
+        let mut fused = ParallelRefBackend::with_threads(order, 2);
+        let mut split = ParallelRefBackend::with_threads(order, 2);
+        fused.stage(&mut a_state, 1e-3, -0.3, 0.7).unwrap();
+        split.stage_boundary(&mut b_state, 1e-3, -0.3, 0.7).unwrap();
+        let (mut view, _halo) = b_state.split_for_overlap();
+        split.stage_interior(&mut view, 1e-3, -0.3, 0.7).unwrap();
+        assert_eq!(a_state.q, b_state.q);
+        assert_eq!(a_state.traces, b_state.traces);
+    }
+
+    #[test]
+    fn zero_state_stays_zero_parallel() {
+        let mut st = state(2, 2);
+        let mut par = ParallelRefBackend::with_threads(2, 3);
+        par.stage(&mut st, 1e-3, 0.0, 1.0).unwrap();
+        assert!(st.q.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn kernel_times_reported() {
+        let basis = LglBasis::new(2);
+        let mut st = state(2, 2);
+        st.set_initial_condition(&basis, |x| [x[0], 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+        let mut par = ParallelRefBackend::with_threads(2, 2);
+        let t = par.stage(&mut st, 1e-3, 0.0, 1.0).unwrap();
+        assert!(t.volume_loop > 0.0);
+        assert!(t.total() > 0.0);
+    }
+}

@@ -1,14 +1,25 @@
 //! Pure-rust reference implementation of the DGSEM stage.
 //!
 //! Math-identical to python/compile/model.py (same strong-form volume
-//! term, exact Riemann fluxes, mirror BC, lift scaling and LSRK update),
-//! written as straightforward scalar loops. Three roles:
+//! term, exact Riemann fluxes, mirror BC, lift scaling and LSRK update).
+//! Three roles:
 //!
 //! 1. end-to-end oracle for the PJRT artifact path (rust/tests),
 //! 2. the "scalar CPU kernel" when profiling the paper's baseline on this
 //!    machine (coordinator::profile) — its per-kernel timer split mirrors
 //!    Fig 4.1's kernel taxonomy,
 //! 3. a fallback backend when artifacts are absent.
+//!
+//! The hot path is factored per element ([`rhs_element`] over a borrowed
+//! [`RhsCtx`]) so the multithreaded backend ([`super::parallel`]) can sweep
+//! disjoint element sets from a thread pool while sharing these exact
+//! kernels — scalar and parallel backends are bitwise-identical by
+//! construction. The tensor-product derivative is restructured into
+//! line-contiguous sweeps (axis 0/1 are contiguous axpy over face slabs /
+//! rows) with monomorphized fast paths for m = 3, 4, 8, and the Riemann
+//! face kernel is generic over the exterior-trace fetch so the mirror /
+//! neighbor / halo cases are resolved outside the per-node loop instead of
+//! materializing a copied trace.
 
 use std::time::Instant;
 
@@ -50,14 +61,37 @@ impl KernelTimes {
             ("parallel_flux", self.parallel_flux),
         ]
     }
+
+    /// Accumulate another sample (used by drivers and worker threads).
+    pub fn accumulate(&mut self, from: &KernelTimes) {
+        self.volume_loop += from.volume_loop;
+        self.int_flux += from.int_flux;
+        self.interp_q += from.interp_q;
+        self.lift += from.lift;
+        self.rk += from.rk;
+        self.bound_flux += from.bound_flux;
+        self.parallel_flux += from.parallel_flux;
+    }
+}
+
+/// Per-thread scratch for one element's face terms (no allocation on the
+/// hot path; one per worker thread in the parallel backend).
+pub(crate) struct ElemScratch {
+    pub(crate) stress: Vec<f32>,
+    pub(crate) flux: Vec<f32>,
+}
+
+impl ElemScratch {
+    pub(crate) fn new(m: usize) -> Self {
+        let vol = m * m * m;
+        ElemScratch { stress: vec![0.0; 6 * vol], flux: vec![0.0; NFIELDS * m * m] }
+    }
 }
 
 /// Scratch buffers reused across stages (no allocation on the hot path).
 pub struct RefScratch {
-    dq: Vec<f32>,
-    stress: Vec<f32>,
-    tr_p: Vec<f32>,
-    flux: Vec<f32>,
+    pub(crate) dq: Vec<f32>,
+    pub(crate) elem: ElemScratch,
 }
 
 impl RefScratch {
@@ -66,10 +100,49 @@ impl RefScratch {
         let vol = m * m * m;
         RefScratch {
             dq: vec![0.0; st.k_pad * NFIELDS * vol],
-            stress: vec![0.0; 6 * vol],
-            tr_p: vec![0.0; NFIELDS * m * m],
-            flux: vec![0.0; NFIELDS * m * m],
+            elem: ElemScratch::new(m),
         }
+    }
+}
+
+/// Borrowed view of everything the RHS *reads*: the block's state arrays
+/// minus `res`. Safe to share across worker threads while each thread
+/// writes its own elements' `dq` slices. The interior sweep of the
+/// overlapped schedule passes `halo: &[]` — interior elements never index
+/// the halo by construction.
+#[derive(Clone, Copy)]
+pub struct RhsCtx<'a> {
+    pub m: usize,
+    pub q: &'a [f32],
+    pub traces: &'a [f32],
+    pub halo: &'a [f32],
+    pub conn: &'a [i32],
+    pub halo_idx: &'a [i32],
+    pub mats: &'a [f32],
+    pub halo_mats: &'a [f32],
+    pub h: &'a [f32],
+}
+
+impl<'a> RhsCtx<'a> {
+    pub fn of(st: &'a BlockState) -> Self {
+        RhsCtx {
+            m: st.m,
+            q: &st.q,
+            traces: &st.traces,
+            halo: &st.halo,
+            conn: &st.conn,
+            halo_idx: &st.halo_idx,
+            mats: &st.mats,
+            halo_mats: &st.halo_mats,
+            h: &st.h,
+        }
+    }
+
+    #[inline]
+    fn trace_slice(&self, e: usize, f: usize) -> &'a [f32] {
+        let sz = NFIELDS * self.m * self.m;
+        let base = (e * 6 + f) * sz;
+        &self.traces[base..base + sz]
     }
 }
 
@@ -108,150 +181,208 @@ pub fn stage(
 
 /// dq/dt into scratch.dq (real elements only; padding untouched).
 fn rhs(st: &BlockState, basis: &LglBasis, scratch: &mut RefScratch, times: &mut KernelTimes) {
-    let m = st.m;
-    let vol = m * m * m;
-    let face = m * m;
-    let d = &basis.d;
-    let w0 = basis.w0() as f32;
-
+    let cx = RhsCtx::of(st);
+    let vol = st.m * st.m * st.m;
     for e in 0..st.k_real {
         let qb = e * NFIELDS * vol;
-        let rho = st.mats[e * 3];
-        let lam = st.mats[e * 3 + 1];
-        let mu = st.mats[e * 3 + 2];
-        let he = [st.h[e * 3], st.h[e * 3 + 1], st.h[e * 3 + 2]];
         let dq = &mut scratch.dq[qb..qb + NFIELDS * vol];
-        dq.iter_mut().for_each(|v| *v = 0.0);
+        rhs_element(&cx, basis, e, dq, &mut scratch.elem, times);
+    }
+}
 
-        // ---- volume_loop: stress + tensor-product derivatives ----------
-        let t0 = Instant::now();
-        let q = &st.q[qb..qb + NFIELDS * vol];
-        // pointwise stress (Voigt)
-        for n in 0..vol {
-            let tr = q[n] + q[vol + n] + q[2 * vol + n];
-            scratch.stress[n] = lam * tr + 2.0 * mu * q[n];
-            scratch.stress[vol + n] = lam * tr + 2.0 * mu * q[vol + n];
-            scratch.stress[2 * vol + n] = lam * tr + 2.0 * mu * q[2 * vol + n];
-            scratch.stress[3 * vol + n] = 2.0 * mu * q[3 * vol + n];
-            scratch.stress[4 * vol + n] = 2.0 * mu * q[4 * vol + n];
-            scratch.stress[5 * vol + n] = 2.0 * mu * q[5 * vol + n];
+/// dq/dt of a single element into `dq` (a `NFIELDS * m^3` slice).
+///
+/// Reads only this element's `q`, the face traces of its same-block
+/// neighbors, and its halo slots — never the `q` of other elements — so
+/// disjoint element sets can be swept concurrently against one shared
+/// [`RhsCtx`].
+pub(crate) fn rhs_element(
+    cx: &RhsCtx<'_>,
+    basis: &LglBasis,
+    e: usize,
+    dq: &mut [f32],
+    scr: &mut ElemScratch,
+    times: &mut KernelTimes,
+) {
+    let m = cx.m;
+    let vol = m * m * m;
+    let face = m * m;
+    let d = &basis.d32;
+    let w0 = basis.w0() as f32;
+
+    let qb = e * NFIELDS * vol;
+    let rho = cx.mats[e * 3];
+    let lam = cx.mats[e * 3 + 1];
+    let mu = cx.mats[e * 3 + 2];
+    let he = [cx.h[e * 3], cx.h[e * 3 + 1], cx.h[e * 3 + 2]];
+    dq.iter_mut().for_each(|v| *v = 0.0);
+
+    // ---- volume_loop: stress + tensor-product derivatives --------------
+    let t0 = Instant::now();
+    let q = &cx.q[qb..qb + NFIELDS * vol];
+    // pointwise stress (Voigt)
+    for n in 0..vol {
+        let tr = q[n] + q[vol + n] + q[2 * vol + n];
+        scr.stress[n] = lam * tr + 2.0 * mu * q[n];
+        scr.stress[vol + n] = lam * tr + 2.0 * mu * q[vol + n];
+        scr.stress[2 * vol + n] = lam * tr + 2.0 * mu * q[2 * vol + n];
+        scr.stress[3 * vol + n] = 2.0 * mu * q[3 * vol + n];
+        scr.stress[4 * vol + n] = 2.0 * mu * q[4 * vol + n];
+        scr.stress[5 * vol + n] = 2.0 * mu * q[5 * vol + n];
+    }
+    let sc = [2.0 / he[0], 2.0 / he[1], 2.0 / he[2]];
+    // strain eq: dE = sym(grad v); v fields are q[6..9]
+    let (v1, v2, v3) = (&q[6 * vol..7 * vol], &q[7 * vol..8 * vol], &q[8 * vol..9 * vol]);
+    let mut acc = |src: &[f32], axis: usize, dst: usize, scale: f32| {
+        deriv_acc(d, m, axis, src, &mut dq[dst * vol..(dst + 1) * vol], scale);
+    };
+    acc(v1, 0, 0, sc[0]); // E11 = d v1 / dx
+    acc(v2, 1, 1, sc[1]); // E22
+    acc(v3, 2, 2, sc[2]); // E33
+    acc(v3, 1, 3, 0.5 * sc[1]); // E23 = (dv3/dy + dv2/dz)/2
+    acc(v2, 2, 3, 0.5 * sc[2]);
+    acc(v3, 0, 4, 0.5 * sc[0]); // E13
+    acc(v1, 2, 4, 0.5 * sc[2]);
+    acc(v2, 0, 5, 0.5 * sc[0]); // E12
+    acc(v1, 1, 5, 0.5 * sc[1]);
+    // velocity eq: rho dv_i = sum_a dS_ia/dx_a
+    for i in 0..3 {
+        for axis in 0..3 {
+            let sv = S_COL[axis][i];
+            let stress_f = &scr.stress[sv * vol..(sv + 1) * vol];
+            deriv_acc(d, m, axis, stress_f, &mut dq[(6 + i) * vol..(7 + i) * vol], sc[axis] / rho);
         }
-        // derivative of field `src` along `axis`, accumulated into
-        // dq[dst] with scale; axis strides: 0 -> m*m, 1 -> m, 2 -> 1
-        let stride = [face, m, 1usize];
-        let mut deriv_acc = |src: &[f32], axis: usize, dst: usize, scale: f32| {
-            let sa = stride[axis];
-            for i in 0..m {
-                for j in 0..m {
-                    for l in 0..m {
-                        let idx = [i, j, l];
-                        let n = i * face + j * m + l;
-                        let along = idx[axis];
-                        let base = n - along * sa;
-                        let mut acc = 0.0f32;
-                        for t in 0..m {
-                            acc += (d[along * m + t] as f32) * src[base + t * sa];
-                        }
-                        dq[dst * vol + n] += scale * acc;
-                    }
-                }
+    }
+    times.volume_loop += t0.elapsed().as_secs_f64();
+
+    // ---- face terms -----------------------------------------------------
+    for f in 0..6 {
+        let axis = f / 2;
+        let sign = if f % 2 == 0 { -1.0f32 } else { 1.0 };
+        let cf = cx.conn[e * 6 + f];
+        let tr_m = cx.trace_slice(e, f);
+        let t0 = Instant::now();
+        let timer: &mut f64 = match cf {
+            c if c >= 0 => {
+                let nb = c as usize;
+                let tr_p = cx.trace_slice(nb, f ^ 1);
+                let matp = [cx.mats[nb * 3], cx.mats[nb * 3 + 1], cx.mats[nb * 3 + 2]];
+                riemann_face(tr_m, tr_p, [rho, lam, mu], matp, axis, sign, face, &mut scr.flux);
+                &mut times.int_flux
+            }
+            -1 => {
+                let slot = cx.halo_idx[e * 6 + f] as usize;
+                let sz = NFIELDS * face;
+                let tr_p = &cx.halo[slot * sz..(slot + 1) * sz];
+                let matp = [
+                    cx.halo_mats[slot * 3],
+                    cx.halo_mats[slot * 3 + 1],
+                    cx.halo_mats[slot * 3 + 2],
+                ];
+                riemann_face(tr_m, tr_p, [rho, lam, mu], matp, axis, sign, face, &mut scr.flux);
+                &mut times.parallel_flux
+            }
+            _ => {
+                // mirror BC: exterior trace is (-E, v) of the interior one
+                riemann_face_mirror(tr_m, [rho, lam, mu], axis, sign, face, &mut scr.flux);
+                &mut times.bound_flux
             }
         };
-        let sc = [2.0 / he[0], 2.0 / he[1], 2.0 / he[2]];
-        // strain eq: dE = sym(grad v); v fields are q[6..9]
-        let (v1, v2, v3) = (&q[6 * vol..7 * vol], &q[7 * vol..8 * vol], &q[8 * vol..9 * vol]);
-        deriv_acc(v1, 0, 0, sc[0]); // E11 = d v1 / dx
-        deriv_acc(v2, 1, 1, sc[1]); // E22
-        deriv_acc(v3, 2, 2, sc[2]); // E33
-        deriv_acc(v3, 1, 3, 0.5 * sc[1]); // E23 = (dv3/dy + dv2/dz)/2
-        deriv_acc(v2, 2, 3, 0.5 * sc[2]);
-        deriv_acc(v3, 0, 4, 0.5 * sc[0]); // E13
-        deriv_acc(v1, 2, 4, 0.5 * sc[2]);
-        deriv_acc(v2, 0, 5, 0.5 * sc[0]); // E12
-        deriv_acc(v1, 1, 5, 0.5 * sc[1]);
-        // velocity eq: rho dv_i = sum_a dS_ia/dx_a
-        for i in 0..3 {
-            for axis in 0..3 {
-                let sv = S_COL[axis][i];
-                let stress_f = &scratch.stress[sv * vol..(sv + 1) * vol];
-                deriv_acc(stress_f, axis, 6 + i, sc[axis] / rho);
+        *timer += t0.elapsed().as_secs_f64();
+
+        // ---- lift: subtract at the face node layer ---------------------
+        let t0 = Instant::now();
+        let lift = 2.0 / (he[axis] * w0);
+        let layer = if sign < 0.0 { 0 } else { m - 1 };
+        for fld in 0..NFIELDS {
+            let scale = if fld >= 6 { lift / rho } else { lift };
+            for fa in 0..m {
+                for fb in 0..m {
+                    let n = node_on_face(axis, layer, fa, fb, m);
+                    dq[fld * vol + n] -= scale * scr.flux[fld * face + fa * m + fb];
+                }
             }
         }
-        times.volume_loop += t0.elapsed().as_secs_f64();
+        times.lift += t0.elapsed().as_secs_f64();
+    }
+}
 
-        // ---- face terms -------------------------------------------------
-        for f in 0..6 {
-            let axis = f / 2;
-            let sign = if f % 2 == 0 { -1.0f32 } else { 1.0 };
-            let cf = st.conn[e * 6 + f];
-            let tr_m = st.trace_slice(e, f);
-            // exterior trace + material
-            let (matp, timer): ([f32; 3], &mut f64) = match cf {
-                c if c >= 0 => {
-                    let nb = c as usize;
-                    let src = st.trace_slice(nb, f ^ 1);
-                    scratch.tr_p[..NFIELDS * face].copy_from_slice(src);
-                    (
-                        [st.mats[nb * 3], st.mats[nb * 3 + 1], st.mats[nb * 3 + 2]],
-                        &mut times.int_flux,
-                    )
-                }
-                -1 => {
-                    let slot = st.halo_idx[e * 6 + f] as usize;
-                    let sz = NFIELDS * face;
-                    scratch.tr_p[..sz].copy_from_slice(&st.halo[slot * sz..(slot + 1) * sz]);
-                    (
-                        [
-                            st.halo_mats[slot * 3],
-                            st.halo_mats[slot * 3 + 1],
-                            st.halo_mats[slot * 3 + 2],
-                        ],
-                        &mut times.parallel_flux,
-                    )
-                }
-                _ => {
-                    // mirror: (-E, v), same material
-                    for fld in 0..6 {
-                        for n in 0..face {
-                            scratch.tr_p[fld * face + n] = -tr_m[fld * face + n];
-                        }
-                    }
-                    for fld in 6..9 {
-                        for n in 0..face {
-                            scratch.tr_p[fld * face + n] = tr_m[fld * face + n];
-                        }
-                    }
-                    ([rho, lam, mu], &mut times.bound_flux)
-                }
-            };
-            let t0 = Instant::now();
-            riemann_face(
-                tr_m,
-                &scratch.tr_p,
-                [rho, lam, mu],
-                matp,
-                axis,
-                sign,
-                face,
-                &mut scratch.flux,
-            );
-            *timer += t0.elapsed().as_secs_f64();
-
-            // ---- lift: subtract at the face node layer -----------------
-            let t0 = Instant::now();
-            let lift = 2.0 / (he[axis] * w0);
-            let layer = if sign < 0.0 { 0 } else { m - 1 };
-            for fld in 0..NFIELDS {
-                let scale = if fld >= 6 { lift / rho } else { lift };
-                for fa in 0..m {
-                    for fb in 0..m {
-                        let n = node_on_face(axis, layer, fa, fb, m);
-                        dq[fld * vol + n] -= scale * scratch.flux[fld * face + fa * m + fb];
+/// `dst[n] += scale * Σ_t D[along(n), t] · src[line(n, t)]` along `axis`.
+///
+/// Line-contiguous sweeps: axis 0 is an axpy over whole contiguous face
+/// slabs, axis 1 an axpy over contiguous rows, axis 2 a row-local small
+/// matvec over contiguous data. `src` and `dst` must be distinct arrays
+/// (they always are: q/stress vs dq).
+#[inline(always)]
+fn deriv_acc_kernel(d: &[f32], m: usize, axis: usize, src: &[f32], dst: &mut [f32], scale: f32) {
+    let face = m * m;
+    match axis {
+        0 => {
+            // dst[i,:,:] += scale * Σ_t d[i,t] * src[t,:,:]
+            for i in 0..m {
+                let drow = &d[i * m..(i + 1) * m];
+                let dst_i = &mut dst[i * face..(i + 1) * face];
+                for (t, &dv) in drow.iter().enumerate() {
+                    let c = scale * dv;
+                    let src_t = &src[t * face..(t + 1) * face];
+                    for (o, &v) in dst_i.iter_mut().zip(src_t) {
+                        *o += c * v;
                     }
                 }
             }
-            times.lift += t0.elapsed().as_secs_f64();
         }
+        1 => {
+            // dst[i,j,:] += scale * Σ_t d[j,t] * src[i,t,:]
+            for i in 0..m {
+                let sbase = i * face;
+                for j in 0..m {
+                    let drow = &d[j * m..(j + 1) * m];
+                    let dbase = i * face + j * m;
+                    let dst_row = &mut dst[dbase..dbase + m];
+                    for (t, &dv) in drow.iter().enumerate() {
+                        let c = scale * dv;
+                        let src_row = &src[sbase + t * m..sbase + (t + 1) * m];
+                        for (o, &v) in dst_row.iter_mut().zip(src_row) {
+                            *o += c * v;
+                        }
+                    }
+                }
+            }
+        }
+        _ => {
+            // dst[r, l] += scale * Σ_t d[l,t] * src[r, t], contiguous rows
+            for r in 0..face {
+                let row = &src[r * m..(r + 1) * m];
+                let dst_row = &mut dst[r * m..(r + 1) * m];
+                for (l, o) in dst_row.iter_mut().enumerate() {
+                    let drow = &d[l * m..(l + 1) * m];
+                    let mut acc = 0.0f32;
+                    for (&dv, &v) in drow.iter().zip(row) {
+                        acc += dv * v;
+                    }
+                    *o += scale * acc;
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch to monomorphized fast paths for the common node counts
+/// (orders 2, 3 and 7 — the paper's sweep); the constant `m` lets the
+/// compiler fully unroll the innermost loops.
+pub(crate) fn deriv_acc(
+    d: &[f32],
+    m: usize,
+    axis: usize,
+    src: &[f32],
+    dst: &mut [f32],
+    scale: f32,
+) {
+    match m {
+        3 => deriv_acc_kernel(d, 3, axis, src, dst, scale),
+        4 => deriv_acc_kernel(d, 4, axis, src, dst, scale),
+        8 => deriv_acc_kernel(d, 8, axis, src, dst, scale),
+        _ => deriv_acc_kernel(d, m, axis, src, dst, scale),
     }
 }
 
@@ -266,14 +397,14 @@ fn node_on_face(axis: usize, layer: usize, a: usize, b: usize, m: usize) -> usiz
     }
 }
 
-/// Exact elastic-acoustic Riemann flux difference over one face
-/// (math-identical to kernels/ref.py::riemann_ref; see its docstring for
-/// the conventions). `out` rows 6..8 are NOT divided by rho^- (the lift
-/// applies Q^{-1}).
+/// The Riemann flux core, generic over the exterior-trace fetch so the
+/// mirror / neighbor / halo cases monomorphize with the branch hoisted out
+/// of the per-node loop.
+#[inline(always)]
 #[allow(clippy::too_many_arguments)]
-pub fn riemann_face(
+fn riemann_kernel<Q: Fn(usize, usize) -> f32>(
     tr_m: &[f32],
-    tr_p: &[f32],
+    q_ext: Q,
     matm: [f32; 3],
     matp: [f32; 3],
     axis: usize,
@@ -295,7 +426,7 @@ pub fn riemann_face(
 
     for n in 0..face {
         let q_m = |f: usize| tr_m[f * face + n];
-        let q_p = |f: usize| tr_p[f * face + n];
+        let q_p = |f: usize| q_ext(f, n);
         // tractions t_i = sign * S[i, axis]
         let tr_e_m = q_m(0) + q_m(1) + q_m(2);
         let tr_e_p = q_p(0) + q_p(1) + q_p(2);
@@ -355,6 +486,54 @@ pub fn riemann_face(
     }
 }
 
+/// Exact elastic-acoustic Riemann flux difference over one face
+/// (math-identical to kernels/ref.py::riemann_ref; see its docstring for
+/// the conventions). `out` rows 6..8 are NOT divided by rho^- (the lift
+/// applies Q^{-1}).
+#[allow(clippy::too_many_arguments)]
+pub fn riemann_face(
+    tr_m: &[f32],
+    tr_p: &[f32],
+    matm: [f32; 3],
+    matp: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) {
+    riemann_kernel(tr_m, |f, n| tr_p[f * face + n], matm, matp, axis, sign, face, out);
+}
+
+/// [`riemann_face`] against the mirror boundary state `(-E, v)` of the
+/// interior trace, same material both sides — no exterior trace is
+/// materialized.
+pub fn riemann_face_mirror(
+    tr_m: &[f32],
+    mat: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) {
+    riemann_kernel(
+        tr_m,
+        |f, n| {
+            let v = tr_m[f * face + n];
+            if f < 6 {
+                -v
+            } else {
+                v
+            }
+        },
+        mat,
+        mat,
+        axis,
+        sign,
+        face,
+        out,
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -405,6 +584,76 @@ mod tests {
             assert!((out[n] - phi).abs() < 1e-6); // E11 row
             assert!((out[6 * face + n] - phi).abs() < 1e-6); // v1 row
             assert!(out[face + n].abs() < 1e-7); // E22 row untouched
+        }
+    }
+
+    #[test]
+    fn mirror_specialization_matches_materialized_trace() {
+        // riemann_face_mirror must equal riemann_face against an explicit
+        // (-E, v) exterior trace, for every axis/sign and both materials
+        let face = 9;
+        let tr_m: Vec<f32> = (0..9 * face).map(|i| ((i * 37 % 23) as f32 - 11.0) * 0.07).collect();
+        let mut tr_p = vec![0.0f32; 9 * face];
+        for fld in 0..9 {
+            for n in 0..face {
+                let v = tr_m[fld * face + n];
+                tr_p[fld * face + n] = if fld < 6 { -v } else { v };
+            }
+        }
+        for mat in [[1.0, 1.0, 0.0f32], [1.2, 3.0, 0.8]] {
+            for axis in 0..3 {
+                for sign in [-1.0f32, 1.0] {
+                    let mut a = vec![0.0f32; 9 * face];
+                    let mut b = vec![0.0f32; 9 * face];
+                    riemann_face(&tr_m, &tr_p, mat, mat, axis, sign, face, &mut a);
+                    riemann_face_mirror(&tr_m, mat, axis, sign, face, &mut b);
+                    for (x, y) in a.iter().zip(&b) {
+                        assert_eq!(x, y, "axis {axis} sign {sign}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deriv_acc_matches_naive() {
+        // blocked sweeps vs the straightforward triple loop, all axes,
+        // generic and specialized node counts
+        for m in [3usize, 4, 5, 8] {
+            let basis = LglBasis::new(m - 1);
+            let vol = m * m * m;
+            let face = m * m;
+            let src: Vec<f32> = (0..vol).map(|i| ((i * 13 % 17) as f32 - 8.0) * 0.3).collect();
+            let stride = [face, m, 1usize];
+            for axis in 0..3 {
+                let scale = 0.37f32;
+                let mut got = vec![0.5f32; vol];
+                deriv_acc(&basis.d32, m, axis, &src, &mut got, scale);
+                let mut want = vec![0.5f32; vol];
+                let sa = stride[axis];
+                for i in 0..m {
+                    for j in 0..m {
+                        for l in 0..m {
+                            let idx = [i, j, l];
+                            let n = i * face + j * m + l;
+                            let along = idx[axis];
+                            let base = n - along * sa;
+                            let mut acc = 0.0f32;
+                            for t in 0..m {
+                                acc += basis.d32[along * m + t] * src[base + t * sa];
+                            }
+                            want[n] += scale * acc;
+                        }
+                    }
+                }
+                for (g, w) in got.iter().zip(&want) {
+                    // different (valid) summation associations: relative bound
+                    assert!(
+                        (g - w).abs() < 2e-4 * (1.0 + w.abs()),
+                        "m {m} axis {axis}: {g} vs {w}"
+                    );
+                }
+            }
         }
     }
 

@@ -178,6 +178,47 @@ impl BlockState {
         }
     }
 
+    /// Split the mutable state into the part the interior sweep touches
+    /// (everything but the halo) and the halo storage, so the overlapped
+    /// schedule can scatter incoming halo traces from one thread while the
+    /// interior elements — which never read the halo — are advanced on
+    /// others.
+    pub fn split_for_overlap(&mut self) -> (InteriorView<'_>, &mut [f32]) {
+        let BlockState {
+            order,
+            m,
+            k_real,
+            k_pad,
+            q,
+            res,
+            traces,
+            halo,
+            conn,
+            halo_idx,
+            mats,
+            halo_mats,
+            h,
+            ..
+        } = self;
+        (
+            InteriorView {
+                order: *order,
+                m: *m,
+                k_real: *k_real,
+                k_pad: *k_pad,
+                q: q.as_mut_slice(),
+                res: res.as_mut_slice(),
+                traces: traces.as_mut_slice(),
+                conn: conn.as_slice(),
+                halo_idx: halo_idx.as_slice(),
+                mats: mats.as_slice(),
+                halo_mats: halo_mats.as_slice(),
+                h: h.as_slice(),
+            },
+            halo.as_mut_slice(),
+        )
+    }
+
     /// Immutable view of one face trace (9 x M x M values) of an element.
     pub fn trace_slice(&self, e: usize, f: usize) -> &[f32] {
         let m = self.m;
@@ -253,6 +294,57 @@ impl BlockState {
     }
 }
 
+/// Mutable view of a [`BlockState`] minus its halo storage (see
+/// [`BlockState::split_for_overlap`]). This is what
+/// [`crate::solver::StageBackend::stage_interior`] receives: interior
+/// elements have no halo faces, so the halo can be rewritten concurrently.
+pub struct InteriorView<'a> {
+    pub order: usize,
+    pub m: usize,
+    pub k_real: usize,
+    pub k_pad: usize,
+    pub q: &'a mut [f32],
+    pub res: &'a mut [f32],
+    pub traces: &'a mut [f32],
+    pub conn: &'a [i32],
+    pub halo_idx: &'a [i32],
+    pub mats: &'a [f32],
+    pub halo_mats: &'a [f32],
+    pub h: &'a [f32],
+}
+
+/// Refresh one face trace of one element from its volume values. Free
+/// function over the element-local slices (`q_e`: the `(9, M, M, M)`
+/// block, `tr_e`: the `(6, 9, M, M)` block) so sweeps can run on split
+/// borrows from worker threads.
+pub(crate) fn refresh_elem_face(m: usize, q_e: &[f32], tr_e: &mut [f32], f: usize) {
+    let vol = m * m * m;
+    let face = m * m;
+    let axis = f / 2;
+    let layer = if f % 2 == 0 { 0 } else { m - 1 };
+    for fld in 0..NFIELDS {
+        let qb = fld * vol;
+        let tb = (f * NFIELDS + fld) * face;
+        for a in 0..m {
+            for b in 0..m {
+                let n = match axis {
+                    0 => layer * face + a * m + b,
+                    1 => a * face + layer * m + b,
+                    _ => a * face + b * m + layer,
+                };
+                tr_e[tb + a * m + b] = q_e[qb + n];
+            }
+        }
+    }
+}
+
+/// Refresh all six face traces of one element (see [`refresh_elem_face`]).
+pub(crate) fn refresh_elem_traces(m: usize, q_e: &[f32], tr_e: &mut [f32]) {
+    for f in 0..6 {
+        refresh_elem_face(m, q_e, tr_e, f);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -314,6 +406,46 @@ mod tests {
                 assert_eq!(got, want);
             }
         }
+    }
+
+    #[test]
+    fn elemwise_refresh_matches_bulk() {
+        // refresh_elem_traces must reproduce refresh_traces exactly
+        for order in [1usize, 2, 3] {
+            let mut st = block(order);
+            for (i, v) in st.q.iter_mut().enumerate() {
+                *v = ((i * 31) % 101) as f32 * 0.13 - 5.0;
+            }
+            st.refresh_traces();
+            let want = st.traces.clone();
+            let m = st.m;
+            let vol = m * m * m;
+            let tsz = 6 * NFIELDS * m * m;
+            let mut got = vec![-1.0f32; st.traces.len()];
+            for e in 0..st.k_pad {
+                let q_e = &st.q[e * NFIELDS * vol..(e + 1) * NFIELDS * vol];
+                refresh_elem_traces(m, q_e, &mut got[e * tsz..(e + 1) * tsz]);
+            }
+            assert_eq!(got, want, "order {order}");
+        }
+    }
+
+    #[test]
+    fn split_for_overlap_partitions_state() {
+        let mut st = block(2);
+        let halo_len = st.halo.len();
+        let q_len = st.q.len();
+        let (mut view, halo) = st.split_for_overlap();
+        assert_eq!(view.q.len(), q_len);
+        assert_eq!(halo.len(), halo_len);
+        assert_eq!(view.k_real, 8);
+        // mutating through the view and the halo concurrently type-checks
+        view.q[0] = 7.0;
+        if !halo.is_empty() {
+            halo[0] = 3.0;
+        }
+        drop(view);
+        assert_eq!(st.q[0], 7.0);
     }
 
     #[test]

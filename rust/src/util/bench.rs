@@ -2,8 +2,14 @@
 //! criterion). `cargo bench` runs the `benches/*.rs` binaries, which use
 //! [`Bench`] for warmup + timed sampling and print mean / p50 / p95 /
 //! throughput lines that the perf log in EXPERIMENTS.md quotes directly.
+//! [`JsonSink`] additionally writes the samples in machine-readable form
+//! (e.g. `BENCH_rhs.json`) so the perf trajectory can be tracked across
+//! PRs; see PERF.md for the schema.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 pub struct BenchResult {
     pub name: String,
@@ -67,6 +73,53 @@ impl Default for Bench {
     }
 }
 
+/// Collects bench entries and writes them as a JSON array, one object per
+/// benchmark: `{"name": ..., "ns_per_iter": ..., "items_per_s": ...,
+/// "unit": ..., "p50_ns": ..., "p95_ns": ..., "samples": N}`.
+/// `items_per_s` is null when the bench has no throughput notion.
+#[derive(Debug, Default)]
+pub struct JsonSink {
+    entries: Vec<Json>,
+}
+
+impl JsonSink {
+    pub fn new() -> Self {
+        JsonSink::default()
+    }
+
+    /// Record one result; `items` per iteration (with its unit name, e.g.
+    /// "elem-stages") yields the throughput field.
+    pub fn push(&mut self, r: &BenchResult, items: Option<(usize, &str)>) {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(r.name.clone()));
+        obj.insert("ns_per_iter".to_string(), Json::Num(r.mean() * 1e9));
+        obj.insert("p50_ns".to_string(), Json::Num(r.percentile(0.5) * 1e9));
+        obj.insert("p95_ns".to_string(), Json::Num(r.percentile(0.95) * 1e9));
+        obj.insert("samples".to_string(), Json::Num(r.samples.len() as f64));
+        match items {
+            Some((n, unit)) => {
+                obj.insert("items_per_s".to_string(), Json::Num(n as f64 / r.mean()));
+                obj.insert("unit".to_string(), Json::Str(unit.to_string()));
+            }
+            None => {
+                obj.insert("items_per_s".to_string(), Json::Null);
+                obj.insert("unit".to_string(), Json::Null);
+            }
+        }
+        self.entries.push(Json::Obj(obj));
+    }
+
+    /// Serialize all entries as a JSON array.
+    pub fn dump(&self) -> String {
+        Json::Arr(self.entries.clone()).dump()
+    }
+
+    /// Write to `path`, replacing any previous run's file.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.dump())
+    }
+}
+
 impl Bench {
     pub fn new(warmup: usize, samples: usize) -> Self {
         Bench { warmup_iters: warmup, sample_iters: samples }
@@ -103,6 +156,24 @@ mod tests {
         assert_eq!(r.percentile(1.0), 5.0);
         assert_eq!(r.percentile(0.5), 3.0);
         assert!((r.mean() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_sink_schema() {
+        let r = BenchResult { name: "stage_n7".into(), samples: vec![0.5, 0.5] };
+        let mut sink = JsonSink::new();
+        sink.push(&r, Some((64, "elem-stages")));
+        sink.push(&r, None);
+        let j = Json::parse(&sink.dump()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "stage_n7");
+        let ns = arr[0].get("ns_per_iter").unwrap().as_f64().unwrap();
+        assert!((ns - 0.5e9).abs() < 1.0);
+        let tput = arr[0].get("items_per_s").unwrap().as_f64().unwrap();
+        assert!((tput - 128.0).abs() < 1e-9);
+        assert_eq!(arr[0].get("unit").unwrap().as_str().unwrap(), "elem-stages");
+        assert!(matches!(arr[1].get("items_per_s").unwrap(), Json::Null));
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! Property tests for the multithreaded boundary/interior CPU backend:
+//! `ParallelRefBackend` must reproduce the scalar `RustRefBackend`
+//! field-by-field on a mixed elastic/acoustic two-block mesh across
+//! orders {2, 3, 7} and thread counts {1, 2, 4}, under both the serial
+//! and the overlapped (compute/exchange) driver schedules; and its
+//! boundary/interior classification must agree with the partition
+//! machinery (`boundary_depths` depth-0 set, `partition_stats` MPI faces).
+
+use repro::mesh::{build_local_blocks, geometry::discontinuous_brick};
+use repro::partition::nested::boundary_depths;
+use repro::partition::{nested_partition, partition_stats, splice};
+use repro::solver::analytic::standing_wave;
+use repro::solver::driver::{Driver, RustRefBackend, StageBackend};
+use repro::solver::parallel::classify_elements;
+use repro::solver::state::NFIELDS;
+use repro::solver::{BlockState, LglBasis, ParallelRefBackend};
+
+/// The mixed elastic/acoustic workload: a brick whose material jumps at
+/// the half plane, spliced into two node chunks.
+fn mixed_mesh() -> (repro::mesh::Mesh, Vec<usize>) {
+    let mesh = discontinuous_brick([4, 4, 2], [1.0, 1.0, 0.5]);
+    let owners = splice(&mesh, 2).assignment.clone();
+    (mesh, owners)
+}
+
+fn build_driver(
+    mesh: &repro::mesh::Mesh,
+    owners: &[usize],
+    order: usize,
+    threads: Option<usize>,
+    overlap: bool,
+) -> Driver {
+    let (lblocks, plan) = build_local_blocks(mesh, owners, 2);
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut blocks: Vec<BlockState> = lblocks
+        .iter()
+        .map(|lb| BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1)))
+        .collect();
+    for blk in blocks.iter_mut() {
+        blk.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+    }
+    let backends: Vec<Box<dyn StageBackend>> = (0..2)
+        .map(|_| -> Box<dyn StageBackend> {
+            match threads {
+                Some(t) => Box::new(ParallelRefBackend::with_threads(order, t)),
+                None => Box::new(RustRefBackend::new(order)),
+            }
+        })
+        .collect();
+    let mut drv = Driver::new(blocks, plan, backends, order);
+    drv.overlap = overlap;
+    drv.prime();
+    drv
+}
+
+/// Max relative L2 difference over the 9 fields between two runs.
+fn max_field_rel_diff(a: &Driver, b: &Driver) -> f64 {
+    let mut worst = 0.0f64;
+    for fld in 0..NFIELDS {
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (ba, bb) in a.blocks.iter().zip(&b.blocks) {
+            let vol = ba.m * ba.m * ba.m;
+            for e in 0..ba.k_real {
+                let base = (e * NFIELDS + fld) * vol;
+                for n in 0..vol {
+                    let x = ba.q[base + n] as f64;
+                    let y = bb.q[base + n] as f64;
+                    num += (x - y) * (x - y);
+                    den += x * x;
+                }
+            }
+        }
+        worst = worst.max((num / den.max(1e-30)).sqrt());
+    }
+    worst
+}
+
+#[test]
+fn parallel_matches_scalar_across_orders_and_threads() {
+    let (mesh, owners) = mixed_mesh();
+    for order in [2usize, 3, 7] {
+        let steps = if order >= 7 { 2 } else { 3 };
+        let dt = 5e-4;
+        let mut scalar = build_driver(&mesh, &owners, order, None, false);
+        scalar.run(dt, steps).unwrap();
+        for threads in [1usize, 2, 4] {
+            for overlap in [false, true] {
+                let mut par = build_driver(&mesh, &owners, order, Some(threads), overlap);
+                par.run(dt, steps).unwrap();
+                let diff = max_field_rel_diff(&scalar, &par);
+                assert!(
+                    diff <= 1e-6,
+                    "order {order}, {threads} thread(s), overlap {overlap}: \
+                     field rel diff {diff:e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn energy_consistent_between_backends() {
+    let (mesh, owners) = mixed_mesh();
+    let order = 3;
+    let mut scalar = build_driver(&mesh, &owners, order, None, false);
+    let mut par = build_driver(&mesh, &owners, order, Some(4), true);
+    let e0 = scalar.energy();
+    scalar.run(1e-3, 5).unwrap();
+    par.run(1e-3, 5).unwrap();
+    let es = scalar.energy();
+    let ep = par.energy();
+    assert!(es > 0.0 && es <= e0 * (1.0 + 1e-6));
+    assert!((es - ep).abs() <= 1e-9 * es.abs().max(1.0), "{es} vs {ep}");
+}
+
+#[test]
+fn hetero_workers_parallel_matches_rustref() {
+    use repro::coordinator::{node::WorkerBackend, HeteroRun};
+    use repro::partition::DeviceKind;
+    let (mesh, owners) = mixed_mesh();
+    let order = 2;
+    let run = |backend: WorkerBackend| -> Vec<f32> {
+        let (lblocks, plan) = build_local_blocks(&mesh, &owners, 2);
+        let basis = LglBasis::new(order);
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        let mut states: Vec<BlockState> = lblocks
+            .iter()
+            .map(|lb| BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1)))
+            .collect();
+        for st in states.iter_mut() {
+            st.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+        }
+        let devices = vec![DeviceKind::Cpu, DeviceKind::Mic];
+        let mut hr = HeteroRun::launch(&lblocks, states, plan, &devices, backend, order).unwrap();
+        hr.run(1e-3, 3).unwrap();
+        let mut out = Vec::new();
+        for &o in &hr.owners() {
+            out.extend(hr.read_block(o).unwrap().q);
+        }
+        out
+    };
+    let scalar = run(WorkerBackend::RustRef);
+    let parallel = run(WorkerBackend::RustParallel { threads: 2 });
+    assert_eq!(scalar.len(), parallel.len());
+    for (x, y) in scalar.iter().zip(&parallel) {
+        assert!((x - y).abs() <= 1e-6 * x.abs().max(1.0), "{x} vs {y}");
+    }
+}
+
+#[test]
+fn classification_agrees_with_partition_machinery() {
+    let (mesh, owners) = mixed_mesh();
+    let node = splice(&mesh, 2);
+    assert_eq!(&node.assignment, &owners);
+    let (lblocks, _) = build_local_blocks(&mesh, &owners, 2);
+    let np = nested_partition(&mesh, &node, 0.0);
+    let stats = partition_stats(&mesh, &np);
+    for (nd, lb) in lblocks.iter().enumerate() {
+        let st = BlockState::from_local_block(lb, 2, lb.len().max(1), lb.halo_len.max(1));
+        let split = classify_elements(&st.conn, st.k_real);
+        // every real element is classified exactly once
+        assert_eq!(split.boundary.len() + split.interior.len(), st.k_real);
+        // halo-facing faces are exactly this node's MPI faces
+        assert_eq!(
+            split.halo_faces.len(),
+            stats.per_node[nd].mpi_faces,
+            "node {nd}: halo faces vs partition stats"
+        );
+        assert_eq!(split.halo_faces.len(), lb.halo_len);
+        // boundary elements are exactly the depth-0 set of the node split
+        let depths: std::collections::HashMap<usize, usize> =
+            boundary_depths(&mesh, &owners, nd).into_iter().collect();
+        for &e in &split.boundary {
+            assert_eq!(depths[&lb.global_ids[e]], 0);
+        }
+        for &e in &split.interior {
+            assert!(depths[&lb.global_ids[e]] >= 1);
+        }
+        // interior elements must not touch the halo (the invariant the
+        // overlapped schedule relies on)
+        for &e in &split.interior {
+            for f in 0..6 {
+                assert!(st.conn[e * 6 + f] != -1);
+            }
+        }
+    }
+}

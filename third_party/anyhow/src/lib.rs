@@ -1,0 +1,168 @@
+//! Minimal in-tree stand-in for the `anyhow` crate.
+//!
+//! The build is fully offline (no crates.io access), so the repo vendors
+//! the small surface it actually uses: [`Error`], [`Result`], the
+//! `anyhow!` / `bail!` / `ensure!` macros and the [`Context`] extension
+//! trait. Errors carry a single rendered message string; context is
+//! prepended `"context: cause"` like anyhow's `{:#}` display.
+//!
+//! Deliberately mirrors anyhow's one load-bearing design choice: [`Error`]
+//! does **not** implement `std::error::Error`, so the blanket
+//! `From<E: std::error::Error>` conversion powering `?` cannot overlap
+//! with the reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// A rendered error message with optional context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer, anyhow's `"{context}: {cause}"` rendering.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result`, defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazy or eager context to a fallible value.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<i32> {
+        let v: i32 = s.parse()?; // From<ParseIntError> via `?`
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e: Result<()> = Err(anyhow!("inner {}", 7));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner 7");
+        let e: Result<()> = Err(anyhow!("x"));
+        let e = e.with_context(|| format!("layer {}", 2)).unwrap_err();
+        assert_eq!(e.to_string(), "layer 2: x");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        assert!(Context::context(v, "missing").is_err());
+        assert_eq!(Context::context(Some(3), "missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0);
+            ensure!(x < 100, "too big: {x}");
+            if x == 13 {
+                bail!("unlucky {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("condition failed"));
+        assert!(f(200).unwrap_err().to_string().contains("too big"));
+        assert!(f(13).unwrap_err().to_string().contains("unlucky"));
+    }
+}
