@@ -1,11 +1,17 @@
 //! Bench: Table 6.1 end to end — the three execution schemes at paper
 //! scale through the simulator, the real multi-block driver scalar vs
-//! parallel-with-overlap (the in-node nested split), plus the *real*
-//! coordinator step (PJRT) on a reduced workload.
-//! `cargo bench --offline --bench end_to_end`
+//! parallel-with-overlap (the in-node nested split), the N-node cluster
+//! runtime (node-count scaling + static-vs-adaptive rebalancing, emitted
+//! to `BENCH_cluster.json`), plus the *real* coordinator step (PJRT) on a
+//! reduced workload.
+//!
+//! `cargo bench --offline --bench end_to_end` — pass `-- --smoke` for the
+//! CI mode: tiny meshes, 2 steps, still exercising the full cluster path.
 
+use repro::coordinator::cluster::{ClusterRun, ClusterSpec};
 use repro::coordinator::experiments::paper_mesh;
 use repro::coordinator::node::WorkerBackend;
+use repro::coordinator::profile::busy_imbalance;
 use repro::coordinator::{HeteroRun, ProfileReport};
 use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
 use repro::partition::{nested_partition, splice, DeviceKind};
@@ -14,7 +20,7 @@ use repro::sim::{simulate, Cluster, Scheme};
 use repro::solver::analytic::standing_wave;
 use repro::solver::driver::{Driver, RustRefBackend, StageBackend};
 use repro::solver::{BlockState, LglBasis, ParallelRefBackend};
-use repro::util::bench::Bench;
+use repro::util::bench::{Bench, JsonSink};
 
 /// Two-owner coupled driver over a unit cube, one backend per block.
 fn coupled_driver(order: usize, n: usize, parallel: bool, overlap: bool) -> Driver {
@@ -45,7 +51,90 @@ fn coupled_driver(order: usize, n: usize, parallel: bool, overlap: bool) -> Driv
     drv
 }
 
+/// The N-node cluster runtime: node-count scaling over one global mesh
+/// plus the rebalancer's imbalance win, written to `BENCH_cluster.json`.
+fn cluster_bench(b: &Bench, smoke: bool) {
+    let mut sink = JsonSink::new();
+    let order = 2;
+    let n = if smoke { 4 } else { 8 };
+    let steps_per_iter = if smoke { 1 } else { 2 };
+    let mesh = unit_cube_geometry(n);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let ic = move |x: [f64; 3]| standing_wave(x, 0.0, 1.0, 1.0, w);
+    let dt = 1e-4;
+
+    // ---- node-count scaling (same global mesh, P virtual nodes) --------
+    let ps: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let mut t1 = None;
+    for &p in ps {
+        let mut spec = ClusterSpec::new(p, order);
+        spec.mic_fraction = Some(0.25);
+        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+        let items = mesh.len() * 5 * steps_per_iter;
+        let r = b.run(&format!("cluster_step_p{p}_n{order}_k{}", mesh.len()), || {
+            run.run(dt, steps_per_iter).unwrap();
+        });
+        r.report_throughput(items, "elem-stages");
+        sink.push(&r, Some((items, "elem-stages")));
+        assert_eq!(
+            run.fabric().mic_inter_node_faces,
+            0,
+            "accelerators must stay off the inter-node fabric"
+        );
+        match t1 {
+            None => t1 = Some(r.mean()),
+            Some(base) => {
+                let eff = base / r.mean();
+                println!(
+                    "  P={p}: parallel efficiency {eff:.2} vs P=1 \
+                     (virtual nodes share this machine's cores)"
+                );
+                sink.push_scalar(&format!("cluster_parallel_efficiency_p{p}"), eff, "t1_over_tp");
+            }
+        }
+    }
+
+    // ---- static vs adaptive: per-step worker busy imbalance -------------
+    let steps_measure = if smoke { 2 } else { 6 };
+    let imbalance_of = |rebalance: bool| -> f64 {
+        let mut spec = ClusterSpec::new(1, order);
+        spec.mic_fraction = Some(0.05); // deliberately bad static split
+        if rebalance {
+            spec.rebalance_every = Some(2);
+        }
+        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+        // warm up (and let the rebalancer act), then measure steady state
+        run.run(dt, if rebalance { 4 } else { 2 }).unwrap();
+        run.rebalance_every = None;
+        let _ = run.take_worker_times().unwrap();
+        run.run(dt, steps_measure).unwrap();
+        busy_imbalance(&run.take_worker_times().unwrap())
+    };
+    let imb_static = imbalance_of(false);
+    let imb_adaptive = imbalance_of(true);
+    println!(
+        "  worker busy imbalance (max/mean): static {imb_static:.2} -> adaptive {imb_adaptive:.2}"
+    );
+    sink.push_scalar("cluster_imbalance_static", imb_static, "max_over_mean");
+    sink.push_scalar("cluster_imbalance_adaptive", imb_adaptive, "max_over_mean");
+    sink.write("BENCH_cluster.json").expect("writing BENCH_cluster.json");
+    println!("  wrote BENCH_cluster.json");
+}
+
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        // CI mode: tiny mesh, 2 steps, one sample — exercises the cluster
+        // path (launch, fabric, rebalance, JSON emission) plus the
+        // overlapped driver on every push.
+        println!("== smoke mode ==");
+        let b = Bench::new(0, 1);
+        cluster_bench(&b, true);
+        let mut drv = coupled_driver(2, 2, true, true);
+        drv.run(1e-4, 2).unwrap();
+        println!("smoke: coupled overlapped driver ok, energy {:.6}", drv.energy());
+        return;
+    }
     let b = Bench::new(1, 5);
 
     // ---- real multi-block driver: scalar vs parallel+overlap -----------
@@ -100,6 +189,9 @@ fn main() {
             walls.2
         );
     }
+
+    // ---- N-node cluster runtime -----------------------------------------
+    cluster_bench(&b, false);
 
     // ---- real coordinator step (PJRT) ------------------------------------
     if !cfg!(feature = "pjrt") {

@@ -1,0 +1,1313 @@
+//! The N-node in-process cluster runtime: the full two-level nested
+//! partition (paper §5), executable end to end.
+//!
+//! [`ClusterRun`] launches P virtual compute nodes. Each node owns one
+//! contiguous level-1 splice chunk of the Morton-ordered mesh and runs the
+//! level-2 boundary/interior split across **two workers** — a CPU worker
+//! (owner `2n`, the boundary elements, owns all communication) and an
+//! accelerator stand-in (owner `2n+1`, the interior elements). Workers are
+//! long-lived threads connected by an **in-process message fabric**: typed
+//! mpsc channels over which halo traces flow directly worker-to-worker,
+//! routed by tables derived from the [`ExchangePlan`]. The fabric
+//! distinguishes three lanes:
+//!
+//! * **self** — copies between blocks of one worker (applied in place),
+//! * **intra-node** — CPU <-> MIC of the same node (the PCI stand-in),
+//! * **inter-node** — CPU(n) <-> CPU(m) (the MPI stand-in).
+//!
+//! Exactly as in §5.5, accelerator workers never touch the inter-node
+//! lane: the interior-only constraint of [`crate::partition::nested`]
+//! guarantees it, and [`ClusterRun::launch_parts`] *refuses* any exchange
+//! plan that would route a halo face between an accelerator and another
+//! node ([`FabricStats::mic_inter_node_faces`] must be zero).
+//!
+//! Per stage every worker (a) advances its boundary elements, (b) ships
+//! its outbound traces through the fabric, (c) advances its interior
+//! elements while peers' traces queue behind the sweep, then (d) installs
+//! incoming halos — the paper's compute/communication overlap. The
+//! coordinator thread only orchestrates the stage lockstep; no trace data
+//! passes through it.
+//!
+//! **Adaptive rebalancing** closes the loop with the cost model: every R
+//! steps ([`ClusterRun::rebalance`]) each node's measured per-phase
+//! [`KernelTimes`] are refitted into a node model
+//! ([`crate::costmodel::calib::measured_node`]) and fed back through
+//! [`crate::partition::solve_mic_fraction`]; if the solved split moved,
+//! the node's chunk is re-split ([`nested_partition_fractions`]) and the
+//! affected elements **migrate** between the node's two workers with their
+//! full state (q, res), traces refreshed and halos re-primed — the run
+//! continues bit-exactly as if it had been partitioned that way from the
+//! start.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use crate::costmodel::calib;
+use crate::mesh::{build_local_blocks, ExchangePlan, LocalBlock, Mesh};
+use crate::partition::{
+    nested_partition_fractions, solve_mic_fraction, splice, DeviceKind, Partition,
+};
+#[cfg(feature = "pjrt")]
+use crate::runtime::PjrtRuntime;
+use crate::solver::driver::RustRefBackend;
+use crate::solver::exchange::apply_exchange;
+use crate::solver::parallel::ParallelRefBackend;
+use crate::solver::reference::KernelTimes;
+use crate::solver::rk::{LSRK_A, LSRK_B, N_STAGES};
+use crate::solver::state::{BlockState, NFIELDS};
+use crate::solver::{LglBasis, StageBackend};
+use crate::Result;
+
+// ---------------------------------------------------------------------------
+// backends
+// ---------------------------------------------------------------------------
+
+/// Constructs the per-block stage backends *inside* a worker thread.
+///
+/// The factory crosses the thread boundary (hence `Send + Sync`); its
+/// products never do — PJRT runtimes are `Rc`-based and thread-local, and
+/// the paper's offload process is a separate executor anyway.
+pub trait WorkerBackendFactory: Send + Sync {
+    /// One backend per block, built on the worker's own thread.
+    fn build(&self, order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>>;
+    fn label(&self) -> &'static str;
+}
+
+/// Scalar pure-rust reference kernels (no artifacts needed).
+pub struct ScalarWorker;
+
+impl WorkerBackendFactory for ScalarWorker {
+    fn build(&self, order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>> {
+        Ok(blocks
+            .iter()
+            .map(|_| Box::new(RustRefBackend::new(order)) as Box<dyn StageBackend>)
+            .collect())
+    }
+
+    fn label(&self) -> &'static str {
+        "rust-ref"
+    }
+}
+
+/// Multithreaded reference kernels with the in-block boundary/interior
+/// split; `threads == 0` splits the hardware budget across the cluster's
+/// concurrently-staging workers instead of oversubscribing.
+pub struct ParallelWorker {
+    pub threads: usize,
+    /// Number of workers staging concurrently (for thread auto-sizing).
+    pub concurrent: usize,
+}
+
+impl WorkerBackendFactory for ParallelWorker {
+    fn build(&self, order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>> {
+        let auto = std::thread::available_parallelism()
+            .map(|n| (n.get() / self.concurrent.max(1)).max(1))
+            .unwrap_or(1);
+        let t = if self.threads == 0 { auto } else { self.threads };
+        Ok(blocks
+            .iter()
+            .map(|_| Box::new(ParallelRefBackend::with_threads(order, t)) as Box<dyn StageBackend>)
+            .collect())
+    }
+
+    fn label(&self) -> &'static str {
+        "rust-parallel"
+    }
+}
+
+/// AOT artifacts through PJRT (needs the `pjrt` cargo feature).
+pub struct PjrtWorker {
+    pub artifact_dir: std::path::PathBuf,
+}
+
+impl WorkerBackendFactory for PjrtWorker {
+    #[cfg(feature = "pjrt")]
+    fn build(&self, _order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>> {
+        let mut rt = PjrtRuntime::new(&self.artifact_dir)?;
+        let mut out: Vec<Box<dyn StageBackend>> = Vec::with_capacity(blocks.len());
+        for b in blocks {
+            out.push(Box::new(rt.stage_backend(b)?));
+        }
+        Ok(out)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build(&self, _order: usize, _blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>> {
+        Err(anyhow!(
+            "PJRT backend requested but the binary was built without the `pjrt` \
+             feature; use --rust-ref/--parallel or rebuild with --features pjrt"
+        ))
+    }
+
+    fn label(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Which backend a worker executes stages with (sugar over the factories;
+/// also the CLI-facing selection enum).
+#[derive(Debug, Clone)]
+pub enum WorkerBackend {
+    /// Pure-rust reference kernels (no artifacts needed).
+    RustRef,
+    /// Multithreaded reference kernels with the in-node boundary/interior
+    /// split; `threads == 0` auto-sizes to the hardware threads divided by
+    /// the number of concurrently-staging workers.
+    RustParallel { threads: usize },
+    /// AOT artifacts through PJRT (the production path; needs the `pjrt`
+    /// cargo feature).
+    Pjrt { artifact_dir: std::path::PathBuf },
+}
+
+impl WorkerBackend {
+    /// The factory realizing this backend for a cluster of
+    /// `concurrent_workers` workers staging at once.
+    pub fn factory(&self, concurrent_workers: usize) -> Arc<dyn WorkerBackendFactory> {
+        match self {
+            WorkerBackend::RustRef => Arc::new(ScalarWorker),
+            WorkerBackend::RustParallel { threads } => Arc::new(ParallelWorker {
+                threads: *threads,
+                concurrent: concurrent_workers.max(1),
+            }),
+            WorkerBackend::Pjrt { artifact_dir } => {
+                Arc::new(PjrtWorker { artifact_dir: artifact_dir.clone() })
+            }
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            WorkerBackend::RustRef => "rust-ref",
+            WorkerBackend::RustParallel { .. } => "rust-parallel",
+            WorkerBackend::Pjrt { .. } => "pjrt",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fabric protocol
+// ---------------------------------------------------------------------------
+
+/// One halo installment: (destination local block, halo slot, trace data).
+type Deliveries = Vec<(usize, usize, Vec<f32>)>;
+
+/// One routed copy:
+/// (src local block, src elem, src face, dst local block, dst halo slot).
+type CopyRoute = (usize, usize, usize, usize, usize);
+
+/// Outbound copies of one worker destined to one peer.
+struct OutboundGroup {
+    dst: usize,
+    items: Vec<CopyRoute>,
+}
+
+struct ReplaceMsg {
+    blocks: Vec<BlockState>,
+    outbound: Vec<OutboundGroup>,
+    self_copies: Vec<CopyRoute>,
+    expected_in: usize,
+}
+
+enum Cmd {
+    /// Run one LSRK stage on every owned block; ship traces through the
+    /// fabric and install incoming halos when `route`.
+    Stage { dt: f32, a: f32, b: f32, route: bool },
+    /// A peer's halo traces (fabric lane; never sent by the coordinator).
+    Deliver(Deliveries),
+    /// Reply with the sum of block energies.
+    Energy,
+    /// Reply with a full clone of local block `i`'s state.
+    ReadBlock(usize),
+    /// Reply with accumulated per-phase times (non-destructive).
+    ReadTimes,
+    /// Reply with accumulated per-phase times, then reset them.
+    TakeTimes,
+    /// Swap in migrated blocks + routing tables (adaptive rebalancing).
+    Replace(Box<ReplaceMsg>),
+    Shutdown,
+}
+
+enum Resp {
+    /// Backends built; the worker is ready for its first stage.
+    Ready,
+    StageDone { exchange_s: f64 },
+    Energy(f64),
+    Block(Box<BlockState>),
+    Times(WorkerTimes),
+    Replaced,
+    /// Recoverable failure: the worker stays alive and keeps answering.
+    Err(String),
+}
+
+/// Per-worker accumulated timing: kernel CPU seconds plus the wall time of
+/// each phase of the overlapped stage — the measurement the adaptive
+/// rebalancer feeds back into the balance solve.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerTimes {
+    /// Per-kernel CPU seconds summed over both phases (can exceed wall).
+    pub kernels: KernelTimes,
+    /// Wall seconds in the boundary phase (includes shipping traces).
+    pub boundary_s: f64,
+    /// Wall seconds in the interior phase.
+    pub interior_s: f64,
+    /// Wall seconds waiting for + installing incoming halos.
+    pub exchange_s: f64,
+    /// LSRK stages processed since the last reset.
+    pub stages: usize,
+}
+
+impl WorkerTimes {
+    /// Compute wall time (boundary + interior phases).
+    pub fn busy_s(&self) -> f64 {
+        self.boundary_s + self.interior_s
+    }
+
+    /// Timesteps measured (stages / N_STAGES).
+    pub fn steps(&self) -> f64 {
+        self.stages as f64 / N_STAGES as f64
+    }
+
+    /// Compute wall per timestep (0 when nothing was measured).
+    pub fn busy_per_step(&self) -> f64 {
+        if self.stages == 0 {
+            0.0
+        } else {
+            self.busy_s() / self.steps()
+        }
+    }
+
+    /// The kernel profile rescaled from (possibly thread-summed) CPU
+    /// seconds to this worker's measured compute *wall* time. Parallel
+    /// backends report per-thread timer sums that exceed wall; fitting
+    /// rates from those would model a T-thread worker ~T times slower
+    /// than reality, so the rebalancer and cross-check fit from this.
+    pub fn wall_kernels(&self) -> KernelTimes {
+        let total = self.kernels.total();
+        if total > 1e-12 {
+            self.kernels.scaled(self.busy_s() / total)
+        } else {
+            self.kernels
+        }
+    }
+}
+
+/// Fabric traffic classification, in halo faces per routed stage.
+/// `mic_inter_node_faces` must be zero — launch refuses plans that would
+/// put an accelerator on the inter-node lane (paper §5.5).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FabricStats {
+    /// Same-worker copies (applied in place, never cross a channel).
+    pub self_faces: usize,
+    /// CPU <-> MIC inside one node (the PCI stand-in).
+    pub intra_node_faces: usize,
+    /// CPU <-> CPU across nodes (the MPI stand-in).
+    pub inter_node_faces: usize,
+    /// Inter-node faces touching an accelerator worker (always 0).
+    pub mic_inter_node_faces: usize,
+}
+
+impl FabricStats {
+    /// (intra-node bytes, inter-node bytes) crossing the fabric per routed
+    /// stage at `order`.
+    pub fn bytes_per_routed_stage(&self, order: usize) -> (usize, usize) {
+        let m = order + 1;
+        let sz = NFIELDS * m * m * 4;
+        (self.intra_node_faces * sz, self.inter_node_faces * sz)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker thread
+// ---------------------------------------------------------------------------
+
+struct WorkerInit {
+    rx: Receiver<Cmd>,
+    tx: Sender<Resp>,
+    /// Command senders of every worker, indexed by worker id (the fabric).
+    fabric: Vec<Sender<Cmd>>,
+    blocks: Vec<BlockState>,
+    outbound: Vec<OutboundGroup>,
+    self_copies: Vec<CopyRoute>,
+    expected_in: usize,
+    factory: Arc<dyn WorkerBackendFactory>,
+    order: usize,
+}
+
+fn worker_main(init: WorkerInit) {
+    let WorkerInit {
+        rx,
+        tx,
+        fabric,
+        mut blocks,
+        mut outbound,
+        mut self_copies,
+        mut expected_in,
+        factory,
+        order,
+    } = init;
+    let basis = LglBasis::new(order);
+    let mut backends = match factory.build(order, &blocks) {
+        Ok(b) => {
+            tx.send(Resp::Ready).ok();
+            b
+        }
+        Err(e) => {
+            tx.send(Resp::Err(format!("building {} backends: {e}", factory.label()))).ok();
+            return;
+        }
+    };
+    let mut times = WorkerTimes::default();
+    // Deliveries that raced ahead of this worker's Stage command (peers may
+    // ship before we even dequeue the stage); they belong to the next
+    // routed stage and are installed in its exchange window.
+    let mut pending: Vec<Deliveries> = Vec::new();
+    loop {
+        let cmd = match rx.recv() {
+            Ok(c) => c,
+            Err(_) => break,
+        };
+        match cmd {
+            Cmd::Stage { dt, a, b, route } => {
+                let mut fail: Option<String> = None;
+                // set when Shutdown arrives mid-exchange (a peer died and
+                // its deliveries will never come): finish the stage
+                // bookkeeping, then exit instead of blocking forever
+                let mut terminate = false;
+                // boundary phase (full stage for non-split backends): after
+                // this every outbound trace of the exchange plan is final
+                let t0 = Instant::now();
+                for (i, blk) in blocks.iter_mut().enumerate() {
+                    match backends[i].stage_boundary(blk, dt, a, b) {
+                        Ok(t) => times.kernels.accumulate(&t),
+                        Err(e) => {
+                            fail = Some(format!("boundary stage: {e}"));
+                            break;
+                        }
+                    }
+                }
+                if route {
+                    // ship traces through the fabric *before* the interior
+                    // sweep so peers route while this worker keeps
+                    // computing; on failure ship empty payloads so the
+                    // cluster lockstep (and every peer's exchange count)
+                    // stays intact
+                    for grp in &outbound {
+                        let payload: Deliveries = if fail.is_some() {
+                            Vec::new()
+                        } else {
+                            grp.items
+                                .iter()
+                                .map(|&(bi, e, f, dbi, slot)| {
+                                    (dbi, slot, blocks[bi].trace_slice(e, f).to_vec())
+                                })
+                                .collect()
+                        };
+                        fabric[grp.dst].send(Cmd::Deliver(payload)).ok();
+                    }
+                    if fail.is_none() {
+                        // same-worker copies never touch the fabric; the
+                        // halo is not read again until the next stage's
+                        // boundary phase, so installing now is safe
+                        for &(bi, e, f, dbi, slot) in &self_copies {
+                            let data = blocks[bi].trace_slice(e, f).to_vec();
+                            blocks[dbi].set_halo_slot(slot, &data);
+                        }
+                    }
+                }
+                times.boundary_s += t0.elapsed().as_secs_f64();
+                let t1 = Instant::now();
+                if fail.is_none() {
+                    for (blk, backend) in blocks.iter_mut().zip(backends.iter_mut()) {
+                        let (mut v, _halo) = blk.split_for_overlap();
+                        match backend.stage_interior(&mut v, dt, a, b) {
+                            Ok(t) => times.kernels.accumulate(&t),
+                            Err(e) => {
+                                fail = Some(format!("interior stage: {e}"));
+                                break;
+                            }
+                        }
+                    }
+                }
+                times.interior_s += t1.elapsed().as_secs_f64();
+                let mut exchange_s = 0.0;
+                if route {
+                    let t2 = Instant::now();
+                    let mut got = 0usize;
+                    for upd in pending.drain(..) {
+                        got += 1;
+                        if fail.is_none() {
+                            for (bi, slot, data) in upd {
+                                blocks[bi].set_halo_slot(slot, &data);
+                            }
+                        }
+                    }
+                    while got < expected_in {
+                        match rx.recv() {
+                            Ok(Cmd::Deliver(upd)) => {
+                                got += 1;
+                                if fail.is_none() {
+                                    for (bi, slot, data) in upd {
+                                        blocks[bi].set_halo_slot(slot, &data);
+                                    }
+                                }
+                            }
+                            Ok(Cmd::Shutdown) => {
+                                fail = Some("shutdown during exchange".into());
+                                terminate = true;
+                                break;
+                            }
+                            Ok(_) => {
+                                fail = Some(
+                                    "fabric protocol violation: non-delivery during exchange"
+                                        .into(),
+                                );
+                                break;
+                            }
+                            Err(_) => {
+                                fail = Some("fabric closed during exchange".into());
+                                terminate = true;
+                                break;
+                            }
+                        }
+                    }
+                    exchange_s = t2.elapsed().as_secs_f64();
+                    times.exchange_s += exchange_s;
+                }
+                times.stages += 1;
+                let resp = match fail {
+                    None => Resp::StageDone { exchange_s },
+                    Some(m) => Resp::Err(m),
+                };
+                tx.send(resp).ok();
+                if terminate {
+                    break;
+                }
+            }
+            Cmd::Deliver(upd) => pending.push(upd),
+            Cmd::Energy => {
+                let e: f64 = blocks.iter().map(|b| b.energy(&basis)).sum();
+                tx.send(Resp::Energy(e)).ok();
+            }
+            Cmd::ReadBlock(i) => {
+                if i < blocks.len() {
+                    tx.send(Resp::Block(Box::new(blocks[i].clone()))).ok();
+                } else {
+                    tx.send(Resp::Err(format!("no local block {i}"))).ok();
+                }
+            }
+            Cmd::ReadTimes => {
+                tx.send(Resp::Times(times)).ok();
+            }
+            Cmd::TakeTimes => {
+                tx.send(Resp::Times(times)).ok();
+                times = WorkerTimes::default();
+            }
+            Cmd::Replace(msg) => {
+                let ReplaceMsg { blocks: nb, outbound: no, self_copies: nsc, expected_in: nei } =
+                    *msg;
+                match factory.build(order, &nb) {
+                    Ok(bk) => {
+                        blocks = nb;
+                        backends = bk;
+                        outbound = no;
+                        self_copies = nsc;
+                        expected_in = nei;
+                        times = WorkerTimes::default();
+                        pending.clear();
+                        tx.send(Resp::Replaced).ok();
+                    }
+                    Err(e) => {
+                        tx.send(Resp::Err(format!("rebuilding backends: {e}"))).ok();
+                    }
+                }
+            }
+            Cmd::Shutdown => break,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// routing tables
+// ---------------------------------------------------------------------------
+
+/// Distribute per-owner states to workers, preserving owner order; returns
+/// (blocks per worker, owners per worker, owner -> (worker, local index)).
+#[allow(clippy::type_complexity)]
+fn distribute(
+    states: Vec<BlockState>,
+    worker_of_owner: &[usize],
+    nw: usize,
+) -> (Vec<Vec<BlockState>>, Vec<Vec<usize>>, HashMap<usize, (usize, usize)>) {
+    let mut blocks: Vec<Vec<BlockState>> = (0..nw).map(|_| Vec::new()).collect();
+    let mut owners: Vec<Vec<usize>> = (0..nw).map(|_| Vec::new()).collect();
+    let mut map = HashMap::new();
+    for (o, st) in states.into_iter().enumerate() {
+        let w = worker_of_owner[o];
+        map.insert(o, (w, blocks[w].len()));
+        blocks[w].push(st);
+        owners[w].push(o);
+    }
+    (blocks, owners, map)
+}
+
+/// Invert the exchange plan into per-worker routing tables: outbound copy
+/// groups per destination worker, same-worker copies, and how many Deliver
+/// messages each worker expects per routed stage (one per sending peer).
+#[allow(clippy::type_complexity)]
+fn route_tables(
+    plan: &ExchangePlan,
+    owner_map: &HashMap<usize, (usize, usize)>,
+    nw: usize,
+) -> (Vec<Vec<OutboundGroup>>, Vec<Vec<CopyRoute>>, Vec<usize>) {
+    let mut outbound: Vec<Vec<OutboundGroup>> = (0..nw).map(|_| Vec::new()).collect();
+    let mut self_copies: Vec<Vec<CopyRoute>> = (0..nw).map(|_| Vec::new()).collect();
+    let mut sources: Vec<HashSet<usize>> = (0..nw).map(|_| HashSet::new()).collect();
+    for (dst_owner, copies) in plan.copies.iter().enumerate() {
+        let Some(&(wd, bd)) = owner_map.get(&dst_owner) else { continue };
+        for &(src_owner, se, sf, slot) in copies {
+            let (ws, bs) = owner_map[&src_owner];
+            let route: CopyRoute = (bs, se, sf, bd, slot);
+            if ws == wd {
+                self_copies[ws].push(route);
+            } else {
+                match outbound[ws].iter_mut().find(|g| g.dst == wd) {
+                    Some(g) => g.items.push(route),
+                    None => outbound[ws].push(OutboundGroup { dst: wd, items: vec![route] }),
+                }
+                sources[wd].insert(ws);
+            }
+        }
+    }
+    let expected: Vec<usize> = sources.iter().map(|s| s.len()).collect();
+    (outbound, self_copies, expected)
+}
+
+/// Classify every copy of the plan by fabric lane and enforce the §5.5
+/// constraint: no inter-node face may touch an accelerator worker.
+fn fabric_stats(
+    plan: &ExchangePlan,
+    owner_map: &HashMap<usize, (usize, usize)>,
+    meta: &[(usize, DeviceKind)],
+) -> Result<FabricStats> {
+    let mut st = FabricStats::default();
+    for (dst_owner, copies) in plan.copies.iter().enumerate() {
+        let Some(&(wd, _)) = owner_map.get(&dst_owner) else { continue };
+        for &(src_owner, _, _, _) in copies {
+            let (ws, _) = owner_map[&src_owner];
+            if ws == wd {
+                st.self_faces += 1;
+            } else if meta[ws].0 == meta[wd].0 {
+                st.intra_node_faces += 1;
+            } else {
+                st.inter_node_faces += 1;
+                if meta[ws].1 == DeviceKind::Mic || meta[wd].1 == DeviceKind::Mic {
+                    st.mic_inter_node_faces += 1;
+                }
+            }
+        }
+    }
+    if st.mic_inter_node_faces > 0 {
+        return Err(anyhow!(
+            "{} halo faces would route between an accelerator worker and another \
+             node; accelerators never touch the inter-node fabric (paper §5.5 \
+             interior-only constraint) — fix the nested partition",
+            st.mic_inter_node_faces
+        ));
+    }
+    Ok(st)
+}
+
+// ---------------------------------------------------------------------------
+// the cluster runtime
+// ---------------------------------------------------------------------------
+
+/// One worker's placement + backend in [`ClusterRun::launch_parts`].
+#[derive(Debug, Clone)]
+pub struct WorkerSpec {
+    /// Which virtual node the worker belongs to.
+    pub node: usize,
+    /// CPU (communication-owning) or accelerator stand-in.
+    pub device: DeviceKind,
+    pub backend: WorkerBackend,
+    /// Thread name.
+    pub name: String,
+}
+
+/// Read-only summary of one live worker.
+#[derive(Debug, Clone)]
+pub struct WorkerSummary {
+    pub node: usize,
+    pub device: DeviceKind,
+    pub k_elems: usize,
+    pub label: &'static str,
+}
+
+/// High-level cluster configuration for [`ClusterRun::launch`].
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    /// Number of virtual compute nodes (level-1 splice chunks).
+    pub nodes: usize,
+    pub order: usize,
+    /// Level-2 MIC share per node; `None` solves it from the calibrated
+    /// Stampede model (the paper's §5.6 static split).
+    pub mic_fraction: Option<f64>,
+    /// Backend of the CPU (boundary) workers.
+    pub cpu_backend: WorkerBackend,
+    /// Backend of the accelerator (interior) workers — may differ, which
+    /// is the heterogeneous case the rebalancer equalizes.
+    pub mic_backend: WorkerBackend,
+    pub exchange_every_stage: bool,
+    /// Re-solve every node's split from measured times each R steps.
+    pub rebalance_every: Option<usize>,
+}
+
+impl ClusterSpec {
+    pub fn new(nodes: usize, order: usize) -> Self {
+        ClusterSpec {
+            nodes,
+            order,
+            mic_fraction: None,
+            cpu_backend: WorkerBackend::RustRef,
+            mic_backend: WorkerBackend::RustRef,
+            exchange_every_stage: true,
+            rebalance_every: None,
+        }
+    }
+}
+
+struct WorkerHandle {
+    tx: Sender<Cmd>,
+    rx: Receiver<Resp>,
+    handle: Option<JoinHandle<()>>,
+    /// Owners handled by this worker, in block order.
+    owners: Vec<usize>,
+    node: usize,
+    device: DeviceKind,
+    k_elems: usize,
+    label: &'static str,
+}
+
+/// Everything the mesh-aware launch keeps for re-splitting + migration.
+struct MeshCtx {
+    mesh: Mesh,
+    node_part: Partition,
+    /// Current per-node MIC fraction.
+    fractions: Vec<f64>,
+    /// Current blocks (for global-id mapping during migration).
+    lblocks: Vec<LocalBlock>,
+    /// Current owner per global element.
+    elem_owners: Vec<usize>,
+}
+
+/// One node's row of a [`RebalanceReport`].
+#[derive(Debug, Clone, Copy)]
+pub struct NodeRebalance {
+    pub node: usize,
+    pub old_k_mic: usize,
+    pub new_k_mic: usize,
+    /// The solved (pre-clipping) MIC fraction.
+    pub target_fraction: f64,
+}
+
+/// What one [`ClusterRun::rebalance`] call did.
+#[derive(Debug, Clone, Default)]
+pub struct RebalanceReport {
+    /// Elements that changed workers (0 = the split was already optimal).
+    pub migrated_elems: usize,
+    pub per_node: Vec<NodeRebalance>,
+}
+
+/// A live N-node cluster: 2 workers per node plus the message fabric.
+pub struct ClusterRun {
+    workers: Vec<WorkerHandle>,
+    /// owner -> (worker index, local block index)
+    owner_map: HashMap<usize, (usize, usize)>,
+    worker_of_owner: Vec<usize>,
+    plan: ExchangePlan,
+    fabric: FabricStats,
+    pub order: usize,
+    /// Exchange after every RK stage (numerically exact) vs once per step
+    /// (the paper's §5.5 schedule, kept as an ablation).
+    pub exchange_every_stage: bool,
+    pub steps_taken: usize,
+    /// Wall time of the compute part of all stages (boundary + interior).
+    pub stage_wall_s: f64,
+    /// Wall time of the exchange windows (max over workers per stage).
+    pub exchange_wall_s: f64,
+    /// When set, [`ClusterRun::run`] rebalances every R steps.
+    pub rebalance_every: Option<usize>,
+    routed_stages: usize,
+    poisoned: bool,
+    mesh_ctx: Option<MeshCtx>,
+}
+
+impl ClusterRun {
+    /// Launch the full two-level scheme on `mesh`: level-1 splice into
+    /// `spec.nodes` chunks, level-2 CPU/MIC split per node, two workers per
+    /// node on the fabric. Initial conditions come from `ic`.
+    pub fn launch(
+        mesh: &Mesh,
+        spec: &ClusterSpec,
+        ic: impl Fn([f64; 3]) -> [f64; NFIELDS],
+    ) -> Result<ClusterRun> {
+        let nodes = spec.nodes.max(1);
+        anyhow::ensure!(mesh.len() >= nodes, "mesh has fewer elements than nodes");
+        let node_part = splice(mesh, nodes);
+        let k_node = (mesh.len() / nodes).max(1);
+        let frac = spec.mic_fraction.unwrap_or_else(|| {
+            let sol = solve_mic_fraction(&calib::stampede_node(), spec.order, k_node);
+            sol.k_mic as f64 / k_node as f64
+        });
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&frac),
+            "MIC fraction {frac} outside [0, 1]"
+        );
+        let fractions = vec![frac; nodes];
+        let np = nested_partition_fractions(mesh, &node_part, &fractions);
+        let elem_owners = np.owners();
+        let (lblocks, plan) = build_local_blocks(mesh, &elem_owners, np.n_owners());
+        let basis = LglBasis::new(spec.order);
+        let mut states = Vec::with_capacity(lblocks.len());
+        for lb in &lblocks {
+            let mut st =
+                BlockState::from_local_block(lb, spec.order, lb.len().max(1), lb.halo_len.max(1));
+            st.set_initial_condition(&basis, &ic);
+            states.push(st);
+        }
+        let specs: Vec<WorkerSpec> = (0..2 * nodes)
+            .map(|w| {
+                let device = if w % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic };
+                WorkerSpec {
+                    node: w / 2,
+                    device,
+                    backend: if device == DeviceKind::Cpu {
+                        spec.cpu_backend.clone()
+                    } else {
+                        spec.mic_backend.clone()
+                    },
+                    name: format!(
+                        "node{}-{}",
+                        w / 2,
+                        if device == DeviceKind::Cpu { "cpu" } else { "mic" }
+                    ),
+                }
+            })
+            .collect();
+        let worker_of_owner: Vec<usize> = (0..2 * nodes).collect();
+        let mut run =
+            ClusterRun::launch_parts(&lblocks, states, plan, &worker_of_owner, &specs, spec.order)?;
+        run.exchange_every_stage = spec.exchange_every_stage;
+        run.rebalance_every = spec.rebalance_every;
+        run.mesh_ctx = Some(MeshCtx { mesh: mesh.clone(), node_part, fractions, lblocks, elem_owners });
+        Ok(run)
+    }
+
+    /// Launch from pre-built parts: `worker_of_owner[o]` assigns each owner's
+    /// block to a worker in `0..specs.len()`. Initial conditions must already
+    /// be set on the states; traces and halos are primed here. This entry
+    /// point has no mesh, so [`ClusterRun::rebalance`] is unavailable — the
+    /// mesh-aware [`ClusterRun::launch`] enables it.
+    pub fn launch_parts(
+        lblocks: &[LocalBlock],
+        mut states: Vec<BlockState>,
+        plan: ExchangePlan,
+        worker_of_owner: &[usize],
+        specs: &[WorkerSpec],
+        order: usize,
+    ) -> Result<ClusterRun> {
+        assert_eq!(lblocks.len(), states.len());
+        assert_eq!(worker_of_owner.len(), states.len());
+        let nw = specs.len();
+        assert!(nw >= 1, "need at least one worker");
+        assert!(worker_of_owner.iter().all(|&w| w < nw), "worker index out of range");
+        // prime traces + halos in-process before distributing
+        for s in states.iter_mut() {
+            s.refresh_traces();
+        }
+        apply_exchange(&mut states, &plan);
+        let (mut per_worker_blocks, per_worker_owners, owner_map) =
+            distribute(states, worker_of_owner, nw);
+        let meta: Vec<(usize, DeviceKind)> = specs.iter().map(|s| (s.node, s.device)).collect();
+        let fabric = fabric_stats(&plan, &owner_map, &meta)?;
+        let (mut outbound, mut self_copies, expected) = route_tables(&plan, &owner_map, nw);
+        let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(nw);
+        let mut cmd_rxs: Vec<Option<Receiver<Cmd>>> = Vec::with_capacity(nw);
+        for _ in 0..nw {
+            let (t, r) = channel::<Cmd>();
+            cmd_txs.push(t);
+            cmd_rxs.push(Some(r));
+        }
+        let mut workers = Vec::with_capacity(nw);
+        for (w, spec) in specs.iter().enumerate() {
+            let (rtx, rrx) = channel::<Resp>();
+            let init = WorkerInit {
+                rx: cmd_rxs[w].take().expect("receiver taken once"),
+                tx: rtx,
+                fabric: cmd_txs.clone(),
+                blocks: std::mem::take(&mut per_worker_blocks[w]),
+                outbound: std::mem::take(&mut outbound[w]),
+                self_copies: std::mem::take(&mut self_copies[w]),
+                expected_in: expected[w],
+                factory: spec.backend.factory(nw),
+                order,
+            };
+            let handle = std::thread::Builder::new()
+                .name(spec.name.clone())
+                .spawn(move || worker_main(init))
+                .map_err(|e| anyhow!("spawning worker {w}: {e}"))?;
+            let k_elems: usize = per_worker_owners[w].iter().map(|&o| lblocks[o].len()).sum();
+            workers.push(WorkerHandle {
+                tx: cmd_txs[w].clone(),
+                rx: rrx,
+                handle: Some(handle),
+                owners: per_worker_owners[w].clone(),
+                node: spec.node,
+                device: spec.device,
+                k_elems,
+                label: spec.backend.label(),
+            });
+        }
+        let run = ClusterRun {
+            workers,
+            owner_map,
+            worker_of_owner: worker_of_owner.to_vec(),
+            plan,
+            fabric,
+            order,
+            exchange_every_stage: true,
+            steps_taken: 0,
+            stage_wall_s: 0.0,
+            exchange_wall_s: 0.0,
+            rebalance_every: None,
+            routed_stages: 0,
+            poisoned: false,
+            mesh_ctx: None,
+        };
+        // readiness handshake: backend construction can fail (e.g. PJRT
+        // without the feature) — surface it now, not as a first-stage hang
+        for (w, wk) in run.workers.iter().enumerate() {
+            match wk.rx.recv() {
+                Ok(Resp::Ready) => {}
+                Ok(Resp::Err(m)) => return Err(anyhow!("worker {w} failed to start: {m}")),
+                _ => return Err(anyhow!("worker {w} died during startup")),
+            }
+        }
+        Ok(run)
+    }
+
+    fn stage_all(&mut self, dt: f32, a: f32, b: f32, route: bool) -> Result<()> {
+        let t0 = Instant::now();
+        for w in &self.workers {
+            w.tx.send(Cmd::Stage { dt, a, b, route }).map_err(|_| anyhow!("worker died"))?;
+        }
+        let mut failure: Option<String> = None;
+        let mut ex_max = 0.0f64;
+        for w in &self.workers {
+            match w.rx.recv() {
+                Ok(Resp::StageDone { exchange_s }) => ex_max = ex_max.max(exchange_s),
+                Ok(Resp::Err(m)) => failure = Some(m),
+                _ => {
+                    self.poisoned = true;
+                    return Err(anyhow!("worker channel failed during stage"));
+                }
+            }
+        }
+        let full = t0.elapsed().as_secs_f64();
+        self.stage_wall_s += (full - ex_max).max(0.0);
+        self.exchange_wall_s += ex_max;
+        if route {
+            self.routed_stages += 1;
+        }
+        if let Some(m) = failure {
+            self.poisoned = true;
+            return Err(anyhow!("stage failed: {m}"));
+        }
+        Ok(())
+    }
+
+    /// Advance one LSRK timestep.
+    pub fn step(&mut self, dt: f64) -> Result<()> {
+        if self.poisoned {
+            return Err(anyhow!("cluster poisoned by an earlier failure; relaunch"));
+        }
+        for s in 0..N_STAGES {
+            let route = self.exchange_every_stage || s == N_STAGES - 1;
+            self.stage_all(dt as f32, LSRK_A[s] as f32, LSRK_B[s] as f32, route)?;
+        }
+        self.steps_taken += 1;
+        Ok(())
+    }
+
+    /// Advance `steps` timesteps, rebalancing every `rebalance_every` steps
+    /// when configured (mesh-aware launches only).
+    pub fn run(&mut self, dt: f64, steps: usize) -> Result<()> {
+        for _ in 0..steps {
+            self.step(dt)?;
+            if let Some(every) = self.rebalance_every {
+                if every > 0 && self.steps_taken % every == 0 && self.mesh_ctx.is_some() {
+                    self.rebalance()?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Total energy across all blocks.
+    pub fn energy(&self) -> Result<f64> {
+        for w in &self.workers {
+            w.tx.send(Cmd::Energy).map_err(|_| anyhow!("worker died"))?;
+        }
+        let mut e = 0.0;
+        for w in &self.workers {
+            match w.rx.recv() {
+                Ok(Resp::Energy(v)) => e += v,
+                Ok(Resp::Err(m)) => return Err(anyhow!("energy failed: {m}")),
+                _ => return Err(anyhow!("worker failed during energy")),
+            }
+        }
+        Ok(e)
+    }
+
+    /// Pull back the state of one owner's block.
+    pub fn read_block(&self, owner: usize) -> Result<BlockState> {
+        let (w, bi) = *self
+            .owner_map
+            .get(&owner)
+            .ok_or_else(|| anyhow!("unknown owner {owner}"))?;
+        self.workers[w].tx.send(Cmd::ReadBlock(bi)).map_err(|_| anyhow!("worker died"))?;
+        match self.workers[w].rx.recv() {
+            Ok(Resp::Block(b)) => Ok(*b),
+            Ok(Resp::Err(m)) => Err(anyhow!("read_block: {m}")),
+            _ => Err(anyhow!("worker failed during read")),
+        }
+    }
+
+    /// All owners, in worker order.
+    pub fn owners(&self) -> Vec<usize> {
+        self.workers.iter().flat_map(|w| w.owners.clone()).collect()
+    }
+
+    /// Per-worker placement summaries, in worker order.
+    pub fn worker_summaries(&self) -> Vec<WorkerSummary> {
+        self.workers
+            .iter()
+            .map(|w| WorkerSummary {
+                node: w.node,
+                device: w.device,
+                k_elems: w.k_elems,
+                label: w.label,
+            })
+            .collect()
+    }
+
+    /// Per-node realized (k_cpu, k_mic) for the standard two-workers-per-
+    /// node layout of [`ClusterRun::launch`].
+    pub fn node_counts(&self) -> Vec<(usize, usize)> {
+        let nodes = self.workers.len() / 2;
+        (0..nodes)
+            .map(|nd| (self.workers[2 * nd].k_elems, self.workers[2 * nd + 1].k_elems))
+            .collect()
+    }
+
+    /// Per-phase accumulated times per worker (non-destructive; safe to
+    /// call repeatedly and after a failed step).
+    pub fn worker_times(&self) -> Result<Vec<WorkerTimes>> {
+        self.collect_times(false)
+    }
+
+    /// Per-phase accumulated times per worker, resetting the counters.
+    pub fn take_worker_times(&self) -> Result<Vec<WorkerTimes>> {
+        self.collect_times(true)
+    }
+
+    fn collect_times(&self, take: bool) -> Result<Vec<WorkerTimes>> {
+        for w in &self.workers {
+            let cmd = if take { Cmd::TakeTimes } else { Cmd::ReadTimes };
+            w.tx.send(cmd).map_err(|_| anyhow!("worker died"))?;
+        }
+        let mut out = Vec::with_capacity(self.workers.len());
+        for w in &self.workers {
+            match w.rx.recv() {
+                Ok(Resp::Times(t)) => out.push(t),
+                Ok(Resp::Err(m)) => return Err(anyhow!("times: {m}")),
+                _ => return Err(anyhow!("worker failed during times")),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fabric traffic classification (faces per routed stage).
+    pub fn fabric(&self) -> FabricStats {
+        self.fabric
+    }
+
+    /// Routed stages so far (for cumulative traffic accounting).
+    pub fn routed_stages(&self) -> usize {
+        self.routed_stages
+    }
+
+    /// Bytes crossing the fabric per routed stage (all lanes).
+    pub fn exchange_bytes_per_stage(&self) -> usize {
+        let m = self.order + 1;
+        self.plan.total_faces() * NFIELDS * m * m * 4
+    }
+
+    /// Read back every element's (q, res) keyed by global id — the one
+    /// place that knows the per-element slicing, shared by state gathering
+    /// and migration.
+    fn pull_element_state(&self, ctx: &MeshCtx) -> Result<Vec<Option<(Vec<f32>, Vec<f32>)>>> {
+        let m = self.order + 1;
+        let esz = NFIELDS * m * m * m;
+        let mut out: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; ctx.mesh.len()];
+        for (owner, lb) in ctx.lblocks.iter().enumerate() {
+            let st = self.read_block(owner)?;
+            for (li, &g) in lb.global_ids.iter().enumerate() {
+                let q = st.q[li * esz..(li + 1) * esz].to_vec();
+                let r = st.res[li * esz..(li + 1) * esz].to_vec();
+                out[g] = Some((q, r));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Read back every element's solution in global Morton order
+    /// (mesh-aware launches only): `out[g]` is element g's `(9, M, M, M)`
+    /// block of q.
+    pub fn gather_elements(&self) -> Result<Vec<Vec<f32>>> {
+        let ctx = self
+            .mesh_ctx
+            .as_ref()
+            .ok_or_else(|| anyhow!("gather_elements needs the mesh-aware ClusterRun::launch"))?;
+        Ok(self
+            .pull_element_state(ctx)?
+            .into_iter()
+            .map(|s| s.map(|(q, _)| q).unwrap_or_default())
+            .collect())
+    }
+
+    /// Re-solve every node's CPU/MIC split from its measured times and
+    /// migrate elements between the node's two workers if the optimum
+    /// moved. The measurement window is everything since the last
+    /// `take_worker_times`/`rebalance` call; counters reset afterwards.
+    ///
+    /// Migration is currently global: all blocks, the exchange plan and
+    /// every worker's backends are rebuilt even when only one node moved
+    /// (simple and exactly state-preserving; incremental per-node
+    /// replacement is a ROADMAP follow-on — note the PJRT factory
+    /// recompiles its artifacts on every Replace).
+    pub fn rebalance(&mut self) -> Result<RebalanceReport> {
+        let mut ctx = self.mesh_ctx.take().ok_or_else(|| {
+            anyhow!("rebalancing needs the mesh-aware ClusterRun::launch")
+        })?;
+        let res = self.rebalance_inner(&mut ctx);
+        self.mesh_ctx = Some(ctx);
+        res
+    }
+
+    fn rebalance_inner(&mut self, ctx: &mut MeshCtx) -> Result<RebalanceReport> {
+        // standard layout: worker 2n = node n CPU, worker 2n+1 = node n MIC
+        // (guaranteed by the mesh-aware launch that enables this path)
+        let times = self.take_worker_times()?;
+        let nodes = self.workers.len() / 2;
+        let mut fractions = Vec::with_capacity(nodes);
+        for nd in 0..nodes {
+            let (wc, wm) = (2 * nd, 2 * nd + 1);
+            let k_cpu = self.workers[wc].k_elems;
+            let k_mic = self.workers[wm].k_elems;
+            let k = k_cpu + k_mic;
+            let steps = times[wc].steps();
+            if k == 0 || steps < 1.0 {
+                // nothing measured yet: keep the current split
+                fractions.push(ctx.fractions[nd]);
+                continue;
+            }
+            let model = calib::measured_node(
+                self.order,
+                k_cpu,
+                k_mic,
+                steps,
+                &times[wc].wall_kernels(),
+                &times[wm].wall_kernels(),
+            );
+            let sol = solve_mic_fraction(&model, self.order, k);
+            fractions.push(sol.k_mic as f64 / k as f64);
+        }
+        let new_np = nested_partition_fractions(&ctx.mesh, &ctx.node_part, &fractions);
+        let new_owners = new_np.owners();
+        let migrated =
+            new_owners.iter().zip(&ctx.elem_owners).filter(|(a, b)| a != b).count();
+        let report = RebalanceReport {
+            migrated_elems: migrated,
+            per_node: (0..nodes)
+                .map(|nd| NodeRebalance {
+                    node: nd,
+                    old_k_mic: self.workers[2 * nd + 1].k_elems,
+                    new_k_mic: new_np.node_counts[nd].1,
+                    target_fraction: fractions[nd],
+                })
+                .collect(),
+        };
+        if migrated == 0 {
+            ctx.fractions = fractions;
+            return Ok(report);
+        }
+        // ---- migrate: pull state, re-split, redistribute ----------------
+        let order = self.order;
+        let m = order + 1;
+        let esz = NFIELDS * m * m * m;
+        let n_owners = self.worker_of_owner.len();
+        let mut elem_state = self.pull_element_state(ctx)?;
+        let (new_lblocks, new_plan) = build_local_blocks(&ctx.mesh, &new_owners, n_owners);
+        let mut new_states: Vec<BlockState> = Vec::with_capacity(n_owners);
+        for lb in &new_lblocks {
+            let mut st =
+                BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1));
+            for (li, &g) in lb.global_ids.iter().enumerate() {
+                let (q, r) = elem_state[g]
+                    .take()
+                    .ok_or_else(|| anyhow!("element {g} lost during migration"))?;
+                st.q[li * esz..(li + 1) * esz].copy_from_slice(&q);
+                st.res[li * esz..(li + 1) * esz].copy_from_slice(&r);
+            }
+            // traces are a pure function of q, so refreshed traces (and the
+            // halos primed from them) reproduce the pre-migration values
+            // bit-for-bit — the run continues exactly
+            st.refresh_traces();
+            new_states.push(st);
+        }
+        apply_exchange(&mut new_states, &new_plan);
+        let nw = self.workers.len();
+        let (mut per_worker_blocks, per_worker_owners, owner_map) =
+            distribute(new_states, &self.worker_of_owner, nw);
+        let meta: Vec<(usize, DeviceKind)> =
+            self.workers.iter().map(|w| (w.node, w.device)).collect();
+        let fabric = fabric_stats(&new_plan, &owner_map, &meta)?;
+        let (mut outbound, mut self_copies, expected) = route_tables(&new_plan, &owner_map, nw);
+        for (w, wk) in self.workers.iter().enumerate() {
+            let msg = ReplaceMsg {
+                blocks: std::mem::take(&mut per_worker_blocks[w]),
+                outbound: std::mem::take(&mut outbound[w]),
+                self_copies: std::mem::take(&mut self_copies[w]),
+                expected_in: expected[w],
+            };
+            if wk.tx.send(Cmd::Replace(Box::new(msg))).is_err() {
+                self.poisoned = true;
+                return Err(anyhow!("worker {w} died during migration"));
+            }
+        }
+        for (w, wk) in self.workers.iter().enumerate() {
+            match wk.rx.recv() {
+                Ok(Resp::Replaced) => {}
+                Ok(Resp::Err(msg)) => {
+                    self.poisoned = true;
+                    return Err(anyhow!("worker {w} failed migration: {msg}"));
+                }
+                _ => {
+                    self.poisoned = true;
+                    return Err(anyhow!("worker {w} died during migration"));
+                }
+            }
+        }
+        for (w, wk) in self.workers.iter_mut().enumerate() {
+            wk.owners = per_worker_owners[w].clone();
+            wk.k_elems = per_worker_owners[w].iter().map(|&o| new_lblocks[o].len()).sum();
+        }
+        self.owner_map = owner_map;
+        self.plan = new_plan;
+        self.fabric = fabric;
+        ctx.lblocks = new_lblocks;
+        ctx.elem_owners = new_owners;
+        ctx.fractions = fractions;
+        Ok(report)
+    }
+}
+
+impl Drop for ClusterRun {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in self.workers.iter_mut() {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::unit_cube_geometry;
+    use crate::solver::analytic::standing_wave;
+
+    fn wave_ic(x: [f64; 3]) -> [f64; 9] {
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        standing_wave(x, 0.0, 1.0, 1.0, w)
+    }
+
+    #[test]
+    fn two_node_cluster_runs_and_decays() {
+        let mesh = unit_cube_geometry(4);
+        let mut spec = ClusterSpec::new(2, 2);
+        spec.mic_fraction = Some(0.2);
+        let mut run = ClusterRun::launch(&mesh, &spec, wave_ic).unwrap();
+        let e0 = run.energy().unwrap();
+        run.run(1e-3, 3).unwrap();
+        let e1 = run.energy().unwrap();
+        assert!(e1.is_finite() && e1 > 0.0);
+        assert!(e1 <= e0 * (1.0 + 1e-6), "{e0} -> {e1}");
+        // two nodes must exchange over the inter-node lane, CPU-only
+        let f = run.fabric();
+        assert!(f.inter_node_faces > 0, "{f:?}");
+        assert_eq!(f.mic_inter_node_faces, 0);
+        assert_eq!(run.routed_stages(), 3 * N_STAGES);
+    }
+
+    #[test]
+    fn per_phase_times_accumulate_and_reset() {
+        let mesh = unit_cube_geometry(4);
+        let mut spec = ClusterSpec::new(1, 2);
+        spec.mic_fraction = Some(0.3);
+        let mut run = ClusterRun::launch(&mesh, &spec, wave_ic).unwrap();
+        run.run(1e-3, 2).unwrap();
+        let t = run.worker_times().unwrap();
+        assert_eq!(t.len(), 2);
+        assert!(t[0].busy_s() > 0.0 && t[1].busy_s() > 0.0);
+        assert_eq!(t[0].stages, 2 * N_STAGES);
+        // non-destructive read, then a destructive take, then empty
+        let t2 = run.worker_times().unwrap();
+        assert_eq!(t2[0].stages, 2 * N_STAGES);
+        let t3 = run.take_worker_times().unwrap();
+        assert_eq!(t3[0].stages, 2 * N_STAGES);
+        let t4 = run.worker_times().unwrap();
+        assert_eq!(t4[0].stages, 0);
+        assert_eq!(t4[0].busy_s(), 0.0);
+    }
+
+    #[test]
+    fn rebalance_without_measurement_is_noop() {
+        let mesh = unit_cube_geometry(4);
+        let mut spec = ClusterSpec::new(1, 1);
+        spec.mic_fraction = Some(0.1);
+        let mut run = ClusterRun::launch(&mesh, &spec, wave_ic).unwrap();
+        // no steps taken: nothing measured, split must not move
+        let rep = run.rebalance().unwrap();
+        assert_eq!(rep.migrated_elems, 0);
+    }
+
+    #[test]
+    fn node_counts_sum_to_mesh() {
+        let mesh = unit_cube_geometry(4);
+        let mut spec = ClusterSpec::new(2, 1);
+        spec.mic_fraction = Some(0.25);
+        let run = ClusterRun::launch(&mesh, &spec, wave_ic).unwrap();
+        let total: usize = run.node_counts().iter().map(|&(c, m)| c + m).sum();
+        assert_eq!(total, mesh.len());
+    }
+}

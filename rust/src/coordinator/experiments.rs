@@ -276,6 +276,98 @@ pub fn fig6_2(out_csv: Option<&str>) -> Result<String> {
     Ok(s)
 }
 
+/// Extension beyond the paper — the live-vs-simulated **cross-check**,
+/// closing the loop between the two execution paths this repo has: run the
+/// same nested configuration through the in-process N-node cluster runtime
+/// ([`crate::coordinator::cluster`]) and through the discrete-event
+/// simulator — the latter with its node model *refitted from the live
+/// run's measured kernel times* (`Cluster::custom` +
+/// `calib::measured_node`) — and report the per-step discrepancy. A ratio
+/// near 1 means the simulator's functional forms transfer to this machine;
+/// the busy-fraction columns localize any disagreement to a device.
+pub fn cross_check(
+    nodes: usize,
+    n: usize,
+    order: usize,
+    steps: usize,
+    out_csv: Option<&str>,
+) -> Result<String> {
+    use crate::coordinator::cluster::{ClusterRun, ClusterSpec};
+    use crate::solver::analytic::standing_wave;
+    use crate::solver::reference::KernelTimes;
+
+    let nodes = nodes.max(1);
+    let mesh = discontinuous_brick([n, n, n], [1.0, 1.0, 1.0]);
+    let mut spec = ClusterSpec::new(nodes, order);
+    spec.mic_fraction = Some(0.3);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut run = ClusterRun::launch(&mesh, &spec, |x| standing_wave(x, 0.0, 1.0, 1.0, w))?;
+    let t0 = std::time::Instant::now();
+    run.run(1e-3, steps)?;
+    let live_wall = t0.elapsed().as_secs_f64();
+    let times = run.take_worker_times()?;
+    let counts = run.node_counts();
+    // aggregate to one average node: summed kernel seconds over nodes with
+    // per-node average counts and nodes x steps measured timesteps keeps
+    // the refitted rates exact
+    let mut cpu_k = KernelTimes::default();
+    let mut mic_k = KernelTimes::default();
+    let (mut k_cpu, mut k_mic) = (0usize, 0usize);
+    let mut live_cpu_busy = 0.0;
+    let mut live_mic_busy = 0.0;
+    for (nd, &(kc, km)) in counts.iter().enumerate() {
+        // wall-rescaled so thread-parallel backends fit correctly
+        cpu_k.accumulate(&times[2 * nd].wall_kernels());
+        mic_k.accumulate(&times[2 * nd + 1].wall_kernels());
+        k_cpu += kc;
+        k_mic += km;
+        let bc = times[2 * nd].busy_per_step();
+        let bm = times[2 * nd + 1].busy_per_step();
+        let span = bc.max(bm).max(1e-300);
+        live_cpu_busy += bc / span / nodes as f64;
+        live_mic_busy += bm / span / nodes as f64;
+    }
+    let steps_meas = times[0].steps() * nodes as f64;
+    let model = calib::measured_node(
+        order,
+        (k_cpu / nodes).max(1),
+        k_mic / nodes,
+        steps_meas,
+        &cpu_k,
+        &mic_k,
+    );
+    let frac = k_mic as f64 / (k_cpu + k_mic).max(1) as f64;
+    let cluster_model = Cluster::custom(nodes, model, calib::fabric_network());
+    let rep = simulate(
+        &cluster_model, &mesh, order, steps,
+        Scheme::Nested { mic_fraction: Some(frac) },
+    );
+    let live_per_step = live_wall / steps.max(1) as f64;
+    let headers = [
+        "nodes", "live_s_per_step", "sim_s_per_step", "live_over_sim",
+        "live_cpu_busy", "sim_cpu_busy", "live_mic_busy", "sim_mic_busy",
+    ];
+    let rows = vec![vec![
+        nodes.to_string(),
+        format!("{live_per_step:.5}"),
+        format!("{:.5}", rep.per_step_s()),
+        format!("{:.2}", rep.discrepancy(live_wall)),
+        format!("{live_cpu_busy:.2}"),
+        format!("{:.2}", rep.cpu_busy_frac),
+        format!("{live_mic_busy:.2}"),
+        format!("{:.2}", rep.mic_busy_frac),
+    ]];
+    if let Some(p) = out_csv {
+        write_csv(p, &headers, &rows)?;
+    }
+    let mut s = render_table(&headers, &rows);
+    s.push_str(
+        "\nlive = in-process cluster runtime; sim = event simulator with the node \
+         model refitted from the live run's measured kernel times\n",
+    );
+    Ok(s)
+}
+
 /// Extension beyond the paper: weak-scaling sweep 1..256 nodes for all
 /// four schemes (baseline, task-offload, nested, nested+overlapped-PCI),
 /// reporting parallel efficiency relative to each scheme's 1-node time.
@@ -369,6 +461,13 @@ mod tests {
             .find(|l| l.contains('%') && !l.contains("share"))
             .unwrap();
         assert!(first_data_line.contains("volume_loop"), "{first_data_line}");
+    }
+
+    #[test]
+    fn cross_check_live_vs_sim_runs() {
+        let s = cross_check(2, 4, 2, 3, None).unwrap();
+        assert!(s.contains("live_over_sim"), "{s}");
+        assert!(s.contains("refitted"), "{s}");
     }
 
     #[test]

@@ -1,17 +1,37 @@
-//! The per-node host/offload coordination (paper Fig 5.1) and the
-//! experiment drivers that regenerate every table and figure.
+//! Execution coordination: the N-node cluster runtime and the experiment
+//! drivers that regenerate every table and figure.
 //!
-//! [`node`] implements the paper's execution flow in-process: the host
-//! (CPU block) and the offload worker (MIC block) run concurrently on
-//! dedicated threads, each owning its own PJRT runtime (the client is not
-//! `Send`); they synchronize once per RK stage to exchange shared-face
-//! traces, mirroring the host<->coprocessor dynamic the paper treats "in
-//! much the same way as the dynamic between compute nodes".
+//! The two-level execution story (paper §5), end to end:
+//!
+//! * **Level 1** — [`cluster`] launches P virtual compute nodes, one per
+//!   contiguous splice chunk of the Morton-ordered mesh
+//!   ([`crate::partition::splice`]). Nodes exchange halo traces over an
+//!   in-process message fabric whose inter-node lane is the MPI stand-in.
+//! * **Level 2** — inside each node, two long-lived worker threads realize
+//!   the asymmetric CPU/accelerator split
+//!   ([`crate::partition::nested`]): the CPU worker owns the boundary
+//!   elements and *all* communication; the accelerator stand-in owns the
+//!   interior and only ever talks to its own node's CPU over the
+//!   intra-node (PCI stand-in) lane. Workers advance each stage in two
+//!   phases (boundary, then interior — [`crate::solver::parallel`]) and
+//!   ship traces *between* the phases, so the fabric routes while the
+//!   interior sweep computes — the paper's compute/communication overlap.
+//!
+//! The loop closes through the cost model: per-node measured kernel times
+//! feed back into the §5.6 balance solve every R steps and elements
+//! migrate between a node's workers ([`cluster::ClusterRun::rebalance`]).
+//!
+//! [`node`] keeps the historical single-node two-worker API
+//! ([`HeteroRun`]) as a wrapper over the cluster runtime; [`experiments`]
+//! drives the paper's tables/figures plus the live-vs-simulated
+//! cross-check; [`profile`]/[`report`] render the results.
 
+pub mod cluster;
 pub mod experiments;
 pub mod node;
 pub mod profile;
 pub mod report;
 
+pub use cluster::{ClusterRun, ClusterSpec, FabricStats, WorkerBackendFactory, WorkerTimes};
 pub use node::{HeteroRun, WorkerBackend};
 pub use profile::ProfileReport;

@@ -1,211 +1,35 @@
-//! In-process realization of the paper's host/offload execution flow.
+//! The paper's per-node host/offload pair, as a single-node cluster.
 //!
-//! Two long-lived worker threads — "cpu" and "mic" — each own their
-//! blocks' states and a private execution backend (PJRT runtimes are
-//! thread-local: the client is `Rc`-based, and the paper's offload process
-//! is a separate executor anyway). The coordinator thread owns the
-//! exchange plan and routes boundary traces between workers after every
-//! stage, playing the role of the PCI bus + MPI fabric; the simulator
-//! charges modeled time for exactly these copies.
+//! [`HeteroRun`] is the historical two-worker entry point — "cpu" and
+//! "mic" workers on dedicated threads, synchronizing per RK stage — now a
+//! thin wrapper over [`crate::coordinator::cluster::ClusterRun`] with
+//! exactly one virtual node. All the machinery (worker threads, the
+//! message fabric, per-phase timing, backend factories) lives in
+//! [`super::cluster`]; this module keeps the established API surface:
+//! arbitrary owner->device maps, `launch` from pre-built blocks, and the
+//! `(cpu, mic)` kernel-time tuple.
 //!
 //! `exchange_every_stage` selects between the numerically-exact schedule
 //! (exchange after every RK stage) and the paper's once-per-timestep
 //! synchronization (§5.5) — kept as an ablation; EXPERIMENTS.md quantifies
 //! the accuracy difference.
-//!
-//! Workers advance each stage in two phases (boundary, then interior — see
-//! [`crate::solver::parallel`]) and ship their outbound traces *between*
-//! the phases, so the coordinator routes halo data while the interior
-//! sweep is still computing; the halo install message simply queues behind
-//! the sweep. Backends without a real split degrade to full-stage-first.
 
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
+use std::ops::{Deref, DerefMut};
 
-use anyhow::anyhow;
-
+use super::cluster::{ClusterRun, WorkerSpec, WorkerTimes};
 use crate::mesh::{ExchangePlan, LocalBlock};
 use crate::partition::DeviceKind;
-#[cfg(feature = "pjrt")]
-use crate::runtime::PjrtRuntime;
-use crate::solver::driver::RustRefBackend;
-use crate::solver::parallel::ParallelRefBackend;
 use crate::solver::reference::KernelTimes;
-use crate::solver::rk::{LSRK_A, LSRK_B, N_STAGES};
 use crate::solver::state::BlockState;
-use crate::solver::{LglBasis, StageBackend};
 use crate::Result;
 
-/// Which backend the workers execute stages with.
-#[derive(Debug, Clone)]
-pub enum WorkerBackend {
-    /// Pure-rust reference kernels (no artifacts needed).
-    RustRef,
-    /// Multithreaded reference kernels with the in-node boundary/interior
-    /// split; `threads == 0` auto-sizes to half the hardware threads per
-    /// worker (the two workers stage concurrently).
-    RustParallel { threads: usize },
-    /// AOT artifacts through PJRT (the production path; needs the `pjrt`
-    /// cargo feature).
-    Pjrt { artifact_dir: std::path::PathBuf },
-}
-
-/// An outbound trace produced by a worker after a stage:
-/// (destination owner, destination halo slot, trace data).
-type OutTrace = (usize, usize, Vec<f32>);
-
-enum Cmd {
-    /// Run one LSRK stage on every owned block; reply Staged with
-    /// outbound traces for the listed (block, elem, face, dst, slot).
-    Stage { dt: f32, a: f32, b: f32 },
-    /// Install halo updates: (local block index, slot, data).
-    SetHalo(Vec<(usize, usize, Vec<f32>)>),
-    /// Reply with the sum of block energies.
-    Energy,
-    /// Reply with a full clone of block `i`'s state.
-    ReadBlock(usize),
-    /// Reply with accumulated kernel times, then reset them.
-    TakeTimes,
-    Shutdown,
-}
-
-enum Resp {
-    Staged(Vec<OutTrace>),
-    HaloSet,
-    Energy(f64),
-    Block(Box<BlockState>),
-    Times(KernelTimes),
-}
-
-struct Worker {
-    tx: Sender<Cmd>,
-    rx: Receiver<Resp>,
-    handle: Option<JoinHandle<()>>,
-    /// owners handled by this worker, in block order.
-    owners: Vec<usize>,
-}
-
-/// What each worker must emit after every stage:
-/// (local block idx, elem, face, dst owner, dst slot).
-type OutboundPlan = Vec<(usize, usize, usize, usize, usize)>;
-
-fn worker_main(
-    rx: Receiver<Cmd>,
-    tx: Sender<Resp>,
-    mut blocks: Vec<BlockState>,
-    outbound: OutboundPlan,
-    backend_kind: WorkerBackend,
-    order: usize,
-) {
-    let basis = LglBasis::new(order);
-    // build one backend per block
-    let mut backends: Vec<Box<dyn StageBackend>> = Vec::new();
-    match &backend_kind {
-        WorkerBackend::RustRef => {
-            for _ in &blocks {
-                backends.push(Box::new(RustRefBackend::new(order)));
-            }
-        }
-        WorkerBackend::RustParallel { threads } => {
-            // threads == 0: split the hardware budget between the two
-            // concurrently-staging workers instead of oversubscribing 2x
-            let auto = std::thread::available_parallelism()
-                .map(|n| (n.get() / 2).max(1))
-                .unwrap_or(1);
-            let t = if *threads == 0 { auto } else { *threads };
-            for _ in &blocks {
-                backends.push(Box::new(ParallelRefBackend::with_threads(order, t)));
-            }
-        }
-        WorkerBackend::Pjrt { artifact_dir } => {
-            #[cfg(feature = "pjrt")]
-            {
-                let mut rt = PjrtRuntime::new(artifact_dir).expect("worker: loading artifacts");
-                for b in &blocks {
-                    backends.push(Box::new(
-                        rt.stage_backend(b).expect("worker: compiling stage artifact"),
-                    ));
-                }
-            }
-            #[cfg(not(feature = "pjrt"))]
-            {
-                let _ = artifact_dir;
-                panic!(
-                    "worker: PJRT backend requested but the binary was built \
-                     without the `pjrt` feature; use --rust-ref/--parallel or \
-                     rebuild with --features pjrt"
-                );
-            }
-        }
-    }
-    let mut times = KernelTimes::default();
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Cmd::Stage { dt, a, b } => {
-                // boundary phase (full stage for non-split backends): after
-                // this every outbound trace is final
-                for (i, blk) in blocks.iter_mut().enumerate() {
-                    let t = backends[i].stage_boundary(blk, dt, a, b).expect("stage failed");
-                    times.accumulate(&t);
-                }
-                // ship traces before the interior sweep so the coordinator
-                // routes them while this worker keeps computing; the halo
-                // install (Cmd::SetHalo) queues behind the sweep, exactly
-                // the paper's compute/communication overlap
-                let out: Vec<OutTrace> = outbound
-                    .iter()
-                    .map(|&(bi, elem, face, dst, slot)| {
-                        (dst, slot, blocks[bi].trace_slice(elem, face).to_vec())
-                    })
-                    .collect();
-                tx.send(Resp::Staged(out)).ok();
-                for (blk, backend) in blocks.iter_mut().zip(backends.iter_mut()) {
-                    let (mut v, _halo) = blk.split_for_overlap();
-                    let t = backend
-                        .stage_interior(&mut v, dt, a, b)
-                        .expect("interior stage failed");
-                    times.accumulate(&t);
-                }
-            }
-            Cmd::SetHalo(updates) => {
-                for (bi, slot, data) in updates {
-                    blocks[bi].set_halo_slot(slot, &data);
-                }
-                tx.send(Resp::HaloSet).ok();
-            }
-            Cmd::Energy => {
-                let e: f64 = blocks.iter().map(|b| b.energy(&basis)).sum();
-                tx.send(Resp::Energy(e)).ok();
-            }
-            Cmd::ReadBlock(i) => {
-                tx.send(Resp::Block(Box::new(blocks[i].clone()))).ok();
-            }
-            Cmd::TakeTimes => {
-                tx.send(Resp::Times(times)).ok();
-                times = KernelTimes::default();
-            }
-            Cmd::Shutdown => break,
-        }
-    }
-}
+pub use super::cluster::WorkerBackend;
 
 /// A heterogeneous run: CPU worker + MIC worker + the routing fabric.
+/// Dereferences to [`ClusterRun`] for stepping, energy, per-phase times
+/// and traffic accounting.
 pub struct HeteroRun {
-    workers: Vec<Worker>,
-    /// owner -> (worker index, local block index)
-    owner_map: HashMap<usize, (usize, usize)>,
-    /// per destination owner: copies (src_owner, src_elem, src_face, slot)
-    plan: ExchangePlan,
-    pub order: usize,
-    pub exchange_every_stage: bool,
-    pub steps_taken: usize,
-    /// wall time until every worker has shipped its outbound traces (the
-    /// boundary phase; the full stage for non-split backends)
-    pub stage_wall_s: f64,
-    /// wall time to route traces and install halos — overlapped with the
-    /// workers' interior sweeps, so this includes any wait for them
-    pub exchange_wall_s: f64,
+    inner: ClusterRun,
 }
 
 impl HeteroRun {
@@ -214,182 +38,55 @@ impl HeteroRun {
     /// on the block states; halos are primed here.
     pub fn launch(
         lblocks: &[LocalBlock],
-        mut states: Vec<BlockState>,
+        states: Vec<BlockState>,
         plan: ExchangePlan,
         device_of_owner: &[DeviceKind],
         backend: WorkerBackend,
         order: usize,
     ) -> Result<Self> {
-        assert_eq!(lblocks.len(), states.len());
-        // prime traces + halos in-process before distributing
-        for s in states.iter_mut() {
-            s.refresh_traces();
-        }
-        crate::solver::exchange::apply_exchange(&mut states, &plan);
-
-        let mut owner_map = HashMap::new();
-        let mut per_worker_blocks: Vec<Vec<BlockState>> = vec![Vec::new(), Vec::new()];
-        let mut per_worker_owners: Vec<Vec<usize>> = vec![Vec::new(), Vec::new()];
-        for (o, st) in states.into_iter().enumerate() {
-            let w = match device_of_owner[o] {
-                DeviceKind::Cpu => 0usize,
-                DeviceKind::Mic => 1,
-            };
-            owner_map.insert(o, (w, per_worker_blocks[w].len()));
-            per_worker_blocks[w].push(st);
-            per_worker_owners[w].push(o);
-        }
-        // outbound plan per worker: invert the exchange plan
-        let mut outbound: Vec<OutboundPlan> = vec![Vec::new(), Vec::new()];
-        for (dst_owner, copies) in plan.copies.iter().enumerate() {
-            for &(src_owner, src_elem, src_face, slot) in copies {
-                let (w, bi) = owner_map[&src_owner];
-                outbound[w].push((bi, src_elem, src_face, dst_owner, slot));
-            }
-        }
-        let mut workers = Vec::new();
-        for w in 0..2 {
-            let (ctx, crx) = channel::<Cmd>();
-            let (rtx, rrx) = channel::<Resp>();
-            let blocks = std::mem::take(&mut per_worker_blocks[w]);
-            let ob = std::mem::take(&mut outbound[w]);
-            let bk = backend.clone();
-            let handle = std::thread::Builder::new()
-                .name(if w == 0 { "cpu-worker".into() } else { "mic-worker".into() })
-                .spawn(move || worker_main(crx, rtx, blocks, ob, bk, order))
-                .map_err(|e| anyhow!("spawning worker: {e}"))?;
-            workers.push(Worker {
-                tx: ctx,
-                rx: rrx,
-                handle: Some(handle),
-                owners: std::mem::take(&mut per_worker_owners[w]),
-            });
-        }
-        Ok(HeteroRun {
-            workers,
-            owner_map,
-            plan,
-            order,
-            exchange_every_stage: true,
-            steps_taken: 0,
-            stage_wall_s: 0.0,
-            exchange_wall_s: 0.0,
-        })
+        assert_eq!(device_of_owner.len(), states.len());
+        let specs = vec![
+            WorkerSpec {
+                node: 0,
+                device: DeviceKind::Cpu,
+                backend: backend.clone(),
+                name: "cpu-worker".into(),
+            },
+            WorkerSpec { node: 0, device: DeviceKind::Mic, backend, name: "mic-worker".into() },
+        ];
+        let worker_of_owner: Vec<usize> =
+            device_of_owner.iter().map(|&d| usize::from(d == DeviceKind::Mic)).collect();
+        let inner =
+            ClusterRun::launch_parts(lblocks, states, plan, &worker_of_owner, &specs, order)?;
+        Ok(HeteroRun { inner })
     }
 
-    fn stage_and_route(&mut self, dt: f32, a: f32, b: f32, route: bool) -> Result<()> {
-        let t0 = std::time::Instant::now();
-        for w in &self.workers {
-            w.tx.send(Cmd::Stage { dt, a, b }).map_err(|_| anyhow!("worker died"))?;
-        }
-        let mut all_out: Vec<OutTrace> = Vec::new();
-        for w in &self.workers {
-            match w.rx.recv() {
-                Ok(Resp::Staged(out)) => all_out.extend(out),
-                _ => return Err(anyhow!("worker failed during stage")),
-            }
-        }
-        self.stage_wall_s += t0.elapsed().as_secs_f64();
-        if !route {
-            return Ok(());
-        }
-        let t1 = std::time::Instant::now();
-        // route: group by destination worker
-        let mut per_worker: Vec<Vec<(usize, usize, Vec<f32>)>> = vec![Vec::new(), Vec::new()];
-        for (dst_owner, slot, data) in all_out {
-            let (w, bi) = self.owner_map[&dst_owner];
-            per_worker[w].push((bi, slot, data));
-        }
-        for (w, updates) in per_worker.into_iter().enumerate() {
-            self.workers[w].tx.send(Cmd::SetHalo(updates)).map_err(|_| anyhow!("worker died"))?;
-        }
-        for w in &self.workers {
-            match w.rx.recv() {
-                Ok(Resp::HaloSet) => {}
-                _ => return Err(anyhow!("worker failed during halo set")),
-            }
-        }
-        self.exchange_wall_s += t1.elapsed().as_secs_f64();
-        Ok(())
-    }
-
-    /// Advance one LSRK timestep.
-    pub fn step(&mut self, dt: f64) -> Result<()> {
-        for s in 0..N_STAGES {
-            let route = self.exchange_every_stage || s == N_STAGES - 1;
-            self.stage_and_route(dt as f32, LSRK_A[s] as f32, LSRK_B[s] as f32, route)?;
-        }
-        self.steps_taken += 1;
-        Ok(())
-    }
-
-    pub fn run(&mut self, dt: f64, steps: usize) -> Result<()> {
-        for _ in 0..steps {
-            self.step(dt)?;
-        }
-        Ok(())
-    }
-
-    /// Total energy across all blocks.
-    pub fn energy(&self) -> Result<f64> {
-        let mut e = 0.0;
-        for w in &self.workers {
-            w.tx.send(Cmd::Energy).map_err(|_| anyhow!("worker died"))?;
-            match w.rx.recv() {
-                Ok(Resp::Energy(v)) => e += v,
-                _ => return Err(anyhow!("worker failed during energy")),
-            }
-        }
-        Ok(e)
-    }
-
-    /// Pull back the state of one owner's block.
-    pub fn read_block(&self, owner: usize) -> Result<BlockState> {
-        let (w, bi) = *self
-            .owner_map
-            .get(&owner)
-            .ok_or_else(|| anyhow!("unknown owner {owner}"))?;
-        self.workers[w].tx.send(Cmd::ReadBlock(bi)).map_err(|_| anyhow!("worker died"))?;
-        match self.workers[w].rx.recv() {
-            Ok(Resp::Block(b)) => Ok(*b),
-            _ => Err(anyhow!("worker failed during read")),
-        }
-    }
-
-    /// All owners, in worker order (cpu owners then mic owners).
-    pub fn owners(&self) -> Vec<usize> {
-        self.workers.iter().flat_map(|w| w.owners.clone()).collect()
-    }
-
-    /// Accumulated per-kernel wall times per worker: (cpu, mic).
+    /// Accumulated per-kernel wall times per worker: (cpu, mic), resetting
+    /// the counters. Safe to call repeatedly and after a failed step: the
+    /// workers stay alive and answer with whatever they accumulated.
     pub fn take_times(&self) -> Result<(KernelTimes, KernelTimes)> {
-        let mut out = Vec::new();
-        for w in &self.workers {
-            w.tx.send(Cmd::TakeTimes).map_err(|_| anyhow!("worker died"))?;
-            match w.rx.recv() {
-                Ok(Resp::Times(t)) => out.push(t),
-                _ => return Err(anyhow!("worker failed during take_times")),
-            }
-        }
-        Ok((out[0], out[1]))
+        let t = self.inner.take_worker_times()?;
+        anyhow::ensure!(t.len() == 2, "expected 2 workers, got {}", t.len());
+        Ok((t[0].kernels, t[1].kernels))
     }
 
-    /// Bytes crossing the fabric per exchange (the PCI/MPI traffic unit).
-    pub fn exchange_bytes_per_stage(&self) -> usize {
-        let m = self.order + 1;
-        self.plan.total_faces() * 9 * m * m * 4
+    /// Per-phase (boundary / interior / exchange) wall-time breakdown per
+    /// worker, without resetting — what the adaptive rebalancer consumes.
+    pub fn phase_times(&self) -> Result<Vec<WorkerTimes>> {
+        self.inner.worker_times()
     }
 }
 
-impl Drop for HeteroRun {
-    fn drop(&mut self) {
-        for w in &self.workers {
-            let _ = w.tx.send(Cmd::Shutdown);
-        }
-        for w in self.workers.iter_mut() {
-            if let Some(h) = w.handle.take() {
-                let _ = h.join();
-            }
-        }
+impl Deref for HeteroRun {
+    type Target = ClusterRun;
+
+    fn deref(&self) -> &ClusterRun {
+        &self.inner
+    }
+}
+
+impl DerefMut for HeteroRun {
+    fn deref_mut(&mut self) -> &mut ClusterRun {
+        &mut self.inner
     }
 }

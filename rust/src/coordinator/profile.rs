@@ -1,6 +1,9 @@
-//! Per-kernel profiling reports (the Fig 4.1 / Fig 6.2 data shape).
+//! Per-kernel profiling reports (the Fig 4.1 / Fig 6.2 data shape) and the
+//! per-worker phase tables of the cluster runtime.
 
+use crate::coordinator::cluster::{WorkerSummary, WorkerTimes};
 use crate::costmodel::kernels::ALL_KERNELS;
+use crate::partition::DeviceKind;
 use crate::sim::KernelBreakdown;
 use crate::solver::reference::KernelTimes;
 
@@ -64,6 +67,48 @@ impl ProfileReport {
     }
 }
 
+/// Render the per-worker phase breakdown of a cluster run: boundary /
+/// interior / exchange wall seconds per step plus the busy imbalance —
+/// the measurement the adaptive rebalancer drives to 1.0.
+pub fn render_phase_table(summaries: &[WorkerSummary], times: &[WorkerTimes]) -> String {
+    assert_eq!(summaries.len(), times.len());
+    let mut rows = Vec::with_capacity(times.len());
+    for (s, t) in summaries.iter().zip(times) {
+        let steps = t.steps().max(1e-300);
+        rows.push(vec![
+            format!("node{}-{}", s.node, if s.device == DeviceKind::Cpu { "cpu" } else { "mic" }),
+            s.label.to_string(),
+            s.k_elems.to_string(),
+            super::report::fmt_secs(t.boundary_s / steps),
+            super::report::fmt_secs(t.interior_s / steps),
+            super::report::fmt_secs(t.exchange_s / steps),
+            super::report::fmt_secs(t.busy_per_step()),
+        ]);
+    }
+    let mut out = super::report::render_table(
+        &["worker", "backend", "elems", "boundary/step", "interior/step", "exchange/step", "busy/step"],
+        &rows,
+    );
+    out.push_str(&format!(
+        "busy imbalance (max/mean over workers): {:.3}\n",
+        busy_imbalance(times)
+    ));
+    out
+}
+
+/// Max-over-mean per-step busy time across workers (1.0 = perfectly
+/// balanced). The quantity `BENCH_cluster.json` tracks static vs adaptive.
+pub fn busy_imbalance(times: &[WorkerTimes]) -> f64 {
+    let busy: Vec<f64> = times.iter().map(|t| t.busy_per_step()).collect();
+    let max = busy.iter().cloned().fold(0.0, f64::max);
+    let mean = busy.iter().sum::<f64>() / busy.len().max(1) as f64;
+    if mean <= 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +152,42 @@ mod tests {
         let s = p.render("test");
         assert!(s.contains("volume_loop"));
         assert!(s.contains("100.0%"));
+    }
+
+    #[test]
+    fn busy_imbalance_bounds() {
+        use crate::solver::rk::N_STAGES;
+        let mk = |busy: f64| WorkerTimes {
+            boundary_s: busy / 2.0,
+            interior_s: busy / 2.0,
+            stages: N_STAGES,
+            ..Default::default()
+        };
+        // perfectly balanced pair
+        assert!((busy_imbalance(&[mk(1.0), mk(1.0)]) - 1.0).abs() < 1e-12);
+        // one idle worker: max/mean = 2
+        assert!((busy_imbalance(&[mk(1.0), mk(0.0)]) - 2.0).abs() < 1e-12);
+        // nothing measured: defined as balanced
+        assert_eq!(busy_imbalance(&[mk(0.0), mk(0.0)]), 1.0);
+    }
+
+    #[test]
+    fn phase_table_renders() {
+        use crate::partition::DeviceKind;
+        use crate::solver::rk::N_STAGES;
+        let summaries = vec![
+            WorkerSummary { node: 0, device: DeviceKind::Cpu, k_elems: 10, label: "rust-ref" },
+            WorkerSummary { node: 0, device: DeviceKind::Mic, k_elems: 6, label: "rust-ref" },
+        ];
+        let t = WorkerTimes {
+            boundary_s: 0.1,
+            interior_s: 0.2,
+            exchange_s: 0.05,
+            stages: 2 * N_STAGES,
+            ..Default::default()
+        };
+        let s = render_phase_table(&summaries, &[t, t]);
+        assert!(s.contains("node0-cpu") && s.contains("node0-mic"), "{s}");
+        assert!(s.contains("busy imbalance"), "{s}");
     }
 }

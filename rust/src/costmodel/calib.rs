@@ -24,9 +24,11 @@
 
 use super::device::{DeviceClass, DeviceModel};
 use super::kernels::PaperKernel::*;
+use super::kernels::{work_flops, PaperKernel};
 use super::network::NetworkModel;
 use super::pci::PciModel;
 use super::NodeModel;
+use crate::solver::reference::KernelTimes;
 
 /// Theoretical peaks (paper §5.2), double precision.
 pub const SNB_SOCKET_PEAK_GFLOPS: f64 = 173.0;
@@ -133,6 +135,112 @@ pub fn stampede_node_network() -> NetworkModel {
     }
 }
 
+/// The in-process fabric's "PCI": halo traces cross an mpsc channel, not a
+/// bus — near-zero latency at memory bandwidth. Used when the balance solve
+/// runs against *measured* in-process times instead of the Stampede fit.
+pub fn fabric_pci() -> PciModel {
+    PciModel { latency_s: 2.0e-6, bw_to_device: 2.0e10, bw_from_device: 2.0e10, jitter_rel: 0.0 }
+}
+
+/// Zero-jitter in-process "network" for cross-checking live cluster runs
+/// against the simulator (all virtual nodes share one address space).
+pub fn fabric_network() -> NetworkModel {
+    NetworkModel { alpha_s: 1.0e-6, beta_bytes_per_s: 5.0e10, jitter_base: 0.0, jitter_hetero: 0.0 }
+}
+
+/// Refit a [`DeviceModel`] from kernel wall times measured over `steps`
+/// timesteps on a `k`-element block at order `n`. Per-kernel counts use the
+/// same ansatz as the balance solve (volume kernels ~ K, int_flux ~ 3K,
+/// the two surface kernels ~ 6 K^(2/3)); kernels that measured no time (or
+/// have no work at this K) inherit the `fallback` model's rate, so the
+/// refit degrades gracefully for idle devices.
+pub fn measured_device(
+    class: DeviceClass,
+    name: &'static str,
+    n: usize,
+    k: usize,
+    steps: f64,
+    times: &KernelTimes,
+    fallback: &DeviceModel,
+) -> DeviceModel {
+    let surface = 6.0 * (k as f64).powf(2.0 / 3.0);
+    let count = |kern: PaperKernel| -> f64 {
+        match kern {
+            IntFlux => 3.0 * k as f64,
+            BoundFlux | ParallelFlux => surface,
+            _ => k as f64,
+        }
+    };
+    let rate = |kern: PaperKernel, secs: f64| -> (PaperKernel, f64) {
+        let c = count(kern);
+        let gf = if secs > 1e-9 && c > 0.0 && steps > 0.0 {
+            work_flops(kern, n) * c * steps / secs / 1e9
+        } else {
+            fallback.rate(kern) / 1e9
+        };
+        (kern, gf)
+    };
+    DeviceModel::new(
+        class,
+        name,
+        fallback.peak_gflops,
+        [
+            rate(VolumeLoop, times.volume_loop),
+            rate(IntFlux, times.int_flux),
+            rate(InterpQ, times.interp_q),
+            rate(Lift, times.lift),
+            rate(Rk, times.rk),
+            rate(BoundFlux, times.bound_flux),
+            rate(ParallelFlux, times.parallel_flux),
+        ],
+    )
+}
+
+/// A [`NodeModel`] refitted from one live node's measured per-worker kernel
+/// times — the closed loop of the adaptive rebalancer: live `KernelTimes`
+/// flow back into [`crate::partition::solve_mic_fraction`] through this
+/// model. An accelerator worker that has not run yet (K_mic = 0) bootstraps
+/// with the CPU worker's measured rates: both workers are in-process CPU
+/// threads, so equal speed is the right prior for a first split.
+pub fn measured_node(
+    n: usize,
+    k_cpu: usize,
+    k_mic: usize,
+    steps: f64,
+    cpu_times: &KernelTimes,
+    mic_times: &KernelTimes,
+) -> NodeModel {
+    let base = stampede_node();
+    let cpu =
+        measured_device(DeviceClass::CpuVector, "measured-cpu", n, k_cpu, steps, cpu_times, &base.cpu_vec);
+    let mic = if k_mic > 0 && mic_times.total() > 1e-9 {
+        measured_device(DeviceClass::Mic, "measured-mic", n, k_mic, steps, mic_times, &cpu)
+    } else {
+        let mk = |kern: PaperKernel| (kern, cpu.rate(kern) / 1e9);
+        DeviceModel::new(
+            DeviceClass::Mic,
+            "measured-mic-bootstrap",
+            cpu.peak_gflops,
+            [
+                mk(VolumeLoop),
+                mk(IntFlux),
+                mk(InterpQ),
+                mk(Lift),
+                mk(Rk),
+                mk(BoundFlux),
+                mk(ParallelFlux),
+            ],
+        )
+    };
+    NodeModel {
+        cpu_scalar: base.cpu_scalar,
+        cpu_vec: cpu,
+        mic,
+        pci: fabric_pci(),
+        cores_per_socket: base.cores_per_socket,
+    }
+}
+
 /// The full Stampede node model.
 pub fn stampede_node() -> NodeModel {
     NodeModel {
@@ -200,6 +308,52 @@ mod tests {
     fn volume_work_consistency() {
         let w = work_flops(PaperKernel::VolumeLoop, 7);
         assert!((w / 1.139e6 - 1.0).abs() < 0.01, "volume work {w}");
+    }
+
+    /// The measured-rate refit must reproduce the throughput it was fed and
+    /// fall back to the reference model for kernels that measured nothing.
+    #[test]
+    fn measured_device_recovers_rates() {
+        let times = KernelTimes {
+            volume_loop: 1e-3,
+            int_flux: 1e-3,
+            interp_q: 1e-4,
+            lift: 1e-4,
+            rk: 1e-4,
+            bound_flux: 0.0, // unmeasured
+            parallel_flux: 1e-4,
+        };
+        let dev =
+            measured_device(DeviceClass::CpuVector, "m", 2, 100, 1.0, &times, &cpu_vector());
+        let expect = work_flops(PaperKernel::VolumeLoop, 2) * 100.0 / 1e-3;
+        assert!((dev.rate(PaperKernel::VolumeLoop) / expect - 1.0).abs() < 1e-9);
+        assert_eq!(
+            dev.rate(PaperKernel::BoundFlux),
+            cpu_vector().rate(PaperKernel::BoundFlux),
+            "unmeasured kernel inherits the fallback rate"
+        );
+    }
+
+    /// Two workers measured at identical rates solve to a near-even split
+    /// (the in-process fabric's PCI term is nearly free).
+    #[test]
+    fn measured_node_balances_equal_workers() {
+        let t = KernelTimes {
+            volume_loop: 2e-3,
+            int_flux: 1e-3,
+            interp_q: 2e-4,
+            lift: 2e-4,
+            rk: 3e-4,
+            bound_flux: 1e-4,
+            parallel_flux: 1e-4,
+        };
+        let node = measured_node(2, 100, 100, 1.0, &t, &t);
+        let sol = crate::partition::solve_mic_fraction(&node, 2, 200);
+        assert!((80..=115).contains(&sol.k_mic), "k_mic {}", sol.k_mic);
+        // an unmeasured accelerator bootstraps from the CPU rates
+        let boot = measured_node(2, 200, 0, 1.0, &t, &KernelTimes::default());
+        let sol2 = crate::partition::solve_mic_fraction(&boot, 2, 200);
+        assert!(sol2.k_mic > 50, "bootstrap split k_mic {}", sol2.k_mic);
     }
 
     /// Load balance: with these rates the equal-time split lands near the

@@ -22,18 +22,27 @@
 //!
 //! * [`mesh`]       — Morton-ordered octree hexahedral meshes, connectivity
 //! * [`partition`]  — level-1 splice, level-2 nested CPU/MIC split (also
-//!   applied block-locally: `partition::nested::split_block_elements`),
-//!   balance
-//! * [`costmodel`]  — calibrated Stampede kernel/PCI/network time models
-//! * [`sim`]        — discrete-event heterogeneous cluster simulator
+//!   applied block-locally: `partition::nested::split_block_elements`,
+//!   and per-node for the rebalancer:
+//!   `partition::nested::nested_partition_fractions`), balance (generic
+//!   equal-finish solve shared by the calibrated and measured-rate paths)
+//! * [`costmodel`]  — calibrated Stampede kernel/PCI/network time models,
+//!   plus `calib::measured_node`: a node model refitted from live kernel
+//!   times (the rebalancer's and cross-check's closed loop)
+//! * [`sim`]        — discrete-event heterogeneous cluster simulator;
+//!   `SimReport::discrepancy` cross-checks it against live runs
 //! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels;
 //!   `solver::parallel` is the multithreaded boundary/interior CPU backend
 //!   and `solver::driver` the multi-block driver with optional
 //!   compute/exchange overlap (see PERF.md)
 //! * [`runtime`]    — PJRT artifact registry, compile cache, execution
 //!   (`runtime::client` needs `--features pjrt`)
-//! * [`coordinator`]— host/offload per-node flow (workers ship traces
-//!   between the boundary and interior phases), experiments, reports
+//! * [`coordinator`]— the execution core: `coordinator::cluster` runs the
+//!   full two-level scheme as an N-node in-process cluster (two workers
+//!   per node on a typed message fabric, adaptive measured-time
+//!   rebalancing with element migration); `coordinator::node` keeps the
+//!   single-node two-worker API; experiments (incl. the live-vs-simulated
+//!   cross-check), reports
 
 pub mod coordinator;
 pub mod costmodel;

@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! repro run         solve a wave problem end to end (PJRT or rust-ref)
+//! repro cluster     N-node cluster runtime with adaptive rebalancing
 //! repro partition   print nested-partition statistics for a workload
 //! repro balance     solve the CPU/MIC load-balance split (paper §5.6)
 //! repro experiment  regenerate a paper table/figure (fig4-1, fig5-2, ...)
@@ -35,11 +36,17 @@ COMMANDS
                 --n 4  --order 2  --steps 20  --nodes 1  --artifacts artifacts
                 --rust-ref  --parallel [--threads N]  --two-tree
                 --sync-per-step
+  cluster     N-node in-process cluster (two workers per node on the
+              message fabric) with optional adaptive rebalancing
+                --n 6  --order 2  --steps 20  --nodes 2
+                [--mic-fraction F]  [--rebalance-every R]
+                --rust-ref | --parallel [--threads N]  --two-tree
+                --sync-per-step
   partition   nested-partition statistics
                 --n 16  --nodes 4  --order 7  [--mic-fraction F]
   balance     CPU/MIC load-balance solve   --order 7  --elems 8192
   experiment  regenerate a paper artifact: fig4-1 fig5-2 fig5-3 fig5-4
-              table6-1 fig6-2 weak-scaling | all
+              table6-1 fig6-2 weak-scaling cross-check | all
                                            [--out results] [--steps 118]
   validate    convergence vs the analytic wave
                 --orders 2,3,4  --n 2  [--rust-ref | --parallel]
@@ -116,6 +123,20 @@ fn main() -> repro::Result<()> {
                 !a.flag("sync-per-step"),
             )
         }
+        "cluster" => {
+            let a = Args::parse(rest, &["rust-ref", "parallel", "two-tree", "sync-per-step"]);
+            run_cluster(
+                a.get("n", 6),
+                a.get("order", 2),
+                a.get("steps", 20),
+                a.get("nodes", 2),
+                a.get_opt::<f64>("mic-fraction"),
+                a.get_opt::<usize>("rebalance-every"),
+                worker_backend(&a),
+                a.flag("two-tree"),
+                !a.flag("sync-per-step"),
+            )
+        }
         "partition" => {
             let a = Args::parse(rest, &[]);
             let n = a.get("n", 16usize);
@@ -172,15 +193,19 @@ fn main() -> repro::Result<()> {
                     "weak-scaling" => {
                         experiments::weak_scaling(Some(&csv("weak_scaling")), steps.min(20))?
                     }
+                    "cross-check" => {
+                        experiments::cross_check(2, 6, 2, steps.min(10), Some(&csv("cross_check")))?
+                    }
                     other => anyhow::bail!("unknown experiment {other}\n{USAGE}"),
                 };
                 println!("{text}");
                 Ok(())
             };
             if id == "all" {
-                for id in
-                    ["fig4-1", "fig5-2", "fig5-3", "fig5-4", "table6-1", "fig6-2", "weak-scaling"]
-                {
+                for id in [
+                    "fig4-1", "fig5-2", "fig5-3", "fig5-4", "table6-1", "fig6-2",
+                    "weak-scaling", "cross-check",
+                ] {
                     println!("=== {id} ===");
                     run_one(id)?;
                 }
@@ -330,6 +355,72 @@ fn run_solve(
         run.stage_wall_s,
         run.exchange_wall_s
     );
+    Ok(())
+}
+
+/// The full two-level scheme live: P virtual nodes on the message fabric,
+/// optional adaptive rebalancing, per-worker phase table at the end.
+#[allow(clippy::too_many_arguments)]
+fn run_cluster(
+    n: usize,
+    order: usize,
+    steps: usize,
+    nodes: usize,
+    mic_fraction: Option<f64>,
+    rebalance_every: Option<usize>,
+    backend: WorkerBackend,
+    two_tree: bool,
+    exchange_every_stage: bool,
+) -> repro::Result<()> {
+    use repro::coordinator::cluster::{ClusterRun, ClusterSpec};
+    use repro::coordinator::profile::render_phase_table;
+
+    let mesh = if two_tree { two_tree_geometry(n) } else { unit_cube_geometry(n) };
+    let mut spec = ClusterSpec::new(nodes, order);
+    spec.mic_fraction = mic_fraction;
+    spec.rebalance_every = rebalance_every;
+    spec.cpu_backend = backend.clone();
+    spec.mic_backend = backend;
+    spec.exchange_every_stage = exchange_every_stage;
+
+    let cmax = mesh.elements.iter().map(|e| e.material.cp()).fold(0.0f32, f32::max);
+    let hmin =
+        mesh.elements.iter().map(|e| e.h[0].min(e.h[1]).min(e.h[2])).fold(f64::MAX, f64::min);
+    let dt = stable_dt(0.3, hmin, cmax as f64, order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut run = ClusterRun::launch(&mesh, &spec, |x| standing_wave(x, 0.0, 1.0, 1.0, w))?;
+    println!(
+        "cluster: {} elements over {nodes} node(s) = {} workers, order {order}, dt {dt:.2e}",
+        mesh.len(),
+        2 * nodes
+    );
+    for (nd, &(kc, km)) in run.node_counts().iter().enumerate() {
+        println!("  node {nd}: k_cpu {kc} k_mic {km}");
+    }
+    let e0 = run.energy()?;
+    let t0 = std::time::Instant::now();
+    run.run(dt, steps)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let e1 = run.energy()?;
+    println!(
+        "{steps} steps in {wall:.2} s ({:.1} ms/step); energy {e0:.6} -> {e1:.6} (ratio {:.6})",
+        wall * 1e3 / steps as f64,
+        e1 / e0
+    );
+    if rebalance_every.is_some() {
+        println!("after rebalancing:");
+        for (nd, &(kc, km)) in run.node_counts().iter().enumerate() {
+            println!("  node {nd}: k_cpu {kc} k_mic {km}");
+        }
+    }
+    let f = run.fabric();
+    let (intra, inter) = f.bytes_per_routed_stage(order);
+    println!(
+        "fabric per routed stage: {intra} B intra-node (PCI lane), {inter} B inter-node \
+         (MPI lane); accelerator faces on the inter-node lane: {} (always 0)",
+        f.mic_inter_node_faces
+    );
+    print!("{}", render_phase_table(&run.worker_summaries(), &run.worker_times()?));
     Ok(())
 }
 

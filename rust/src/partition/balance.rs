@@ -55,14 +55,21 @@ pub struct BalanceSolution {
     pub t_mic_s: f64,
 }
 
-/// Bisection solve of T_MIC(K_mic) = T_CPU(K - K_mic) over K_mic in [0, K].
-pub fn solve_mic_fraction(node: &NodeModel, n: usize, k: usize) -> BalanceSolution {
-    let kf = k as f64;
-    let f = |k_mic: f64| {
-        t_mic(&node.mic, n, k_mic) - t_cpu(&node.cpu_vec, &node.pci, n, kf - k_mic, k_mic)
-    };
+/// Generic bisection solve of the equal-finish point
+/// `t_mic_of(K_mic) = t_cpu_of(K_mic)` over K_mic in [0, K]. Both cost
+/// curves take the *MIC* element count (a CPU curve internally works on
+/// K - K_mic). Shared by the calibrated solve below and the measured-rate
+/// adaptive rebalancer ([`crate::coordinator::cluster`]), which feeds live
+/// [`crate::solver::reference::KernelTimes`] back through
+/// [`solve_mic_fraction`] via a refitted node model.
+pub fn solve_equal_finish(
+    k: usize,
+    t_mic_of: impl Fn(f64) -> f64,
+    t_cpu_of: impl Fn(f64) -> f64,
+) -> BalanceSolution {
     // f(0) < 0 (idle MIC), f(K) > 0 (idle CPU): bisect the sign change
-    let (mut lo, mut hi) = (0.0, kf);
+    let f = |k_mic: f64| t_mic_of(k_mic) - t_cpu_of(k_mic);
+    let (mut lo, mut hi) = (0.0, k as f64);
     for _ in 0..60 {
         let mid = 0.5 * (lo + hi);
         if f(mid) < 0.0 {
@@ -77,9 +84,19 @@ pub fn solve_mic_fraction(node: &NodeModel, n: usize, k: usize) -> BalanceSoluti
         k_mic,
         k_cpu,
         ratio: k_mic as f64 / k_cpu.max(1) as f64,
-        t_cpu_s: t_cpu(&node.cpu_vec, &node.pci, n, k_cpu as f64, k_mic as f64),
-        t_mic_s: t_mic(&node.mic, n, k_mic as f64),
+        t_cpu_s: t_cpu_of(k_mic as f64),
+        t_mic_s: t_mic_of(k_mic as f64),
     }
+}
+
+/// Bisection solve of T_MIC(K_mic) = T_CPU(K - K_mic) over K_mic in [0, K].
+pub fn solve_mic_fraction(node: &NodeModel, n: usize, k: usize) -> BalanceSolution {
+    let kf = k as f64;
+    solve_equal_finish(
+        k,
+        |k_mic| t_mic(&node.mic, n, k_mic),
+        |k_mic| t_cpu(&node.cpu_vec, &node.pci, n, kf - k_mic, k_mic),
+    )
 }
 
 /// Sweep the MIC load fraction (Fig 5.2): returns (fraction, t_cpu, t_mic)
@@ -151,6 +168,16 @@ mod tests {
         let hi = solve_mic_fraction(&node, 7, 8192);
         let lo = solve_mic_fraction(&node, 1, 8192);
         assert!(lo.ratio < hi.ratio, "lo {} hi {}", lo.ratio, hi.ratio);
+    }
+
+    #[test]
+    fn equal_finish_generic_crossing() {
+        // t_mic = 2 k_mic, t_cpu = (K - k_mic): crossing at K/3
+        let sol = solve_equal_finish(1000, |km| 2.0 * km, |km| 1000.0 - km);
+        assert!((sol.k_mic as i64 - 333).abs() <= 1, "{:?}", sol.k_mic);
+        assert_eq!(sol.k_mic + sol.k_cpu, 1000);
+        // returned times are evaluated at the crossing: nearly equal
+        assert!((sol.t_cpu_s - sol.t_mic_s).abs() < 3.0);
     }
 
     #[test]

@@ -18,7 +18,9 @@ pub mod nested;
 pub mod splice;
 pub mod stats;
 
-pub use balance::solve_mic_fraction;
-pub use nested::{nested_partition, DeviceKind, NestedPartition};
+pub use balance::{solve_equal_finish, solve_mic_fraction};
+pub use nested::{
+    migration_diff, nested_partition, nested_partition_fractions, DeviceKind, NestedPartition,
+};
 pub use splice::{splice, splice_weighted, Partition};
 pub use stats::{partition_stats, PartitionStats};

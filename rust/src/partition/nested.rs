@@ -103,23 +103,33 @@ pub fn boundary_depths(mesh: &Mesh, node_of: &[usize], node: usize) -> Vec<(usiz
 /// interior elements — exactly the regime where the paper's scheme degrades
 /// to CPU-only).
 pub fn nested_partition(mesh: &Mesh, node: &Partition, mic_fraction: f64) -> NestedPartition {
-    assert!((0.0..=1.0).contains(&mic_fraction));
+    nested_partition_fractions(mesh, node, &vec![mic_fraction; node.nparts])
+}
+
+/// [`nested_partition`] with one MIC fraction *per node* — the entry point
+/// of the adaptive rebalancer ([`crate::coordinator::cluster`]), which
+/// re-solves each node's split from its measured kernel times and re-splits
+/// only the nodes whose target moved.
+pub fn nested_partition_fractions(
+    mesh: &Mesh,
+    node: &Partition,
+    fractions: &[f64],
+) -> NestedPartition {
+    assert_eq!(fractions.len(), node.nparts, "one MIC fraction per node");
     let node_of = &node.assignment;
     let mut device = vec![DeviceKind::Cpu; mesh.len()];
     let mut node_counts = vec![(0usize, 0usize); node.nparts];
-    let single_node = node.nparts == 1;
     for nd in 0..node.nparts {
+        let mic_fraction = fractions[nd];
+        assert!((0.0..=1.0).contains(&mic_fraction), "node {nd} fraction {mic_fraction}");
         let depths = boundary_depths(mesh, node_of, nd);
         let k = depths.len();
         let want = (k as f64 * mic_fraction).round() as usize;
         // offloadable = strictly interior (depth >= 1); in the single-node
         // case there is no MPI boundary, so depth-0 (hull) elements remain
         // on the CPU too — they still carry bound_flux work.
-        let mut cand: Vec<(usize, usize)> = depths
-            .iter()
-            .copied()
-            .filter(|&(_, d)| if single_node { d >= 1 } else { d >= 1 })
-            .collect();
+        let mut cand: Vec<(usize, usize)> =
+            depths.iter().copied().filter(|&(_, d)| d >= 1).collect();
         // deepest first; ties by Morton position (= global index order)
         cand.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
         let take = want.min(cand.len());
@@ -129,6 +139,24 @@ pub fn nested_partition(mesh: &Mesh, node: &Partition, mic_fraction: f64) -> Nes
         node_counts[nd] = (k - take, take);
     }
     NestedPartition { node: node.clone(), device, node_counts }
+}
+
+/// The elements that change device between two nested partitions of the
+/// same node assignment: `(element, old device, new device)` rows. This is
+/// exactly the state the cluster runtime migrates between a node's two
+/// workers when the rebalancer moves the split.
+pub fn migration_diff(
+    old: &NestedPartition,
+    new: &NestedPartition,
+) -> Vec<(usize, DeviceKind, DeviceKind)> {
+    assert_eq!(old.device.len(), new.device.len());
+    old.device
+        .iter()
+        .zip(&new.device)
+        .enumerate()
+        .filter(|(_, (a, b))| a != b)
+        .map(|(e, (&a, &b))| (e, a, b))
+        .collect()
 }
 
 /// The level-2 split applied *inside one extracted block*: partition the
@@ -313,6 +341,38 @@ mod tests {
                 assert!(depth_of[&blk.global_ids[e]] >= 1, "interior elements sit deeper");
             }
         }
+    }
+
+    #[test]
+    fn per_node_fractions_respected() {
+        let m = mesh(8);
+        let node = splice(&m, 2);
+        let np = nested_partition_fractions(&m, &node, &[0.0, 0.3]);
+        assert_eq!(np.node_counts[0].1, 0, "node 0 requested no MIC share");
+        assert!(np.node_counts[1].1 > 0, "node 1 requested 30%");
+        assert!(check_interior_only(&m, &np));
+        // uniform fractions reduce to the single-fraction entry point
+        let a = nested_partition(&m, &node, 0.25);
+        let b = nested_partition_fractions(&m, &node, &[0.25, 0.25]);
+        assert_eq!(a.node_counts, b.node_counts);
+    }
+
+    #[test]
+    fn migration_diff_counts_moves() {
+        let m = mesh(8);
+        let node = splice(&m, 2);
+        let old = nested_partition(&m, &node, 0.1);
+        let new = nested_partition(&m, &node, 0.3);
+        let diff = migration_diff(&old, &new);
+        assert!(!diff.is_empty());
+        // deepest-first selection is monotone: growing the fraction only
+        // moves elements CPU -> MIC, never back
+        assert!(diff.iter().all(|&(_, a, b)| a == DeviceKind::Cpu && b == DeviceKind::Mic));
+        let moved: usize = diff.len();
+        let grew: usize =
+            (0..2).map(|nd| new.node_counts[nd].1 - old.node_counts[nd].1).sum();
+        assert_eq!(moved, grew);
+        assert!(migration_diff(&old, &old).is_empty());
     }
 
     #[test]

@@ -112,6 +112,23 @@ pub struct SimReport {
     pub mic_busy_frac: f64,
 }
 
+impl SimReport {
+    /// Cross-check hook: the ratio of a *live* measured wall time to this
+    /// report's prediction (1.0 = the simulator nailed it). The experiment
+    /// driver `coordinator::experiments::cross_check` runs the same
+    /// configuration through the in-process cluster runtime and the
+    /// simulator (with the node model refitted from the live run's
+    /// measured kernel times) and reports this number per configuration.
+    pub fn discrepancy(&self, live_wall_s: f64) -> f64 {
+        live_wall_s / self.wall_s.max(1e-300)
+    }
+
+    /// Predicted wall seconds per timestep.
+    pub fn per_step_s(&self) -> f64 {
+        self.wall_s / self.steps.max(1) as f64
+    }
+}
+
 /// Per-node precomputed step times for the event engine.
 struct NodeStep {
     cpu_compute: f64,
@@ -448,6 +465,16 @@ mod tests {
         let t10 = simulate(&c, &m, 7, 10, Scheme::Nested { mic_fraction: None }).wall_s;
         let t20 = simulate(&c, &m, 7, 20, Scheme::Nested { mic_fraction: None }).wall_s;
         assert!((t20 / t10 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn discrepancy_is_live_over_predicted() {
+        let c = Cluster::stampede(1);
+        let m = small_mesh();
+        let rep = simulate(&c, &m, 7, 10, Scheme::Nested { mic_fraction: None });
+        assert!((rep.discrepancy(rep.wall_s) - 1.0).abs() < 1e-12);
+        assert!((rep.discrepancy(2.0 * rep.wall_s) - 2.0).abs() < 1e-12);
+        assert!((rep.per_step_s() * 10.0 - rep.wall_s).abs() < 1e-12);
     }
 
     #[test]

@@ -21,6 +21,14 @@ impl Cluster {
         }
     }
 
+    /// A cluster with an explicit node/network model — used by the
+    /// live-vs-simulated cross-check, which refits the node model from a
+    /// real cluster run's measured kernel times
+    /// ([`calib::measured_node`]).
+    pub fn custom(nodes: usize, node_model: NodeModel, network: NetworkModel) -> Self {
+        Cluster { nodes, node_model, network }
+    }
+
     /// Aggregate theoretical peak in GFLOPs (paper §6: 1173 GF/node).
     pub fn peak_gflops(&self) -> f64 {
         self.nodes as f64 * calib::NODE_PEAK_GFLOPS

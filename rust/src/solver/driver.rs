@@ -147,56 +147,64 @@ impl Driver {
         apply_exchange(&mut self.blocks, &self.plan);
     }
 
-    /// Advance one full LSRK timestep.
+    /// Advance one full LSRK timestep. One shared stage loop serves both
+    /// schedules: per stage, phase 1 advances every block (the full stage
+    /// serially, or just its boundary elements when overlapping), then the
+    /// halo exchange runs — synchronously after phase 1, or on a dedicated
+    /// scatter thread *concurrently* with the interior sweeps. The overlap
+    /// variant differs only in that gather/scatter step; all RK
+    /// bookkeeping (stage coefficients, time accounting, step counting) is
+    /// common.
     pub fn step(&mut self, dt: f64) -> Result<()> {
-        if self.overlap && self.backends.iter().any(|b| b.supports_overlap()) {
-            return self.step_overlapped(dt);
-        }
+        let overlap = self.overlap && self.backends.iter().any(|b| b.supports_overlap());
         for s in 0..N_STAGES {
             let (a, b) = (LSRK_A[s] as f32, LSRK_B[s] as f32);
+            // phase 1: full stage (serial) or boundary-only (overlapped);
+            // either way every outbound trace is final afterwards
             for (i, blk) in self.blocks.iter_mut().enumerate() {
-                let t = self.backends[i].stage(blk, dt as f32, a, b)?;
+                let t = if overlap {
+                    self.backends[i].stage_boundary(blk, dt as f32, a, b)?
+                } else {
+                    self.backends[i].stage(blk, dt as f32, a, b)?
+                };
                 self.times[i].accumulate(&t);
             }
-            apply_exchange(&mut self.blocks, &self.plan);
+            // phase 2: the exchange, overlapped with interior compute when
+            // the backends support the split
+            if overlap {
+                self.exchange_overlapped(dt as f32, a, b)?;
+            } else {
+                apply_exchange(&mut self.blocks, &self.plan);
+            }
         }
         self.steps_taken += 1;
         Ok(())
     }
 
-    /// One timestep under the overlapped schedule: per stage, boundary
-    /// phases run first, outbound traces are gathered, and the halo
-    /// scatter proceeds on its own thread while interior phases compute.
-    pub fn step_overlapped(&mut self, dt: f64) -> Result<()> {
+    /// The overlapped exchange of one stage: gather outbound traces, then
+    /// scatter them into neighbor halos on a dedicated thread while the
+    /// interior sweeps compute.
+    fn exchange_overlapped(&mut self, dt: f32, a: f32, b: f32) -> Result<()> {
         let sz = NFIELDS * self.basis.m() * self.basis.m();
-        for s in 0..N_STAGES {
-            let (a, b) = (LSRK_A[s] as f32, LSRK_B[s] as f32);
-            for (i, blk) in self.blocks.iter_mut().enumerate() {
-                let t = self.backends[i].stage_boundary(blk, dt as f32, a, b)?;
-                self.times[i].accumulate(&t);
-            }
-            gather_exchange(&self.blocks, &self.plan, &mut self.staging);
-            let mut halos: Vec<&mut [f32]> = Vec::new();
-            let mut views: Vec<InteriorView<'_>> = Vec::new();
-            for blk in self.blocks.iter_mut() {
-                let (v, h) = blk.split_for_overlap();
-                views.push(v);
-                halos.push(h);
-            }
-            let staging = &self.staging;
-            let backends = &mut self.backends;
-            let times = &mut self.times;
-            std::thread::scope(|sc| -> Result<()> {
-                sc.spawn(move || scatter_exchange(&mut halos, sz, staging));
-                for (i, v) in views.iter_mut().enumerate() {
-                    let t = backends[i].stage_interior(v, dt as f32, a, b)?;
-                    times[i].accumulate(&t);
-                }
-                Ok(())
-            })?;
+        gather_exchange(&self.blocks, &self.plan, &mut self.staging);
+        let mut halos: Vec<&mut [f32]> = Vec::new();
+        let mut views: Vec<InteriorView<'_>> = Vec::new();
+        for blk in self.blocks.iter_mut() {
+            let (v, h) = blk.split_for_overlap();
+            views.push(v);
+            halos.push(h);
         }
-        self.steps_taken += 1;
-        Ok(())
+        let staging = &self.staging;
+        let backends = &mut self.backends;
+        let times = &mut self.times;
+        std::thread::scope(|sc| -> Result<()> {
+            sc.spawn(move || scatter_exchange(&mut halos, sz, staging));
+            for (i, v) in views.iter_mut().enumerate() {
+                let t = backends[i].stage_interior(v, dt, a, b)?;
+                times[i].accumulate(&t);
+            }
+            Ok(())
+        })
     }
 
     /// Advance `n` steps.

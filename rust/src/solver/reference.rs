@@ -72,6 +72,22 @@ impl KernelTimes {
         self.bound_flux += from.bound_flux;
         self.parallel_flux += from.parallel_flux;
     }
+
+    /// Every timer multiplied by `factor`. Thread-parallel backends report
+    /// thread-*summed* CPU seconds (which exceed wall time); the measured-
+    /// rate refit rescales a profile by wall/total with this before fitting
+    /// so heterogeneous backends are compared in the same unit.
+    pub fn scaled(&self, factor: f64) -> KernelTimes {
+        KernelTimes {
+            volume_loop: self.volume_loop * factor,
+            int_flux: self.int_flux * factor,
+            interp_q: self.interp_q * factor,
+            lift: self.lift * factor,
+            rk: self.rk * factor,
+            bound_flux: self.bound_flux * factor,
+            parallel_flux: self.parallel_flux * factor,
+        }
+    }
 }
 
 /// Per-thread scratch for one element's face terms (no allocation on the

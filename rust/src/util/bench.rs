@@ -109,6 +109,18 @@ impl JsonSink {
         self.entries.push(Json::Obj(obj));
     }
 
+    /// Record one dimensionless metric (e.g. a parallel efficiency or a
+    /// max/mean imbalance): `{"name": ..., "value": ..., "unit": ...}`.
+    /// Scalar entries sit alongside timing entries in the same array;
+    /// consumers distinguish them by the presence of the `value` key.
+    pub fn push_scalar(&mut self, name: &str, value: f64, unit: &str) {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(name.to_string()));
+        obj.insert("value".to_string(), Json::Num(value));
+        obj.insert("unit".to_string(), Json::Str(unit.to_string()));
+        self.entries.push(Json::Obj(obj));
+    }
+
     /// Serialize all entries as a JSON array.
     pub fn dump(&self) -> String {
         Json::Arr(self.entries.clone()).dump()
@@ -174,6 +186,18 @@ mod tests {
         assert!((tput - 128.0).abs() < 1e-9);
         assert_eq!(arr[0].get("unit").unwrap().as_str().unwrap(), "elem-stages");
         assert!(matches!(arr[1].get("items_per_s").unwrap(), Json::Null));
+    }
+
+    #[test]
+    fn scalar_entries_roundtrip() {
+        let mut sink = JsonSink::new();
+        sink.push_scalar("cluster_imbalance_static", 1.85, "max_over_mean");
+        let j = Json::parse(&sink.dump()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "cluster_imbalance_static");
+        let v = arr[0].get("value").unwrap().as_f64().unwrap();
+        assert!((v - 1.85).abs() < 1e-12);
+        assert_eq!(arr[0].get("unit").unwrap().as_str().unwrap(), "max_over_mean");
     }
 
     #[test]
