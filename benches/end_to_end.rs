@@ -9,9 +9,10 @@
 //! CI mode: tiny meshes, 2 steps, still exercising the full cluster path.
 
 use repro::coordinator::cluster::{ClusterRun, ClusterSpec};
-use repro::coordinator::experiments::paper_mesh;
+use repro::coordinator::experiments::{cross_check, paper_mesh};
 use repro::coordinator::node::WorkerBackend;
-use repro::coordinator::profile::busy_imbalance;
+use repro::coordinator::profile::{busy_imbalance, node_busy_imbalance};
+use repro::coordinator::rebalance::RebalanceTotals;
 use repro::coordinator::{HeteroRun, ProfileReport};
 use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
 use repro::partition::{nested_partition, splice, DeviceKind};
@@ -117,6 +118,64 @@ fn cluster_bench(b: &Bench, smoke: bool) {
     );
     sink.push_scalar("cluster_imbalance_static", imb_static, "max_over_mean");
     sink.push_scalar("cluster_imbalance_adaptive", imb_adaptive, "max_over_mean");
+
+    // ---- two-level: skewed cluster (one throttled node), static vs ------
+    // adaptive level-1+2 rebalancing, node-level busy imbalance
+    let spin = if smoke { 10 } else { 20 };
+    let two_level = |adaptive: bool| -> (f64, RebalanceTotals) {
+        let mut spec = ClusterSpec::new(2, order);
+        spec.mic_fraction = Some(0.25);
+        spec.node_backends = Some(vec![
+            (WorkerBackend::RustRef, WorkerBackend::RustRef),
+            (
+                WorkerBackend::Throttled { spin_us_per_elem: spin },
+                WorkerBackend::Throttled { spin_us_per_elem: spin },
+            ),
+        ]);
+        if adaptive {
+            spec.rebalance_every = Some(2);
+        }
+        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+        // warm up (letting the two-level rebalancer converge), then freeze
+        // and measure the steady state
+        run.run(dt, if adaptive { 6 } else { 2 }).unwrap();
+        run.rebalance_every = None;
+        let _ = run.take_worker_times().unwrap();
+        run.run(dt, steps_measure).unwrap();
+        let imb = node_busy_imbalance(&run.take_worker_times().unwrap());
+        (imb, RebalanceTotals::of(&run.rebalance_history))
+    };
+    let (tl_static, _) = two_level(false);
+    let (tl_adaptive, t) = two_level(true);
+    println!(
+        "  two-level node imbalance on a skewed cluster: static {tl_static:.2} -> \
+         adaptive {tl_adaptive:.2} (level-1 moved {}, level-2 moved {}, \
+         rebuilt {} backends in {:.1} ms)",
+        t.level1_migrated,
+        t.level2_migrated,
+        t.rebuilt_workers,
+        t.wall_s * 1e3
+    );
+    sink.push_scalar("cluster_two_level_imbalance_static", tl_static, "max_over_mean");
+    sink.push_scalar("cluster_two_level_imbalance_adaptive", tl_adaptive, "max_over_mean");
+    sink.push_scalar("cluster_rebalance_level1_elems", t.level1_migrated as f64, "elems");
+    sink.push_scalar("cluster_rebalance_level2_elems", t.level2_migrated as f64, "elems");
+    sink.push_scalar("cluster_rebalance_rebuilt_workers", t.rebuilt_workers as f64, "workers");
+    sink.push_scalar("cluster_rebalance_wall_s", t.wall_s, "s");
+
+    // ---- live-vs-sim drift per kernel (two-level cross-check) -----------
+    let ck = cross_check(
+        2,
+        if smoke { 4 } else { 6 },
+        order,
+        if smoke { 2 } else { 4 },
+        Some(2),
+        None,
+        Some(&mut sink),
+    )
+    .expect("cross-check");
+    println!("{ck}");
+
     sink.write("BENCH_cluster.json").expect("writing BENCH_cluster.json");
     println!("  wrote BENCH_cluster.json");
 }

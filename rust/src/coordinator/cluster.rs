@@ -28,16 +28,21 @@
 //! coordinator thread only orchestrates the stage lockstep; no trace data
 //! passes through it.
 //!
-//! **Adaptive rebalancing** closes the loop with the cost model: every R
-//! steps ([`ClusterRun::rebalance`]) each node's measured per-phase
-//! [`KernelTimes`] are refitted into a node model
-//! ([`crate::costmodel::calib::measured_node`]) and fed back through
-//! [`crate::partition::solve_mic_fraction`]; if the solved split moved,
-//! the node's chunk is re-split ([`nested_partition_fractions`]) and the
-//! affected elements **migrate** between the node's two workers with their
-//! full state (q, res), traces refreshed and halos re-primed — the run
-//! continues bit-exactly as if it had been partitioned that way from the
-//! start.
+//! **Adaptive rebalancing** closes the loop with the cost model at *both*
+//! levels: every R steps ([`ClusterRun::rebalance`]) the measured window
+//! is planned by [`super::rebalance`] — level 1 re-splices the
+//! across-node chunks from each node's measured per-element rate
+//! ([`crate::partition::splice_weighted`] over
+//! [`crate::costmodel::calib::measured_elem_rate`] weights), level 2
+//! refits each node's [`KernelTimes`] into a node model
+//! ([`crate::costmodel::calib::measured_node`]) and re-solves
+//! [`crate::partition::solve_mic_fraction`] on the node's new chunk. The
+//! affected elements **migrate** with their full state (q, res), traces
+//! refreshed and halos re-primed — the run continues bit-exactly as if it
+//! had been partitioned that way from the start. Migration is
+//! *incremental*: only workers whose element set changed rebuild blocks
+//! and backends (for PJRT a rebuild is a recompile); everyone else keeps
+//! both and merely swaps routing tables.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -47,8 +52,12 @@ use std::time::Instant;
 
 use anyhow::anyhow;
 
+use super::rebalance::{plan_two_level, TwoLevelPlan};
+// historical home of the report types (they moved to the planner module)
+pub use super::rebalance::{NodeRebalance, RebalanceReport};
 use crate::costmodel::calib;
 use crate::mesh::{build_local_blocks, ExchangePlan, LocalBlock, Mesh};
+use crate::partition::nested::owner_migration;
 use crate::partition::{
     nested_partition_fractions, solve_mic_fraction, splice, DeviceKind, Partition,
 };
@@ -76,6 +85,13 @@ pub trait WorkerBackendFactory: Send + Sync {
     /// One backend per block, built on the worker's own thread.
     fn build(&self, order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>>;
     fn label(&self) -> &'static str;
+
+    /// Hardware threads one built backend will occupy (1 for scalar
+    /// backends). Surfaces in [`WorkerTimes::threads`] and the phase
+    /// tables so oversubscription is visible in every report.
+    fn thread_budget(&self) -> usize {
+        1
+    }
 }
 
 /// Scalar pure-rust reference kernels (no artifacts needed).
@@ -95,20 +111,33 @@ impl WorkerBackendFactory for ScalarWorker {
 }
 
 /// Multithreaded reference kernels with the in-block boundary/interior
-/// split; `threads == 0` splits the hardware budget across the cluster's
-/// concurrently-staging workers instead of oversubscribing.
+/// split; `threads == 0` divides the hardware threads across the cluster's
+/// concurrently-staging *parallel* workers (floor 1) instead of assuming a
+/// whole machine per worker — P virtual nodes on one machine would
+/// otherwise oversubscribe by P x.
 pub struct ParallelWorker {
     pub threads: usize,
-    /// Number of workers staging concurrently (for thread auto-sizing).
+    /// Number of parallel workers staging concurrently (thread auto-sizing
+    /// divides the machine across exactly these; scalar workers cost ~one
+    /// thread each and are ignored by the budget).
     pub concurrent: usize,
+}
+
+impl ParallelWorker {
+    /// The per-worker thread budget this factory will build with.
+    fn resolved_threads(&self) -> usize {
+        if self.threads != 0 {
+            return self.threads;
+        }
+        std::thread::available_parallelism()
+            .map(|n| (n.get() / self.concurrent.max(1)).max(1))
+            .unwrap_or(1)
+    }
 }
 
 impl WorkerBackendFactory for ParallelWorker {
     fn build(&self, order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>> {
-        let auto = std::thread::available_parallelism()
-            .map(|n| (n.get() / self.concurrent.max(1)).max(1))
-            .unwrap_or(1);
-        let t = if self.threads == 0 { auto } else { self.threads };
+        let t = self.resolved_threads();
         Ok(blocks
             .iter()
             .map(|_| Box::new(ParallelRefBackend::with_threads(order, t)) as Box<dyn StageBackend>)
@@ -117,6 +146,65 @@ impl WorkerBackendFactory for ParallelWorker {
 
     fn label(&self) -> &'static str {
         "rust-parallel"
+    }
+
+    fn thread_budget(&self) -> usize {
+        self.resolved_threads()
+    }
+}
+
+/// Reference kernels slowed by a deterministic busy-wait per element and
+/// stage — the stand-in for a slow node in the skew tests/benches. The
+/// numerics are bit-identical to [`ScalarWorker`]; only the measured wall
+/// times (and therefore the adaptive rebalancer's view of the node)
+/// change.
+pub struct ThrottledWorker {
+    pub spin_us_per_elem: u64,
+}
+
+struct ThrottledBackend {
+    inner: RustRefBackend,
+    spin_us_per_elem: u64,
+}
+
+impl StageBackend for ThrottledBackend {
+    fn stage(
+        &mut self,
+        st: &mut BlockState,
+        dt: f32,
+        a: f32,
+        b: f32,
+    ) -> Result<KernelTimes> {
+        let times = self.inner.stage(st, dt, a, b)?;
+        let spin =
+            std::time::Duration::from_micros(self.spin_us_per_elem * st.k_real as u64);
+        let t0 = Instant::now();
+        while t0.elapsed() < spin {
+            std::hint::spin_loop();
+        }
+        Ok(times)
+    }
+
+    fn name(&self) -> &'static str {
+        "throttled-ref"
+    }
+}
+
+impl WorkerBackendFactory for ThrottledWorker {
+    fn build(&self, order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>> {
+        Ok(blocks
+            .iter()
+            .map(|_| {
+                Box::new(ThrottledBackend {
+                    inner: RustRefBackend::new(order),
+                    spin_us_per_elem: self.spin_us_per_elem,
+                }) as Box<dyn StageBackend>
+            })
+            .collect())
+    }
+
+    fn label(&self) -> &'static str {
+        "throttled-ref"
     }
 }
 
@@ -157,25 +245,36 @@ pub enum WorkerBackend {
     RustRef,
     /// Multithreaded reference kernels with the in-node boundary/interior
     /// split; `threads == 0` auto-sizes to the hardware threads divided by
-    /// the number of concurrently-staging workers.
+    /// the number of concurrently-staging *parallel* workers in the
+    /// cluster (floor 1), so P virtual nodes on one machine share the
+    /// machine instead of oversubscribing it P-fold.
     RustParallel { threads: usize },
     /// AOT artifacts through PJRT (the production path; needs the `pjrt`
     /// cargo feature).
     Pjrt { artifact_dir: std::path::PathBuf },
+    /// [`ScalarWorker`] slowed by a deterministic busy-wait of
+    /// `spin_us_per_elem` microseconds per element per stage — the skew
+    /// injector for rebalancing tests and benches (identical numerics,
+    /// inflated measured times).
+    Throttled { spin_us_per_elem: u64 },
 }
 
 impl WorkerBackend {
-    /// The factory realizing this backend for a cluster of
-    /// `concurrent_workers` workers staging at once.
-    pub fn factory(&self, concurrent_workers: usize) -> Arc<dyn WorkerBackendFactory> {
+    /// The factory realizing this backend in a cluster where
+    /// `concurrent_parallel` parallel workers stage at once (the divisor
+    /// of the `threads == 0` auto-budget; scalar backends ignore it).
+    pub fn factory(&self, concurrent_parallel: usize) -> Arc<dyn WorkerBackendFactory> {
         match self {
             WorkerBackend::RustRef => Arc::new(ScalarWorker),
             WorkerBackend::RustParallel { threads } => Arc::new(ParallelWorker {
                 threads: *threads,
-                concurrent: concurrent_workers.max(1),
+                concurrent: concurrent_parallel.max(1),
             }),
             WorkerBackend::Pjrt { artifact_dir } => {
                 Arc::new(PjrtWorker { artifact_dir: artifact_dir.clone() })
+            }
+            WorkerBackend::Throttled { spin_us_per_elem } => {
+                Arc::new(ThrottledWorker { spin_us_per_elem: *spin_us_per_elem })
             }
         }
     }
@@ -185,6 +284,7 @@ impl WorkerBackend {
             WorkerBackend::RustRef => "rust-ref",
             WorkerBackend::RustParallel { .. } => "rust-parallel",
             WorkerBackend::Pjrt { .. } => "pjrt",
+            WorkerBackend::Throttled { .. } => "throttled-ref",
         }
     }
 }
@@ -207,7 +307,11 @@ struct OutboundGroup {
 }
 
 struct ReplaceMsg {
-    blocks: Vec<BlockState>,
+    /// `Some` = new blocks: rebuild the backends for them (for PJRT that
+    /// is a recompile). `None` = the worker's element set is unchanged by
+    /// this migration: keep blocks *and* backends alive, swap only the
+    /// routing tables (peers' local indices / halo slots may have moved).
+    blocks: Option<Vec<BlockState>>,
     outbound: Vec<OutboundGroup>,
     self_copies: Vec<CopyRoute>,
     expected_in: usize,
@@ -259,6 +363,10 @@ pub struct WorkerTimes {
     pub exchange_s: f64,
     /// LSRK stages processed since the last reset.
     pub stages: usize,
+    /// Hardware-thread budget of this worker's backend (1 for scalar
+    /// backends; the divided share for `RustParallel { threads: 0 }`) —
+    /// surfaced so phase tables show how the machine was carved up.
+    pub threads: usize,
 }
 
 impl WorkerTimes {
@@ -361,7 +469,9 @@ fn worker_main(init: WorkerInit) {
             return;
         }
     };
-    let mut times = WorkerTimes::default();
+    let budget = factory.thread_budget();
+    let fresh_times = || WorkerTimes { threads: budget, ..Default::default() };
+    let mut times = fresh_times();
     // Deliveries that raced ahead of this worker's Stage command (peers may
     // ship before we even dequeue the stage); they belong to the next
     // routed stage and are installed in its exchange window.
@@ -505,26 +615,31 @@ fn worker_main(init: WorkerInit) {
             }
             Cmd::TakeTimes => {
                 tx.send(Resp::Times(times)).ok();
-                times = WorkerTimes::default();
+                times = fresh_times();
             }
             Cmd::Replace(msg) => {
                 let ReplaceMsg { blocks: nb, outbound: no, self_copies: nsc, expected_in: nei } =
                     *msg;
-                match factory.build(order, &nb) {
-                    Ok(bk) => {
-                        blocks = nb;
-                        backends = bk;
-                        outbound = no;
-                        self_copies = nsc;
-                        expected_in = nei;
-                        times = WorkerTimes::default();
-                        pending.clear();
-                        tx.send(Resp::Replaced).ok();
-                    }
-                    Err(e) => {
-                        tx.send(Resp::Err(format!("rebuilding backends: {e}"))).ok();
+                // routing always swaps; blocks + backends only when the
+                // migration actually changed this worker's element set
+                if let Some(nb) = nb {
+                    match factory.build(order, &nb) {
+                        Ok(bk) => {
+                            blocks = nb;
+                            backends = bk;
+                        }
+                        Err(e) => {
+                            tx.send(Resp::Err(format!("rebuilding backends: {e}"))).ok();
+                            continue;
+                        }
                     }
                 }
+                outbound = no;
+                self_copies = nsc;
+                expected_in = nei;
+                times = fresh_times();
+                pending.clear();
+                tx.send(Resp::Replaced).ok();
             }
             Cmd::Shutdown => break,
         }
@@ -662,8 +777,16 @@ pub struct ClusterSpec {
     /// is the heterogeneous case the rebalancer equalizes.
     pub mic_backend: WorkerBackend,
     pub exchange_every_stage: bool,
-    /// Re-solve every node's split from measured times each R steps.
+    /// Re-solve the two-level split from measured times each R steps.
     pub rebalance_every: Option<usize>,
+    /// Rebalancing adapts the *level-1* splice across nodes (weighted by
+    /// measured node rates) in addition to each node's level-2 CPU/MIC
+    /// split. Off = level-2-only (the pre-two-level behavior).
+    pub level1_rebalance: bool,
+    /// Per-node `(cpu, mic)` backend override (`len == nodes`); `None`
+    /// uses `cpu_backend`/`mic_backend` uniformly. The skewed-cluster
+    /// tests and benches throttle a single node through this.
+    pub node_backends: Option<Vec<(WorkerBackend, WorkerBackend)>>,
 }
 
 impl ClusterSpec {
@@ -676,6 +799,8 @@ impl ClusterSpec {
             mic_backend: WorkerBackend::RustRef,
             exchange_every_stage: true,
             rebalance_every: None,
+            level1_rebalance: true,
+            node_backends: None,
         }
     }
 }
@@ -704,24 +829,6 @@ struct MeshCtx {
     elem_owners: Vec<usize>,
 }
 
-/// One node's row of a [`RebalanceReport`].
-#[derive(Debug, Clone, Copy)]
-pub struct NodeRebalance {
-    pub node: usize,
-    pub old_k_mic: usize,
-    pub new_k_mic: usize,
-    /// The solved (pre-clipping) MIC fraction.
-    pub target_fraction: f64,
-}
-
-/// What one [`ClusterRun::rebalance`] call did.
-#[derive(Debug, Clone, Default)]
-pub struct RebalanceReport {
-    /// Elements that changed workers (0 = the split was already optimal).
-    pub migrated_elems: usize,
-    pub per_node: Vec<NodeRebalance>,
-}
-
 /// A live N-node cluster: 2 workers per node plus the message fabric.
 pub struct ClusterRun {
     workers: Vec<WorkerHandle>,
@@ -741,6 +848,12 @@ pub struct ClusterRun {
     pub exchange_wall_s: f64,
     /// When set, [`ClusterRun::run`] rebalances every R steps.
     pub rebalance_every: Option<usize>,
+    /// Adapt the level-1 across-node splice during rebalancing (see
+    /// [`ClusterSpec::level1_rebalance`]).
+    pub level1_rebalance: bool,
+    /// Every rebalance performed so far, in order — benches and the CLI
+    /// aggregate level-1/level-2 migration counts and stall time from it.
+    pub rebalance_history: Vec<RebalanceReport>,
     routed_stages: usize,
     poisoned: bool,
     mesh_ctx: Option<MeshCtx>,
@@ -779,17 +892,33 @@ impl ClusterRun {
             st.set_initial_condition(&basis, &ic);
             states.push(st);
         }
+        if let Some(nb) = &spec.node_backends {
+            anyhow::ensure!(
+                nb.len() == nodes,
+                "node_backends has {} entries for {nodes} nodes",
+                nb.len()
+            );
+        }
         let specs: Vec<WorkerSpec> = (0..2 * nodes)
             .map(|w| {
                 let device = if w % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic };
+                let backend = match &spec.node_backends {
+                    Some(nb) => {
+                        let pair = &nb[w / 2];
+                        if device == DeviceKind::Cpu { pair.0.clone() } else { pair.1.clone() }
+                    }
+                    None => {
+                        if device == DeviceKind::Cpu {
+                            spec.cpu_backend.clone()
+                        } else {
+                            spec.mic_backend.clone()
+                        }
+                    }
+                };
                 WorkerSpec {
                     node: w / 2,
                     device,
-                    backend: if device == DeviceKind::Cpu {
-                        spec.cpu_backend.clone()
-                    } else {
-                        spec.mic_backend.clone()
-                    },
+                    backend,
                     name: format!(
                         "node{}-{}",
                         w / 2,
@@ -803,6 +932,7 @@ impl ClusterRun {
             ClusterRun::launch_parts(&lblocks, states, plan, &worker_of_owner, &specs, spec.order)?;
         run.exchange_every_stage = spec.exchange_every_stage;
         run.rebalance_every = spec.rebalance_every;
+        run.level1_rebalance = spec.level1_rebalance;
         run.mesh_ctx = Some(MeshCtx { mesh: mesh.clone(), node_part, fractions, lblocks, elem_owners });
         Ok(run)
     }
@@ -835,6 +965,15 @@ impl ClusterRun {
         let meta: Vec<(usize, DeviceKind)> = specs.iter().map(|s| (s.node, s.device)).collect();
         let fabric = fabric_stats(&plan, &owner_map, &meta)?;
         let (mut outbound, mut self_copies, expected) = route_tables(&plan, &owner_map, nw);
+        // thread auto-budget divisor: the workers that will actually claim
+        // a thread pool, not every worker (a scalar accelerator stand-in
+        // costs ~one thread and must not halve the parallel CPU workers'
+        // share)
+        let parallel_workers = specs
+            .iter()
+            .filter(|s| matches!(s.backend, WorkerBackend::RustParallel { .. }))
+            .count()
+            .max(1);
         let mut cmd_txs: Vec<Sender<Cmd>> = Vec::with_capacity(nw);
         let mut cmd_rxs: Vec<Option<Receiver<Cmd>>> = Vec::with_capacity(nw);
         for _ in 0..nw {
@@ -853,7 +992,7 @@ impl ClusterRun {
                 outbound: std::mem::take(&mut outbound[w]),
                 self_copies: std::mem::take(&mut self_copies[w]),
                 expected_in: expected[w],
-                factory: spec.backend.factory(nw),
+                factory: spec.backend.factory(parallel_workers),
                 order,
             };
             let handle = std::thread::Builder::new()
@@ -884,6 +1023,8 @@ impl ClusterRun {
             stage_wall_s: 0.0,
             exchange_wall_s: 0.0,
             rebalance_every: None,
+            level1_rebalance: false,
+            rebalance_history: Vec::new(),
             routed_stages: 0,
             poisoned: false,
             mesh_ctx: None,
@@ -1057,14 +1198,22 @@ impl ClusterRun {
         self.plan.total_faces() * NFIELDS * m * m * 4
     }
 
-    /// Read back every element's (q, res) keyed by global id — the one
-    /// place that knows the per-element slicing, shared by state gathering
-    /// and migration.
-    fn pull_element_state(&self, ctx: &MeshCtx) -> Result<Vec<Option<(Vec<f32>, Vec<f32>)>>> {
+    /// Read back element (q, res) keyed by global id — the one place that
+    /// knows the per-element slicing, shared by state gathering and
+    /// migration. `only` restricts the pull to a subset of owners (the
+    /// incremental migration touches exactly the changed workers).
+    fn pull_element_state(
+        &self,
+        ctx: &MeshCtx,
+        only: Option<&HashSet<usize>>,
+    ) -> Result<Vec<Option<(Vec<f32>, Vec<f32>)>>> {
         let m = self.order + 1;
         let esz = NFIELDS * m * m * m;
         let mut out: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; ctx.mesh.len()];
         for (owner, lb) in ctx.lblocks.iter().enumerate() {
+            if only.is_some_and(|f| !f.contains(&owner)) {
+                continue;
+            }
             let st = self.read_block(owner)?;
             for (li, &g) in lb.global_ids.iter().enumerate() {
                 let q = st.q[li * esz..(li + 1) * esz].to_vec();
@@ -1084,87 +1233,182 @@ impl ClusterRun {
             .as_ref()
             .ok_or_else(|| anyhow!("gather_elements needs the mesh-aware ClusterRun::launch"))?;
         Ok(self
-            .pull_element_state(ctx)?
+            .pull_element_state(ctx, None)?
             .into_iter()
             .map(|s| s.map(|(q, _)| q).unwrap_or_default())
             .collect())
     }
 
-    /// Re-solve every node's CPU/MIC split from its measured times and
-    /// migrate elements between the node's two workers if the optimum
-    /// moved. The measurement window is everything since the last
-    /// `take_worker_times`/`rebalance` call; counters reset afterwards.
-    ///
-    /// Migration is currently global: all blocks, the exchange plan and
-    /// every worker's backends are rebuilt even when only one node moved
-    /// (simple and exactly state-preserving; incremental per-node
-    /// replacement is a ROADMAP follow-on — note the PJRT factory
-    /// recompiles its artifacts on every Replace).
-    pub fn rebalance(&mut self) -> Result<RebalanceReport> {
-        let mut ctx = self.mesh_ctx.take().ok_or_else(|| {
-            anyhow!("rebalancing needs the mesh-aware ClusterRun::launch")
-        })?;
-        let res = self.rebalance_inner(&mut ctx);
-        self.mesh_ctx = Some(ctx);
-        res
+    /// The current level-1 node partition (mesh-aware launches only).
+    pub fn node_partition(&self) -> Option<Partition> {
+        self.mesh_ctx.as_ref().map(|c| c.node_part.clone())
     }
 
-    fn rebalance_inner(&mut self, ctx: &mut MeshCtx) -> Result<RebalanceReport> {
-        // standard layout: worker 2n = node n CPU, worker 2n+1 = node n MIC
-        // (guaranteed by the mesh-aware launch that enables this path)
-        let times = self.take_worker_times()?;
-        let nodes = self.workers.len() / 2;
-        let mut fractions = Vec::with_capacity(nodes);
-        for nd in 0..nodes {
-            let (wc, wm) = (2 * nd, 2 * nd + 1);
-            let k_cpu = self.workers[wc].k_elems;
-            let k_mic = self.workers[wm].k_elems;
-            let k = k_cpu + k_mic;
-            let steps = times[wc].steps();
-            if k == 0 || steps < 1.0 {
-                // nothing measured yet: keep the current split
-                fractions.push(ctx.fractions[nd]);
-                continue;
-            }
-            let model = calib::measured_node(
-                self.order,
-                k_cpu,
-                k_mic,
-                steps,
-                &times[wc].wall_kernels(),
-                &times[wm].wall_kernels(),
+    /// The current per-node MIC fractions (mesh-aware launches only).
+    pub fn mic_fractions(&self) -> Option<Vec<f64>> {
+        self.mesh_ctx.as_ref().map(|c| c.fractions.clone())
+    }
+
+    /// Rebalance **both levels** of the nested partition from the window
+    /// measured since the last `take_worker_times`/`rebalance` call
+    /// (counters reset afterwards): level 1 re-splices the across-node
+    /// chunks from measured per-element node rates (when
+    /// [`ClusterRun::level1_rebalance`] is set), then level 2 re-solves
+    /// each node's CPU/MIC split on its new chunk — one call settles the
+    /// whole scheme ([`super::rebalance`] holds the planner).
+    ///
+    /// Migration is **incremental**: element state travels over the
+    /// global-id path, but only workers whose element set actually changed
+    /// get new blocks and backends (for the PJRT factory a rebuild is a
+    /// recompile); every other worker keeps both and only its routing
+    /// tables are swapped, since peers' local indices and halo slots may
+    /// have moved. The run continues bit-exactly either way.
+    pub fn rebalance(&mut self) -> Result<RebalanceReport> {
+        self.rebalance_with(|run, ctx| {
+            // standard layout: worker 2n = node n CPU, worker 2n+1 = node
+            // n MIC (guaranteed by the mesh-aware launch)
+            let times = run.take_worker_times()?;
+            let counts = run.node_counts();
+            Ok(plan_two_level(
+                &ctx.mesh,
+                &ctx.node_part,
+                &ctx.fractions,
+                &times,
+                &counts,
+                run.order,
+                run.level1_rebalance,
+            ))
+        })
+    }
+
+    /// Apply an explicit two-level partition — `node_part` is the level-1
+    /// splice, `fractions[nd]` node nd's MIC share — migrating state
+    /// exactly as a measured [`ClusterRun::rebalance`] would (incremental
+    /// rebuilds, history appended). Exposed so tests and tools can drive
+    /// hand-picked moves.
+    pub fn apply_two_level(
+        &mut self,
+        node_part: Partition,
+        fractions: Vec<f64>,
+    ) -> Result<RebalanceReport> {
+        self.rebalance_with(move |run, ctx| {
+            anyhow::ensure!(
+                node_part.assignment.len() == ctx.mesh.len(),
+                "partition covers {} elements, mesh has {}",
+                node_part.assignment.len(),
+                ctx.mesh.len()
             );
-            let sol = solve_mic_fraction(&model, self.order, k);
-            fractions.push(sol.k_mic as f64 / k as f64);
-        }
-        let new_np = nested_partition_fractions(&ctx.mesh, &ctx.node_part, &fractions);
-        let new_owners = new_np.owners();
-        let migrated =
-            new_owners.iter().zip(&ctx.elem_owners).filter(|(a, b)| a != b).count();
-        let report = RebalanceReport {
-            migrated_elems: migrated,
-            per_node: (0..nodes)
+            anyhow::ensure!(
+                2 * node_part.nparts == run.workers.len(),
+                "partition has {} nodes, cluster runs {}",
+                node_part.nparts,
+                run.workers.len() / 2
+            );
+            anyhow::ensure!(
+                fractions.len() == node_part.nparts,
+                "need one MIC fraction per node"
+            );
+            let old_sizes = ctx.node_part.sizes();
+            let new_sizes = node_part.sizes();
+            let np = nested_partition_fractions(&ctx.mesh, &node_part, &fractions);
+            let per_node = (0..node_part.nparts)
                 .map(|nd| NodeRebalance {
                     node: nd,
-                    old_k_mic: self.workers[2 * nd + 1].k_elems,
-                    new_k_mic: new_np.node_counts[nd].1,
+                    old_k: old_sizes[nd],
+                    new_k: new_sizes[nd],
+                    old_k_mic: run.workers[2 * nd + 1].k_elems,
+                    new_k_mic: np.node_counts[nd].1,
                     target_fraction: fractions[nd],
+                    rate_s_per_elem: 0.0,
                 })
-                .collect(),
+                .collect();
+            let level1_moved = node_part.assignment != ctx.node_part.assignment;
+            Ok(TwoLevelPlan { node_part, fractions, np, level1_moved, per_node })
+        })
+    }
+
+    /// Shared scaffolding of both rebalance entry points: take the mesh
+    /// context, build a plan (measured or hand-picked), migrate, restore
+    /// the context, stamp the wall time and append to the history.
+    fn rebalance_with(
+        &mut self,
+        build: impl FnOnce(&mut ClusterRun, &mut MeshCtx) -> Result<TwoLevelPlan>,
+    ) -> Result<RebalanceReport> {
+        let t0 = Instant::now();
+        let mut ctx = self.mesh_ctx.take().ok_or_else(|| {
+            anyhow!("two-level rebalancing needs the mesh-aware ClusterRun::launch")
+        })?;
+        let res = (|| {
+            let plan = build(&mut *self, &mut ctx)?;
+            self.migrate_two_level(&mut ctx, plan)
+        })();
+        self.mesh_ctx = Some(ctx);
+        let mut report = res?;
+        report.wall_s = t0.elapsed().as_secs_f64();
+        self.rebalance_history.push(report.clone());
+        Ok(report)
+    }
+
+    /// The migration executor under both rebalance entry points: pull
+    /// state only from the workers whose element set changes, rebuild
+    /// exactly their blocks (and backends), swap routing tables everywhere
+    /// — peers' local indices and halo slots can move even when a worker's
+    /// own blocks don't — and leave every unchanged worker's backend
+    /// alive.
+    fn migrate_two_level(
+        &mut self,
+        ctx: &mut MeshCtx,
+        plan: TwoLevelPlan,
+    ) -> Result<RebalanceReport> {
+        let TwoLevelPlan { node_part, fractions, np, level1_moved: _, per_node } = plan;
+        let new_owners = np.owners();
+        let mig = owner_migration(&ctx.elem_owners, &new_owners);
+        let nw = self.workers.len();
+        let mut report = RebalanceReport {
+            level1_migrated: mig.level1,
+            level2_migrated: mig.level2,
+            rebuilt_workers: 0,
+            kept_workers: nw,
+            wall_s: 0.0,
+            per_node,
         };
-        if migrated == 0 {
+        if mig.changed_owners.is_empty() {
+            ctx.node_part = node_part;
             ctx.fractions = fractions;
             return Ok(report);
         }
-        // ---- migrate: pull state, re-split, redistribute ----------------
+        // this path relies on the mesh-aware identity layout: owner o's
+        // block lives alone on worker o
+        anyhow::ensure!(
+            self.worker_of_owner.iter().enumerate().all(|(o, &w)| o == w),
+            "two-level migration needs the standard one-owner-per-worker layout"
+        );
         let order = self.order;
         let m = order + 1;
         let esz = NFIELDS * m * m * m;
         let n_owners = self.worker_of_owner.len();
-        let mut elem_state = self.pull_element_state(ctx)?;
+        let changed: HashSet<usize> = mig.changed_owners.iter().copied().collect();
+        // ---- pull q/res only from the workers that lose/gain elements ---
+        let mut elem_state = self.pull_element_state(ctx, Some(&changed))?;
         let (new_lblocks, new_plan) = build_local_blocks(&ctx.mesh, &new_owners, n_owners);
-        let mut new_states: Vec<BlockState> = Vec::with_capacity(n_owners);
-        for lb in &new_lblocks {
+        // unchanged element set => bit-identical block layout: a face is a
+        // halo face iff its neighbor is owned by *someone else*, so slot
+        // numbering never depends on who that someone is. Kept workers'
+        // correctness rests on this, so check it in release too (O(K)
+        // once per rebalance, nothing on the stall path).
+        anyhow::ensure!(
+            (0..n_owners).filter(|o| !changed.contains(o)).all(|o| {
+                new_lblocks[o].global_ids == ctx.lblocks[o].global_ids
+                    && new_lblocks[o].halo_len == ctx.lblocks[o].halo_len
+            }),
+            "incremental migration invariant broken: an unchanged worker's \
+             block layout differs under the new plan (halo-slot ordering \
+             must depend only on the worker's own element set)"
+        );
+        // ---- rebuild blocks for the changed owners ----------------------
+        let mut new_states: Vec<Option<BlockState>> = (0..n_owners).map(|_| None).collect();
+        for &o in &mig.changed_owners {
+            let lb = &new_lblocks[o];
             let mut st =
                 BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1));
             for (li, &g) in lb.global_ids.iter().enumerate() {
@@ -1178,19 +1422,52 @@ impl ClusterRun {
             // halos primed from them) reproduce the pre-migration values
             // bit-for-bit — the run continues exactly
             st.refresh_traces();
-            new_states.push(st);
+            new_states[o] = Some(st);
         }
-        apply_exchange(&mut new_states, &new_plan);
-        let nw = self.workers.len();
-        let (mut per_worker_blocks, per_worker_owners, owner_map) =
-            distribute(new_states, &self.worker_of_owner, nw);
+        // ---- prime the rebuilt blocks' halos ----------------------------
+        // sources on kept workers hold exactly the traces the last stage
+        // computed (pure functions of their unmigrated q); pull those
+        // blocks once each. This clones whole neighbor blocks to read a
+        // few trace slices — acceptable at rebalance frequency; a
+        // trace-only worker read would shrink the transfer if the stall
+        // ever matters at scale.
+        let mut kept_src: HashMap<usize, BlockState> = HashMap::new();
+        for &o in &mig.changed_owners {
+            for &(src, _, _, _) in &new_plan.copies[o] {
+                if changed.contains(&src) || kept_src.contains_key(&src) {
+                    continue;
+                }
+                let blk = self.read_block(src)?;
+                kept_src.insert(src, blk);
+            }
+        }
+        let mut installs: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        for &o in &mig.changed_owners {
+            for &(src, se, sf, slot) in &new_plan.copies[o] {
+                let data = match new_states[src].as_ref() {
+                    Some(st) => st.trace_slice(se, sf).to_vec(),
+                    None => kept_src[&src].trace_slice(se, sf).to_vec(),
+                };
+                installs.push((o, slot, data));
+            }
+        }
+        for (o, slot, data) in installs {
+            new_states[o]
+                .as_mut()
+                .expect("changed owner has a rebuilt state")
+                .set_halo_slot(slot, &data);
+        }
+        // ---- swap routing everywhere, blocks only where changed ---------
         let meta: Vec<(usize, DeviceKind)> =
             self.workers.iter().map(|w| (w.node, w.device)).collect();
-        let fabric = fabric_stats(&new_plan, &owner_map, &meta)?;
-        let (mut outbound, mut self_copies, expected) = route_tables(&new_plan, &owner_map, nw);
+        let fabric = fabric_stats(&new_plan, &self.owner_map, &meta)?;
+        let (mut outbound, mut self_copies, expected) =
+            route_tables(&new_plan, &self.owner_map, nw);
+        report.rebuilt_workers = mig.changed_owners.len();
+        report.kept_workers = nw - report.rebuilt_workers;
         for (w, wk) in self.workers.iter().enumerate() {
             let msg = ReplaceMsg {
-                blocks: std::mem::take(&mut per_worker_blocks[w]),
+                blocks: new_states[w].take().map(|st| vec![st]),
                 outbound: std::mem::take(&mut outbound[w]),
                 self_copies: std::mem::take(&mut self_copies[w]),
                 expected_in: expected[w],
@@ -1214,14 +1491,13 @@ impl ClusterRun {
             }
         }
         for (w, wk) in self.workers.iter_mut().enumerate() {
-            wk.owners = per_worker_owners[w].clone();
-            wk.k_elems = per_worker_owners[w].iter().map(|&o| new_lblocks[o].len()).sum();
+            wk.k_elems = new_lblocks[w].len();
         }
-        self.owner_map = owner_map;
         self.plan = new_plan;
         self.fabric = fabric;
         ctx.lblocks = new_lblocks;
         ctx.elem_owners = new_owners;
+        ctx.node_part = node_part;
         ctx.fractions = fractions;
         Ok(report)
     }
@@ -1298,7 +1574,10 @@ mod tests {
         let mut run = ClusterRun::launch(&mesh, &spec, wave_ic).unwrap();
         // no steps taken: nothing measured, split must not move
         let rep = run.rebalance().unwrap();
-        assert_eq!(rep.migrated_elems, 0);
+        assert_eq!(rep.migrated_elems(), 0);
+        assert_eq!(rep.rebuilt_workers, 0);
+        assert_eq!(rep.kept_workers, 2);
+        assert_eq!(run.rebalance_history.len(), 1);
     }
 
     #[test]

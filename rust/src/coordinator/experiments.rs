@@ -14,6 +14,7 @@ use crate::mesh::geometry::{discontinuous_brick, sweep_dims};
 use crate::mesh::Mesh;
 use crate::partition::{nested_partition, partition_stats, solve_mic_fraction, splice};
 use crate::sim::{simulate, Cluster, Scheme};
+use crate::util::bench::JsonSink;
 use crate::Result;
 
 use super::report::{render_table, write_csv};
@@ -282,26 +283,44 @@ pub fn fig6_2(out_csv: Option<&str>) -> Result<String> {
 /// ([`crate::coordinator::cluster`]) and through the discrete-event
 /// simulator — the latter with its node model *refitted from the live
 /// run's measured kernel times* (`Cluster::custom` +
-/// `calib::measured_node`) — and report the per-step discrepancy. A ratio
-/// near 1 means the simulator's functional forms transfer to this machine;
-/// the busy-fraction columns localize any disagreement to a device.
+/// `calib::measured_node`) and priced on the **same level-1 partition**
+/// the live run executes ([`crate::sim::simulate_parts`]), so the
+/// comparison survives adaptive two-level rebalancing
+/// (`rebalance_every`: warm-up steps with the rebalancer live, then a
+/// frozen measurement window). Reports the per-step discrepancy plus the
+/// **per-kernel** live-over-sim drift — the series that localizes where
+/// the calibrated functional forms break down — optionally emitted into a
+/// [`JsonSink`] (`BENCH_cluster.json`).
 pub fn cross_check(
     nodes: usize,
     n: usize,
     order: usize,
     steps: usize,
+    rebalance_every: Option<usize>,
     out_csv: Option<&str>,
+    mut sink: Option<&mut JsonSink>,
 ) -> Result<String> {
     use crate::coordinator::cluster::{ClusterRun, ClusterSpec};
+    use crate::sim::simulate_parts;
     use crate::solver::analytic::standing_wave;
     use crate::solver::reference::KernelTimes;
 
     let nodes = nodes.max(1);
+    let steps = steps.max(1);
     let mesh = discontinuous_brick([n, n, n], [1.0, 1.0, 1.0]);
     let mut spec = ClusterSpec::new(nodes, order);
     spec.mic_fraction = Some(0.3);
+    spec.rebalance_every = rebalance_every;
     let w = std::f64::consts::PI * 3f64.sqrt();
     let mut run = ClusterRun::launch(&mesh, &spec, |x| standing_wave(x, 0.0, 1.0, 1.0, w))?;
+    if rebalance_every.is_some() {
+        // warm-up: let the two-level rebalancer move the partition, then
+        // freeze it so the measurement window prices one fixed partition —
+        // the same one handed to the simulator below
+        run.run(1e-3, steps)?;
+        run.rebalance_every = None;
+        let _ = run.take_worker_times()?;
+    }
     let t0 = std::time::Instant::now();
     run.run(1e-3, steps)?;
     let live_wall = t0.elapsed().as_secs_f64();
@@ -336,13 +355,18 @@ pub fn cross_check(
         &cpu_k,
         &mic_k,
     );
-    let frac = k_mic as f64 / (k_cpu + k_mic).max(1) as f64;
+    // the simulator prices the live run's actual two-level partition:
+    // its (possibly re-spliced) level-1 chunks + per-node realized shares
+    let node_part = run.node_partition().expect("mesh-aware launch");
+    let fracs: Vec<f64> =
+        counts.iter().map(|&(kc, km)| km as f64 / (kc + km).max(1) as f64).collect();
     let cluster_model = Cluster::custom(nodes, model, calib::fabric_network());
-    let rep = simulate(
-        &cluster_model, &mesh, order, steps,
-        Scheme::Nested { mic_fraction: Some(frac) },
+    let rep = simulate_parts(
+        &cluster_model, &mesh, &node_part, Some(&fracs), order, steps,
+        Scheme::Nested { mic_fraction: None },
     );
-    let live_per_step = live_wall / steps.max(1) as f64;
+    let live_per_step = live_wall / steps as f64;
+    let drift = rep.discrepancy(live_wall);
     let headers = [
         "nodes", "live_s_per_step", "sim_s_per_step", "live_over_sim",
         "live_cpu_busy", "sim_cpu_busy", "live_mic_busy", "sim_mic_busy",
@@ -351,19 +375,58 @@ pub fn cross_check(
         nodes.to_string(),
         format!("{live_per_step:.5}"),
         format!("{:.5}", rep.per_step_s()),
-        format!("{:.2}", rep.discrepancy(live_wall)),
+        format!("{drift:.2}"),
         format!("{live_cpu_busy:.2}"),
         format!("{:.2}", rep.cpu_busy_frac),
         format!("{live_mic_busy:.2}"),
         format!("{:.2}", rep.mic_busy_frac),
     ]];
+    if let Some(s) = &mut sink {
+        s.push_scalar("cross_check_live_over_sim", drift, "live_over_sim");
+    }
+    // per-kernel drift: live kernel seconds (wall-rescaled, summed over
+    // workers) vs the simulator's breakdown, both per node-step
+    let mut live_total = KernelTimes::default();
+    live_total.accumulate(&cpu_k);
+    live_total.accumulate(&mic_k);
+    let mut krows = Vec::new();
+    let mut kcsv = Vec::new();
+    for (name, live_s) in live_total.rows() {
+        let live_ps = live_s / steps_meas.max(1e-300);
+        let sim_ps = rep.breakdown.kernel_seconds(name) / (steps * nodes) as f64;
+        let ratio = if sim_ps > 1e-300 { live_ps / sim_ps } else { f64::INFINITY };
+        if let Some(s) = &mut sink {
+            // 0.0 = "no sim prediction to compare against" (keeps the JSON
+            // finite; the text table still shows inf)
+            let finite = if ratio.is_finite() { ratio } else { 0.0 };
+            s.push_scalar(&format!("cross_check_drift_{name}"), finite, "live_over_sim");
+        }
+        krows.push(vec![
+            name.to_string(),
+            format!("{live_ps:.3e}"),
+            format!("{sim_ps:.3e}"),
+            format!("{ratio:.2}"),
+        ]);
+        kcsv.push(vec![
+            name.to_string(),
+            format!("{live_ps}"),
+            format!("{sim_ps}"),
+            format!("{ratio}"),
+        ]);
+    }
+    let kheaders = ["kernel", "live_s_per_node_step", "sim_s_per_node_step", "live_over_sim"];
     if let Some(p) = out_csv {
         write_csv(p, &headers, &rows)?;
+        let kpath = format!("{}_kernels.csv", p.trim_end_matches(".csv"));
+        write_csv(&kpath, &kheaders, &kcsv)?;
     }
     let mut s = render_table(&headers, &rows);
+    s.push('\n');
+    s.push_str(&render_table(&kheaders, &krows));
     s.push_str(
         "\nlive = in-process cluster runtime; sim = event simulator with the node \
-         model refitted from the live run's measured kernel times\n",
+         model refitted from the live run's measured kernel times, priced on the \
+         live run's level-1 partition\n",
     );
     Ok(s)
 }
@@ -465,9 +528,22 @@ mod tests {
 
     #[test]
     fn cross_check_live_vs_sim_runs() {
-        let s = cross_check(2, 4, 2, 3, None).unwrap();
+        let s = cross_check(2, 4, 2, 3, None, None, None).unwrap();
         assert!(s.contains("live_over_sim"), "{s}");
         assert!(s.contains("refitted"), "{s}");
+        // per-kernel drift rows are part of the report
+        assert!(s.contains("volume_loop"), "{s}");
+    }
+
+    #[test]
+    fn cross_check_adaptive_emits_kernel_drift() {
+        let mut sink = JsonSink::new();
+        let s = cross_check(2, 4, 2, 2, Some(2), None, Some(&mut sink)).unwrap();
+        assert!(s.contains("live_over_sim"), "{s}");
+        let dump = sink.dump();
+        assert!(dump.contains("cross_check_live_over_sim"), "{dump}");
+        assert!(dump.contains("cross_check_drift_volume_loop"), "{dump}");
+        assert!(dump.contains("cross_check_drift_parallel_flux"), "{dump}");
     }
 
     #[test]

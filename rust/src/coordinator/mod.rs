@@ -17,9 +17,13 @@
 //!   ship traces *between* the phases, so the fabric routes while the
 //!   interior sweep computes — the paper's compute/communication overlap.
 //!
-//! The loop closes through the cost model: per-node measured kernel times
-//! feed back into the §5.6 balance solve every R steps and elements
-//! migrate between a node's workers ([`cluster::ClusterRun::rebalance`]).
+//! The loop closes through the cost model at both levels: every R steps
+//! the [`rebalance`] planner turns the measured window into a
+//! [`rebalance::TwoLevelPlan`] — a weighted level-1 re-splice across
+//! nodes from measured per-element rates *and* a per-node level-2
+//! CPU/MIC re-solve — and [`cluster::ClusterRun::rebalance`] applies it
+//! incrementally: state migrates over the global-id path, but only
+//! workers whose element set changed rebuild blocks/backends.
 //!
 //! [`node`] keeps the historical single-node two-worker API
 //! ([`HeteroRun`]) as a wrapper over the cluster runtime; [`experiments`]
@@ -30,8 +34,10 @@ pub mod cluster;
 pub mod experiments;
 pub mod node;
 pub mod profile;
+pub mod rebalance;
 pub mod report;
 
 pub use cluster::{ClusterRun, ClusterSpec, FabricStats, WorkerBackendFactory, WorkerTimes};
 pub use node::{HeteroRun, WorkerBackend};
 pub use profile::ProfileReport;
+pub use rebalance::{NodeRebalance, RebalanceReport};

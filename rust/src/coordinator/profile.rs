@@ -79,6 +79,7 @@ pub fn render_phase_table(summaries: &[WorkerSummary], times: &[WorkerTimes]) ->
             format!("node{}-{}", s.node, if s.device == DeviceKind::Cpu { "cpu" } else { "mic" }),
             s.label.to_string(),
             s.k_elems.to_string(),
+            t.threads.to_string(),
             super::report::fmt_secs(t.boundary_s / steps),
             super::report::fmt_secs(t.interior_s / steps),
             super::report::fmt_secs(t.exchange_s / steps),
@@ -86,20 +87,53 @@ pub fn render_phase_table(summaries: &[WorkerSummary], times: &[WorkerTimes]) ->
         ]);
     }
     let mut out = super::report::render_table(
-        &["worker", "backend", "elems", "boundary/step", "interior/step", "exchange/step", "busy/step"],
+        &[
+            "worker",
+            "backend",
+            "elems",
+            "threads",
+            "boundary/step",
+            "interior/step",
+            "exchange/step",
+            "busy/step",
+        ],
         &rows,
     );
     out.push_str(&format!(
         "busy imbalance (max/mean over workers): {:.3}\n",
         busy_imbalance(times)
     ));
+    if times.len() >= 4 && times.len() % 2 == 0 {
+        out.push_str(&format!(
+            "node busy imbalance (max/mean over nodes): {:.3}\n",
+            node_busy_imbalance(times)
+        ));
+    }
     out
 }
 
 /// Max-over-mean per-step busy time across workers (1.0 = perfectly
 /// balanced). The quantity `BENCH_cluster.json` tracks static vs adaptive.
 pub fn busy_imbalance(times: &[WorkerTimes]) -> f64 {
-    let busy: Vec<f64> = times.iter().map(|t| t.busy_per_step()).collect();
+    max_over_mean(&times.iter().map(|t| t.busy_per_step()).collect::<Vec<_>>())
+}
+
+/// Max-over-mean per-step busy time across *nodes*, where a node's busy
+/// time is the max of its two workers' (they run concurrently; the node
+/// finishes a step when its slower worker does). Standard layout: worker
+/// `2n` / `2n+1` belong to node n. This is the level-1 imbalance the
+/// weighted across-node re-splice drives to 1.0, tracked static vs
+/// adaptive in `BENCH_cluster.json`.
+pub fn node_busy_imbalance(times: &[WorkerTimes]) -> f64 {
+    assert_eq!(times.len() % 2, 0, "two workers per node (standard layout)");
+    let busy: Vec<f64> = times
+        .chunks_exact(2)
+        .map(|pair| pair[0].busy_per_step().max(pair[1].busy_per_step()))
+        .collect();
+    max_over_mean(&busy)
+}
+
+fn max_over_mean(busy: &[f64]) -> f64 {
     let max = busy.iter().cloned().fold(0.0, f64::max);
     let mean = busy.iter().sum::<f64>() / busy.len().max(1) as f64;
     if mean <= 0.0 {
@@ -169,6 +203,25 @@ mod tests {
         assert!((busy_imbalance(&[mk(1.0), mk(0.0)]) - 2.0).abs() < 1e-12);
         // nothing measured: defined as balanced
         assert_eq!(busy_imbalance(&[mk(0.0), mk(0.0)]), 1.0);
+    }
+
+    #[test]
+    fn node_busy_imbalance_takes_worker_max() {
+        use crate::solver::rk::N_STAGES;
+        let mk = |busy: f64| WorkerTimes {
+            boundary_s: busy / 2.0,
+            interior_s: busy / 2.0,
+            stages: N_STAGES,
+            ..Default::default()
+        };
+        // node 0: workers (1.0, 0.2) -> node busy 1.0; node 1: (1.0, 1.0)
+        // -> 1.0: balanced at node level even though workers are not
+        let t = [mk(1.0), mk(0.2), mk(1.0), mk(1.0)];
+        assert!((node_busy_imbalance(&t) - 1.0).abs() < 1e-12);
+        assert!(busy_imbalance(&t) > 1.0);
+        // node 1 three times slower than node 0
+        let t = [mk(1.0), mk(1.0), mk(3.0), mk(3.0)];
+        assert!((node_busy_imbalance(&t) - 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! The two-level rebalancing planner (paper §5.5–§5.6, closed over
+//! measured time).
+//!
+//! One [`plan_two_level`] call settles *both* levels of the nested
+//! partition from a window of measured [`WorkerTimes`]:
+//!
+//! * **Level 1** — each node's measured per-element rate
+//!   ([`calib::measured_elem_rate`] over the node's slower worker) becomes
+//!   the weight its elements carry into
+//!   [`crate::partition::splice_weighted`], so the re-splice moves the
+//!   across-node chunk boundaries toward the equal-time point — mangll's
+//!   weighted level-1 splice (§5.5), driven by live data instead of static
+//!   element weights. Because the weight rides on the element while the
+//!   cost lives on the node, one re-splice is a *damped* step; iterated
+//!   every R steps it converges geometrically. The candidate splice is
+//!   adopted only if it improves the predicted slowest-node time by >1%,
+//!   which keeps measurement noise from ping-ponging the boundaries.
+//! * **Level 2** — per node, the measured kernel profile is refit into a
+//!   node model ([`calib::measured_node`]) and
+//!   [`solve_mic_fraction`] re-solves the CPU/MIC split on the node's
+//!   *new* chunk size. A ±1-element dead-band suppresses churn when the
+//!   solve lands where the split already is (a rebuild can be a PJRT
+//!   recompile — not worth one element).
+//!
+//! The planner is pure — mesh + partitions + times in, a [`TwoLevelPlan`]
+//! out — so it unit-tests without worker threads; the migration executor
+//! lives in [`crate::coordinator::cluster`] ([`ClusterRun::rebalance`]
+//! measures, plans, then applies the plan incrementally).
+//!
+//! [`ClusterRun::rebalance`]: crate::coordinator::cluster::ClusterRun::rebalance
+
+use crate::costmodel::calib;
+use crate::mesh::Mesh;
+use crate::partition::{
+    nested_partition_fractions, solve_mic_fraction, splice_weighted, NestedPartition, Partition,
+};
+
+use super::cluster::WorkerTimes;
+
+/// One node's row of a [`RebalanceReport`].
+#[derive(Debug, Clone, Copy)]
+pub struct NodeRebalance {
+    pub node: usize,
+    /// Level-1 chunk size before/after the re-splice.
+    pub old_k: usize,
+    pub new_k: usize,
+    /// Level-2 accelerator share before/after.
+    pub old_k_mic: usize,
+    pub new_k_mic: usize,
+    /// The solved (pre-clipping) MIC fraction of the new chunk.
+    pub target_fraction: f64,
+    /// Measured busy seconds per element per step (0.0 until measured).
+    pub rate_s_per_elem: f64,
+}
+
+/// What one [`ClusterRun::rebalance`] (or explicit
+/// [`ClusterRun::apply_two_level`]) call did, broken out by level.
+///
+/// [`ClusterRun::rebalance`]: crate::coordinator::cluster::ClusterRun::rebalance
+/// [`ClusterRun::apply_two_level`]: crate::coordinator::cluster::ClusterRun::apply_two_level
+#[derive(Debug, Clone, Default)]
+pub struct RebalanceReport {
+    /// Elements that moved between nodes (level-1 splice boundary).
+    pub level1_migrated: usize,
+    /// Elements that switched device within their node (level 2).
+    pub level2_migrated: usize,
+    /// Workers whose block shape changed: blocks *and* backends rebuilt.
+    pub rebuilt_workers: usize,
+    /// Workers untouched: blocks, backends (and any PJRT compilation)
+    /// kept alive; only their routing tables were swapped.
+    pub kept_workers: usize,
+    /// Wall seconds of the whole rebalance call (plan + migration +
+    /// rebuilds) — the stall the incremental path minimizes.
+    pub wall_s: f64,
+    pub per_node: Vec<NodeRebalance>,
+}
+
+impl RebalanceReport {
+    /// Total elements that changed workers (0 = the split was optimal).
+    pub fn migrated_elems(&self) -> usize {
+        self.level1_migrated + self.level2_migrated
+    }
+}
+
+/// Totals over a sequence of rebalance calls — the CLI summary line and
+/// the bench's `cluster_rebalance_*` scalars both read these, so they can
+/// never disagree on the aggregation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RebalanceTotals {
+    pub calls: usize,
+    pub level1_migrated: usize,
+    pub level2_migrated: usize,
+    pub rebuilt_workers: usize,
+    pub kept_workers: usize,
+    pub wall_s: f64,
+}
+
+impl RebalanceTotals {
+    /// Fold a rebalance history (e.g. `ClusterRun::rebalance_history`).
+    pub fn of(history: &[RebalanceReport]) -> Self {
+        let mut t = RebalanceTotals::default();
+        for r in history {
+            t.calls += 1;
+            t.level1_migrated += r.level1_migrated;
+            t.level2_migrated += r.level2_migrated;
+            t.rebuilt_workers += r.rebuilt_workers;
+            t.kept_workers += r.kept_workers;
+            t.wall_s += r.wall_s;
+        }
+        t
+    }
+}
+
+/// A planned two-level partition, ready for the migration executor.
+#[derive(Debug, Clone)]
+pub struct TwoLevelPlan {
+    pub node_part: Partition,
+    pub fractions: Vec<f64>,
+    pub np: NestedPartition,
+    /// Whether level 1 adopted a re-splice (false = chunks unchanged).
+    pub level1_moved: bool,
+    pub per_node: Vec<NodeRebalance>,
+}
+
+/// Per-node measured rate (busy s / element / step): the node finishes a
+/// step when its *slower* worker does, so the node rate takes the max of
+/// the two workers' busy time. `None` for nodes with nothing measured.
+pub fn node_rates(times: &[WorkerTimes], counts: &[(usize, usize)]) -> Vec<Option<f64>> {
+    counts
+        .iter()
+        .enumerate()
+        .map(|(nd, &(kc, km))| {
+            let busy = times[2 * nd].busy_per_step().max(times[2 * nd + 1].busy_per_step());
+            calib::measured_elem_rate(busy, kc + km)
+        })
+        .collect()
+}
+
+/// Level-1 re-splice decision: weight every element with its current
+/// node's measured rate, re-splice, and adopt the candidate only if it
+/// improves the predicted slowest-node time by more than `min_gain`
+/// (relative). Nodes with nothing measured inherit the mean measured rate.
+/// Returns `None` when level 1 should stay put.
+fn level1_resplice(
+    node_part: &Partition,
+    rates: &[Option<f64>],
+    min_gain: f64,
+) -> Option<(Partition, Vec<f64>)> {
+    let nodes = node_part.nparts;
+    if nodes < 2 {
+        return None;
+    }
+    let measured: Vec<f64> = rates.iter().flatten().copied().collect();
+    if measured.is_empty() {
+        return None;
+    }
+    let mean = measured.iter().sum::<f64>() / measured.len() as f64;
+    let rate: Vec<f64> = rates.iter().map(|r| r.unwrap_or(mean)).collect();
+    let weights: Vec<f64> =
+        node_part.assignment.iter().map(|&nd| rate[nd]).collect();
+    let cand = splice_weighted(&weights, nodes);
+    if cand.assignment == node_part.assignment {
+        return None;
+    }
+    // predicted step time = slowest node under its (node-bound) rate
+    let predict = |p: &Partition| -> f64 {
+        p.sizes().iter().zip(&rate).map(|(&k, r)| k as f64 * r).fold(0.0, f64::max)
+    };
+    let (old_t, new_t) = (predict(node_part), predict(&cand));
+    if new_t < old_t * (1.0 - min_gain) {
+        Some((cand, rate))
+    } else {
+        None
+    }
+}
+
+/// Plan both levels from one measurement window.
+///
+/// * `node_part` / `fractions` — the partition currently executing.
+/// * `times` — per-worker window times (standard layout: worker `2n` =
+///   node n CPU, `2n+1` = node n accelerator).
+/// * `counts` — current per-node realized `(k_cpu, k_mic)`.
+/// * `level1` — whether the across-node re-splice is enabled (level 2
+///   always re-solves).
+pub fn plan_two_level(
+    mesh: &Mesh,
+    node_part: &Partition,
+    fractions: &[f64],
+    times: &[WorkerTimes],
+    counts: &[(usize, usize)],
+    order: usize,
+    level1: bool,
+) -> TwoLevelPlan {
+    let nodes = node_part.nparts;
+    assert_eq!(times.len(), 2 * nodes, "two workers per node");
+    assert_eq!(counts.len(), nodes);
+    assert_eq!(fractions.len(), nodes);
+    let rates = node_rates(times, counts);
+    let respliced = if level1 { level1_resplice(node_part, &rates, 0.01) } else { None };
+    let level1_moved = respliced.is_some();
+    let new_part = respliced.map(|(p, _)| p).unwrap_or_else(|| node_part.clone());
+    let old_sizes = node_part.sizes();
+    let new_sizes = new_part.sizes();
+
+    // level 2: re-solve every node's split on its (possibly new) chunk
+    let mut new_fractions = Vec::with_capacity(nodes);
+    let mut solved = vec![None; nodes];
+    for nd in 0..nodes {
+        let (kc, km) = counts[nd];
+        let steps = times[2 * nd].steps();
+        let k_new = new_sizes[nd];
+        if kc + km == 0 || k_new == 0 || steps < 1.0 {
+            // nothing measured (or nothing to split): keep the current split
+            new_fractions.push(fractions[nd]);
+            continue;
+        }
+        let model = calib::measured_node(
+            order,
+            kc,
+            km,
+            steps,
+            &times[2 * nd].wall_kernels(),
+            &times[2 * nd + 1].wall_kernels(),
+        );
+        let sol = solve_mic_fraction(&model, order, k_new);
+        solved[nd] = Some(sol.k_mic as f64 / k_new as f64);
+        if !level1_moved && (sol.k_mic as i64 - km as i64).abs() <= 1 {
+            // dead-band: re-splitting for ±1 element churns a worker
+            // rebuild (a PJRT recompile) for no measurable gain
+            new_fractions.push(fractions[nd]);
+        } else {
+            new_fractions.push(sol.k_mic as f64 / k_new as f64);
+        }
+    }
+    let np = nested_partition_fractions(mesh, &new_part, &new_fractions);
+    let per_node = (0..nodes)
+        .map(|nd| NodeRebalance {
+            node: nd,
+            old_k: old_sizes[nd],
+            new_k: new_sizes[nd],
+            old_k_mic: counts[nd].1,
+            new_k_mic: np.node_counts[nd].1,
+            target_fraction: solved[nd].unwrap_or(new_fractions[nd]),
+            rate_s_per_elem: rates[nd].unwrap_or(0.0),
+        })
+        .collect();
+    TwoLevelPlan { node_part: new_part, fractions: new_fractions, np, level1_moved, per_node }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::unit_cube_geometry;
+    use crate::partition::splice;
+    use crate::solver::reference::KernelTimes;
+    use crate::solver::rk::N_STAGES;
+
+    /// A worker that measured `busy_s_per_step` over two timesteps, with
+    /// the whole profile booked as volume work (enough for the refit).
+    fn worker(busy_s_per_step: f64) -> WorkerTimes {
+        WorkerTimes {
+            kernels: KernelTimes {
+                volume_loop: 2.0 * busy_s_per_step,
+                ..Default::default()
+            },
+            boundary_s: busy_s_per_step,
+            interior_s: busy_s_per_step,
+            exchange_s: 0.0,
+            stages: 2 * N_STAGES,
+            threads: 1,
+        }
+    }
+
+    #[test]
+    fn slow_node_sheds_elements() {
+        let mesh = unit_cube_geometry(6); // 216 elements
+        let part = splice(&mesh, 2);
+        let counts = vec![(88, 20), (88, 20)];
+        // node 1 measured 3x slower than node 0
+        let times =
+            vec![worker(1e-3), worker(1e-3), worker(3e-3), worker(3e-3)];
+        let plan =
+            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, true);
+        assert!(plan.level1_moved);
+        let sizes = plan.node_part.sizes();
+        assert!(sizes[0] > sizes[1], "fast node must grow: {sizes:?}");
+        assert_eq!(sizes[0] + sizes[1], mesh.len());
+        assert!(plan.per_node[1].new_k < plan.per_node[1].old_k);
+        assert!(plan.per_node[0].rate_s_per_elem > 0.0);
+        // the damped step moves toward (not past) the 3:1 equilibrium
+        assert!(sizes[1] >= mesh.len() / 4, "{sizes:?}");
+    }
+
+    #[test]
+    fn equal_nodes_hold_the_splice() {
+        let mesh = unit_cube_geometry(6);
+        let part = splice(&mesh, 2);
+        let counts = vec![(88, 20), (88, 20)];
+        let times =
+            vec![worker(1e-3), worker(1e-3), worker(1e-3), worker(1e-3)];
+        let plan =
+            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, true);
+        assert!(!plan.level1_moved, "equal rates must not move level 1");
+        assert_eq!(plan.node_part.assignment, part.assignment);
+    }
+
+    #[test]
+    fn level1_disabled_keeps_chunks() {
+        let mesh = unit_cube_geometry(6);
+        let part = splice(&mesh, 2);
+        let counts = vec![(88, 20), (88, 20)];
+        let times =
+            vec![worker(1e-3), worker(1e-3), worker(5e-3), worker(5e-3)];
+        let plan =
+            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, false);
+        assert!(!plan.level1_moved);
+        assert_eq!(plan.node_part.sizes(), part.sizes());
+        // level 2 still re-solves from the measured profile
+        assert!(plan.per_node[0].target_fraction > 0.0);
+    }
+
+    #[test]
+    fn unmeasured_window_is_a_noop_plan() {
+        let mesh = unit_cube_geometry(4);
+        let part = splice(&mesh, 2);
+        let counts = vec![(26, 6), (26, 6)];
+        let times = vec![WorkerTimes::default(); 4];
+        let plan =
+            plan_two_level(&mesh, &part, &[0.19, 0.19], &times, &counts, 2, true);
+        assert!(!plan.level1_moved);
+        assert_eq!(plan.fractions, vec![0.19, 0.19]);
+        assert_eq!(plan.node_part.assignment, part.assignment);
+    }
+}

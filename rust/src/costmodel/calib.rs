@@ -241,6 +241,21 @@ pub fn measured_node(
     }
 }
 
+/// Measured per-element rate: busy wall seconds per element per timestep —
+/// the level-1 weight of the two-level rebalancer
+/// ([`crate::coordinator::rebalance`]). A node's `busy_per_step` is the max
+/// over its concurrently-running workers; divided by the node's element
+/// count it becomes the cost every element of that node's chunk carries
+/// into [`crate::partition::splice_weighted`]. `None` until something was
+/// measured.
+pub fn measured_elem_rate(busy_per_step_s: f64, k_elems: usize) -> Option<f64> {
+    if k_elems == 0 || !busy_per_step_s.is_finite() || busy_per_step_s <= 0.0 {
+        None
+    } else {
+        Some(busy_per_step_s / k_elems as f64)
+    }
+}
+
 /// The full Stampede node model.
 pub fn stampede_node() -> NodeModel {
     NodeModel {
@@ -354,6 +369,18 @@ mod tests {
         let boot = measured_node(2, 200, 0, 1.0, &t, &KernelTimes::default());
         let sol2 = crate::partition::solve_mic_fraction(&boot, 2, 200);
         assert!(sol2.k_mic > 50, "bootstrap split k_mic {}", sol2.k_mic);
+    }
+
+    /// The level-1 rate helper: simple quotient with guarded degenerate
+    /// inputs (nothing measured, empty worker, non-finite timer).
+    #[test]
+    fn measured_elem_rate_guards() {
+        let r = measured_elem_rate(2.0e-3, 100).unwrap();
+        assert!((r / 2.0e-5 - 1.0).abs() < 1e-12, "{r}");
+        assert_eq!(measured_elem_rate(0.0, 100), None);
+        assert_eq!(measured_elem_rate(1.0, 0), None);
+        assert_eq!(measured_elem_rate(f64::NAN, 100), None);
+        assert_eq!(measured_elem_rate(-1.0, 100), None);
     }
 
     /// Load balance: with these rates the equal-time split lands near the

@@ -21,16 +21,20 @@
 //! Module map (see DESIGN.md for the full inventory):
 //!
 //! * [`mesh`]       — Morton-ordered octree hexahedral meshes, connectivity
-//! * [`partition`]  — level-1 splice, level-2 nested CPU/MIC split (also
+//! * [`partition`]  — level-1 splice (equal-count and weighted — the
+//!   rebalancer feeds measured node rates into
+//!   `partition::splice_weighted`), level-2 nested CPU/MIC split (also
 //!   applied block-locally: `partition::nested::split_block_elements`,
-//!   and per-node for the rebalancer:
-//!   `partition::nested::nested_partition_fractions`), balance (generic
+//!   per-node for the rebalancer: `nested_partition_fractions`, and
+//!   classified per level: `nested::owner_migration`), balance (generic
 //!   equal-finish solve shared by the calibrated and measured-rate paths)
 //! * [`costmodel`]  — calibrated Stampede kernel/PCI/network time models,
-//!   plus `calib::measured_node`: a node model refitted from live kernel
-//!   times (the rebalancer's and cross-check's closed loop)
+//!   plus `calib::measured_node` / `calib::measured_elem_rate`: node
+//!   models and level-1 rates refitted from live times (the rebalancer's
+//!   and cross-check's closed loop)
 //! * [`sim`]        — discrete-event heterogeneous cluster simulator;
-//!   `SimReport::discrepancy` cross-checks it against live runs
+//!   `simulate_parts` prices an explicit (possibly rebalanced) two-level
+//!   partition and `SimReport::discrepancy` cross-checks it live
 //! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels;
 //!   `solver::parallel` is the multithreaded boundary/interior CPU backend
 //!   and `solver::driver` the multi-block driver with optional
@@ -39,10 +43,12 @@
 //!   (`runtime::client` needs `--features pjrt`)
 //! * [`coordinator`]— the execution core: `coordinator::cluster` runs the
 //!   full two-level scheme as an N-node in-process cluster (two workers
-//!   per node on a typed message fabric, adaptive measured-time
-//!   rebalancing with element migration); `coordinator::node` keeps the
-//!   single-node two-worker API; experiments (incl. the live-vs-simulated
-//!   cross-check), reports
+//!   per node on a typed message fabric); `coordinator::rebalance` plans
+//!   the adaptive two-level rebalance (weighted level-1 re-splice across
+//!   nodes + per-node level-2 re-solve) that `ClusterRun` applies with
+//!   incremental, backend-preserving migration; `coordinator::node` keeps
+//!   the single-node two-worker API; experiments (incl. the live-vs-sim
+//!   cross-check with per-kernel drift), reports
 
 pub mod coordinator;
 pub mod costmodel;

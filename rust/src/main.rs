@@ -37,11 +37,14 @@ COMMANDS
                 --rust-ref  --parallel [--threads N]  --two-tree
                 --sync-per-step
   cluster     N-node in-process cluster (two workers per node on the
-              message fabric) with optional adaptive rebalancing
+              message fabric) with optional adaptive two-level rebalancing
                 --n 6  --order 2  --steps 20  --nodes 2
-                [--mic-fraction F]  [--rebalance-every R]
+                [--mic-fraction F]  [--rebalance-every R]  [--no-level1]
                 --rust-ref | --parallel [--threads N]  --two-tree
                 --sync-per-step
+              (--no-level1 restricts rebalancing to the in-node CPU/MIC
+              split; default also re-splices the level-1 chunks across
+              nodes from measured rates)
   partition   nested-partition statistics
                 --n 16  --nodes 4  --order 7  [--mic-fraction F]
   balance     CPU/MIC load-balance solve   --order 7  --elems 8192
@@ -124,7 +127,10 @@ fn main() -> repro::Result<()> {
             )
         }
         "cluster" => {
-            let a = Args::parse(rest, &["rust-ref", "parallel", "two-tree", "sync-per-step"]);
+            let a = Args::parse(
+                rest,
+                &["rust-ref", "parallel", "two-tree", "sync-per-step", "no-level1"],
+            );
             run_cluster(
                 a.get("n", 6),
                 a.get("order", 2),
@@ -132,6 +138,7 @@ fn main() -> repro::Result<()> {
                 a.get("nodes", 2),
                 a.get_opt::<f64>("mic-fraction"),
                 a.get_opt::<usize>("rebalance-every"),
+                !a.flag("no-level1"),
                 worker_backend(&a),
                 a.flag("two-tree"),
                 !a.flag("sync-per-step"),
@@ -193,9 +200,15 @@ fn main() -> repro::Result<()> {
                     "weak-scaling" => {
                         experiments::weak_scaling(Some(&csv("weak_scaling")), steps.min(20))?
                     }
-                    "cross-check" => {
-                        experiments::cross_check(2, 6, 2, steps.min(10), Some(&csv("cross_check")))?
-                    }
+                    "cross-check" => experiments::cross_check(
+                        2,
+                        6,
+                        2,
+                        steps.min(10),
+                        Some(2),
+                        Some(&csv("cross_check")),
+                        None,
+                    )?,
                     other => anyhow::bail!("unknown experiment {other}\n{USAGE}"),
                 };
                 println!("{text}");
@@ -266,14 +279,6 @@ fn worker_backend(a: &Args) -> WorkerBackend {
     }
 }
 
-fn backend_label(b: &WorkerBackend) -> &'static str {
-    match b {
-        WorkerBackend::RustRef => "rust-ref",
-        WorkerBackend::RustParallel { .. } => "rust-parallel",
-        WorkerBackend::Pjrt { .. } => "pjrt",
-    }
-}
-
 /// Load the artifact manifest when the backend needs one (PJRT only).
 fn manifest_for(b: &WorkerBackend) -> repro::Result<Option<ArtifactManifest>> {
     match b {
@@ -331,7 +336,7 @@ fn run_solve(
         mesh.elements.iter().map(|e| e.h[0].min(e.h[1]).min(e.h[2])).fold(f64::MAX, f64::min);
     let dt = stable_dt(0.3, hmin, cmax as f64, order);
 
-    let label = backend_label(&backend);
+    let label = backend.label();
     let mut run = HeteroRun::launch(&lblocks, states, plan, &device_of_owner, backend, order)?;
     run.exchange_every_stage = exchange_every_stage;
     let e0 = run.energy()?;
@@ -368,6 +373,7 @@ fn run_cluster(
     nodes: usize,
     mic_fraction: Option<f64>,
     rebalance_every: Option<usize>,
+    level1_rebalance: bool,
     backend: WorkerBackend,
     two_tree: bool,
     exchange_every_stage: bool,
@@ -379,6 +385,7 @@ fn run_cluster(
     let mut spec = ClusterSpec::new(nodes, order);
     spec.mic_fraction = mic_fraction;
     spec.rebalance_every = rebalance_every;
+    spec.level1_rebalance = level1_rebalance;
     spec.cpu_backend = backend.clone();
     spec.mic_backend = backend;
     spec.exchange_every_stage = exchange_every_stage;
@@ -412,6 +419,19 @@ fn run_cluster(
         for (nd, &(kc, km)) in run.node_counts().iter().enumerate() {
             println!("  node {nd}: k_cpu {kc} k_mic {km}");
         }
+        let t = repro::coordinator::rebalance::RebalanceTotals::of(&run.rebalance_history);
+        println!(
+            "rebalance: {} call(s), level-1 migrated {} elem(s), level-2 migrated \
+             {} elem(s); rebuilt {} worker backend(s), kept {} alive; \
+             total stall {:.1} ms (level-1 splice {})",
+            t.calls,
+            t.level1_migrated,
+            t.level2_migrated,
+            t.rebuilt_workers,
+            t.kept_workers,
+            t.wall_s * 1e3,
+            if level1_rebalance { "on" } else { "off" },
+        );
     }
     let f = run.fabric();
     let (intra, inter) = f.bytes_per_routed_stage(order);

@@ -20,7 +20,8 @@ pub mod stats;
 
 pub use balance::{solve_equal_finish, solve_mic_fraction};
 pub use nested::{
-    migration_diff, nested_partition, nested_partition_fractions, DeviceKind, NestedPartition,
+    migration_diff, nested_partition, nested_partition_fractions, owner_migration, DeviceKind,
+    NestedPartition, OwnerMigration,
 };
-pub use splice::{splice, splice_weighted, Partition};
+pub use splice::{splice, splice_counts, splice_weighted, Partition};
 pub use stats::{partition_stats, PartitionStats};

@@ -159,6 +159,49 @@ pub fn migration_diff(
         .collect()
 }
 
+/// An owner-vector change classified by partition level — the shape of a
+/// two-level rebalance, computed before any state moves.
+#[derive(Debug, Clone, Default)]
+pub struct OwnerMigration {
+    /// Elements whose *node* changed (level-1 splice boundary moved).
+    pub level1: usize,
+    /// Elements that stayed on their node but switched device (level 2).
+    pub level2: usize,
+    /// Owners that lose or gain at least one element, ascending — exactly
+    /// the workers an incremental migration must rebuild; every other
+    /// worker keeps its blocks *and* its backends.
+    pub changed_owners: Vec<usize>,
+}
+
+impl OwnerMigration {
+    pub fn total(&self) -> usize {
+        self.level1 + self.level2
+    }
+}
+
+/// Classify the move between two owner vectors (owner = `node*2 + device`,
+/// the [`NestedPartition::owners`] encoding) into level-1 and level-2
+/// migrations plus the set of owners whose element set changed at all.
+pub fn owner_migration(old_owners: &[usize], new_owners: &[usize]) -> OwnerMigration {
+    assert_eq!(old_owners.len(), new_owners.len());
+    let mut m = OwnerMigration::default();
+    let mut changed = std::collections::BTreeSet::new();
+    for (&o, &n) in old_owners.iter().zip(new_owners) {
+        if o == n {
+            continue;
+        }
+        if o / 2 != n / 2 {
+            m.level1 += 1;
+        } else {
+            m.level2 += 1;
+        }
+        changed.insert(o);
+        changed.insert(n);
+    }
+    m.changed_owners = changed.into_iter().collect();
+    m
+}
+
 /// The level-2 split applied *inside one extracted block*: partition the
 /// block's real elements into **boundary** (any face is a halo face, i.e.
 /// touches an element owned by someone else — exactly the elements that
@@ -373,6 +416,36 @@ mod tests {
             (0..2).map(|nd| new.node_counts[nd].1 - old.node_counts[nd].1).sum();
         assert_eq!(moved, grew);
         assert!(migration_diff(&old, &old).is_empty());
+    }
+
+    #[test]
+    fn owner_migration_classifies_levels() {
+        let m = mesh(8);
+        let node = splice(&m, 2);
+        let old = nested_partition(&m, &node, 0.1);
+        // pure level-2 move: same node partition, bigger MIC share
+        let new = nested_partition(&m, &node, 0.3);
+        let mig = owner_migration(&old.owners(), &new.owners());
+        assert_eq!(mig.level1, 0);
+        assert!(mig.level2 > 0);
+        assert_eq!(mig.total(), migration_diff(&old, &new).len());
+        // changed owners are exactly the movers' endpoints
+        for &(e, _, _) in &migration_diff(&old, &new) {
+            assert!(mig.changed_owners.contains(&old.owners()[e]));
+            assert!(mig.changed_owners.contains(&new.owners()[e]));
+        }
+        // level-1 move: shift the splice boundary by a few elements
+        let mut shifted = node.clone();
+        for a in shifted.assignment.iter_mut().take(m.len() / 2 + 5) {
+            *a = 0;
+        }
+        let new1 = nested_partition(&m, &shifted, 0.1);
+        let mig1 = owner_migration(&old.owners(), &new1.owners());
+        assert!(mig1.level1 >= 5, "{mig1:?}");
+        // identity is a no-op
+        let noop = owner_migration(&old.owners(), &old.owners());
+        assert_eq!(noop.total(), 0);
+        assert!(noop.changed_owners.is_empty());
     }
 
     #[test]

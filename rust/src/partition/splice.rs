@@ -38,17 +38,19 @@ impl Partition {
     }
 }
 
-/// Equal-count contiguous splice of the (already Morton-sorted) mesh.
-pub fn splice(mesh: &Mesh, nparts: usize) -> Partition {
-    let n = mesh.len();
-    assert!(nparts >= 1 && nparts <= n, "need 1 <= nparts ({nparts}) <= n ({n})");
+/// Equal-count contiguous splice of `n` Morton-ordered elements (the pure
+/// count form, shared by [`splice`] and the degenerate-weight fallback of
+/// [`splice_weighted`]).
+pub fn splice_counts(n: usize, nparts: usize) -> Partition {
+    assert!(nparts >= 1, "need at least one part");
     let mut assignment = vec![0usize; n];
     // distribute the remainder one extra element to the first (n % p) parts,
     // exactly like an MPI block distribution
-    let base = n / nparts;
-    let extra = n % nparts;
+    let live = nparts.min(n.max(1));
+    let base = n / live;
+    let extra = n % live;
     let mut e = 0;
-    for p in 0..nparts {
+    for p in 0..live {
         let count = base + usize::from(p < extra);
         for _ in 0..count {
             assignment[e] = p;
@@ -58,29 +60,60 @@ pub fn splice(mesh: &Mesh, nparts: usize) -> Partition {
     Partition { assignment, nparts }
 }
 
-/// Weighted splice: chunk boundaries chosen so per-part weight is balanced
-/// (used when element cost varies, e.g. mixed polynomial orders in hp).
+/// Equal-count contiguous splice of the (already Morton-sorted) mesh.
+pub fn splice(mesh: &Mesh, nparts: usize) -> Partition {
+    let n = mesh.len();
+    assert!(nparts >= 1 && nparts <= n, "need 1 <= nparts ({nparts}) <= n ({n})");
+    splice_counts(n, nparts)
+}
+
+/// Weighted splice: chunk boundaries chosen so per-part weight is balanced.
+/// Used when element cost varies (mixed polynomial orders in hp), and by
+/// the two-level rebalancer ([`crate::coordinator::rebalance`]), where each
+/// element carries the measured per-element rate of the node currently
+/// owning it — re-splicing every R steps then walks the level-1 boundaries
+/// toward the equal-time point.
+///
+/// Robustness contract (this sees live measured data):
+/// * non-finite or non-positive weights are treated as zero;
+/// * an all-zero weight vector carries no balance information and falls
+///   back to the equal-count splice;
+/// * `nparts > weights.len()` assigns one element to each of the first
+///   `len` parts and leaves the tail parts empty;
+/// * otherwise every part receives at least one element (the cluster
+///   runtime owns one chunk per live node), so a single huge weight
+///   cannot starve the remaining parts.
 pub fn splice_weighted(weights: &[f64], nparts: usize) -> Partition {
     let n = weights.len();
-    assert!(nparts >= 1 && nparts <= n);
-    let total: f64 = weights.iter().sum();
+    assert!(nparts >= 1, "need at least one part");
+    if nparts > n {
+        return Partition { assignment: (0..n).collect(), nparts };
+    }
+    let clean = |w: f64| if w.is_finite() && w > 0.0 { w } else { 0.0 };
+    let total: f64 = weights.iter().map(|&w| clean(w)).sum();
+    if total <= 0.0 {
+        return splice_counts(n, nparts);
+    }
     let target = total / nparts as f64;
     let mut assignment = vec![0usize; n];
     let mut part = 0usize;
     let mut acc = 0.0;
+    let mut in_part = 0usize;
     for (e, &w) in weights.iter().enumerate() {
-        // close the chunk when adding the next element would overshoot the
-        // running target more than it undershoots, but never leave fewer
-        // elements than parts remaining
-        let remaining_elems = n - e;
-        let remaining_parts = nparts - part;
-        if part + 1 < nparts
-            && remaining_elems > remaining_parts - 1
-            && acc + w / 2.0 > target * (part + 1) as f64
-        {
-            part += 1;
+        let w = clean(w);
+        if part + 1 < nparts && in_part > 0 {
+            // close the chunk when adding this element would overshoot the
+            // running target more than it undershoots — or when exactly one
+            // element per remaining part is left (feasibility floor)
+            let must = n - e == nparts - part - 1;
+            let want = acc + w / 2.0 > target * (part + 1) as f64;
+            if must || want {
+                part += 1;
+                in_part = 0;
+            }
         }
         assignment[e] = part;
+        in_part += 1;
         acc += w;
     }
     Partition { assignment, nparts }

@@ -22,7 +22,7 @@ use crate::costmodel::pci::Direction;
 use crate::costmodel::DeviceModel;
 use crate::mesh::Mesh;
 use crate::partition::{
-    nested_partition, partition_stats, splice, Partition,
+    nested_partition, nested_partition_fractions, partition_stats, splice, Partition,
 };
 use crate::sim::events::{EventKind, EventQueue};
 use crate::sim::topology::Cluster;
@@ -90,6 +90,13 @@ impl KernelBreakdown {
             .map(|(_, v)| *v)
             .sum()
     }
+
+    /// Busy seconds of one kernel summed over all devices — the
+    /// denominator of the per-kernel live-over-sim drift series
+    /// (`coordinator::experiments::cross_check`).
+    pub fn kernel_seconds(&self, kernel: &str) -> f64 {
+        self.entries.iter().filter(|((_, k), _)| *k == kernel).map(|(_, v)| *v).sum()
+    }
 }
 
 /// Simulation output.
@@ -138,7 +145,7 @@ struct NodeStep {
 }
 
 /// Simulate `steps` timesteps of the DG solver on `mesh` across the
-/// cluster under `scheme`.
+/// cluster under `scheme` (equal-count level-1 splice).
 pub fn simulate(
     cluster: &Cluster,
     mesh: &Mesh,
@@ -146,8 +153,26 @@ pub fn simulate(
     steps: usize,
     scheme: Scheme,
 ) -> SimReport {
+    simulate_parts(cluster, mesh, &splice(mesh, cluster.nodes), None, order, steps, scheme)
+}
+
+/// [`simulate`] with an explicit level-1 partition and optional per-node
+/// MIC fractions — the two-level hook of the live-vs-sim cross-check: the
+/// simulator prices exactly the (possibly rebalanced, weighted) partition
+/// the cluster runtime executes, so live-over-sim drift stays comparable
+/// across adaptive moves. The baseline scheme re-splices per rank and
+/// ignores custom chunk boundaries (it models the homogeneous code).
+pub fn simulate_parts(
+    cluster: &Cluster,
+    mesh: &Mesh,
+    node_part: &Partition,
+    fractions: Option<&[f64]>,
+    order: usize,
+    steps: usize,
+    scheme: Scheme,
+) -> SimReport {
     let nodes = cluster.nodes;
-    let node_part = splice(mesh, nodes);
+    assert_eq!(node_part.nparts, nodes, "one level-1 chunk per node");
     let mut breakdown = KernelBreakdown::default();
     let mut node_counts = Vec::new();
     let mut per_node: Vec<NodeStep> = Vec::with_capacity(nodes);
@@ -181,7 +206,7 @@ pub fn simulate(
             }
         }
         Scheme::TaskOffload => {
-            let np = nested_partition(mesh, &node_part, 0.0); // all CPU, stats only
+            let np = nested_partition(mesh, node_part, 0.0); // all CPU, stats only
             let st = partition_stats(mesh, &np);
             let cpu = &cluster.node_model.cpu_vec;
             let micd = &cluster.node_model.mic;
@@ -217,16 +242,32 @@ pub fn simulate(
         }
         Scheme::Nested { mic_fraction } | Scheme::NestedOverlap { mic_fraction } => {
             let overlap = matches!(scheme, Scheme::NestedOverlap { .. });
-            let frac = mic_fraction.unwrap_or_else(|| {
-                let k_node = mesh.len() / nodes;
-                let sol = crate::partition::solve_mic_fraction(
-                    &cluster.node_model,
-                    order,
-                    k_node,
-                );
-                sol.k_mic as f64 / k_node as f64
-            });
-            let np = nested_partition(mesh, &node_part, frac);
+            // explicit per-node fractions (the cross-check's live split)
+            // beat the scheme's uniform fraction beat the balance solve
+            // (run per node: weighted chunks differ in size)
+            let fracs: Vec<f64> = match fractions {
+                Some(f) => {
+                    assert_eq!(f.len(), nodes, "one MIC fraction per node");
+                    f.to_vec()
+                }
+                None => match mic_fraction {
+                    Some(fr) => vec![fr; nodes],
+                    None => node_part
+                        .sizes()
+                        .iter()
+                        .map(|&k_node| {
+                            let k_node = k_node.max(1);
+                            let sol = crate::partition::solve_mic_fraction(
+                                &cluster.node_model,
+                                order,
+                                k_node,
+                            );
+                            sol.k_mic as f64 / k_node as f64
+                        })
+                        .collect(),
+                },
+            };
+            let np = nested_partition_fractions(mesh, node_part, &fracs);
             let st = partition_stats(mesh, &np);
             let cpu = &cluster.node_model.cpu_vec;
             let micd = &cluster.node_model.mic;
@@ -456,6 +497,29 @@ mod tests {
         let off = simulate(&c, &m, 7, 10, Scheme::TaskOffload);
         let nest = simulate(&c, &m, 7, 10, Scheme::Nested { mic_fraction: None });
         assert!(nest.wall_s < off.wall_s, "nested {} offload {}", nest.wall_s, off.wall_s);
+    }
+
+    #[test]
+    fn simulate_parts_prices_custom_partition() {
+        let c = Cluster::stampede(2);
+        let m = small_mesh();
+        // skewed level-1 chunks (~3/4 vs ~1/4 of the elements)
+        let weights: Vec<f64> =
+            (0..m.len()).map(|e| if e < m.len() * 3 / 4 { 1.0 } else { 3.0 }).collect();
+        let part = crate::partition::splice_weighted(&weights, 2);
+        let sizes = part.sizes();
+        assert!(sizes[0] > sizes[1], "{sizes:?}");
+        let rep = simulate_parts(
+            &c, &m, &part, Some(&[0.3, 0.3]), 7, 3,
+            Scheme::Nested { mic_fraction: None },
+        );
+        for (nd, &(kc, km)) in rep.node_counts.iter().enumerate() {
+            assert_eq!(kc + km, sizes[nd], "node {nd}");
+        }
+        // the equal splice predicts a faster step than the skewed one on a
+        // homogeneous cluster — the imbalance the level-1 rebalancer sees
+        let eq = simulate(&c, &m, 7, 3, Scheme::Nested { mic_fraction: Some(0.3) });
+        assert!(eq.wall_s < rep.wall_s, "eq {} skew {}", eq.wall_s, rep.wall_s);
     }
 
     #[test]

@@ -15,6 +15,6 @@ pub mod engine;
 pub mod events;
 pub mod topology;
 
-pub use engine::{simulate, KernelBreakdown, Scheme, SimReport};
+pub use engine::{simulate, simulate_parts, KernelBreakdown, Scheme, SimReport};
 pub use events::{Event, EventKind, EventQueue};
 pub use topology::Cluster;

@@ -116,7 +116,11 @@ fn rebalance_migrates_toward_solved_fraction() {
     let before = run.node_counts()[0];
     assert!(before.1 <= 12, "static split should starve the MIC: {before:?}");
     let report = run.rebalance().unwrap();
-    assert!(report.migrated_elems > 0, "{report:?}");
+    assert!(report.migrated_elems() > 0, "{report:?}");
+    // single node: a level-2-only move that rebuilds both of its workers
+    assert_eq!(report.level1_migrated, 0);
+    assert!(report.level2_migrated > 0);
+    assert_eq!(report.rebuilt_workers, 2);
     let after = run.node_counts()[0];
     assert!(
         after.1 > before.1,
@@ -156,6 +160,130 @@ fn adaptive_run_matches_scalar() {
     let got = run.gather_elements().unwrap();
     let diff = max_diff(&reference, &got);
     assert!(diff <= 1e-6, "adaptive cluster vs scalar diff {diff}");
+}
+
+/// Level-1 across-node rebalancing: one deliberately slow node (throttled
+/// backends) must shed elements to the fast nodes over a few measured
+/// rebalances, shrinking the node busy-time imbalance — and the migrated
+/// state must stay within 1e-6 of the scalar driver for P in {2, 4}.
+#[test]
+fn level1_rebalance_converges_and_matches_scalar() {
+    let order = 2;
+    let mesh = unit_cube_geometry(6); // 216 elements
+    let dt = 1e-3;
+    for nodes in [2usize, 4] {
+        let mut spec = ClusterSpec::new(nodes, order);
+        spec.mic_fraction = Some(0.2);
+        let mut backends =
+            vec![(WorkerBackend::RustRef, WorkerBackend::RustRef); nodes];
+        backends[nodes - 1] = (
+            WorkerBackend::Throttled { spin_us_per_elem: 30 },
+            WorkerBackend::Throttled { spin_us_per_elem: 30 },
+        );
+        spec.node_backends = Some(backends);
+        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+        // static window: the throttled node dominates the step
+        run.run(dt, 2).unwrap();
+        let imb_static =
+            repro::coordinator::profile::node_busy_imbalance(&run.worker_times().unwrap());
+        // three measured rebalance rounds (the weighted re-splice is a
+        // damped iteration; each round moves toward the equal-time point)
+        for _ in 0..3 {
+            run.rebalance().unwrap();
+            run.run(dt, 2).unwrap();
+        }
+        let sizes = run.node_partition().unwrap().sizes();
+        let slow = nodes - 1;
+        assert!(
+            sizes[slow] < mesh.len() / nodes,
+            "P={nodes}: throttled node must shed elements: {sizes:?}"
+        );
+        assert!(
+            sizes.iter().take(nodes - 1).all(|&k| k > sizes[slow]),
+            "P={nodes}: every fast node outweighs the slow one: {sizes:?}"
+        );
+        let l1: usize =
+            run.rebalance_history.iter().map(|r| r.level1_migrated).sum();
+        assert!(l1 > 0, "P={nodes}: level-1 migration must have happened");
+        // steady-state imbalance shrank
+        let _ = run.take_worker_times().unwrap();
+        run.run(dt, 2).unwrap();
+        let imb_adaptive =
+            repro::coordinator::profile::node_busy_imbalance(&run.worker_times().unwrap());
+        assert!(
+            imb_adaptive < imb_static,
+            "P={nodes}: imbalance must shrink: {imb_static:.3} -> {imb_adaptive:.3}"
+        );
+        // 2 static + 3x2 rebalanced + 2 measured = 10 steps, bit-compatible
+        let reference = scalar_reference(&mesh, order, dt, 10);
+        let got = run.gather_elements().unwrap();
+        let diff = max_diff(&reference, &got);
+        assert!(diff <= 1e-6, "P={nodes}: post-level-1-migration diff {diff}");
+    }
+}
+
+/// Incremental migration: a hand-picked move of a *single* node's level-2
+/// split must rebuild exactly that node's two workers — every other
+/// worker keeps its blocks and backends — and the run must continue
+/// bit-compatibly.
+#[test]
+fn single_node_move_rebuilds_only_that_node() {
+    let order = 2;
+    let mesh = unit_cube_geometry(6);
+    let dt = 1e-3;
+    let mut spec = ClusterSpec::new(2, order);
+    spec.mic_fraction = Some(0.2);
+    let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    run.run(dt, 2).unwrap();
+    let part = run.node_partition().unwrap();
+    let fracs = run.mic_fractions().unwrap();
+    // identical fractions: provably zero-migration (the planner's no-op)
+    let rep0 = run.apply_two_level(part.clone(), fracs.clone()).unwrap();
+    assert_eq!(rep0.migrated_elems(), 0, "{rep0:?}");
+    assert_eq!(rep0.rebuilt_workers, 0);
+    assert_eq!(rep0.kept_workers, 4);
+    // move only node 1's split: node 0 keeps its exact element set
+    let rep = run.apply_two_level(part, vec![fracs[0], 0.45]).unwrap();
+    assert_eq!(rep.level1_migrated, 0, "{rep:?}");
+    assert!(rep.level2_migrated > 0, "{rep:?}");
+    assert_eq!(rep.rebuilt_workers, 2, "only node 1's workers rebuild: {rep:?}");
+    assert_eq!(rep.kept_workers, 2, "{rep:?}");
+    assert_eq!(rep.per_node[0].new_k_mic, rep.per_node[0].old_k_mic);
+    assert!(rep.per_node[1].new_k_mic > rep.per_node[1].old_k_mic);
+    run.run(dt, 2).unwrap();
+    let reference = scalar_reference(&mesh, order, dt, 4);
+    let got = run.gather_elements().unwrap();
+    let diff = max_diff(&reference, &got);
+    assert!(diff <= 1e-6, "post-incremental-migration diff {diff}");
+}
+
+/// Thread budgeting: explicit budgets pass through to `WorkerTimes`, and
+/// the `threads: 0` auto budget divides the machine across the *parallel*
+/// workers only (scalar workers report 1).
+#[test]
+fn thread_budget_exposed_and_divided() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let mut spec = ClusterSpec::new(1, order);
+    spec.mic_fraction = Some(0.3);
+    spec.cpu_backend = WorkerBackend::RustParallel { threads: 2 };
+    spec.mic_backend = WorkerBackend::RustRef;
+    let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    run.run(1e-3, 1).unwrap();
+    let t = run.worker_times().unwrap();
+    assert_eq!(t[0].threads, 2, "explicit budget passes through");
+    assert_eq!(t[1].threads, 1, "scalar worker occupies one thread");
+
+    // auto budget: 2 nodes x 2 parallel workers share the machine
+    let mut spec = ClusterSpec::new(2, order);
+    spec.mic_fraction = Some(0.3);
+    spec.cpu_backend = WorkerBackend::RustParallel { threads: 0 };
+    spec.mic_backend = WorkerBackend::RustParallel { threads: 0 };
+    let run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let expected = (hw / 4).max(1);
+    let t = run.worker_times().unwrap();
+    assert!(t.iter().all(|wt| wt.threads == expected), "{t:?} vs {expected}");
 }
 
 /// A hand-built layout that puts accelerator workers of different nodes in

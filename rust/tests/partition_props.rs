@@ -67,6 +67,88 @@ fn prop_weighted_splice_bounded_imbalance() {
     }
 }
 
+/// Weighted splice, degenerate inputs: all-zero weights (fall back to the
+/// equal splice), a single huge weight at either end (every part still
+/// non-empty), non-finite weights (ignored), nparts > elements (one
+/// element per leading part, empty tail).
+#[test]
+fn prop_weighted_splice_degenerate_weights() {
+    // all zeros carry no information: equal-count fallback
+    let p = splice_weighted(&vec![0.0; 30], 4);
+    let sizes = p.sizes();
+    assert_eq!(sizes.iter().sum::<usize>(), 30);
+    assert!(sizes.iter().all(|&s| s >= 7), "{sizes:?}");
+    // one huge weight must not starve the other parts
+    for pos in [0usize, 15, 29] {
+        let mut w = vec![1.0; 30];
+        w[pos] = 1e12;
+        let p = splice_weighted(&w, 4);
+        assert!(p.sizes().iter().all(|&s| s >= 1), "pos {pos}: {:?}", p.sizes());
+        for win in p.assignment.windows(2) {
+            assert!(win[1] == win[0] || win[1] == win[0] + 1, "pos {pos}");
+        }
+    }
+    // non-finite / negative weights are treated as zero, not propagated
+    let w = [f64::NAN, 1.0, f64::INFINITY, -3.0, 1.0, 1.0];
+    let p = splice_weighted(&w, 2);
+    assert_eq!(p.assignment.len(), 6);
+    assert!(p.sizes().iter().all(|&s| s >= 1), "{:?}", p.sizes());
+    // more parts than elements: one element each for the first len parts
+    let p = splice_weighted(&[1.0, 2.0, 3.0], 5);
+    assert_eq!(p.nparts, 5);
+    assert_eq!(p.assignment, vec![0, 1, 2]);
+    let sizes = p.sizes();
+    assert_eq!(&sizes[..3], &[1, 1, 1]);
+    assert_eq!(&sizes[3..], &[0, 0]);
+}
+
+/// The rebalancer's monotonicity contract: with per-node rate weights, a
+/// node measured 2x faster than every other never receives fewer elements
+/// than any slower node — and halving one node's rate (it got faster)
+/// never shrinks its chunk.
+#[test]
+fn prop_weighted_splice_faster_node_never_shrinks() {
+    for seed in 0..30u64 {
+        let mut rng = Rng::seed_from_u64(4000 + seed);
+        let nparts = 2 + rng.below(5);
+        let k_per = 15 + rng.below(20);
+        let n = nparts * k_per;
+        // one node at least 2x faster than every (equal-rate) other
+        let slow_rate = rng.range(2.0, 8.0);
+        let fast = rng.below(nparts);
+        let rate_a: Vec<f64> = (0..nparts)
+            .map(|nd| if nd == fast { slow_rate / 2.0 } else { slow_rate })
+            .collect();
+        let weights_of = |rates: &[f64]| -> Vec<f64> {
+            (0..n).map(|e| rates[e / k_per]).collect()
+        };
+        let sizes_a = splice_weighted(&weights_of(&rate_a), nparts).sizes();
+        assert!(
+            (0..nparts).all(|nd| sizes_a[fast] >= sizes_a[nd]),
+            "seed {seed}: 2x-faster node {fast} got fewer elements: {sizes_a:?}"
+        );
+        assert!(
+            sizes_a[fast] >= k_per,
+            "seed {seed}: faster node fell below its equal share: {sizes_a:?}"
+        );
+        // comparative form on arbitrary rates: speeding node i up 2x never
+        // shrinks its chunk, everything else held fixed
+        let rates: Vec<f64> = (0..nparts).map(|_| rng.range(1.0, 4.0)).collect();
+        let i = rng.below(nparts);
+        let mut faster = rates.clone();
+        faster[i] /= 2.0;
+        let before = splice_weighted(&weights_of(&rates), nparts).sizes();
+        let after = splice_weighted(&weights_of(&faster), nparts).sizes();
+        // the greedy boundary quantizes to whole elements, so allow one
+        // element of rounding on the comparative form; the 2x-vs-equal
+        // form above is exact
+        assert!(
+            after[i] + 1 >= before[i],
+            "seed {seed}: node {i} sped up 2x but shrank {before:?} -> {after:?}"
+        );
+    }
+}
+
 /// Nested partition invariants for random meshes/parts/fractions.
 #[test]
 fn prop_nested_invariants() {
