@@ -1,8 +1,23 @@
 //! Bench: the pure-rust reference stage, scalar vs the multithreaded
 //! boundary/interior backend, per order — the numerator of the paper's
 //! baseline column plus the speedup this repo's level-2 in-node split
-//! buys. Writes `BENCH_rhs.json` (see PERF.md for the schema).
-//! `cargo bench --offline --bench rhs_reference`
+//! buys. Two parallel pipelines are priced against each other:
+//!
+//! * **fused** (the default) — persistent worker pool, RHS+RK fused per
+//!   element, memoized classification (`ref_stage_parallel_*` entries);
+//! * **legacy** — the pre-pool scoped-thread pipeline, three spawn/join
+//!   sweeps per phase (`ref_stage_legacy_*` entries).
+//!
+//! The small-block order-2 series (K <= 64) is where PERF.md predicts the
+//! spawn/classify overhead dominates; `stage_spawn_overhead_ns_*` scalars
+//! record legacy-minus-fused per stage there and at order 7 (where both
+//! must be compute-bound), and `fused_over_legacy_*` the ratio.
+//!
+//! Writes `BENCH_rhs.json` (see PERF.md for the schema).
+//! `cargo bench --offline --bench rhs_reference` — pass `-- --smoke` for
+//! the CI-sized run (fewer warmup/sample iterations, same series, so the
+//! archived scalars exist for every commit at a fraction of the wall
+//! time; read trends, not single noisy runs).
 
 use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
 use repro::solver::basis::LglBasis;
@@ -11,53 +26,91 @@ use repro::solver::state::BlockState;
 use repro::solver::{ParallelRefBackend, StageBackend};
 use repro::util::bench::{Bench, JsonSink};
 
+fn block_state(order: usize, n: usize) -> BlockState {
+    let mesh = unit_cube_geometry(n);
+    let owners = vec![0usize; mesh.len()];
+    let (lblocks, _) = build_local_blocks(&mesh, &owners, 1);
+    let basis = LglBasis::new(order);
+    let ic = |x: [f64; 3]| [x[0].sin(), 0.0, 0.0, 0.0, 0.0, 0.0, x[1].cos(), 0.0, 0.0];
+    let mut st = BlockState::from_local_block(&lblocks[0], order, mesh.len(), 8);
+    st.set_initial_condition(&basis, ic);
+    st
+}
+
 fn main() {
-    let b = Bench::new(2, 8);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let b = if smoke { Bench::new(1, 3) } else { Bench::new(2, 8) };
     let mut sink = JsonSink::new();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("host parallelism: {hw} threads");
+    println!("host parallelism: {hw} threads{}", if smoke { " (smoke mode)" } else { "" });
 
-    for order in [2usize, 3, 7] {
-        let n = if order >= 7 { 4 } else { 6 };
-        let mesh = unit_cube_geometry(n);
-        let owners = vec![0usize; mesh.len()];
-        let (lblocks, _) = build_local_blocks(&mesh, &owners, 1);
+    // (order, n per axis): the established series plus the small-block
+    // order-2 regime (27 and 64 elements) where barrier removal shows
+    for (order, n) in [(2usize, 3usize), (2, 4), (2, 6), (3, 6), (7, 4)] {
+        let k = n * n * n;
         let basis = LglBasis::new(order);
-        let ic = |x: [f64; 3]| [x[0].sin(), 0.0, 0.0, 0.0, 0.0, 0.0, x[1].cos(), 0.0, 0.0];
 
         // ---- scalar reference ------------------------------------------
-        let mut st = BlockState::from_local_block(&lblocks[0], order, mesh.len(), 8);
-        st.set_initial_condition(&basis, ic);
+        let mut st = block_state(order, n);
         let mut scratch = RefScratch::new(&st);
-        let scalar = b.run(&format!("ref_stage_scalar_n{order}_k{}", mesh.len()), || {
+        let scalar = b.run(&format!("ref_stage_scalar_n{order}_k{k}"), || {
             stage(&mut st, &basis, &mut scratch, 1e-4, -0.5, 0.3);
         });
-        scalar.report_throughput(mesh.len(), "elem-stages");
-        sink.push(&scalar, Some((mesh.len(), "elem-stages")));
+        scalar.report_throughput(k, "elem-stages");
+        sink.push(&scalar, Some((k, "elem-stages")));
 
-        // ---- parallel backend, thread sweep ----------------------------
+        // ---- fused pool backend, thread sweep --------------------------
         let mut counts = vec![1usize, 2, 4, hw];
         counts.sort_unstable();
         counts.dedup();
         let mut best: Option<f64> = None;
-        for threads in counts {
-            let mut st = BlockState::from_local_block(&lblocks[0], order, mesh.len(), 8);
-            st.set_initial_condition(&basis, ic);
+        let mut fused_at_hw: Option<f64> = None;
+        for &threads in &counts {
+            let mut st = block_state(order, n);
             let mut backend = ParallelRefBackend::with_threads(order, threads);
-            let par = b.run(
-                &format!("ref_stage_parallel_n{order}_k{}_t{threads}", mesh.len()),
-                || {
-                    backend.stage(&mut st, 1e-4, -0.5, 0.3).unwrap();
-                },
-            );
-            par.report_throughput(mesh.len(), "elem-stages");
-            sink.push(&par, Some((mesh.len(), "elem-stages")));
+            let par = b.run(&format!("ref_stage_parallel_n{order}_k{k}_t{threads}"), || {
+                backend.stage(&mut st, 1e-4, -0.5, 0.3).unwrap();
+            });
+            par.report_throughput(k, "elem-stages");
+            sink.push(&par, Some((k, "elem-stages")));
             let speedup = scalar.mean() / par.mean();
-            println!("  order {order}, {threads} thread(s): {speedup:.2}x vs scalar");
+            println!("  order {order}, k {k}, {threads} thread(s): {speedup:.2}x vs scalar");
             best = Some(best.map_or(speedup, |s: f64| s.max(speedup)));
+            if threads == hw {
+                fused_at_hw = Some(par.mean());
+            }
         }
         if let Some(s) = best {
-            println!("order {order}: best parallel speedup {s:.2}x over scalar");
+            println!("order {order}, k {k}: best fused speedup {s:.2}x over scalar");
+        }
+
+        // ---- legacy scoped-thread backend at the full budget -----------
+        // (the pre-PR pipeline: per-stage spawn/join sweeps + per-stage
+        // classification; kept to price what the pool removed)
+        let mut st = block_state(order, n);
+        let mut legacy = ParallelRefBackend::legacy_scoped(order, hw);
+        let leg = b.run(&format!("ref_stage_legacy_n{order}_k{k}_t{hw}"), || {
+            legacy.stage(&mut st, 1e-4, -0.5, 0.3).unwrap();
+        });
+        leg.report_throughput(k, "elem-stages");
+        sink.push(&leg, Some((k, "elem-stages")));
+        if let Some(fused) = fused_at_hw {
+            let overhead_ns = (leg.mean() - fused) * 1e9;
+            let ratio = leg.mean() / fused;
+            println!(
+                "  order {order}, k {k}: fused {ratio:.2}x over legacy \
+                 (spawn overhead {overhead_ns:.0} ns/stage)"
+            );
+            sink.push_scalar(
+                &format!("stage_spawn_overhead_ns_n{order}_k{k}"),
+                overhead_ns,
+                "ns_per_stage",
+            );
+            sink.push_scalar(
+                &format!("fused_over_legacy_n{order}_k{k}"),
+                ratio,
+                "speedup",
+            );
         }
     }
 

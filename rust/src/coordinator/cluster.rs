@@ -70,6 +70,7 @@ use crate::solver::reference::KernelTimes;
 use crate::solver::rk::{LSRK_A, LSRK_B, N_STAGES};
 use crate::solver::state::{BlockState, NFIELDS};
 use crate::solver::{LglBasis, StageBackend};
+use crate::util::pool::WorkerPool;
 use crate::Result;
 
 // ---------------------------------------------------------------------------
@@ -115,12 +116,21 @@ impl WorkerBackendFactory for ScalarWorker {
 /// concurrently-staging *parallel* workers (floor 1) instead of assuming a
 /// whole machine per worker — P virtual nodes on one machine would
 /// otherwise oversubscribe by P x.
+///
+/// Each `build` call creates **one persistent worker pool** shared by
+/// every block backend it constructs — the pool (and its memoized
+/// classifications) lives exactly as long as the backends, i.e. until the
+/// worker's blocks are rebuilt by a migration. With `pin_base` set the
+/// pool's workers are pinned to cores `pin_base..pin_base + threads`, so
+/// the divided budget is a real affinity assignment.
 pub struct ParallelWorker {
     pub threads: usize,
     /// Number of parallel workers staging concurrently (thread auto-sizing
     /// divides the machine across exactly these; scalar workers cost ~one
     /// thread each and are ignored by the budget).
     pub concurrent: usize,
+    /// First core of this worker's pinned range (None = unpinned).
+    pub pin_base: Option<usize>,
 }
 
 impl ParallelWorker {
@@ -137,10 +147,19 @@ impl ParallelWorker {
 
 impl WorkerBackendFactory for ParallelWorker {
     fn build(&self, order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>> {
+        if blocks.is_empty() {
+            // nothing will take the pool; don't spawn threads just to
+            // join them (migrations can empty a worker out)
+            return Ok(Vec::new());
+        }
         let t = self.resolved_threads();
+        let pool = Arc::new(WorkerPool::new(t, self.pin_base));
         Ok(blocks
             .iter()
-            .map(|_| Box::new(ParallelRefBackend::with_threads(order, t)) as Box<dyn StageBackend>)
+            .map(|_| {
+                Box::new(ParallelRefBackend::with_pool(order, pool.clone()))
+                    as Box<dyn StageBackend>
+            })
             .collect())
     }
 
@@ -263,12 +282,19 @@ impl WorkerBackend {
     /// The factory realizing this backend in a cluster where
     /// `concurrent_parallel` parallel workers stage at once (the divisor
     /// of the `threads == 0` auto-budget; scalar backends ignore it).
-    pub fn factory(&self, concurrent_parallel: usize) -> Arc<dyn WorkerBackendFactory> {
+    /// `pin_base` pins a parallel worker's pool to the core range
+    /// starting there (other backends ignore it).
+    pub fn factory(
+        &self,
+        concurrent_parallel: usize,
+        pin_base: Option<usize>,
+    ) -> Arc<dyn WorkerBackendFactory> {
         match self {
             WorkerBackend::RustRef => Arc::new(ScalarWorker),
             WorkerBackend::RustParallel { threads } => Arc::new(ParallelWorker {
                 threads: *threads,
                 concurrent: concurrent_parallel.max(1),
+                pin_base,
             }),
             WorkerBackend::Pjrt { artifact_dir } => {
                 Arc::new(PjrtWorker { artifact_dir: artifact_dir.clone() })
@@ -367,6 +393,16 @@ pub struct WorkerTimes {
     /// backends; the divided share for `RustParallel { threads: 0 }`) —
     /// surfaced so phase tables show how the machine was carved up.
     pub threads: usize,
+    /// Generation id of the worker's persistent stage pool (0 = the
+    /// backend has none, e.g. scalar workers). Stamped from the live
+    /// backends at read time: stable across stages *and* across
+    /// rebalances that keep this worker's blocks; changes exactly when
+    /// the worker's backends were rebuilt.
+    pub pool_generation: u64,
+    /// Boundary/interior classifications computed by the worker's
+    /// backends since they were built (memoized: flat across stages; a
+    /// rebuild restarts the count).
+    pub classify_computes: u64,
 }
 
 impl WorkerTimes {
@@ -611,10 +647,10 @@ fn worker_main(init: WorkerInit) {
                 }
             }
             Cmd::ReadTimes => {
-                tx.send(Resp::Times(times)).ok();
+                tx.send(Resp::Times(stamp_backend_state(times, &backends))).ok();
             }
             Cmd::TakeTimes => {
-                tx.send(Resp::Times(times)).ok();
+                tx.send(Resp::Times(stamp_backend_state(times, &backends))).ok();
                 times = fresh_times();
             }
             Cmd::Replace(msg) => {
@@ -646,9 +682,47 @@ fn worker_main(init: WorkerInit) {
     }
 }
 
+/// Fill the backend-derived [`WorkerTimes`] fields at reply time: the
+/// pool generation (first backend with a pool) and the summed
+/// classification count — live views of the *current* backends, so a
+/// migration that rebuilds them is visible immediately.
+fn stamp_backend_state(mut t: WorkerTimes, backends: &[Box<dyn StageBackend>]) -> WorkerTimes {
+    t.pool_generation = backends.iter().find_map(|b| b.pool_generation()).unwrap_or(0);
+    t.classify_computes = backends.iter().map(|b| b.classify_computes()).sum();
+    t
+}
+
 // ---------------------------------------------------------------------------
 // routing tables
 // ---------------------------------------------------------------------------
+
+/// Hand each parallel worker a disjoint core range matching its thread
+/// budget: ranges are laid out cumulatively in worker order (so mixed
+/// explicit budgets stay disjoint too). Bases are *logical* offsets — the
+/// pool maps them into the process's allowed-CPU list and wraps there
+/// ([`crate::util::pool::WorkerPool::new`]), the single wrap point, so a
+/// cgroup-restricted machine doesn't get two disagreeing moduli. Scalar
+/// and throttled workers stay unpinned — they float like before.
+fn assign_pin_bases(specs: &mut [WorkerSpec]) {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let parallel: Vec<usize> = specs
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| matches!(s.backend, WorkerBackend::RustParallel { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    let n_par = parallel.len().max(1);
+    let mut next = 0usize;
+    for &i in &parallel {
+        let budget = match specs[i].backend {
+            WorkerBackend::RustParallel { threads: 0 } => (hw / n_par).max(1),
+            WorkerBackend::RustParallel { threads } => threads,
+            _ => unreachable!("filtered to parallel backends"),
+        };
+        specs[i].pin_base = Some(next);
+        next += budget;
+    }
+}
 
 /// Distribute per-owner states to workers, preserving owner order; returns
 /// (blocks per worker, owners per worker, owner -> (worker, local index)).
@@ -751,6 +825,11 @@ pub struct WorkerSpec {
     pub backend: WorkerBackend,
     /// Thread name.
     pub name: String,
+    /// First core of this worker's pinned range (parallel backends only;
+    /// `None` = unpinned). [`ClusterRun::launch`] fills it from
+    /// [`ClusterSpec::pin_cores`], handing each parallel worker a
+    /// disjoint core range of its thread budget.
+    pub pin_base: Option<usize>,
 }
 
 /// Read-only summary of one live worker.
@@ -787,6 +866,11 @@ pub struct ClusterSpec {
     /// uses `cpu_backend`/`mic_backend` uniformly. The skewed-cluster
     /// tests and benches throttle a single node through this.
     pub node_backends: Option<Vec<(WorkerBackend, WorkerBackend)>>,
+    /// Pin each parallel worker's pool to a disjoint core range (making
+    /// the divided `RustParallel { threads: 0 }` budget a real affinity
+    /// assignment). Best-effort: refused affinity calls degrade to the
+    /// unpinned behavior.
+    pub pin_cores: bool,
 }
 
 impl ClusterSpec {
@@ -801,6 +885,7 @@ impl ClusterSpec {
             rebalance_every: None,
             level1_rebalance: true,
             node_backends: None,
+            pin_cores: false,
         }
     }
 }
@@ -899,7 +984,7 @@ impl ClusterRun {
                 nb.len()
             );
         }
-        let specs: Vec<WorkerSpec> = (0..2 * nodes)
+        let mut specs: Vec<WorkerSpec> = (0..2 * nodes)
             .map(|w| {
                 let device = if w % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic };
                 let backend = match &spec.node_backends {
@@ -924,9 +1009,13 @@ impl ClusterRun {
                         w / 2,
                         if device == DeviceKind::Cpu { "cpu" } else { "mic" }
                     ),
+                    pin_base: None,
                 }
             })
             .collect();
+        if spec.pin_cores {
+            assign_pin_bases(&mut specs);
+        }
         let worker_of_owner: Vec<usize> = (0..2 * nodes).collect();
         let mut run =
             ClusterRun::launch_parts(&lblocks, states, plan, &worker_of_owner, &specs, spec.order)?;
@@ -992,7 +1081,7 @@ impl ClusterRun {
                 outbound: std::mem::take(&mut outbound[w]),
                 self_copies: std::mem::take(&mut self_copies[w]),
                 expected_in: expected[w],
-                factory: spec.backend.factory(parallel_workers),
+                factory: spec.backend.factory(parallel_workers, spec.pin_base),
                 order,
             };
             let handle = std::thread::Builder::new()

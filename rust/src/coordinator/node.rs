@@ -51,8 +51,15 @@ impl HeteroRun {
                 device: DeviceKind::Cpu,
                 backend: backend.clone(),
                 name: "cpu-worker".into(),
+                pin_base: None,
             },
-            WorkerSpec { node: 0, device: DeviceKind::Mic, backend, name: "mic-worker".into() },
+            WorkerSpec {
+                node: 0,
+                device: DeviceKind::Mic,
+                backend,
+                name: "mic-worker".into(),
+                pin_base: None,
+            },
         ];
         let worker_of_owner: Vec<usize> =
             device_of_owner.iter().map(|&d| usize::from(d == DeviceKind::Mic)).collect();

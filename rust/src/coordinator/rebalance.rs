@@ -268,6 +268,7 @@ mod tests {
             exchange_s: 0.0,
             stages: 2 * N_STAGES,
             threads: 1,
+            ..Default::default()
         }
     }
 

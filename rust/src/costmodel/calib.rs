@@ -202,6 +202,14 @@ pub fn measured_device(
 /// model. An accelerator worker that has not run yet (K_mic = 0) bootstraps
 /// with the CPU worker's measured rates: both workers are in-process CPU
 /// threads, so equal speed is the right prior for a first split.
+///
+/// The measured times come from the workers' persistent stage pools
+/// ([`crate::util::pool::WorkerPool`]); with `ClusterSpec::pin_cores` set,
+/// each pool is pinned to a disjoint core range, so the rates fitted here
+/// reflect the *budgeted* contention (each worker on its own cores) rather
+/// than whatever placement the scheduler happened to pick that window —
+/// which is what makes the node-count scaling series comparable across
+/// runs.
 pub fn measured_node(
     n: usize,
     k_cpu: usize,

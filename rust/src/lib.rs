@@ -37,8 +37,10 @@
 //!   partition and `SimReport::discrepancy` cross-checks it live
 //! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels;
 //!   `solver::parallel` is the multithreaded boundary/interior CPU backend
-//!   and `solver::driver` the multi-block driver with optional
-//!   compute/exchange overlap (see PERF.md)
+//!   (fused RHS+RK stage pipeline with memoized classification on a
+//!   persistent worker pool) and `solver::driver` the multi-block driver
+//!   with optional compute/exchange overlap on a persistent comm thread
+//!   (see PERF.md)
 //! * [`runtime`]    — PJRT artifact registry, compile cache, execution
 //!   (`runtime::client` needs `--features pjrt`)
 //! * [`coordinator`]— the execution core: `coordinator::cluster` runs the
@@ -46,9 +48,14 @@
 //!   per node on a typed message fabric); `coordinator::rebalance` plans
 //!   the adaptive two-level rebalance (weighted level-1 re-splice across
 //!   nodes + per-node level-2 re-solve) that `ClusterRun` applies with
-//!   incremental, backend-preserving migration; `coordinator::node` keeps
-//!   the single-node two-worker API; experiments (incl. the live-vs-sim
-//!   cross-check with per-kernel drift), reports
+//!   incremental, backend-preserving migration (kept workers keep blocks,
+//!   backends, pools and memoized classification); `coordinator::node`
+//!   keeps the single-node two-worker API; experiments (incl. the
+//!   live-vs-sim cross-check with per-kernel drift), reports
+//! * [`util`]       — offline-build utilities: bench harness + JSON sink,
+//!   json, rng, and `util::pool` — the persistent execution substrate
+//!   (`WorkerPool` fork-join pool with phased barriers, optional core
+//!   pinning, generation ids; `TaskThread` for overlap work)
 
 pub mod coordinator;
 pub mod costmodel;

@@ -40,8 +40,8 @@ COMMANDS
               message fabric) with optional adaptive two-level rebalancing
                 --n 6  --order 2  --steps 20  --nodes 2
                 [--mic-fraction F]  [--rebalance-every R]  [--no-level1]
-                --rust-ref | --parallel [--threads N]  --two-tree
-                --sync-per-step
+                --rust-ref | --parallel [--threads N]  [--pin-cores]
+                --two-tree  --sync-per-step
               (--no-level1 restricts rebalancing to the in-node CPU/MIC
               split; default also re-splices the level-1 chunks across
               nodes from measured rates)
@@ -129,7 +129,7 @@ fn main() -> repro::Result<()> {
         "cluster" => {
             let a = Args::parse(
                 rest,
-                &["rust-ref", "parallel", "two-tree", "sync-per-step", "no-level1"],
+                &["rust-ref", "parallel", "two-tree", "sync-per-step", "no-level1", "pin-cores"],
             );
             run_cluster(
                 a.get("n", 6),
@@ -142,6 +142,7 @@ fn main() -> repro::Result<()> {
                 worker_backend(&a),
                 a.flag("two-tree"),
                 !a.flag("sync-per-step"),
+                a.flag("pin-cores"),
             )
         }
         "partition" => {
@@ -377,6 +378,7 @@ fn run_cluster(
     backend: WorkerBackend,
     two_tree: bool,
     exchange_every_stage: bool,
+    pin_cores: bool,
 ) -> repro::Result<()> {
     use repro::coordinator::cluster::{ClusterRun, ClusterSpec};
     use repro::coordinator::profile::render_phase_table;
@@ -389,6 +391,7 @@ fn run_cluster(
     spec.cpu_backend = backend.clone();
     spec.mic_backend = backend;
     spec.exchange_every_stage = exchange_every_stage;
+    spec.pin_cores = pin_cores;
 
     let cmax = mesh.elements.iter().map(|e| e.material.cp()).fold(0.0f32, f32::max);
     let hmin =

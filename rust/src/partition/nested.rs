@@ -210,6 +210,12 @@ pub fn owner_migration(old_owners: &[usize], new_owners: &[usize]) -> OwnerMigra
 /// [`boundary_depths`], but computed from the block-local `(K, 6)`
 /// connectivity (`LOCAL_HALO` faces) so the in-node parallel backend can
 /// classify without the global mesh. Both vectors preserve Morton order.
+///
+/// The result is a pure function of the block's immutable connectivity, so
+/// callers on the stage hot path memoize it per block
+/// (`solver::parallel::ParallelRefBackend` caches the split keyed on the
+/// connectivity storage identity and reuses it every stage; the cache dies
+/// exactly when a rebalance migration rebuilds the block).
 pub fn split_block_elements(conn: &[i32], k_real: usize) -> (Vec<usize>, Vec<usize>) {
     let mut boundary = Vec::new();
     let mut interior = Vec::new();

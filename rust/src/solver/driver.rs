@@ -9,7 +9,8 @@
 //! * **overlapped** (`overlap = true`): each block first advances only its
 //!   *boundary* elements (the level-2 nested split of
 //!   [`crate::partition::nested`], applied in-node), the outbound traces
-//!   are gathered, and then the halo scatter runs on a dedicated thread
+//!   are gathered, and then the halo scatter runs on a persistent comm
+//!   thread ([`crate::util::pool::TaskThread`], created once per driver)
 //!   **concurrently** with the interior-element sweeps — the paper's
 //!   compute/communication overlap (Fig 4.1) realized inside the CPU
 //!   backend. Backends that don't implement the split
@@ -27,6 +28,7 @@ use super::reference::{stage as ref_stage, KernelTimes, RefScratch};
 use super::rk::{LSRK_A, LSRK_B, N_STAGES};
 use super::state::{BlockState, InteriorView, NFIELDS};
 use crate::mesh::ExchangePlan;
+use crate::util::pool::TaskThread;
 use crate::Result;
 
 /// Anything that can advance one block by one LSRK stage.
@@ -74,6 +76,22 @@ pub trait StageBackend {
         let _ = (v, dt, a, b);
         Ok(KernelTimes::default())
     }
+
+    /// Generation id of the backend's persistent worker pool
+    /// ([`crate::util::pool::WorkerPool::generation`]); `None` for
+    /// backends without one. The cluster runtime surfaces it so tests can
+    /// assert that a rebalance keeping a worker's blocks also keeps its
+    /// pool alive.
+    fn pool_generation(&self) -> Option<u64> {
+        None
+    }
+
+    /// How many times the backend computed its boundary/interior
+    /// classification (memoizing backends stay flat once warm; backends
+    /// without a classification report 0).
+    fn classify_computes(&self) -> u64 {
+        0
+    }
 }
 
 /// The pure-rust reference backend (scalar CPU kernels).
@@ -115,6 +133,10 @@ pub struct Driver {
     /// Use the overlapped boundary/interior schedule (see module docs).
     pub overlap: bool,
     staging: ExchangeStaging,
+    /// Persistent thread for the overlapped halo scatter, created on the
+    /// first overlapped step — after that warmup no OS thread is ever
+    /// created per stage (the backends' pools are equally persistent).
+    comm: Option<TaskThread>,
 }
 
 impl Driver {
@@ -136,6 +158,7 @@ impl Driver {
             steps_taken: 0,
             overlap: false,
             staging: ExchangeStaging::default(),
+            comm: None,
         }
     }
 
@@ -150,8 +173,9 @@ impl Driver {
     /// Advance one full LSRK timestep. One shared stage loop serves both
     /// schedules: per stage, phase 1 advances every block (the full stage
     /// serially, or just its boundary elements when overlapping), then the
-    /// halo exchange runs — synchronously after phase 1, or on a dedicated
-    /// scatter thread *concurrently* with the interior sweeps. The overlap
+    /// halo exchange runs — synchronously after phase 1, or on the
+    /// persistent comm thread *concurrently* with the interior sweeps. The
+    /// overlap
     /// variant differs only in that gather/scatter step; all RK
     /// bookkeeping (stage coefficients, time accounting, step counting) is
     /// common.
@@ -182,11 +206,16 @@ impl Driver {
     }
 
     /// The overlapped exchange of one stage: gather outbound traces, then
-    /// scatter them into neighbor halos on a dedicated thread while the
-    /// interior sweeps compute.
+    /// scatter them into neighbor halos on the persistent comm thread
+    /// while the interior sweeps compute. The comm thread is created once
+    /// (first overlapped stage) and reused — after that warmup no OS
+    /// thread is spawned per stage anywhere on the hot path.
     fn exchange_overlapped(&mut self, dt: f32, a: f32, b: f32) -> Result<()> {
         let sz = NFIELDS * self.basis.m() * self.basis.m();
         gather_exchange(&self.blocks, &self.plan, &mut self.staging);
+        if self.comm.is_none() {
+            self.comm = Some(TaskThread::new("driver-comm"));
+        }
         let mut halos: Vec<&mut [f32]> = Vec::new();
         let mut views: Vec<InteriorView<'_>> = Vec::new();
         for blk in self.blocks.iter_mut() {
@@ -197,14 +226,22 @@ impl Driver {
         let staging = &self.staging;
         let backends = &mut self.backends;
         let times = &mut self.times;
-        std::thread::scope(|sc| -> Result<()> {
-            sc.spawn(move || scatter_exchange(&mut halos, sz, staging));
-            for (i, v) in views.iter_mut().enumerate() {
-                let t = backends[i].stage_interior(v, dt, a, b)?;
-                times[i].accumulate(&t);
+        let comm = self.comm.as_mut().expect("created above");
+        // SAFETY: the guard is joined below on this frame, before any of
+        // the borrows the scatter task captures can end.
+        let guard = unsafe { comm.run_scoped(move || scatter_exchange(&mut halos, sz, staging)) };
+        let mut result = Ok(());
+        for (i, v) in views.iter_mut().enumerate() {
+            match backends[i].stage_interior(v, dt, a, b) {
+                Ok(t) => times[i].accumulate(&t),
+                Err(e) => {
+                    result = Err(e);
+                    break;
+                }
             }
-            Ok(())
-        })
+        }
+        guard.join();
+        result
     }
 
     /// Advance `n` steps.

@@ -1,10 +1,9 @@
 //! Multithreaded CPU stage backend with the paper's level-2 nested split
-//! applied *inside* a block.
+//! applied *inside* a block, running on a **persistent worker pool**.
 //!
 //! [`ParallelRefBackend`] advances the same DGSEM stage math as the scalar
 //! reference backend (it shares `reference::rhs_element`, so results are
-//! bitwise identical), but sweeps elements from a scoped thread pool with
-//! per-thread scratch, in two phases mirroring Fig 4.1's CPU/accelerator
+//! bitwise identical), in two phases mirroring Fig 4.1's CPU/accelerator
 //! concurrency:
 //!
 //! 1. **boundary phase** — elements with at least one halo face (the
@@ -19,16 +18,39 @@
 //!    [`crate::coordinator::node`] workers, which ship traces between the
 //!    phases).
 //!
+//! Three properties distinguish this from the original scoped-thread
+//! implementation (kept as [`ParallelRefBackend::legacy_scoped`] so the
+//! benches can price the difference):
+//!
+//! * **Persistent pool.** Worker threads are created once per backend (or
+//!   shared across a cluster worker's backends) and live in a
+//!   [`crate::util::pool::WorkerPool`]; a stage costs pool *rendezvous*
+//!   (condvar wake + barrier), not thread spawn/join sweeps.
+//! * **Fused pipeline.** RHS and the RK update ride in one per-element
+//!   pass: each pool worker owns a disjoint element slice and, per
+//!   element, evaluates the RHS then updates `q`/`res` in place. This is
+//!   exact because [`rhs_element`] reads only the element's own `q` plus
+//!   *traces* of neighbors — never neighbor `q` — and no trace is written
+//!   during the pass. The full trace refresh (interior phase) runs as a
+//!   second, pool-internal barrier phase of the *same* rendezvous. Six
+//!   spawn/join barriers per stage become two rendezvous (one per phase).
+//! * **Memoized classification.** The boundary/interior split depends
+//!   only on the block's immutable connectivity, so it is computed once
+//!   and cached, keyed on the block's process-unique identity
+//!   ([`BlockState::uid`]; [`ParallelRefBackend::classify_computes`]
+//!   exposes the counter). A cluster rebalance that keeps a worker's
+//!   blocks keeps the cache; a rebuild starts fresh.
+//!
 //! Phase ordering is exact, not approximate: all RHS evaluations read the
 //! pre-stage traces (the boundary phase refreshes only halo-facing faces,
-//! which same-block elements never read), and element updates are
-//! per-element independent.
+//! which same-block elements never read, and the refresh happens after
+//! the fused pass), and element updates are per-element independent.
 //!
-//! Reported [`KernelTimes`] sum the per-thread RHS kernel timers (CPU
-//! seconds, so they can exceed wall time) and attribute rk/interp_q by
-//! phase wall time.
+//! Reported [`KernelTimes`] sum the per-thread kernel timers (CPU
+//! seconds, so they can exceed wall time).
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::basis::LglBasis;
@@ -37,6 +59,7 @@ use super::reference::{rhs_element, ElemScratch, KernelTimes, RhsCtx};
 use super::state::{refresh_elem_face, refresh_elem_traces, BlockState, InteriorView, NFIELDS};
 use crate::mesh::halo::LOCAL_HALO;
 use crate::partition::nested::split_block_elements;
+use crate::util::pool::WorkerPool;
 use crate::Result;
 
 /// Boundary/interior element split of one block, plus the halo-facing
@@ -62,19 +85,45 @@ pub fn classify_elements(conn: &[i32], k_real: usize) -> BlockSplit {
     BlockSplit { boundary, interior, halo_faces }
 }
 
+/// Identity of one block's classification inputs: the block's
+/// process-unique [`BlockState::uid`] (clones share it — identical
+/// connectivity — while a migrated/rebuilt block gets a fresh one, so a
+/// stale split can never alias the way a pointer key could) plus the real
+/// element count as a belt-and-braces check.
+type SplitKey = (u64, usize);
+
+struct SplitCache {
+    key: SplitKey,
+    split: BlockSplit,
+}
+
 /// The multithreaded reference backend (see module docs).
 pub struct ParallelRefBackend {
     basis: LglBasis,
     threads: usize,
+    /// The persistent pool; possibly shared with the other backends of
+    /// one cluster worker ([`ParallelRefBackend::with_pool`]).
+    pool: Arc<WorkerPool>,
+    /// One element-scratch per pool worker (locked once per dispatch —
+    /// each worker touches exactly its own slot).
+    scratch: Vec<Mutex<ElemScratch>>,
     /// dq accumulator keyed by (k_pad, m), reused across stages.
     dq: HashMap<(usize, usize), Vec<f32>>,
-    /// One element-scratch per worker thread.
-    pool: Vec<ElemScratch>,
-    /// Split computed by the boundary phase, consumed by the interior one.
-    pending: Option<BlockSplit>,
-    /// Identity element list 0..k_real, grown on demand (avoids a per-stage
-    /// allocation in the full trace refresh).
+    /// Memoized boundary/interior classification (see module docs).
+    cache: Option<SplitCache>,
+    /// Times the classification was actually computed (stays flat across
+    /// stages once warm; the cluster tests assert survival).
+    classify_computes: u64,
+    /// Identity element list 0..k_real, grown on demand (avoids a
+    /// per-stage allocation in the fused full-stage sweep).
     all_elems: Vec<usize>,
+    /// Run the pre-pool scoped-thread pipeline (benches only).
+    legacy: bool,
+    /// Scratch for the legacy path (one per scoped worker).
+    legacy_scratch: Vec<ElemScratch>,
+    /// Split computed by a legacy boundary phase, consumed by the legacy
+    /// interior phase.
+    legacy_pending: Option<BlockSplit>,
 }
 
 impl ParallelRefBackend {
@@ -84,34 +133,85 @@ impl ParallelRefBackend {
         Self::with_threads(order, threads)
     }
 
-    /// Backend with an explicit worker count (>= 1).
+    /// Backend with an explicit worker count (>= 1); the pool (and its
+    /// `threads - 1` OS threads) is created here and lives as long as the
+    /// backend.
     pub fn with_threads(order: usize, threads: usize) -> Self {
+        Self::with_pool(order, Arc::new(WorkerPool::new(threads.max(1), None)))
+    }
+
+    /// Backend on an existing (possibly shared) pool — the cluster's
+    /// worker factory builds one pool per worker and hands it to every
+    /// block backend of that worker.
+    pub fn with_pool(order: usize, pool: Arc<WorkerPool>) -> Self {
+        let basis = LglBasis::new(order);
+        let m = basis.m();
+        let threads = pool.threads();
+        let scratch = (0..threads).map(|_| Mutex::new(ElemScratch::new(m))).collect();
         ParallelRefBackend {
-            basis: LglBasis::new(order),
-            threads: threads.max(1),
+            basis,
+            threads,
+            pool,
+            scratch,
             dq: HashMap::new(),
-            pool: Vec::new(),
-            pending: None,
+            cache: None,
+            classify_computes: 0,
             all_elems: Vec::new(),
+            legacy: false,
+            legacy_scratch: Vec::new(),
+            legacy_pending: None,
         }
+    }
+
+    /// The pre-pool implementation: per-stage scoped-thread sweeps for
+    /// RHS, RK and trace refresh (three spawn/join barriers per phase)
+    /// with per-stage classification. Kept so `benches/rhs_reference.rs`
+    /// can price the fused pipeline against it (`stage_spawn_overhead`);
+    /// not intended for production use.
+    pub fn legacy_scoped(order: usize, threads: usize) -> Self {
+        let mut b = Self::with_pool(order, Arc::new(WorkerPool::new(1, None)));
+        b.threads = threads.max(1);
+        b.legacy = true;
+        b
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
-    fn ensure_pool(&mut self, m: usize) {
-        // scratch is sized by m; the basis fixes m for every block this
-        // backend can legally stage
-        debug_assert_eq!(m, self.basis.m());
-        while self.pool.len() < self.threads {
-            self.pool.push(ElemScratch::new(m));
+    /// Generation id of the backend's persistent pool (see
+    /// [`WorkerPool::generation`]).
+    pub fn pool_generation(&self) -> u64 {
+        self.pool.generation()
+    }
+
+    /// How many times the boundary/interior classification was computed
+    /// (memoized: flat once warm; legacy mode recomputes per stage).
+    pub fn classify_computes(&self) -> u64 {
+        self.classify_computes
+    }
+
+    /// Memoize the classification for this block's connectivity.
+    fn memoize_split(&mut self, uid: u64, conn: &[i32], k_real: usize) {
+        let key = (uid, k_real);
+        if !self.cache.as_ref().is_some_and(|c| c.key == key) {
+            self.cache = Some(SplitCache { key, split: classify_elements(conn, k_real) });
+            self.classify_computes += 1;
         }
     }
 
-    /// Boundary phase on a full state (RHS + RK + halo-face trace refresh
-    /// for boundary elements). Returns the computed split for reuse.
-    fn phase_boundary(
+    // -- legacy scoped-thread pipeline (benches only) ---------------------
+
+    fn ensure_legacy_scratch(&mut self, m: usize) {
+        debug_assert_eq!(m, self.basis.m());
+        while self.legacy_scratch.len() < self.threads {
+            self.legacy_scratch.push(ElemScratch::new(m));
+        }
+    }
+
+    /// Legacy boundary phase on a full state (scoped-thread RHS + RK +
+    /// halo-face trace refresh for boundary elements).
+    fn legacy_phase_boundary(
         &mut self,
         st: &mut BlockState,
         split: &BlockSplit,
@@ -122,14 +222,21 @@ impl ParallelRefBackend {
         let m = st.m;
         let vol = m * m * m;
         let esz = NFIELDS * vol;
-        self.ensure_pool(m);
+        self.ensure_legacy_scratch(m);
         let dq = self
             .dq
             .entry((st.k_pad, m))
             .or_insert_with(|| vec![0.0; st.k_pad * esz]);
         let cx = RhsCtx::of(st);
-        let mut times =
-            par_rhs(&self.basis, self.threads, &mut self.pool, dq, &cx, &split.boundary);
+        let mut times = par_rhs(
+            &self.basis,
+            self.threads,
+            &mut self.legacy_scratch,
+            dq,
+            &cx,
+            &st.q,
+            &split.boundary,
+        );
         let t0 = Instant::now();
         par_update(self.threads, &mut st.q, &mut st.res, dq, &split.boundary, esz, dt, a, b);
         times.rk += t0.elapsed().as_secs_f64();
@@ -147,9 +254,10 @@ impl ParallelRefBackend {
         times
     }
 
-    /// Interior phase on a split view (RHS + RK for interior elements,
-    /// then a full trace refresh of every real element).
-    fn phase_interior(
+    /// Legacy interior phase on a split view (scoped-thread RHS + RK for
+    /// interior elements, then a full trace refresh of every real
+    /// element).
+    fn legacy_phase_interior(
         &mut self,
         v: &mut InteriorView<'_>,
         split: &BlockSplit,
@@ -160,14 +268,13 @@ impl ParallelRefBackend {
         let m = v.m;
         let vol = m * m * m;
         let esz = NFIELDS * vol;
-        self.ensure_pool(m);
+        self.ensure_legacy_scratch(m);
         let dq = self
             .dq
             .entry((v.k_pad, m))
             .or_insert_with(|| vec![0.0; v.k_pad * esz]);
         let cx = RhsCtx {
             m,
-            q: &*v.q,
             traces: &*v.traces,
             // interior elements have no halo faces by construction
             halo: &[],
@@ -177,8 +284,15 @@ impl ParallelRefBackend {
             halo_mats: v.halo_mats,
             h: v.h,
         };
-        let mut times =
-            par_rhs(&self.basis, self.threads, &mut self.pool, dq, &cx, &split.interior);
+        let mut times = par_rhs(
+            &self.basis,
+            self.threads,
+            &mut self.legacy_scratch,
+            dq,
+            &cx,
+            v.q,
+            &split.interior,
+        );
         let t0 = Instant::now();
         par_update(self.threads, v.q, v.res, dq, &split.interior, esz, dt, a, b);
         times.rk += t0.elapsed().as_secs_f64();
@@ -193,16 +307,147 @@ impl ParallelRefBackend {
         times.interp_q += t0.elapsed().as_secs_f64();
         times
     }
+
+    // -- fused pool pipeline (the default) --------------------------------
+
+    /// Fused boundary phase: one pool rendezvous sweeping the boundary
+    /// elements (RHS + RK per element), then the serial halo-face trace
+    /// refresh (surface-sized; same placement as the legacy path).
+    fn fused_boundary(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> KernelTimes {
+        self.memoize_split(st.uid, &st.conn, st.k_real);
+        let m = st.m;
+        let esz = NFIELDS * m * m * m;
+        let tsz = 6 * NFIELDS * m * m;
+        let ParallelRefBackend { basis, pool, scratch, dq, cache, .. } = self;
+        let split = &cache.as_ref().expect("memoized above").split;
+        let dqv = dq
+            .entry((st.k_pad, m))
+            .or_insert_with(|| vec![0.0; st.k_pad * esz]);
+        let mut times = fused_sweep(
+            basis,
+            pool,
+            scratch,
+            &split.boundary,
+            None,
+            FusedShared {
+                m,
+                conn: &st.conn,
+                halo: &st.halo,
+                halo_idx: &st.halo_idx,
+                mats: &st.mats,
+                halo_mats: &st.halo_mats,
+                h: &st.h,
+            },
+            RawMut::new(&mut st.q),
+            RawMut::new(&mut st.res),
+            RawMut::new(dqv),
+            RawMut::new(&mut st.traces),
+            dt,
+            a,
+            b,
+        );
+        let t0 = Instant::now();
+        for &(e, f) in &split.halo_faces {
+            let q_e = &st.q[e * esz..(e + 1) * esz];
+            let tr_e = &mut st.traces[e * tsz..(e + 1) * tsz];
+            refresh_elem_face(m, q_e, tr_e, f);
+        }
+        times.interp_q += t0.elapsed().as_secs_f64();
+        times
+    }
+
+    /// Fused interior phase: one pool rendezvous — RHS + RK over the
+    /// interior elements, then (behind the pool-internal barrier) the
+    /// full trace refresh of every real element.
+    fn fused_interior(&mut self, v: &mut InteriorView<'_>, dt: f32, a: f32, b: f32) -> KernelTimes {
+        self.memoize_split(v.uid, v.conn, v.k_real);
+        let m = v.m;
+        let esz = NFIELDS * m * m * m;
+        let ParallelRefBackend { basis, pool, scratch, dq, cache, .. } = self;
+        let split = &cache.as_ref().expect("memoized above").split;
+        let dqv = dq
+            .entry((v.k_pad, m))
+            .or_insert_with(|| vec![0.0; v.k_pad * esz]);
+        fused_sweep(
+            basis,
+            pool,
+            scratch,
+            &split.interior,
+            Some(v.k_real),
+            FusedShared {
+                m,
+                conn: v.conn,
+                // interior elements have no halo faces by construction —
+                // and the halo is being rewritten concurrently by the
+                // overlap scatter, so it must not be read here
+                halo: &[],
+                halo_idx: v.halo_idx,
+                mats: v.mats,
+                halo_mats: v.halo_mats,
+                h: v.h,
+            },
+            RawMut::new(v.q),
+            RawMut::new(v.res),
+            RawMut::new(dqv),
+            RawMut::new(v.traces),
+            dt,
+            a,
+            b,
+        )
+    }
+
+    /// Fused full stage (serial schedule): every real element in one
+    /// rendezvous (RHS + RK), full trace refresh behind the barrier. No
+    /// classification needed — boundary and interior elements take the
+    /// same path when there is no overlap to schedule around.
+    fn fused_stage(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> KernelTimes {
+        let m = st.m;
+        let esz = NFIELDS * m * m * m;
+        while self.all_elems.len() < st.k_real {
+            self.all_elems.push(self.all_elems.len());
+        }
+        let ParallelRefBackend { basis, pool, scratch, dq, all_elems, .. } = self;
+        let dqv = dq
+            .entry((st.k_pad, m))
+            .or_insert_with(|| vec![0.0; st.k_pad * esz]);
+        fused_sweep(
+            basis,
+            pool,
+            scratch,
+            &all_elems[..st.k_real],
+            Some(st.k_real),
+            FusedShared {
+                m,
+                conn: &st.conn,
+                halo: &st.halo,
+                halo_idx: &st.halo_idx,
+                mats: &st.mats,
+                halo_mats: &st.halo_mats,
+                h: &st.h,
+            },
+            RawMut::new(&mut st.q),
+            RawMut::new(&mut st.res),
+            RawMut::new(dqv),
+            RawMut::new(&mut st.traces),
+            dt,
+            a,
+            b,
+        )
+    }
 }
 
 impl StageBackend for ParallelRefBackend {
     fn stage(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> Result<KernelTimes> {
-        self.pending = None;
-        let split = classify_elements(&st.conn, st.k_real);
-        let mut times = self.phase_boundary(st, &split, dt, a, b);
-        let (mut view, _halo) = st.split_for_overlap();
-        times.accumulate(&self.phase_interior(&mut view, &split, dt, a, b));
-        Ok(times)
+        if self.legacy {
+            self.legacy_pending = None;
+            let split = classify_elements(&st.conn, st.k_real);
+            self.classify_computes += 1;
+            let mut times = self.legacy_phase_boundary(st, &split, dt, a, b);
+            let (mut view, _halo) = st.split_for_overlap();
+            times.accumulate(&self.legacy_phase_interior(&mut view, &split, dt, a, b));
+            return Ok(times);
+        }
+        Ok(self.fused_stage(st, dt, a, b))
     }
 
     fn name(&self) -> &'static str {
@@ -220,10 +465,14 @@ impl StageBackend for ParallelRefBackend {
         a: f32,
         b: f32,
     ) -> Result<KernelTimes> {
-        let split = classify_elements(&st.conn, st.k_real);
-        let times = self.phase_boundary(st, &split, dt, a, b);
-        self.pending = Some(split);
-        Ok(times)
+        if self.legacy {
+            let split = classify_elements(&st.conn, st.k_real);
+            self.classify_computes += 1;
+            let times = self.legacy_phase_boundary(st, &split, dt, a, b);
+            self.legacy_pending = Some(split);
+            return Ok(times);
+        }
+        Ok(self.fused_boundary(st, dt, a, b))
     }
 
     fn stage_interior(
@@ -233,24 +482,215 @@ impl StageBackend for ParallelRefBackend {
         a: f32,
         b: f32,
     ) -> Result<KernelTimes> {
-        let split = match self.pending.take() {
-            Some(s) => s,
-            None => classify_elements(v.conn, v.k_real),
-        };
-        Ok(self.phase_interior(v, &split, dt, a, b))
+        if self.legacy {
+            let split = match self.legacy_pending.take() {
+                Some(s) => s,
+                None => {
+                    self.classify_computes += 1;
+                    classify_elements(v.conn, v.k_real)
+                }
+            };
+            return Ok(self.legacy_phase_interior(v, &split, dt, a, b));
+        }
+        Ok(self.fused_interior(v, dt, a, b))
+    }
+
+    fn pool_generation(&self) -> Option<u64> {
+        Some(self.pool.generation())
+    }
+
+    fn classify_computes(&self) -> u64 {
+        self.classify_computes
     }
 }
 
+// ---------------------------------------------------------------------------
+// the fused pool sweep
+// ---------------------------------------------------------------------------
+
+/// Raw shared-mutable array view handed to pool workers, so disjoint
+/// per-element slices can be carved out concurrently from one shared
+/// closure.
+///
+/// Safety contract, upheld by [`fused_sweep`]:
+/// * concurrent `slice_mut` calls use disjoint index ranges — the element
+///   lists are duplicate-free and chunked disjointly across workers;
+/// * `slice` (shared) reads only happen in dispatch phases where no
+///   worker `slice_mut`s the same array — phases are separated by the
+///   pool barrier, which provides the happens-before edges.
+#[derive(Clone, Copy)]
+struct RawMut {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: access discipline documented on the type and argued at each use.
+unsafe impl Send for RawMut {}
+unsafe impl Sync for RawMut {}
+
+impl RawMut {
+    fn new(s: &mut [f32]) -> Self {
+        RawMut { ptr: s.as_mut_ptr(), len: s.len() }
+    }
+
+    /// # Safety
+    /// The range must be in bounds and disjoint from every concurrent
+    /// `slice_mut`/`slice` range of this array.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn slice_mut(&self, start: usize, len: usize) -> &mut [f32] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+
+    /// # Safety
+    /// No concurrent `slice_mut` may overlap the range for the lifetime
+    /// of the returned slice.
+    unsafe fn slice(&self, start: usize, len: usize) -> &[f32] {
+        debug_assert!(start + len <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(start), len)
+    }
+}
+
+/// The read-only block tables shared by every worker of a fused sweep.
+struct FusedShared<'a> {
+    m: usize,
+    conn: &'a [i32],
+    halo: &'a [f32],
+    halo_idx: &'a [i32],
+    mats: &'a [f32],
+    halo_mats: &'a [f32],
+    h: &'a [f32],
+}
+
+/// Worker `w`'s slice of `0..len` split into `nw` contiguous chunks.
+fn chunk_range(w: usize, len: usize, nw: usize) -> std::ops::Range<usize> {
+    let nw = nw.max(1);
+    let chunk = len.div_euclid(nw) + usize::from(len % nw != 0);
+    let start = (w * chunk).min(len);
+    let end = (start + chunk).min(len);
+    start..end
+}
+
+/// One fused pool rendezvous (see module docs):
+///
+/// * phase 0 — each worker sweeps its disjoint chunk of `elems`, fusing
+///   per element: RHS into `dq`, then the low-storage RK update of
+///   `q`/`res` in place. Sound because the RHS reads only the element's
+///   own `q` (passed explicitly) plus *traces*, and no trace is written
+///   in this phase.
+/// * phase 1 (when `refresh_all = Some(k_real)`) — behind the pool
+///   barrier, the full trace refresh of elements `0..k_real`, chunked the
+///   same way (each worker writes only its own elements' traces and reads
+///   only their `q`, which no one writes anymore).
+#[allow(clippy::too_many_arguments)]
+fn fused_sweep(
+    basis: &LglBasis,
+    pool: &WorkerPool,
+    scratch: &[Mutex<ElemScratch>],
+    elems: &[usize],
+    refresh_all: Option<usize>,
+    sh: FusedShared<'_>,
+    q: RawMut,
+    res: RawMut,
+    dq: RawMut,
+    traces: RawMut,
+    dt: f32,
+    a: f32,
+    b: f32,
+) -> KernelTimes {
+    let m = sh.m;
+    let esz = NFIELDS * m * m * m;
+    let tsz = 6 * NFIELDS * m * m;
+    if elems.is_empty() && refresh_all.is_none() {
+        // e.g. the boundary phase of a halo-less single block
+        return KernelTimes::default();
+    }
+    let nw = pool.threads();
+    debug_assert!(scratch.len() >= nw);
+    let out: Vec<Mutex<KernelTimes>> =
+        (0..nw).map(|_| Mutex::new(KernelTimes::default())).collect();
+    let phases = 1 + usize::from(refresh_all.is_some());
+    pool.run_phased(phases, |w, phase| {
+        if phase == 0 {
+            let r = chunk_range(w, elems.len(), nw);
+            if r.is_empty() {
+                return;
+            }
+            let mut t = KernelTimes::default();
+            // scratch/timer locks are uncontended (one worker per slot);
+            // tolerate poisoning from an earlier panicked dispatch — the
+            // scratch holds no cross-stage invariants
+            let mut scr = scratch[w].lock().unwrap_or_else(|e| e.into_inner());
+            // SAFETY: no worker writes `traces` in phase 0, so a shared
+            // view of the whole array is sound.
+            let tr_view: &[f32] = unsafe { traces.slice(0, traces.len) };
+            let cx = RhsCtx {
+                m,
+                traces: tr_view,
+                halo: sh.halo,
+                conn: sh.conn,
+                halo_idx: sh.halo_idx,
+                mats: sh.mats,
+                halo_mats: sh.halo_mats,
+                h: sh.h,
+            };
+            for &e in &elems[r] {
+                // SAFETY: element lists are duplicate-free and chunks are
+                // disjoint across workers, so these per-element ranges
+                // never overlap between concurrent workers.
+                let (q_e, res_e, dq_e) = unsafe {
+                    (
+                        q.slice_mut(e * esz, esz),
+                        res.slice_mut(e * esz, esz),
+                        dq.slice_mut(e * esz, esz),
+                    )
+                };
+                rhs_element(&cx, basis, e, q_e, dq_e, &mut scr, &mut t);
+                let t0 = Instant::now();
+                update_elem(q_e, res_e, dq_e, dt, a, b);
+                t.rk += t0.elapsed().as_secs_f64();
+            }
+            out[w].lock().unwrap_or_else(|e| e.into_inner()).accumulate(&t);
+        } else {
+            let k_real = refresh_all.expect("phase 1 only scheduled with refresh_all");
+            let r = chunk_range(w, k_real, nw);
+            if r.is_empty() {
+                return;
+            }
+            let t0 = Instant::now();
+            for e in r {
+                // SAFETY: per-element ranges, disjoint across workers; no
+                // worker writes `q` in this phase (RK finished behind the
+                // pool barrier), so the shared read of `q_e` is sound.
+                let (q_e, tr_e) =
+                    unsafe { (q.slice(e * esz, esz), traces.slice_mut(e * tsz, tsz)) };
+                refresh_elem_traces(m, q_e, tr_e);
+            }
+            out[w].lock().unwrap_or_else(|e| e.into_inner()).interp_q += t0.elapsed().as_secs_f64();
+        }
+    });
+    let mut total = KernelTimes::default();
+    for o in &out {
+        total.accumulate(&o.lock().unwrap_or_else(|e| e.into_inner()));
+    }
+    total
+}
+
+// ---------------------------------------------------------------------------
+// legacy scoped-thread sweeps (benches only; the pre-pool implementation)
+// ---------------------------------------------------------------------------
+
 /// RHS sweep over an element subset from up to `threads` scoped workers.
 /// Each worker owns one [`ElemScratch`] and a disjoint set of per-element
-/// `dq` slices (handed out through a take-once slot table, so no unsafe
-/// aliasing anywhere). Returns the per-thread kernel timers summed.
+/// `dq` slices (handed out through a take-once slot table). Returns the
+/// per-thread kernel timers summed.
 fn par_rhs(
     basis: &LglBasis,
     threads: usize,
     pool: &mut [ElemScratch],
     dq: &mut [f32],
     cx: &RhsCtx<'_>,
+    q: &[f32],
     elems: &[usize],
 ) -> KernelTimes {
     let mut total = KernelTimes::default();
@@ -262,7 +702,15 @@ fn par_rhs(
     if nt == 1 {
         let scr = &mut pool[0];
         for &e in elems {
-            rhs_element(cx, basis, e, &mut dq[e * esz..(e + 1) * esz], scr, &mut total);
+            rhs_element(
+                cx,
+                basis,
+                e,
+                &q[e * esz..(e + 1) * esz],
+                &mut dq[e * esz..(e + 1) * esz],
+                scr,
+                &mut total,
+            );
         }
         return total;
     }
@@ -285,7 +733,7 @@ fn par_rhs(
                 s.spawn(move || {
                     let mut t = KernelTimes::default();
                     for (e, dq_e) in items {
-                        rhs_element(&cx, basis, e, dq_e, scr, &mut t);
+                        rhs_element(&cx, basis, e, &q[e * esz..(e + 1) * esz], dq_e, scr, &mut t);
                     }
                     t
                 })
@@ -362,7 +810,7 @@ fn update_elem(q_e: &mut [f32], r_e: &mut [f32], dq_e: &[f32], dt: f32, a: f32, 
     }
 }
 
-/// Threaded trace refresh of an element subset.
+/// Threaded trace refresh of an element subset (legacy path).
 fn par_refresh(threads: usize, m: usize, q: &[f32], traces: &mut [f32], elems: &[usize]) {
     if elems.is_empty() {
         return;
@@ -464,6 +912,45 @@ mod tests {
     }
 
     #[test]
+    fn legacy_scoped_matches_fused_bitwise() {
+        // the retained pre-pool pipeline and the fused pool pipeline must
+        // agree exactly, under both the full stage and the split phases
+        let order = 2;
+        let mesh = unit_cube_geometry(2);
+        let owners: Vec<usize> = (0..8).map(|e| usize::from(e >= 4)).collect();
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 2);
+        let basis = LglBasis::new(order);
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        let mut fused_st =
+            BlockState::from_local_block(&blocks[0], order, blocks[0].len(), blocks[0].halo_len);
+        fused_st.set_initial_condition(&basis, |x| {
+            crate::solver::analytic::standing_wave(x, 0.0, 1.0, 1.0, w)
+        });
+        let mut legacy_st = fused_st.clone();
+        let mut fused = ParallelRefBackend::with_threads(order, 2);
+        let mut legacy = ParallelRefBackend::legacy_scoped(order, 2);
+        for s in 0..N_STAGES {
+            let (a, b) = (LSRK_A[s] as f32, LSRK_B[s] as f32);
+            fused.stage(&mut fused_st, 1e-3, a, b).unwrap();
+            legacy.stage(&mut legacy_st, 1e-3, a, b).unwrap();
+        }
+        assert_eq!(fused_st.q, legacy_st.q);
+        assert_eq!(fused_st.res, legacy_st.res);
+        assert_eq!(fused_st.traces, legacy_st.traces);
+        // split phases too
+        fused.stage_boundary(&mut fused_st, 1e-3, -0.3, 0.7).unwrap();
+        legacy.stage_boundary(&mut legacy_st, 1e-3, -0.3, 0.7).unwrap();
+        {
+            let (mut fv, _) = fused_st.split_for_overlap();
+            fused.stage_interior(&mut fv, 1e-3, -0.3, 0.7).unwrap();
+            let (mut lv, _) = legacy_st.split_for_overlap();
+            legacy.stage_interior(&mut lv, 1e-3, -0.3, 0.7).unwrap();
+        }
+        assert_eq!(fused_st.q, legacy_st.q);
+        assert_eq!(fused_st.traces, legacy_st.traces);
+    }
+
+    #[test]
     fn split_stage_equals_fused_stage() {
         // stage_boundary + scatter-free stage_interior == stage()
         let order = 2;
@@ -486,6 +973,58 @@ mod tests {
         split.stage_interior(&mut view, 1e-3, -0.3, 0.7).unwrap();
         assert_eq!(a_state.q, b_state.q);
         assert_eq!(a_state.traces, b_state.traces);
+    }
+
+    #[test]
+    fn classification_is_memoized_across_stages() {
+        let order = 2;
+        let mesh = unit_cube_geometry(2);
+        let owners: Vec<usize> = (0..8).map(|e| usize::from(e >= 4)).collect();
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 2);
+        let basis = LglBasis::new(order);
+        let w = std::f64::consts::PI * 3f64.sqrt();
+        let mut st =
+            BlockState::from_local_block(&blocks[0], order, blocks[0].len(), blocks[0].halo_len);
+        st.set_initial_condition(&basis, |x| {
+            crate::solver::analytic::standing_wave(x, 0.0, 1.0, 1.0, w)
+        });
+        let mut par = ParallelRefBackend::with_threads(order, 2);
+        assert_eq!(par.classify_computes(), 0);
+        for _ in 0..5 {
+            par.stage_boundary(&mut st, 1e-3, -0.3, 0.7).unwrap();
+            let (mut view, _halo) = st.split_for_overlap();
+            par.stage_interior(&mut view, 1e-3, -0.3, 0.7).unwrap();
+        }
+        assert_eq!(
+            par.classify_computes(),
+            1,
+            "split phases over one block must classify exactly once"
+        );
+        // the fused full stage never needs the classification
+        let mut par2 = ParallelRefBackend::with_threads(order, 2);
+        par2.stage(&mut st, 1e-3, -0.3, 0.7).unwrap();
+        assert_eq!(par2.classify_computes(), 0);
+        // a different block (fresh uid) invalidates the cache
+        let mut st2 =
+            BlockState::from_local_block(&blocks[1], order, blocks[1].len(), blocks[1].halo_len);
+        st2.set_initial_condition(&basis, |x| {
+            crate::solver::analytic::standing_wave(x, 0.0, 1.0, 1.0, w)
+        });
+        par.stage_boundary(&mut st2, 1e-3, -0.3, 0.7).unwrap();
+        assert_eq!(par.classify_computes(), 2, "new block identity reclassifies");
+    }
+
+    #[test]
+    fn pool_generation_is_stable_and_shared() {
+        let a = ParallelRefBackend::with_threads(2, 2);
+        let b = ParallelRefBackend::with_threads(2, 2);
+        assert_ne!(a.pool_generation(), 0);
+        assert_ne!(a.pool_generation(), b.pool_generation());
+        // backends sharing one pool report the same generation
+        let pool = Arc::new(WorkerPool::new(2, None));
+        let c = ParallelRefBackend::with_pool(2, pool.clone());
+        let d = ParallelRefBackend::with_pool(2, pool);
+        assert_eq!(c.pool_generation(), d.pool_generation());
     }
 
     #[test]

@@ -121,15 +121,16 @@ impl RefScratch {
     }
 }
 
-/// Borrowed view of everything the RHS *reads*: the block's state arrays
-/// minus `res`. Safe to share across worker threads while each thread
-/// writes its own elements' `dq` slices. The interior sweep of the
-/// overlapped schedule passes `halo: &[]` — interior elements never index
-/// the halo by construction.
+/// Borrowed view of the *shared* state the RHS reads: traces, halo and
+/// the immutable block tables — everything except the element's own `q`,
+/// which is passed per element so the fused pool sweep can hand each
+/// worker exclusive `q`/`res` slices of its elements while all workers
+/// share this one context. Safe to share across worker threads. The
+/// interior sweep of the overlapped schedule passes `halo: &[]` —
+/// interior elements never index the halo by construction.
 #[derive(Clone, Copy)]
 pub struct RhsCtx<'a> {
     pub m: usize,
-    pub q: &'a [f32],
     pub traces: &'a [f32],
     pub halo: &'a [f32],
     pub conn: &'a [i32],
@@ -143,7 +144,6 @@ impl<'a> RhsCtx<'a> {
     pub fn of(st: &'a BlockState) -> Self {
         RhsCtx {
             m: st.m,
-            q: &st.q,
             traces: &st.traces,
             halo: &st.halo,
             conn: &st.conn,
@@ -201,21 +201,25 @@ fn rhs(st: &BlockState, basis: &LglBasis, scratch: &mut RefScratch, times: &mut 
     let vol = st.m * st.m * st.m;
     for e in 0..st.k_real {
         let qb = e * NFIELDS * vol;
+        let q_e = &st.q[qb..qb + NFIELDS * vol];
         let dq = &mut scratch.dq[qb..qb + NFIELDS * vol];
-        rhs_element(&cx, basis, e, dq, &mut scratch.elem, times);
+        rhs_element(&cx, basis, e, q_e, dq, &mut scratch.elem, times);
     }
 }
 
-/// dq/dt of a single element into `dq` (a `NFIELDS * m^3` slice).
+/// dq/dt of a single element into `dq` (a `NFIELDS * m^3` slice); `q_e`
+/// is the element's own `(9, M, M, M)` block of q.
 ///
-/// Reads only this element's `q`, the face traces of its same-block
+/// Reads only `q_e`, the face traces of the element's same-block
 /// neighbors, and its halo slots — never the `q` of other elements — so
 /// disjoint element sets can be swept concurrently against one shared
-/// [`RhsCtx`].
+/// [`RhsCtx`], even while each worker updates its own elements' `q` in
+/// place (the fused RHS+RK pass of [`super::parallel`]).
 pub(crate) fn rhs_element(
     cx: &RhsCtx<'_>,
     basis: &LglBasis,
     e: usize,
+    q_e: &[f32],
     dq: &mut [f32],
     scr: &mut ElemScratch,
     times: &mut KernelTimes,
@@ -226,7 +230,6 @@ pub(crate) fn rhs_element(
     let d = &basis.d32;
     let w0 = basis.w0() as f32;
 
-    let qb = e * NFIELDS * vol;
     let rho = cx.mats[e * 3];
     let lam = cx.mats[e * 3 + 1];
     let mu = cx.mats[e * 3 + 2];
@@ -235,7 +238,7 @@ pub(crate) fn rhs_element(
 
     // ---- volume_loop: stress + tensor-product derivatives --------------
     let t0 = Instant::now();
-    let q = &cx.q[qb..qb + NFIELDS * vol];
+    let q = q_e;
     // pointwise stress (Voigt)
     for n in 0..vol {
         let tr = q[n] + q[vol + n] + q[2 * vol + n];

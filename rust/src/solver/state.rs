@@ -16,14 +16,26 @@
 //! (python/tests/test_model.py::test_padding_elements_do_not_affect_real_ones
 //! proves non-interference).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::mesh::LocalBlock;
 use crate::solver::basis::LglBasis;
 
 /// Number of solution fields (Voigt strain 6 + velocity 3).
 pub const NFIELDS: usize = 9;
 
+/// Source of process-unique block identities (see [`BlockState::uid`]).
+static NEXT_BLOCK_UID: AtomicU64 = AtomicU64::new(1);
+
 #[derive(Debug, Clone)]
 pub struct BlockState {
+    /// Process-unique identity of this block's *connectivity* (assigned at
+    /// construction; clones share it, which is correct — a clone has
+    /// identical connectivity). The parallel backend keys its memoized
+    /// boundary/interior classification on this, so a freed-and-reallocated
+    /// block can never alias a stale cache entry the way a raw pointer key
+    /// could. Use [`BlockState::fresh_uid`] when building a state by hand.
+    pub uid: u64,
     pub order: usize,
     pub m: usize,
     /// Real / padded element counts.
@@ -81,6 +93,7 @@ impl BlockState {
             halo_mats[s * 3..s * 3 + 3].copy_from_slice(&blk.halo_mats[s]);
         }
         BlockState {
+            uid: Self::fresh_uid(),
             order,
             m,
             k_real,
@@ -98,6 +111,12 @@ impl BlockState {
             h: hvec,
             centers: blk.centers.clone(),
         }
+    }
+
+    /// A fresh process-unique block identity, for callers that build a
+    /// [`BlockState`] by hand instead of via [`BlockState::from_local_block`].
+    pub fn fresh_uid() -> u64 {
+        NEXT_BLOCK_UID.fetch_add(1, Ordering::Relaxed)
     }
 
     /// Physical coordinates of every LGL node of real element `e`.
@@ -185,6 +204,7 @@ impl BlockState {
     /// others.
     pub fn split_for_overlap(&mut self) -> (InteriorView<'_>, &mut [f32]) {
         let BlockState {
+            uid,
             order,
             m,
             k_real,
@@ -202,6 +222,7 @@ impl BlockState {
         } = self;
         (
             InteriorView {
+                uid: *uid,
                 order: *order,
                 m: *m,
                 k_real: *k_real,
@@ -299,6 +320,8 @@ impl BlockState {
 /// [`crate::solver::StageBackend::stage_interior`] receives: interior
 /// elements have no halo faces, so the halo can be rewritten concurrently.
 pub struct InteriorView<'a> {
+    /// The underlying block's identity (see [`BlockState::uid`]).
+    pub uid: u64,
     pub order: usize,
     pub m: usize,
     pub k_real: usize,

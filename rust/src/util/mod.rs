@@ -3,7 +3,9 @@
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod rng;
 
 pub use json::Json;
+pub use pool::{TaskThread, WorkerPool};
 pub use rng::Rng;

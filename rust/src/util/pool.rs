@@ -1,0 +1,602 @@
+//! Persistent execution resources for the stage hot path.
+//!
+//! Two primitives replace the per-stage `std::thread` traffic the solver
+//! used to pay (spawn/join per sweep, a scatter thread per stage):
+//!
+//! * [`WorkerPool`] — a fork-join pool whose OS threads live as long as
+//!   the pool (one per hardware-thread of the worker's budget, minus the
+//!   caller, which participates as worker 0). A dispatch is a
+//!   *rendezvous*: publish one shared closure, run it as
+//!   `f(worker, phase)` on every worker, meet at a reusable barrier. A
+//!   multi-phase dispatch reuses the same wake-up: phases are separated
+//!   by pool-internal barriers (a few atomic ops), not by fresh
+//!   spawn/join cycles, so a fused RHS + RK + trace-refresh stage costs
+//!   one wake-up instead of three thread-spawn sweeps.
+//! * [`TaskThread`] — a single persistent thread for overlap work (the
+//!   driver's halo scatter), replacing a `std::thread::spawn` per stage.
+//!
+//! **Core pinning.** A pool built with a `pin_base` pins worker `w` to
+//! the `(pin_base + w)`-th CPU this process is *allowed* to run on (the
+//! `sched_getaffinity` mask — so cgroup-restricted containers pin onto
+//! real cores; spawned workers at startup, the first dispatching thread
+//! on its first dispatch), turning the cluster's divided thread budget
+//! (`RustParallel { threads: 0 }`) into a real affinity assignment
+//! instead of an honor system. Pinning uses raw `sched_{get,set}affinity`
+//! syscalls (the offline build carries no libc crate) and degrades to a
+//! no-op on unsupported targets or when the kernel refuses.
+//!
+//! Every pool carries a process-unique **generation id**
+//! ([`WorkerPool::generation`]): backends expose it so the cluster tests
+//! can assert that a rebalance which keeps a worker's blocks also keeps
+//! its pool (same generation), while rebuilt workers show a fresh one.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier, Condvar, Mutex, Once};
+use std::thread::JoinHandle;
+
+/// Process-wide pool id source (1-based so 0 can mean "no pool").
+static NEXT_GENERATION: AtomicU64 = AtomicU64::new(1);
+
+/// Process-wide count of OS threads this module ever spawned (pool
+/// workers + task threads). Monotonic; tests snapshot it around a warm
+/// hot loop to prove the loop spawns nothing.
+static SPAWNED: AtomicU64 = AtomicU64::new(0);
+
+/// Total OS threads spawned by pools and task threads so far (monotonic).
+pub fn os_threads_spawned() -> u64 {
+    SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Pin the calling OS thread to one core. Returns whether the affinity
+/// call succeeded; `false` on unsupported targets or kernel refusal
+/// (sandboxes commonly deny affinity changes) — callers treat pinning as
+/// best-effort.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+pub fn pin_current_thread(core: usize) -> bool {
+    // cpu_set_t-sized mask: 1024 cpus
+    let mut mask = [0u64; 16];
+    if core >= 16 * 64 {
+        return false;
+    }
+    mask[core / 64] |= 1u64 << (core % 64);
+    let ret: isize;
+    // SAFETY: raw sched_setaffinity(0, sizeof(mask), &mask) — syscall 203
+    // on x86_64. Reads `mask`, writes no caller memory; rcx/r11 are the
+    // syscall-clobbered registers. The offline build has no libc crate,
+    // hence the direct syscall.
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203isize => ret,
+            in("rdi") 0usize,
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    ret == 0
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+pub fn pin_current_thread(_core: usize) -> bool {
+    false
+}
+
+/// CPU ids this process is actually allowed to run on, from the
+/// `sched_getaffinity` mask (Linux x86_64). Pinned core ranges index into
+/// this list, so cgroup/affinity-restricted environments (CI containers
+/// confined to, say, CPUs 8–15) pin onto *allowed* cores instead of
+/// silently failing every affinity call. Falls back to
+/// `0..available_parallelism` when the mask can't be read.
+fn allowed_cpus() -> Vec<usize> {
+    #[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+    {
+        let mut mask = [0u64; 16];
+        let ret: isize;
+        // SAFETY: raw sched_getaffinity(0, sizeof(mask), &mut mask) —
+        // syscall 204 on x86_64; writes at most sizeof(mask) bytes into
+        // `mask`, which outlives the call.
+        unsafe {
+            std::arch::asm!(
+                "syscall",
+                inlateout("rax") 204isize => ret,
+                in("rdi") 0usize,
+                in("rsi") std::mem::size_of_val(&mask),
+                in("rdx") mask.as_mut_ptr(),
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        if ret > 0 {
+            let cpus: Vec<usize> = (0..16 * 64)
+                .filter(|&c| mask[c / 64] & (1u64 << (c % 64)) != 0)
+                .collect();
+            if !cpus.is_empty() {
+                return cpus;
+            }
+        }
+    }
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (0..hw).collect()
+}
+
+/// Type- and lifetime-erased dispatch closure. The pointee is only ever
+/// dereferenced between the epoch publish and the final barrier of one
+/// `run_phased` call, during which the caller is blocked and the closure
+/// is alive on its stack.
+#[derive(Clone, Copy)]
+struct Job(*const (dyn Fn(usize, usize) + Sync + 'static));
+
+// SAFETY: the pointee is Sync (shared calls from many threads are fine)
+// and outlives every dereference (see Job docs).
+unsafe impl Send for Job {}
+
+fn erase_job<'a>(f: &'a (dyn Fn(usize, usize) + Sync + 'a)) -> Job {
+    // SAFETY: pure lifetime erasure of a fat pointer (layout-identical
+    // types); validity is argued on `Job`.
+    Job(unsafe {
+        std::mem::transmute::<
+            *const (dyn Fn(usize, usize) + Sync + 'a),
+            *const (dyn Fn(usize, usize) + Sync + 'static),
+        >(f)
+    })
+}
+
+struct Ctl {
+    /// Bumped once per dispatch; workers run a job when they see a fresh
+    /// epoch.
+    epoch: u64,
+    phases: usize,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    ctl: Mutex<Ctl>,
+    work: Condvar,
+    /// One generation per phase; participants = all pool workers
+    /// including the dispatching caller.
+    barrier: Barrier,
+    panicked: AtomicBool,
+}
+
+/// The persistent fork-join pool (see module docs).
+pub struct WorkerPool {
+    /// `None` when `threads == 1`: dispatches run inline on the caller.
+    shared: Option<Arc<Shared>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+    generation: u64,
+    /// The allowed CPU worker 0 (the caller) pins to, when pinning.
+    caller_core: Option<usize>,
+    caller_pin: Once,
+    /// Serializes dispatches from multiple owners of a shared pool.
+    dispatch: Mutex<()>,
+}
+
+impl WorkerPool {
+    /// Pool with `threads` total workers (floor 1). `threads - 1` OS
+    /// threads are spawned here and live until drop; the thread calling
+    /// [`WorkerPool::run`] acts as worker 0. With `pin_base`, worker `w`
+    /// is pinned to the `(pin_base + w)`-th *allowed* CPU of this process
+    /// (the `sched_getaffinity` mask, wrapping), so restricted
+    /// environments pin onto real cores; still best-effort when the
+    /// kernel refuses.
+    pub fn new(threads: usize, pin_base: Option<usize>) -> WorkerPool {
+        let threads = threads.max(1);
+        let generation = NEXT_GENERATION.fetch_add(1, Ordering::Relaxed);
+        // resolve the whole pinned range up front: logical pool worker w
+        // -> allowed_cpus[(pin_base + w) % n_allowed]; ranges straddling
+        // the machine edge wrap instead of letting the tail silently float
+        let pin_cores: Option<Vec<usize>> = pin_base.map(|b| {
+            let cpus = allowed_cpus();
+            (0..threads).map(|w| cpus[(b + w) % cpus.len()]).collect()
+        });
+        let mut handles = Vec::new();
+        let shared = if threads > 1 {
+            let shared = Arc::new(Shared {
+                ctl: Mutex::new(Ctl { epoch: 0, phases: 0, job: None, shutdown: false }),
+                work: Condvar::new(),
+                barrier: Barrier::new(threads),
+                panicked: AtomicBool::new(false),
+            });
+            for w in 1..threads {
+                let sh = shared.clone();
+                let pin = pin_cores.as_ref().map(|c| c[w]);
+                SPAWNED.fetch_add(1, Ordering::SeqCst);
+                handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("pool{generation}-w{w}"))
+                        .spawn(move || worker_main(sh, w, pin))
+                        .expect("spawning pool worker"),
+                );
+            }
+            Some(shared)
+        } else {
+            None
+        };
+        WorkerPool {
+            shared,
+            handles,
+            threads,
+            generation,
+            caller_core: pin_cores.map(|c| c[0]),
+            caller_pin: Once::new(),
+            dispatch: Mutex::new(()),
+        }
+    }
+
+    /// Total workers (caller included).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Process-unique id of this pool (nonzero). Stable for the pool's
+    /// lifetime; a rebuilt backend gets a fresh one.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// One rendezvous: run `f(worker)` once per worker (0..threads), the
+    /// caller participating as worker 0. Returns after every worker
+    /// finished.
+    pub fn run(&self, f: impl Fn(usize) + Sync) {
+        self.run_phased(1, |w, _| f(w));
+    }
+
+    /// One rendezvous, `phases` internally-barriered passes: every worker
+    /// runs `f(worker, 0)`, meets at the pool barrier, runs
+    /// `f(worker, 1)`, ... The barrier gives each phase a happens-before
+    /// edge over all of the previous one — writes of phase p are visible
+    /// to every worker in phase p+1 — at a cost of a few atomic ops
+    /// instead of a spawn/join sweep.
+    pub fn run_phased(&self, phases: usize, f: impl Fn(usize, usize) + Sync) {
+        if phases == 0 {
+            return;
+        }
+        if let Some(core) = self.caller_core {
+            self.caller_pin.call_once(|| {
+                pin_current_thread(core);
+            });
+        }
+        let Some(shared) = &self.shared else {
+            for phase in 0..phases {
+                f(0, phase);
+            }
+            return;
+        };
+        // a panicked dispatch poisons this mutex while unwinding through
+        // the guard; the () payload carries no invariants, so keep going
+        let _serialize = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        {
+            let mut ctl = shared.ctl.lock().unwrap();
+            ctl.job = Some(erase_job(&f));
+            ctl.phases = phases;
+            ctl.epoch = ctl.epoch.wrapping_add(1);
+            shared.work.notify_all();
+        }
+        let mut caller_panic: Option<Box<dyn std::any::Any + Send>> = None;
+        for phase in 0..phases {
+            if caller_panic.is_none() && !shared.panicked.load(Ordering::Relaxed) {
+                if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(0, phase))) {
+                    caller_panic = Some(p);
+                }
+            }
+            shared.barrier.wait();
+        }
+        // every worker is past its last use of `f` once the final barrier
+        // released, so returning (and dropping f) is safe
+        if let Some(p) = caller_panic {
+            shared.panicked.store(false, Ordering::SeqCst);
+            resume_unwind(p);
+        }
+        if shared.panicked.swap(false, Ordering::SeqCst) {
+            panic!("pool worker panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            shared.ctl.lock().unwrap_or_else(|e| e.into_inner()).shutdown = true;
+            shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(shared: Arc<Shared>, w: usize, pin: Option<usize>) {
+    if let Some(core) = pin {
+        pin_current_thread(core);
+    }
+    let mut seen = 0u64;
+    loop {
+        let (job, phases) = {
+            let mut ctl = shared.ctl.lock().unwrap();
+            loop {
+                if ctl.shutdown {
+                    return;
+                }
+                if ctl.epoch != seen {
+                    seen = ctl.epoch;
+                    break (ctl.job.expect("dispatch published a job"), ctl.phases);
+                }
+                ctl = shared.work.wait(ctl).unwrap();
+            }
+        };
+        // SAFETY: see Job — the dispatcher blocks in run_phased until the
+        // final barrier, keeping the closure alive for every use here.
+        let f = unsafe { &*job.0 };
+        for phase in 0..phases {
+            if !shared.panicked.load(Ordering::Relaxed)
+                && catch_unwind(AssertUnwindSafe(|| f(w, phase))).is_err()
+            {
+                shared.panicked.store(true, Ordering::SeqCst);
+            }
+            shared.barrier.wait();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the persistent overlap thread
+// ---------------------------------------------------------------------------
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// A single persistent thread executing one submitted task at a time —
+/// the replacement for the driver's per-stage scatter `thread::spawn`.
+pub struct TaskThread {
+    tx: Option<Sender<Task>>,
+    done: Receiver<std::thread::Result<()>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl TaskThread {
+    pub fn new(name: &str) -> TaskThread {
+        let (tx, rx) = channel::<Task>();
+        let (dtx, done) = channel();
+        SPAWNED.fetch_add(1, Ordering::SeqCst);
+        let handle = std::thread::Builder::new()
+            .name(name.to_string())
+            .spawn(move || {
+                while let Ok(task) = rx.recv() {
+                    let r = catch_unwind(AssertUnwindSafe(task));
+                    if dtx.send(r).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawning task thread");
+        TaskThread { tx: Some(tx), done, handle: Some(handle) }
+    }
+
+    /// Run `f` on the persistent thread, concurrently with the caller.
+    /// The returned guard joins the task on [`TaskGuard::join`] or drop;
+    /// while the guard is alive, everything `f` borrows stays borrowed
+    /// (the guard carries `'env`) **and** this `TaskThread` stays
+    /// mutably borrowed — so safe code can neither touch the data nor
+    /// submit a second task before the first finished (a second
+    /// outstanding task would cross-match completion signals).
+    ///
+    /// # Safety
+    ///
+    /// The guard must actually run its drop (or `join`): leaking it with
+    /// `std::mem::forget` would let the task outlive the borrows it
+    /// captured. Callers keep the guard on the stack of the dispatching
+    /// frame.
+    pub unsafe fn run_scoped<'env>(
+        &'env mut self,
+        f: impl FnOnce() + Send + 'env,
+    ) -> TaskGuard<'env> {
+        let boxed: Box<dyn FnOnce() + Send + 'env> = Box::new(f);
+        // SAFETY: lifetime erasure only; the guard's drop blocks until the
+        // task completed, so the captures outlive every use (see above).
+        let boxed = std::mem::transmute::<
+            Box<dyn FnOnce() + Send + 'env>,
+            Box<dyn FnOnce() + Send + 'static>,
+        >(boxed);
+        self.tx
+            .as_ref()
+            .expect("task thread alive")
+            .send(boxed)
+            .expect("task thread alive");
+        TaskGuard { owner: self, pending: true }
+    }
+}
+
+impl Drop for TaskThread {
+    fn drop(&mut self) {
+        self.tx = None; // closes the channel; the thread exits its loop
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Join handle of one [`TaskThread::run_scoped`] task (joins on drop).
+pub struct TaskGuard<'env> {
+    owner: &'env TaskThread,
+    pending: bool,
+}
+
+impl TaskGuard<'_> {
+    /// Block until the task finished; re-raises a task panic.
+    pub fn join(self) {
+        drop(self);
+    }
+}
+
+impl Drop for TaskGuard<'_> {
+    fn drop(&mut self) {
+        if !self.pending {
+            return;
+        }
+        self.pending = false;
+        let r = self.owner.done.recv();
+        // never double-panic while already unwinding
+        if !std::thread::panicking() {
+            match r {
+                Ok(Ok(())) => {}
+                Ok(Err(p)) => resume_unwind(p),
+                Err(_) => panic!("task thread died"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn every_worker_runs_exactly_once() {
+        let pool = WorkerPool::new(4, None);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(|w| {
+            hits[w].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+    }
+
+    #[test]
+    fn dispatches_are_reusable() {
+        // the rendezvous must survive many cycles (per-stage usage)
+        let pool = WorkerPool::new(3, None);
+        let count = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(|_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 200 * 3);
+    }
+
+    #[test]
+    fn phase_barrier_publishes_previous_phase() {
+        // phase 0 writes per-worker slots; every worker must see all of
+        // them in phase 1 (the barrier's happens-before edge)
+        let nw = 4;
+        let pool = WorkerPool::new(nw, None);
+        let slots: Vec<AtomicUsize> = (0..nw).map(|_| AtomicUsize::new(0)).collect();
+        let sums: Vec<AtomicUsize> = (0..nw).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_phased(2, |w, phase| {
+            if phase == 0 {
+                slots[w].store(w + 1, Ordering::SeqCst);
+            } else {
+                let s: usize = slots.iter().map(|x| x.load(Ordering::SeqCst)).sum();
+                sums[w].store(s, Ordering::SeqCst);
+            }
+        });
+        for s in &sums {
+            assert_eq!(s.load(Ordering::SeqCst), (1..=nw).sum::<usize>());
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1, None);
+        let count = AtomicUsize::new(0);
+        pool.run_phased(3, |w, _| {
+            assert_eq!(w, 0);
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 3);
+        assert_eq!(pool.threads(), 1);
+    }
+
+    #[test]
+    fn generations_are_unique_and_nonzero() {
+        let a = WorkerPool::new(1, None);
+        let b = WorkerPool::new(2, None);
+        assert_ne!(a.generation(), 0);
+        assert_ne!(b.generation(), 0);
+        assert_ne!(a.generation(), b.generation());
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2, None);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(|w| {
+                if w == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "worker panic must surface on the caller");
+        // the pool stays usable after a panicked dispatch
+        let count = AtomicUsize::new(0);
+        pool.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn pinning_is_best_effort() {
+        // sandboxes may refuse affinity changes; both outcomes are legal,
+        // and a pinned pool must work either way
+        let _ = pin_current_thread(0);
+        let pool = WorkerPool::new(2, Some(0));
+        let count = AtomicUsize::new(0);
+        pool.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn task_thread_runs_scoped_borrows() {
+        let mut t = TaskThread::new("test-task");
+        let mut data = vec![0usize; 8];
+        // SAFETY: the guard is joined on this frame
+        let guard = unsafe {
+            t.run_scoped(|| {
+                for (i, v) in data.iter_mut().enumerate() {
+                    *v = i * i;
+                }
+            })
+        };
+        guard.join();
+        assert_eq!(data[7], 49);
+        // reusable across submissions
+        let guard = unsafe {
+            t.run_scoped(|| {
+                data[0] = 1;
+            })
+        };
+        guard.join();
+        assert_eq!(data[0], 1);
+    }
+
+    #[test]
+    fn task_thread_propagates_panics() {
+        let mut t = TaskThread::new("test-panic");
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let guard = unsafe { t.run_scoped(|| panic!("task boom")) };
+            guard.join();
+        }));
+        assert!(r.is_err());
+        // the thread survives a panicked task
+        let flag = AtomicBool::new(false);
+        let guard = unsafe {
+            t.run_scoped(|| {
+                flag.store(true, Ordering::SeqCst);
+            })
+        };
+        guard.join();
+        assert!(flag.load(Ordering::SeqCst));
+    }
+}

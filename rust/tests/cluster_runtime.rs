@@ -257,6 +257,91 @@ fn single_node_move_rebuilds_only_that_node() {
     assert!(diff <= 1e-6, "post-incremental-migration diff {diff}");
 }
 
+/// Pool and classification survival: a rebalance that migrates only one
+/// node's split must leave the kept workers' persistent pools (same
+/// generation) *and* their memoized boundary/interior classification
+/// (same compute count, flat across further stages) alive, while the
+/// rebuilt workers show a fresh pool generation — the backend-preserving
+/// contract of the incremental migration, extended from blocks to the
+/// execution substrate.
+#[test]
+fn pool_and_classification_survive_rebalance() {
+    let order = 2;
+    let mesh = unit_cube_geometry(6);
+    let dt = 1e-3;
+    let mut spec = ClusterSpec::new(2, order);
+    spec.mic_fraction = Some(0.2);
+    // parallel backends everywhere so every worker owns a pool
+    spec.cpu_backend = WorkerBackend::RustParallel { threads: 2 };
+    spec.mic_backend = WorkerBackend::RustParallel { threads: 1 };
+    let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    run.run(dt, 2).unwrap();
+    let before = run.worker_times().unwrap();
+    assert!(
+        before.iter().all(|t| t.pool_generation != 0),
+        "parallel workers report a live pool: {before:?}"
+    );
+    assert!(
+        before.iter().all(|t| t.classify_computes == 1),
+        "one block per worker classifies exactly once: {before:?}"
+    );
+    // move only node 1's level-2 split (same shape as
+    // single_node_move_rebuilds_only_that_node)
+    let part = run.node_partition().unwrap();
+    let fracs = run.mic_fractions().unwrap();
+    let rep = run.apply_two_level(part, vec![fracs[0], 0.45]).unwrap();
+    assert_eq!(rep.rebuilt_workers, 2, "{rep:?}");
+    run.run(dt, 2).unwrap();
+    let after = run.worker_times().unwrap();
+    for w in [0usize, 1] {
+        assert_eq!(
+            after[w].pool_generation, before[w].pool_generation,
+            "kept worker {w} must keep its pool"
+        );
+        assert_eq!(
+            after[w].classify_computes, before[w].classify_computes,
+            "kept worker {w} must keep its memoized classification"
+        );
+    }
+    for w in [2usize, 3] {
+        assert_ne!(
+            after[w].pool_generation, before[w].pool_generation,
+            "rebuilt worker {w} must get a fresh pool"
+        );
+        assert_eq!(
+            after[w].classify_computes, 1,
+            "rebuilt worker {w} reclassified its new block exactly once"
+        );
+    }
+    // the run stays bit-compatible through pool-preserving migration
+    let reference = scalar_reference(&mesh, order, dt, 4);
+    let got = run.gather_elements().unwrap();
+    let diff = max_diff(&reference, &got);
+    assert!(diff <= 1e-6, "post-migration diff {diff}");
+}
+
+/// Core pinning is best-effort and must not perturb the numerics: a
+/// pinned cluster (disjoint core ranges per parallel worker) matches the
+/// scalar reference whether or not the sandbox honors the affinity call.
+#[test]
+fn pinned_cluster_matches_scalar() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let dt = 1e-3;
+    let steps = 2;
+    let reference = scalar_reference(&mesh, order, dt, steps);
+    let mut spec = ClusterSpec::new(2, order);
+    spec.mic_fraction = Some(0.2);
+    spec.cpu_backend = WorkerBackend::RustParallel { threads: 2 };
+    spec.mic_backend = WorkerBackend::RustParallel { threads: 1 };
+    spec.pin_cores = true;
+    let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    run.run(dt, steps).unwrap();
+    let got = run.gather_elements().unwrap();
+    let diff = max_diff(&reference, &got);
+    assert!(diff <= 1e-6, "pinned cluster vs scalar diff {diff}");
+}
+
 /// Thread budgeting: explicit budgets pass through to `WorkerTimes`, and
 /// the `threads: 0` auto budget divides the machine across the *parallel*
 /// workers only (scalar workers report 1).
@@ -310,6 +395,7 @@ fn inter_node_mic_traffic_is_refused() {
             device: if w % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic },
             backend: WorkerBackend::RustRef,
             name: format!("w{w}"),
+            pin_base: None,
         })
         .collect();
     let worker_of_owner: Vec<usize> = (0..4).collect();

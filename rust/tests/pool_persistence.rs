@@ -1,0 +1,80 @@
+//! The persistent-pool contract of the stage hot path: after one warmup
+//! step, stepping the driver creates **zero** OS threads — the backends'
+//! worker pools and the driver's comm thread are created once and reused
+//! every stage. (Own test binary with a single test: the assertions
+//! snapshot process-wide counters, so nothing else may spawn pools
+//! concurrently.)
+
+use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
+use repro::solver::analytic::standing_wave;
+use repro::solver::driver::{Driver, StageBackend};
+use repro::solver::{BlockState, LglBasis, ParallelRefBackend};
+use repro::util::pool::os_threads_spawned;
+
+/// Live OS threads of this process (Linux); 0 elsewhere.
+fn live_os_threads() -> usize {
+    std::fs::read_dir("/proc/self/task").map(|d| d.count()).unwrap_or(0)
+}
+
+fn build_driver(order: usize, owners: &[usize], n_owners: usize, threads: usize) -> Driver {
+    let mesh = unit_cube_geometry(2);
+    let (lblocks, plan) = build_local_blocks(&mesh, owners, n_owners);
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut blocks: Vec<BlockState> = lblocks
+        .iter()
+        .map(|b| BlockState::from_local_block(b, order, b.len(), b.halo_len.max(1)))
+        .collect();
+    for b in blocks.iter_mut() {
+        b.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+    }
+    let backends: Vec<Box<dyn StageBackend>> = (0..n_owners)
+        .map(|_| {
+            Box::new(ParallelRefBackend::with_threads(order, threads)) as Box<dyn StageBackend>
+        })
+        .collect();
+    Driver::new(blocks, plan, backends, order)
+}
+
+#[test]
+fn warm_stage_loop_spawns_no_threads() {
+    let order = 2;
+
+    // ---- serial schedule: warm from the first stage ---------------------
+    // (the fused pipeline dispatches to pools created with the backends)
+    let mut serial = build_driver(order, &[0usize; 8], 1, 3);
+    serial.prime();
+    let spawned_before = os_threads_spawned();
+    serial.run(1e-3, 4).unwrap();
+    assert_eq!(
+        os_threads_spawned(),
+        spawned_before,
+        "the fused serial schedule dispatches to the persistent pool only"
+    );
+
+    // ---- overlapped schedule: warm after one step -----------------------
+    // (the first overlapped step creates the driver's comm thread)
+    let owners: Vec<usize> = (0..8).map(|e| e / 4).collect();
+    let mut drv = build_driver(order, &owners, 2, 2);
+    drv.overlap = true;
+    drv.prime();
+    drv.step(1e-3).unwrap(); // warmup
+    let spawned_before = os_threads_spawned();
+    let live_before = live_os_threads();
+    drv.run(1e-3, 5).unwrap();
+    assert_eq!(
+        os_threads_spawned(),
+        spawned_before,
+        "a warm overlapped stage loop must not create pool/comm threads"
+    );
+    if cfg!(target_os = "linux") {
+        assert_eq!(
+            live_os_threads(),
+            live_before,
+            "OS thread count must be flat across warm steps"
+        );
+    }
+    // sanity: warmup did create persistent threads — 2 backends x 1 extra
+    // pool worker each + the comm thread (plus the serial driver's pool)
+    assert!(spawned_before >= 3, "expected persistent threads, saw {spawned_before}");
+}

@@ -51,6 +51,7 @@ fn state_from_vec(tv: &TestVec) -> BlockState {
     let get = |n: &str| &tv.arrays.iter().find(|(name, _, _)| name == n).unwrap().2;
     let m = tv.order + 1;
     BlockState {
+        uid: BlockState::fresh_uid(),
         order: tv.order,
         m,
         k_real: tv.k,
