@@ -13,6 +13,11 @@
 //! record legacy-minus-fused per stage there and at order 7 (where both
 //! must be compute-bound), and `fused_over_legacy_*` the ratio.
 //!
+//! Each scalar run is additionally repeated with the lane dispatch pinned
+//! to the portable fallback (`ref_stage_nosimd_*`); the
+//! `simd_over_scalar_nN_kK` scalars are nosimd-mean / simd-mean on one
+//! thread — the vector kernels' own speedup, fused/threading excluded.
+//!
 //! Writes `BENCH_rhs.json` (see PERF.md for the schema).
 //! `cargo bench --offline --bench rhs_reference` — pass `-- --smoke` for
 //! the CI-sized run (fewer warmup/sample iterations, same series, so the
@@ -22,6 +27,7 @@
 use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
 use repro::solver::basis::LglBasis;
 use repro::solver::reference::{stage, RefScratch};
+use repro::solver::simd::{self, Lanes};
 use repro::solver::state::BlockState;
 use repro::solver::{ParallelRefBackend, StageBackend};
 use repro::util::bench::{Bench, JsonSink};
@@ -42,7 +48,9 @@ fn main() {
     let b = if smoke { Bench::new(1, 3) } else { Bench::new(2, 8) };
     let mut sink = JsonSink::new();
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let lanes = simd::detect();
     println!("host parallelism: {hw} threads{}", if smoke { " (smoke mode)" } else { "" });
+    println!("simd lanes: {lanes:?} ({} f32/op)", lanes.width());
 
     // (order, n per axis): the established series plus the small-block
     // order-2 regime (27 and 64 elements) where barrier removal shows
@@ -58,6 +66,25 @@ fn main() {
         });
         scalar.report_throughput(k, "elem-stages");
         sink.push(&scalar, Some((k, "elem-stages")));
+
+        // ---- same stage with the vector paths forced off ---------------
+        // (the `simd_over_scalar_*` scalars price the SIMD kernels alone:
+        // same code, same thread, lane dispatch pinned to the portable
+        // fallback; a no-op when the host has no vector unit)
+        if lanes != Lanes::Scalar {
+            let mut st = block_state(order, n);
+            let mut scratch = RefScratch::new(&st);
+            simd::set_forced(Some(Lanes::Scalar));
+            let nosimd = b.run(&format!("ref_stage_nosimd_n{order}_k{k}"), || {
+                stage(&mut st, &basis, &mut scratch, 1e-4, -0.5, 0.3);
+            });
+            simd::set_forced(None);
+            nosimd.report_throughput(k, "elem-stages");
+            sink.push(&nosimd, Some((k, "elem-stages")));
+            let speedup = nosimd.mean() / scalar.mean();
+            println!("  order {order}, k {k}: simd {speedup:.2}x over scalar lanes");
+            sink.push_scalar(&format!("simd_over_scalar_n{order}_k{k}"), speedup, "speedup");
+        }
 
         // ---- fused pool backend, thread sweep --------------------------
         let mut counts = vec![1usize, 2, 4, hw];

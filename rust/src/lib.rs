@@ -35,7 +35,9 @@
 //! * [`sim`]        — discrete-event heterogeneous cluster simulator;
 //!   `simulate_parts` prices an explicit (possibly rebalanced) two-level
 //!   partition and `SimReport::discrepancy` cross-checks it live
-//! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels;
+//! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels
+//!   (`solver::simd`: runtime-dispatched AVX2/SSE2 vector paths for the
+//!   hot kernels, bitwise-equal to scalar, `simd` feature on by default);
 //!   `solver::parallel` is the multithreaded boundary/interior CPU backend
 //!   (fused RHS+RK stage pipeline with memoized classification on a
 //!   persistent worker pool) and `solver::driver` the multi-block driver

@@ -37,6 +37,12 @@ pub struct LglBasis {
     /// `d` pre-cast to f32 once — the reference kernels work in f32 and
     /// used to pay an f64->f32 convert in the innermost derivative loop.
     pub d32: Vec<f32>,
+    /// Lane-padded transpose of `d32`: `d32t[t * 8 + l] = d[l * m + t]`,
+    /// rows padded with zeros to the widest f32 lane count (8). The SIMD
+    /// axis-2 row matvec ([`crate::solver::simd::matvec_rows`]) loads one
+    /// padded row per broadcast multiply-accumulate. Empty when m > 8
+    /// (no vector path; the scalar kernel doesn't read it).
+    pub d32t: Vec<f32>,
 }
 
 impl LglBasis {
@@ -91,8 +97,20 @@ impl LglBasis {
             }
             d[i * m + i] = -rowsum; // negative-sum trick
         }
-        let d32 = d.iter().map(|&v| v as f32).collect();
-        LglBasis { order, nodes, weights, d, d32 }
+        let d32: Vec<f32> = d.iter().map(|&v| v as f32).collect();
+        let d32t = if m <= 8 {
+            let mut t32 = vec![0.0f32; m * 8];
+            for l in 0..m {
+                for t in 0..m {
+                    // same f64 -> f32 cast as d32 so both views agree bitwise
+                    t32[t * 8 + l] = d[l * m + t] as f32;
+                }
+            }
+            t32
+        } else {
+            Vec::new()
+        };
+        LglBasis { order, nodes, weights, d, d32, d32t }
     }
 
     pub fn m(&self) -> usize {
@@ -165,6 +183,22 @@ mod tests {
                 assert_eq!(*lo, *hi as f32);
             }
         }
+    }
+
+    #[test]
+    fn d32t_is_padded_transpose_of_d32() {
+        for order in [2usize, 3, 7] {
+            let b = LglBasis::new(order);
+            let m = b.m();
+            assert_eq!(b.d32t.len(), m * 8);
+            for t in 0..m {
+                for l in 0..8 {
+                    let want = if l < m { b.d32[l * m + t] } else { 0.0 };
+                    assert_eq!(b.d32t[t * 8 + l], want, "order {order} t {t} l {l}");
+                }
+            }
+        }
+        assert!(LglBasis::new(9).d32t.is_empty(), "no padded transpose past m = 8");
     }
 
     #[test]

@@ -10,7 +10,11 @@
 //! scalar-CPU-kernel stand-in when profiling the paper's baseline on this
 //! machine — plus a **multithreaded backend** ([`parallel`]) that applies
 //! the paper's level-2 boundary/interior split inside a block and overlaps
-//! halo exchange with interior compute ([`driver`] `overlap = true`).
+//! halo exchange with interior compute ([`driver`] `overlap = true`) —
+//! and a [`simd`] lane-dispatch layer giving the hot per-element kernels
+//! AVX2/SSE2 vector paths that reproduce the scalar results bitwise
+//! (`simd` cargo feature, on by default; runtime CPU detection with a
+//! portable scalar fallback).
 
 pub mod analytic;
 pub mod basis;
@@ -19,6 +23,7 @@ pub mod exchange;
 pub mod parallel;
 pub mod reference;
 pub mod rk;
+pub mod simd;
 pub mod state;
 
 pub use basis::LglBasis;

@@ -56,7 +56,11 @@ use std::time::Instant;
 use super::basis::LglBasis;
 use super::driver::StageBackend;
 use super::reference::{rhs_element, ElemScratch, KernelTimes, RhsCtx};
-use super::state::{refresh_elem_face, refresh_elem_traces, BlockState, InteriorView, NFIELDS};
+use super::simd;
+use super::state::{
+    refresh_elem_face, refresh_elem_faces_masked, refresh_elem_traces, BlockState, InteriorView,
+    NFIELDS,
+};
 use crate::mesh::halo::LOCAL_HALO;
 use crate::partition::nested::split_block_elements;
 use crate::util::pool::WorkerPool;
@@ -69,20 +73,29 @@ pub struct BlockSplit {
     pub boundary: Vec<usize>,
     pub interior: Vec<usize>,
     pub halo_faces: Vec<(usize, usize)>,
+    /// Per-element face-dirty bitmap for the interior phase's trace
+    /// refresh (bit `f` set = face `f` still needs refreshing then).
+    /// Boundary elements drop exactly their halo-facing bits — those
+    /// faces were already refreshed by the boundary phase and `q` hasn't
+    /// changed since — so the two phases' refreshes union to exactly one
+    /// write per face per stage.
+    pub interior_refresh: Vec<u8>,
 }
 
 /// Classify a block's real elements from its local connectivity.
 pub fn classify_elements(conn: &[i32], k_real: usize) -> BlockSplit {
     let (boundary, interior) = split_block_elements(conn, k_real);
     let mut halo_faces = Vec::new();
+    let mut interior_refresh = vec![0x3Fu8; k_real];
     for &e in &boundary {
         for f in 0..6 {
             if conn[e * 6 + f] == LOCAL_HALO {
                 halo_faces.push((e, f));
+                interior_refresh[e] &= !(1u8 << f);
             }
         }
     }
-    BlockSplit { boundary, interior, halo_faces }
+    BlockSplit { boundary, interior, halo_faces, interior_refresh }
 }
 
 /// Identity of one block's classification inputs: the block's
@@ -107,6 +120,10 @@ pub struct ParallelRefBackend {
     /// One element-scratch per pool worker (locked once per dispatch —
     /// each worker touches exactly its own slot).
     scratch: Vec<Mutex<ElemScratch>>,
+    /// Per-worker kernel-time accumulators owned by the backend: a fused
+    /// sweep drains (and zeroes) them after the rendezvous instead of
+    /// allocating a fresh `Vec<Mutex<KernelTimes>>` per dispatch.
+    worker_times: Vec<Mutex<KernelTimes>>,
     /// dq accumulator keyed by (k_pad, m), reused across stages.
     dq: HashMap<(usize, usize), Vec<f32>>,
     /// Memoized boundary/interior classification (see module docs).
@@ -148,11 +165,13 @@ impl ParallelRefBackend {
         let m = basis.m();
         let threads = pool.threads();
         let scratch = (0..threads).map(|_| Mutex::new(ElemScratch::new(m))).collect();
+        let worker_times = (0..threads).map(|_| Mutex::new(KernelTimes::default())).collect();
         ParallelRefBackend {
             basis,
             threads,
             pool,
             scratch,
+            worker_times,
             dq: HashMap::new(),
             cache: None,
             classify_computes: 0,
@@ -283,6 +302,7 @@ impl ParallelRefBackend {
             mats: v.mats,
             halo_mats: v.halo_mats,
             h: v.h,
+            lanes: simd::active(),
         };
         let mut times = par_rhs(
             &self.basis,
@@ -318,7 +338,7 @@ impl ParallelRefBackend {
         let m = st.m;
         let esz = NFIELDS * m * m * m;
         let tsz = 6 * NFIELDS * m * m;
-        let ParallelRefBackend { basis, pool, scratch, dq, cache, .. } = self;
+        let ParallelRefBackend { basis, pool, scratch, worker_times, dq, cache, .. } = self;
         let split = &cache.as_ref().expect("memoized above").split;
         let dqv = dq
             .entry((st.k_pad, m))
@@ -327,7 +347,9 @@ impl ParallelRefBackend {
             basis,
             pool,
             scratch,
+            worker_times,
             &split.boundary,
+            None,
             None,
             FusedShared {
                 m,
@@ -363,7 +385,7 @@ impl ParallelRefBackend {
         self.memoize_split(v.uid, v.conn, v.k_real);
         let m = v.m;
         let esz = NFIELDS * m * m * m;
-        let ParallelRefBackend { basis, pool, scratch, dq, cache, .. } = self;
+        let ParallelRefBackend { basis, pool, scratch, worker_times, dq, cache, .. } = self;
         let split = &cache.as_ref().expect("memoized above").split;
         let dqv = dq
             .entry((v.k_pad, m))
@@ -372,8 +394,12 @@ impl ParallelRefBackend {
             basis,
             pool,
             scratch,
+            worker_times,
             &split.interior,
             Some(v.k_real),
+            // the boundary phase already refreshed the halo-facing traces
+            // (and q hasn't changed since), so skip exactly those faces
+            Some(&split.interior_refresh),
             FusedShared {
                 m,
                 conn: v.conn,
@@ -406,7 +432,7 @@ impl ParallelRefBackend {
         while self.all_elems.len() < st.k_real {
             self.all_elems.push(self.all_elems.len());
         }
-        let ParallelRefBackend { basis, pool, scratch, dq, all_elems, .. } = self;
+        let ParallelRefBackend { basis, pool, scratch, worker_times, dq, all_elems, .. } = self;
         let dqv = dq
             .entry((st.k_pad, m))
             .or_insert_with(|| vec![0.0; st.k_pad * esz]);
@@ -414,8 +440,11 @@ impl ParallelRefBackend {
             basis,
             pool,
             scratch,
+            worker_times,
             &all_elems[..st.k_real],
             Some(st.k_real),
+            // serial schedule: no boundary phase ran, refresh every face
+            None,
             FusedShared {
                 m,
                 conn: &st.conn,
@@ -571,6 +600,11 @@ fn chunk_range(w: usize, len: usize, nw: usize) -> std::ops::Range<usize> {
     start..end
 }
 
+/// Blocks at or below this many nodes (`elements x m^3`) run the whole
+/// sweep inline on the caller — the rendezvous wake-ups would cost more
+/// than the work (order 2: <= 18 elements; order 7: a single element).
+const INLINE_NODES: usize = 512;
+
 /// One fused pool rendezvous (see module docs):
 ///
 /// * phase 0 — each worker sweeps its disjoint chunk of `elems`, fusing
@@ -579,16 +613,26 @@ fn chunk_range(w: usize, len: usize, nw: usize) -> std::ops::Range<usize> {
 ///   own `q` (passed explicitly) plus *traces*, and no trace is written
 ///   in this phase.
 /// * phase 1 (when `refresh_all = Some(k_real)`) — behind the pool
-///   barrier, the full trace refresh of elements `0..k_real`, chunked the
+///   barrier, the trace refresh of elements `0..k_real`, chunked the
 ///   same way (each worker writes only its own elements' traces and reads
-///   only their `q`, which no one writes anymore).
+///   only their `q`, which no one writes anymore). With `refresh_masks`,
+///   element `e` refreshes only the faces set in `masks[e]` (the interior
+///   phase skipping the halo faces the boundary phase already wrote).
+///
+/// Only `min(threads, work-chunks)` workers are woken per rendezvous
+/// ([`WorkerPool::run_phased_limit`]); tiny blocks (see [`INLINE_NODES`])
+/// skip the rendezvous entirely. Kernel timers accumulate into the
+/// backend-owned `worker_times` slots, drained (and zeroed) here after
+/// the dispatch — no per-sweep allocation.
 #[allow(clippy::too_many_arguments)]
 fn fused_sweep(
     basis: &LglBasis,
     pool: &WorkerPool,
     scratch: &[Mutex<ElemScratch>],
+    worker_times: &[Mutex<KernelTimes>],
     elems: &[usize],
     refresh_all: Option<usize>,
+    refresh_masks: Option<&[u8]>,
     sh: FusedShared<'_>,
     q: RawMut,
     res: RawMut,
@@ -599,18 +643,19 @@ fn fused_sweep(
     b: f32,
 ) -> KernelTimes {
     let m = sh.m;
-    let esz = NFIELDS * m * m * m;
+    let vol = m * m * m;
+    let esz = NFIELDS * vol;
     let tsz = 6 * NFIELDS * m * m;
     if elems.is_empty() && refresh_all.is_none() {
         // e.g. the boundary phase of a halo-less single block
         return KernelTimes::default();
     }
-    let nw = pool.threads();
-    debug_assert!(scratch.len() >= nw);
-    let out: Vec<Mutex<KernelTimes>> =
-        (0..nw).map(|_| Mutex::new(KernelTimes::default())).collect();
+    let work = elems.len().max(refresh_all.unwrap_or(0));
+    let nw = if work * vol <= INLINE_NODES { 1 } else { pool.threads().min(work).max(1) };
+    debug_assert!(scratch.len() >= nw && worker_times.len() >= nw);
+    let lanes = simd::active();
     let phases = 1 + usize::from(refresh_all.is_some());
-    pool.run_phased(phases, |w, phase| {
+    pool.run_phased_limit(nw, phases, |w, phase| {
         if phase == 0 {
             let r = chunk_range(w, elems.len(), nw);
             if r.is_empty() {
@@ -633,6 +678,7 @@ fn fused_sweep(
                 mats: sh.mats,
                 halo_mats: sh.halo_mats,
                 h: sh.h,
+                lanes,
             };
             for &e in &elems[r] {
                 // SAFETY: element lists are duplicate-free and chunks are
@@ -647,10 +693,10 @@ fn fused_sweep(
                 };
                 rhs_element(&cx, basis, e, q_e, dq_e, &mut scr, &mut t);
                 let t0 = Instant::now();
-                update_elem(q_e, res_e, dq_e, dt, a, b);
+                update_elem(q_e, res_e, dq_e, dt, a, b, lanes);
                 t.rk += t0.elapsed().as_secs_f64();
             }
-            out[w].lock().unwrap_or_else(|e| e.into_inner()).accumulate(&t);
+            worker_times[w].lock().unwrap_or_else(|e| e.into_inner()).accumulate(&t);
         } else {
             let k_real = refresh_all.expect("phase 1 only scheduled with refresh_all");
             let r = chunk_range(w, k_real, nw);
@@ -664,14 +710,20 @@ fn fused_sweep(
                 // pool barrier), so the shared read of `q_e` is sound.
                 let (q_e, tr_e) =
                     unsafe { (q.slice(e * esz, esz), traces.slice_mut(e * tsz, tsz)) };
-                refresh_elem_traces(m, q_e, tr_e);
+                match refresh_masks {
+                    Some(masks) => refresh_elem_faces_masked(m, q_e, tr_e, masks[e]),
+                    None => refresh_elem_traces(m, q_e, tr_e),
+                }
             }
-            out[w].lock().unwrap_or_else(|e| e.into_inner()).interp_q += t0.elapsed().as_secs_f64();
+            let mut wt = worker_times[w].lock().unwrap_or_else(|e| e.into_inner());
+            wt.interp_q += t0.elapsed().as_secs_f64();
         }
     });
     let mut total = KernelTimes::default();
-    for o in &out {
-        total.accumulate(&o.lock().unwrap_or_else(|e| e.into_inner()));
+    for wt in &worker_times[..nw] {
+        let mut t = wt.lock().unwrap_or_else(|e| e.into_inner());
+        total.accumulate(&t);
+        *t = KernelTimes::default();
     }
     total
 }
@@ -762,6 +814,7 @@ fn par_update(
     if elems.is_empty() {
         return;
     }
+    let lanes = simd::active();
     let nt = threads.min(elems.len()).max(1);
     if nt == 1 {
         for &e in elems {
@@ -772,6 +825,7 @@ fn par_update(
                 dt,
                 a,
                 b,
+                lanes,
             );
         }
         return;
@@ -793,21 +847,27 @@ fn par_update(
                 .collect();
             s.spawn(move || {
                 for (q_e, r_e, dq_e) in items {
-                    update_elem(q_e, r_e, dq_e, dt, a, b);
+                    update_elem(q_e, r_e, dq_e, dt, a, b, lanes);
                 }
             });
         }
     });
 }
 
+/// Low-storage RK update of one element: `res = a*res + dt*dq` then
+/// `q += b*res`, via the lane-dispatched kernel (per-index independent,
+/// so the vector path is bitwise identical to the scalar loops).
 #[inline]
-fn update_elem(q_e: &mut [f32], r_e: &mut [f32], dq_e: &[f32], dt: f32, a: f32, b: f32) {
-    for (r, d) in r_e.iter_mut().zip(dq_e) {
-        *r = a * *r + dt * *d;
-    }
-    for (qv, r) in q_e.iter_mut().zip(r_e.iter()) {
-        *qv += b * *r;
-    }
+fn update_elem(
+    q_e: &mut [f32],
+    r_e: &mut [f32],
+    dq_e: &[f32],
+    dt: f32,
+    a: f32,
+    b: f32,
+    lanes: simd::Lanes,
+) {
+    simd::rk_update(lanes, q_e, r_e, dq_e, dt, a, b);
 }
 
 /// Threaded trace refresh of an element subset (legacy path).
@@ -882,6 +942,32 @@ mod tests {
             assert_eq!(split.boundary.len(), st.k_real);
             assert!(split.interior.is_empty());
             assert_eq!(split.halo_faces.len(), lb.halo_len);
+        }
+    }
+
+    #[test]
+    fn interior_refresh_mask_complements_halo_faces() {
+        // interior elements keep all 6 faces; boundary elements drop
+        // exactly their halo-facing bits — the two phases' refreshes
+        // union to every face, each written once
+        let mesh = unit_cube_geometry(2);
+        let owners: Vec<usize> = (0..8).map(|e| usize::from(e >= 4)).collect();
+        let (blocks, _) = build_local_blocks(&mesh, &owners, 2);
+        for lb in &blocks {
+            let st = BlockState::from_local_block(lb, 1, lb.len(), lb.halo_len.max(1));
+            let split = classify_elements(&st.conn, st.k_real);
+            assert_eq!(split.interior_refresh.len(), st.k_real);
+            let mut expect = vec![0x3Fu8; st.k_real];
+            for &(e, f) in &split.halo_faces {
+                expect[e] &= !(1u8 << f);
+            }
+            assert_eq!(split.interior_refresh, expect);
+            for &e in &split.interior {
+                assert_eq!(split.interior_refresh[e], 0x3F, "interior element {e}");
+            }
+            for &e in &split.boundary {
+                assert_ne!(split.interior_refresh[e], 0x3F, "boundary element {e} has halo faces");
+            }
         }
     }
 

@@ -20,17 +20,26 @@
 //! face kernel is generic over the exterior-trace fetch so the mirror /
 //! neighbor / halo cases are resolved outside the per-node loop instead of
 //! materializing a copied trace.
+//!
+//! The innermost loops (axpy sweeps, axis-2 matvec, pointwise stress, RK
+//! update, Riemann per-node math) dispatch through [`super::simd`]: explicit
+//! AVX2/SSE2 vector bodies when the `simd` feature is on and the host
+//! supports them, bitwise-identical scalar fallbacks otherwise. The lane
+//! width rides along in [`RhsCtx`] so one read of the global dispatch
+//! serves a whole sweep.
 
 use std::time::Instant;
 
 use super::basis::LglBasis;
+use super::simd::{self, Lanes};
 use super::state::{BlockState, NFIELDS};
 
 /// Voigt order: E11 E22 E33 E23 E13 E12 | v1 v2 v3.
 /// Stress column a (traction for normal e_a) as Voigt indices.
-const S_COL: [[usize; 3]; 3] = [[0, 5, 4], [5, 1, 3], [4, 3, 2]];
+pub(crate) const S_COL: [[usize; 3]; 3] = [[0, 5, 4], [5, 1, 3], [4, 3, 2]];
 /// Voigt slot of the symmetric pair {i, j}, i != j.
-const VOIGT_PAIR: [[usize; 3]; 3] = [[usize::MAX, 5, 4], [5, usize::MAX, 3], [4, 3, usize::MAX]];
+pub(crate) const VOIGT_PAIR: [[usize; 3]; 3] =
+    [[usize::MAX, 5, 4], [5, usize::MAX, 3], [4, 3, usize::MAX]];
 
 /// Wall-clock per paper kernel, accumulated across calls (Fig 4.1 taxonomy).
 #[derive(Debug, Clone, Copy, Default)]
@@ -138,6 +147,8 @@ pub struct RhsCtx<'a> {
     pub mats: &'a [f32],
     pub halo_mats: &'a [f32],
     pub h: &'a [f32],
+    /// SIMD lane width for this sweep (read once from the global dispatch).
+    pub lanes: Lanes,
 }
 
 impl<'a> RhsCtx<'a> {
@@ -151,6 +162,7 @@ impl<'a> RhsCtx<'a> {
             mats: &st.mats,
             halo_mats: &st.halo_mats,
             h: &st.h,
+            lanes: simd::active(),
         }
     }
 
@@ -180,12 +192,15 @@ pub fn stage(
     let m = st.m;
     let vol = m * m * m;
     let live = st.k_real * NFIELDS * vol;
-    for (r, d) in st.res[..live].iter_mut().zip(&scratch.dq[..live]) {
-        *r = a * *r + dt * *d;
-    }
-    for (qv, r) in st.q[..live].iter_mut().zip(&st.res[..live]) {
-        *qv += b * *r;
-    }
+    simd::rk_update(
+        simd::active(),
+        &mut st.q[..live],
+        &mut st.res[..live],
+        &scratch.dq[..live],
+        dt,
+        a,
+        b,
+    );
     times.rk += t0.elapsed().as_secs_f64();
 
     // ---- interp_q: refresh face traces of the updated state ------------
@@ -227,7 +242,7 @@ pub(crate) fn rhs_element(
     let m = cx.m;
     let vol = m * m * m;
     let face = m * m;
-    let d = &basis.d32;
+    let lanes = cx.lanes;
     let w0 = basis.w0() as f32;
 
     let rho = cx.mats[e * 3];
@@ -240,20 +255,12 @@ pub(crate) fn rhs_element(
     let t0 = Instant::now();
     let q = q_e;
     // pointwise stress (Voigt)
-    for n in 0..vol {
-        let tr = q[n] + q[vol + n] + q[2 * vol + n];
-        scr.stress[n] = lam * tr + 2.0 * mu * q[n];
-        scr.stress[vol + n] = lam * tr + 2.0 * mu * q[vol + n];
-        scr.stress[2 * vol + n] = lam * tr + 2.0 * mu * q[2 * vol + n];
-        scr.stress[3 * vol + n] = 2.0 * mu * q[3 * vol + n];
-        scr.stress[4 * vol + n] = 2.0 * mu * q[4 * vol + n];
-        scr.stress[5 * vol + n] = 2.0 * mu * q[5 * vol + n];
-    }
+    simd::stress(lanes, q, &mut scr.stress, vol, lam, mu);
     let sc = [2.0 / he[0], 2.0 / he[1], 2.0 / he[2]];
     // strain eq: dE = sym(grad v); v fields are q[6..9]
     let (v1, v2, v3) = (&q[6 * vol..7 * vol], &q[7 * vol..8 * vol], &q[8 * vol..9 * vol]);
     let mut acc = |src: &[f32], axis: usize, dst: usize, scale: f32| {
-        deriv_acc(d, m, axis, src, &mut dq[dst * vol..(dst + 1) * vol], scale);
+        deriv_acc(basis, axis, src, &mut dq[dst * vol..(dst + 1) * vol], scale, lanes);
     };
     acc(v1, 0, 0, sc[0]); // E11 = d v1 / dx
     acc(v2, 1, 1, sc[1]); // E22
@@ -269,7 +276,14 @@ pub(crate) fn rhs_element(
         for axis in 0..3 {
             let sv = S_COL[axis][i];
             let stress_f = &scr.stress[sv * vol..(sv + 1) * vol];
-            deriv_acc(d, m, axis, stress_f, &mut dq[(6 + i) * vol..(7 + i) * vol], sc[axis] / rho);
+            deriv_acc(
+                basis,
+                axis,
+                stress_f,
+                &mut dq[(6 + i) * vol..(7 + i) * vol],
+                sc[axis] / rho,
+                lanes,
+            );
         }
     }
     times.volume_loop += t0.elapsed().as_secs_f64();
@@ -286,7 +300,8 @@ pub(crate) fn rhs_element(
                 let nb = c as usize;
                 let tr_p = cx.trace_slice(nb, f ^ 1);
                 let matp = [cx.mats[nb * 3], cx.mats[nb * 3 + 1], cx.mats[nb * 3 + 2]];
-                riemann_face(tr_m, tr_p, [rho, lam, mu], matp, axis, sign, face, &mut scr.flux);
+                let mm = [rho, lam, mu];
+                riemann_face_l(lanes, tr_m, tr_p, mm, matp, axis, sign, face, &mut scr.flux);
                 &mut times.int_flux
             }
             -1 => {
@@ -298,12 +313,13 @@ pub(crate) fn rhs_element(
                     cx.halo_mats[slot * 3 + 1],
                     cx.halo_mats[slot * 3 + 2],
                 ];
-                riemann_face(tr_m, tr_p, [rho, lam, mu], matp, axis, sign, face, &mut scr.flux);
+                let mm = [rho, lam, mu];
+                riemann_face_l(lanes, tr_m, tr_p, mm, matp, axis, sign, face, &mut scr.flux);
                 &mut times.parallel_flux
             }
             _ => {
                 // mirror BC: exterior trace is (-E, v) of the interior one
-                riemann_face_mirror(tr_m, [rho, lam, mu], axis, sign, face, &mut scr.flux);
+                riemann_face_mirror_l(lanes, tr_m, [rho, lam, mu], axis, sign, face, &mut scr.flux);
                 &mut times.bound_flux
             }
         };
@@ -333,7 +349,15 @@ pub(crate) fn rhs_element(
 /// matvec over contiguous data. `src` and `dst` must be distinct arrays
 /// (they always are: q/stress vs dq).
 #[inline(always)]
-fn deriv_acc_kernel(d: &[f32], m: usize, axis: usize, src: &[f32], dst: &mut [f32], scale: f32) {
+fn deriv_acc_kernel(
+    d: &[f32],
+    m: usize,
+    axis: usize,
+    src: &[f32],
+    dst: &mut [f32],
+    scale: f32,
+    lanes: Lanes,
+) {
     let face = m * m;
     match axis {
         0 => {
@@ -343,10 +367,7 @@ fn deriv_acc_kernel(d: &[f32], m: usize, axis: usize, src: &[f32], dst: &mut [f3
                 let dst_i = &mut dst[i * face..(i + 1) * face];
                 for (t, &dv) in drow.iter().enumerate() {
                     let c = scale * dv;
-                    let src_t = &src[t * face..(t + 1) * face];
-                    for (o, &v) in dst_i.iter_mut().zip(src_t) {
-                        *o += c * v;
-                    }
+                    simd::axpy(lanes, dst_i, &src[t * face..(t + 1) * face], c);
                 }
             }
         }
@@ -360,16 +381,15 @@ fn deriv_acc_kernel(d: &[f32], m: usize, axis: usize, src: &[f32], dst: &mut [f3
                     let dst_row = &mut dst[dbase..dbase + m];
                     for (t, &dv) in drow.iter().enumerate() {
                         let c = scale * dv;
-                        let src_row = &src[sbase + t * m..sbase + (t + 1) * m];
-                        for (o, &v) in dst_row.iter_mut().zip(src_row) {
-                            *o += c * v;
-                        }
+                        simd::axpy(lanes, dst_row, &src[sbase + t * m..sbase + (t + 1) * m], c);
                     }
                 }
             }
         }
         _ => {
             // dst[r, l] += scale * Σ_t d[l,t] * src[r, t], contiguous rows
+            // (scalar path; the vector path is simd::matvec_rows, dispatched
+            // by deriv_acc before reaching here)
             for r in 0..face {
                 let row = &src[r * m..(r + 1) * m];
                 let dst_row = &mut dst[r * m..(r + 1) * m];
@@ -388,20 +408,27 @@ fn deriv_acc_kernel(d: &[f32], m: usize, axis: usize, src: &[f32], dst: &mut [f3
 
 /// Dispatch to monomorphized fast paths for the common node counts
 /// (orders 2, 3 and 7 — the paper's sweep); the constant `m` lets the
-/// compiler fully unroll the innermost loops.
+/// compiler fully unroll the innermost loops of the scalar paths, while
+/// the axis-2 matvec goes through the transposed-padded operator
+/// ([`LglBasis::d32t`]) when a vector path covers `(lanes, m)`.
 pub(crate) fn deriv_acc(
-    d: &[f32],
-    m: usize,
+    basis: &LglBasis,
     axis: usize,
     src: &[f32],
     dst: &mut [f32],
     scale: f32,
+    lanes: Lanes,
 ) {
+    let m = basis.m();
+    if axis == 2 && simd::matvec_rows(lanes, &basis.d32t, m, src, dst, scale) {
+        return;
+    }
+    let d = &basis.d32;
     match m {
-        3 => deriv_acc_kernel(d, 3, axis, src, dst, scale),
-        4 => deriv_acc_kernel(d, 4, axis, src, dst, scale),
-        8 => deriv_acc_kernel(d, 8, axis, src, dst, scale),
-        _ => deriv_acc_kernel(d, m, axis, src, dst, scale),
+        3 => deriv_acc_kernel(d, 3, axis, src, dst, scale, lanes),
+        4 => deriv_acc_kernel(d, 4, axis, src, dst, scale, lanes),
+        8 => deriv_acc_kernel(d, 8, axis, src, dst, scale, lanes),
+        _ => deriv_acc_kernel(d, m, axis, src, dst, scale, lanes),
     }
 }
 
@@ -418,7 +445,9 @@ fn node_on_face(axis: usize, layer: usize, a: usize, b: usize, m: usize) -> usiz
 
 /// The Riemann flux core, generic over the exterior-trace fetch so the
 /// mirror / neighbor / halo cases monomorphize with the branch hoisted out
-/// of the per-node loop.
+/// of the per-node loop. `n0` is the first node to process — the SIMD
+/// prefix ([`simd::riemann_vec`]) covers `[0, n0)` and this kernel finishes
+/// the unpadded tail.
 #[inline(always)]
 #[allow(clippy::too_many_arguments)]
 fn riemann_kernel<Q: Fn(usize, usize) -> f32>(
@@ -429,6 +458,7 @@ fn riemann_kernel<Q: Fn(usize, usize) -> f32>(
     axis: usize,
     sign: f32,
     face: usize,
+    n0: usize,
     out: &mut [f32],
 ) {
     let (rho_m, lam_m, mu_m) = (matm[0], matm[1], matm[2]);
@@ -443,7 +473,7 @@ fn riemann_kernel<Q: Fn(usize, usize) -> f32>(
     let zs_sum = zs_m + zs_p;
     let k1 = if mu_m > 0.0 && zs_sum > 0.0 { 1.0 / zs_sum } else { 0.0 };
 
-    for n in 0..face {
+    for n in n0..face {
         let q_m = |f: usize| tr_m[f * face + n];
         let q_p = |f: usize| q_ext(f, n);
         // tractions t_i = sign * S[i, axis]
@@ -520,7 +550,28 @@ pub fn riemann_face(
     face: usize,
     out: &mut [f32],
 ) {
-    riemann_kernel(tr_m, |f, n| tr_p[f * face + n], matm, matp, axis, sign, face, out);
+    riemann_face_l(simd::active(), tr_m, tr_p, matm, matp, axis, sign, face, out);
+}
+
+/// [`riemann_face`] with the lane width supplied by the caller (the per-
+/// element sweep reads it once per stage instead of per face call): SIMD
+/// prefix over whole vectors, scalar kernel over the unpadded tail.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn riemann_face_l(
+    lanes: Lanes,
+    tr_m: &[f32],
+    tr_p: &[f32],
+    matm: [f32; 3],
+    matp: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) {
+    let n0 = simd::riemann_vec(lanes, tr_m, tr_p, false, matm, matp, axis, sign, face, out);
+    if n0 < face {
+        riemann_kernel(tr_m, |f, n| tr_p[f * face + n], matm, matp, axis, sign, face, n0, out);
+    }
 }
 
 /// [`riemann_face`] against the mirror boundary state `(-E, v)` of the
@@ -534,23 +585,42 @@ pub fn riemann_face_mirror(
     face: usize,
     out: &mut [f32],
 ) {
-    riemann_kernel(
-        tr_m,
-        |f, n| {
-            let v = tr_m[f * face + n];
-            if f < 6 {
-                -v
-            } else {
-                v
-            }
-        },
-        mat,
-        mat,
-        axis,
-        sign,
-        face,
-        out,
-    );
+    riemann_face_mirror_l(simd::active(), tr_m, mat, axis, sign, face, out);
+}
+
+/// [`riemann_face_mirror`] with a caller-supplied lane width; the SIMD
+/// prefix folds the `(-E, v)` fetch into a sign-bit XOR on the loaded
+/// strain rows.
+pub(crate) fn riemann_face_mirror_l(
+    lanes: Lanes,
+    tr_m: &[f32],
+    mat: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) {
+    let n0 = simd::riemann_vec(lanes, tr_m, tr_m, true, mat, mat, axis, sign, face, out);
+    if n0 < face {
+        riemann_kernel(
+            tr_m,
+            |f, n| {
+                let v = tr_m[f * face + n];
+                if f < 6 {
+                    -v
+                } else {
+                    v
+                }
+            },
+            mat,
+            mat,
+            axis,
+            sign,
+            face,
+            n0,
+            out,
+        );
+    }
 }
 
 #[cfg(test)]
@@ -637,7 +707,9 @@ mod tests {
     #[test]
     fn deriv_acc_matches_naive() {
         // blocked sweeps vs the straightforward triple loop, all axes,
-        // generic and specialized node counts
+        // generic and specialized node counts, every lane width the host
+        // supports (vector paths must agree with the naive loop too)
+        let cap = crate::solver::simd::detect();
         for m in [3usize, 4, 5, 8] {
             let basis = LglBasis::new(m - 1);
             let vol = m * m * m;
@@ -646,8 +718,6 @@ mod tests {
             let stride = [face, m, 1usize];
             for axis in 0..3 {
                 let scale = 0.37f32;
-                let mut got = vec![0.5f32; vol];
-                deriv_acc(&basis.d32, m, axis, &src, &mut got, scale);
                 let mut want = vec![0.5f32; vol];
                 let sa = stride[axis];
                 for i in 0..m {
@@ -665,12 +735,45 @@ mod tests {
                         }
                     }
                 }
-                for (g, w) in got.iter().zip(&want) {
-                    // different (valid) summation associations: relative bound
-                    assert!(
-                        (g - w).abs() < 2e-4 * (1.0 + w.abs()),
-                        "m {m} axis {axis}: {g} vs {w}"
-                    );
+                for lanes in [Lanes::Scalar, Lanes::W4, Lanes::W8] {
+                    if lanes.width() > cap.width() {
+                        continue;
+                    }
+                    let mut got = vec![0.5f32; vol];
+                    deriv_acc(&basis, axis, &src, &mut got, scale, lanes);
+                    for (g, w) in got.iter().zip(&want) {
+                        // different (valid) summation associations: relative
+                        // bound, not bitwise
+                        assert!(
+                            (g - w).abs() < 2e-4 * (1.0 + w.abs()),
+                            "m {m} axis {axis} lanes {lanes:?}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deriv_acc_lane_widths_agree_exactly() {
+        // across lane widths the kernels must agree bitwise (up to the sign
+        // of zero, which f32 equality ignores) — the contract that keeps the
+        // exact cross-backend tests valid with SIMD on
+        let cap = crate::solver::simd::detect();
+        for m in [3usize, 4, 8] {
+            let basis = LglBasis::new(m - 1);
+            let vol = m * m * m;
+            let src: Vec<f32> = (0..vol).map(|i| ((i * 13 % 17) as f32 - 8.0) * 0.3).collect();
+            for axis in 0..3 {
+                let mut base = vec![0.5f32; vol];
+                deriv_acc(&basis, axis, &src, &mut base, 0.37, Lanes::Scalar);
+                for lanes in [Lanes::W4, Lanes::W8] {
+                    if lanes.width() > cap.width() {
+                        continue;
+                    }
+                    let mut got = vec![0.5f32; vol];
+                    deriv_acc(&basis, axis, &src, &mut got, 0.37, lanes);
+                    assert_eq!(got, base, "m {m} axis {axis} lanes {lanes:?}");
                 }
             }
         }

@@ -1,0 +1,776 @@
+//! Explicit SIMD paths for the per-element hot kernels (x86_64 AVX2 and
+//! SSE2 via `core::arch`), with a portable scalar fallback that compiles
+//! everywhere. Gated by the `simd` cargo feature (default on); the lane
+//! width is picked at runtime from CPUID (`is_x86_feature_detected!`),
+//! never at compile time, so one binary runs correctly on any x86_64 host
+//! and on other architectures falls back to scalar.
+//!
+//! ## Bitwise equivalence contract
+//!
+//! Every vector kernel here reproduces the scalar kernel's floating-point
+//! result exactly (up to the sign of zero, which `f32::eq` ignores): the
+//! vector code uses separate multiply and add (never FMA), keeps the
+//! scalar code's operand association (`lam*tr + (2*mu)*q`, ascending-`t`
+//! accumulation in the axis-2 matvec), and hoists only per-face *scalar*
+//! constants (impedances, `k0`, `k1`) that both paths compute identically.
+//! The existing `assert_eq!`-exact backend tests therefore stay valid with
+//! SIMD on, and `tests/simd_kernels.rs` sweeps lane widths explicitly.
+//!
+//! ## Lane forcing
+//!
+//! [`set_forced`] pins the active width (clamped to what the host
+//! supports) so tests and benches can price the SIMD delta
+//! (`simd_over_scalar_*` scalars in BENCH_rhs.json) and assert
+//! scalar-vs-vector equality on the same machine.
+#![allow(clippy::needless_range_loop)]
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+use super::reference::{S_COL, VOIGT_PAIR};
+
+/// Active f32 lane count of the kernel dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lanes {
+    /// Portable scalar kernels (also the non-x86_64 / feature-off path).
+    Scalar,
+    /// 128-bit SSE2 (x86_64 baseline — always available there).
+    W4,
+    /// 256-bit AVX2.
+    W8,
+}
+
+impl Lanes {
+    /// f32 elements per vector register (1 for scalar).
+    pub fn width(self) -> usize {
+        match self {
+            Lanes::Scalar => 1,
+            Lanes::W4 => 4,
+            Lanes::W8 => 8,
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            Lanes::Scalar => 1,
+            Lanes::W4 => 2,
+            Lanes::W8 => 3,
+        }
+    }
+
+    fn from_code(c: u8) -> Lanes {
+        match c {
+            2 => Lanes::W4,
+            3 => Lanes::W8,
+            _ => Lanes::Scalar,
+        }
+    }
+}
+
+/// 0 = unset; otherwise a `Lanes::code`.
+static DETECTED: AtomicU8 = AtomicU8::new(0);
+/// 0 = auto (use detection); otherwise a forced `Lanes::code`.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+
+fn detect_uncached() -> Lanes {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    fn inner() -> Lanes {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            Lanes::W8
+        } else {
+            // SSE2 is part of the x86_64 baseline: no check needed.
+            Lanes::W4
+        }
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    fn inner() -> Lanes {
+        Lanes::Scalar
+    }
+    inner()
+}
+
+/// Widest lane count this host supports (cached after the first call).
+pub fn detect() -> Lanes {
+    match DETECTED.load(Ordering::Relaxed) {
+        0 => {
+            let l = detect_uncached();
+            DETECTED.store(l.code(), Ordering::Relaxed);
+            l
+        }
+        c => Lanes::from_code(c),
+    }
+}
+
+/// Force the dispatch width (tests / benches); `None` restores
+/// auto-detection. The request is clamped to the host capability — the
+/// *effective* width is returned, so callers can skip sweep points the
+/// machine can't run instead of faulting on unsupported instructions.
+pub fn set_forced(lanes: Option<Lanes>) -> Lanes {
+    match lanes {
+        None => {
+            FORCED.store(0, Ordering::SeqCst);
+            detect()
+        }
+        Some(l) => {
+            let cap = detect();
+            let eff = if l.width() > cap.width() { cap } else { l };
+            FORCED.store(eff.code(), Ordering::SeqCst);
+            eff
+        }
+    }
+}
+
+/// The lane count kernels should dispatch on right now (forced or
+/// detected). Read once per stage/context, not per inner loop.
+#[inline]
+pub fn active() -> Lanes {
+    match FORCED.load(Ordering::Relaxed) {
+        0 => detect(),
+        c => Lanes::from_code(c),
+    }
+}
+
+#[inline]
+fn check_lanes(lanes: Lanes) {
+    // Callers must pass a width obtained from active()/set_forced(), which
+    // are clamped to the host capability; dispatching wider would fault.
+    debug_assert!(lanes.width() <= detect().width(), "lane width beyond host capability");
+}
+
+// ---------------------------------------------------------------------------
+// axpy: dst[i] += c * src[i]   (axis-0/1 derivative sweeps)
+// ---------------------------------------------------------------------------
+
+#[inline]
+pub(crate) fn axpy(lanes: Lanes, dst: &mut [f32], src: &[f32], c: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    check_lanes(lanes);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        match lanes {
+            Lanes::W8 => return unsafe { axpy_avx2(dst, src, c) },
+            Lanes::W4 => return unsafe { axpy_sse2(dst, src, c) },
+            Lanes::Scalar => {}
+        }
+    }
+    let _ = lanes;
+    for (o, &v) in dst.iter_mut().zip(src) {
+        *o += c * v;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(dst: &mut [f32], src: &[f32], c: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let cv = _mm256_set1_ps(c);
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let d = _mm256_loadu_ps(dp.add(i));
+        let s = _mm256_loadu_ps(sp.add(i));
+        _mm256_storeu_ps(dp.add(i), _mm256_add_ps(d, _mm256_mul_ps(cv, s)));
+        i += 8;
+    }
+    while i < n {
+        *dp.add(i) += c * *sp.add(i);
+        i += 1;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "sse2")]
+unsafe fn axpy_sse2(dst: &mut [f32], src: &[f32], c: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    let cv = _mm_set1_ps(c);
+    let dp = dst.as_mut_ptr();
+    let sp = src.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let d = _mm_loadu_ps(dp.add(i));
+        let s = _mm_loadu_ps(sp.add(i));
+        _mm_storeu_ps(dp.add(i), _mm_add_ps(d, _mm_mul_ps(cv, s)));
+        i += 4;
+    }
+    while i < n {
+        *dp.add(i) += c * *sp.add(i);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// matvec_rows: the axis-2 derivative (row-local small matvec)
+// ---------------------------------------------------------------------------
+
+/// `dst[r, l] += scale * Σ_t src[r, t] * dT[t, l]` over every contiguous
+/// `m`-length row, with `dt_pad` the transposed differentiation matrix
+/// padded to 8-wide rows ([`crate::solver::basis::LglBasis::d32t`]): one
+/// broadcast of `src[r, t]` times one padded row per multiply-accumulate,
+/// ascending `t` exactly like the scalar kernel. Returns `false` when no
+/// vector path covers `(lanes, m)` — the caller falls back to scalar.
+pub(crate) fn matvec_rows(
+    lanes: Lanes,
+    dt_pad: &[f32],
+    m: usize,
+    src: &[f32],
+    dst: &mut [f32],
+    scale: f32,
+) -> bool {
+    debug_assert_eq!(dst.len(), src.len());
+    debug_assert!(m > 8 || dt_pad.len() >= m * 8);
+    check_lanes(lanes);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        match (lanes, m) {
+            (Lanes::W8, 8) => {
+                unsafe { matvec8_avx2(dt_pad, src, dst, scale) };
+                return true;
+            }
+            (Lanes::W4, 8) => {
+                unsafe { matvec8_sse2(dt_pad, src, dst, scale) };
+                return true;
+            }
+            (Lanes::W8, 4) | (Lanes::W4, 4) => {
+                unsafe { matvec4_sse2(dt_pad, src, dst, scale) };
+                return true;
+            }
+            _ => {}
+        }
+    }
+    let _ = (lanes, dt_pad, m, src, dst, scale);
+    false
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn matvec8_avx2(dt: &[f32], src: &[f32], dst: &mut [f32], scale: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    debug_assert_eq!(n % 8, 0);
+    let mut d = [_mm256_setzero_ps(); 8];
+    for (t, dv) in d.iter_mut().enumerate() {
+        *dv = _mm256_loadu_ps(dt.as_ptr().add(t * 8));
+    }
+    let vs = _mm256_set1_ps(scale);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut r = 0usize;
+    while r < n {
+        let mut acc = _mm256_mul_ps(_mm256_set1_ps(*sp.add(r)), d[0]);
+        for t in 1..8 {
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*sp.add(r + t)), d[t]));
+        }
+        let prev = _mm256_loadu_ps(dp.add(r));
+        _mm256_storeu_ps(dp.add(r), _mm256_add_ps(prev, _mm256_mul_ps(vs, acc)));
+        r += 8;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "sse2")]
+unsafe fn matvec8_sse2(dt: &[f32], src: &[f32], dst: &mut [f32], scale: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    debug_assert_eq!(n % 8, 0);
+    let mut dlo = [_mm_setzero_ps(); 8];
+    let mut dhi = [_mm_setzero_ps(); 8];
+    for t in 0..8 {
+        dlo[t] = _mm_loadu_ps(dt.as_ptr().add(t * 8));
+        dhi[t] = _mm_loadu_ps(dt.as_ptr().add(t * 8 + 4));
+    }
+    let vs = _mm_set1_ps(scale);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut r = 0usize;
+    while r < n {
+        let b0 = _mm_set1_ps(*sp.add(r));
+        let mut lo = _mm_mul_ps(b0, dlo[0]);
+        let mut hi = _mm_mul_ps(b0, dhi[0]);
+        for t in 1..8 {
+            let b = _mm_set1_ps(*sp.add(r + t));
+            lo = _mm_add_ps(lo, _mm_mul_ps(b, dlo[t]));
+            hi = _mm_add_ps(hi, _mm_mul_ps(b, dhi[t]));
+        }
+        let plo = _mm_loadu_ps(dp.add(r));
+        let phi = _mm_loadu_ps(dp.add(r + 4));
+        _mm_storeu_ps(dp.add(r), _mm_add_ps(plo, _mm_mul_ps(vs, lo)));
+        _mm_storeu_ps(dp.add(r + 4), _mm_add_ps(phi, _mm_mul_ps(vs, hi)));
+        r += 8;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "sse2")]
+unsafe fn matvec4_sse2(dt: &[f32], src: &[f32], dst: &mut [f32], scale: f32) {
+    use core::arch::x86_64::*;
+    let n = dst.len();
+    debug_assert_eq!(n % 4, 0);
+    let mut d = [_mm_setzero_ps(); 4];
+    for (t, dv) in d.iter_mut().enumerate() {
+        // rows of d32t are padded to 8; only the first 4 columns are live
+        *dv = _mm_loadu_ps(dt.as_ptr().add(t * 8));
+    }
+    let vs = _mm_set1_ps(scale);
+    let sp = src.as_ptr();
+    let dp = dst.as_mut_ptr();
+    let mut r = 0usize;
+    while r < n {
+        let mut acc = _mm_mul_ps(_mm_set1_ps(*sp.add(r)), d[0]);
+        for t in 1..4 {
+            acc = _mm_add_ps(acc, _mm_mul_ps(_mm_set1_ps(*sp.add(r + t)), d[t]));
+        }
+        let prev = _mm_loadu_ps(dp.add(r));
+        _mm_storeu_ps(dp.add(r), _mm_add_ps(prev, _mm_mul_ps(vs, acc)));
+        r += 4;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stress: pointwise Voigt stress from strain (volume_loop prologue)
+// ---------------------------------------------------------------------------
+
+/// `out[fld, n]` for the 6 stress rows from `q`'s 6 strain rows (both
+/// `vol`-strided field-major): diagonal rows `lam*tr + (2*mu)*q`, shear
+/// rows `(2*mu)*q`, with `tr = (q0 + q1) + q2`.
+pub(crate) fn stress(lanes: Lanes, q: &[f32], out: &mut [f32], vol: usize, lam: f32, mu: f32) {
+    debug_assert!(q.len() >= 6 * vol && out.len() >= 6 * vol);
+    check_lanes(lanes);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        match lanes {
+            Lanes::W8 => return unsafe { stress_avx2(q, out, vol, lam, mu) },
+            Lanes::W4 => return unsafe { stress_sse2(q, out, vol, lam, mu) },
+            Lanes::Scalar => {}
+        }
+    }
+    let _ = lanes;
+    stress_scalar(q, out, 0, vol, vol, lam, mu);
+}
+
+/// Scalar body, shared by the portable path and the vector tails.
+#[inline(always)]
+fn stress_scalar(q: &[f32], out: &mut [f32], n0: usize, n1: usize, vol: usize, lam: f32, mu: f32) {
+    let two_mu = 2.0 * mu;
+    for n in n0..n1 {
+        let tr = q[n] + q[vol + n] + q[2 * vol + n];
+        out[n] = lam * tr + two_mu * q[n];
+        out[vol + n] = lam * tr + two_mu * q[vol + n];
+        out[2 * vol + n] = lam * tr + two_mu * q[2 * vol + n];
+        out[3 * vol + n] = two_mu * q[3 * vol + n];
+        out[4 * vol + n] = two_mu * q[4 * vol + n];
+        out[5 * vol + n] = two_mu * q[5 * vol + n];
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn stress_avx2(q: &[f32], out: &mut [f32], vol: usize, lam: f32, mu: f32) {
+    use core::arch::x86_64::*;
+    let vl = _mm256_set1_ps(lam);
+    let v2m = _mm256_set1_ps(2.0 * mu);
+    let qp = q.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut n = 0usize;
+    while n + 8 <= vol {
+        let q0 = _mm256_loadu_ps(qp.add(n));
+        let q1 = _mm256_loadu_ps(qp.add(vol + n));
+        let q2 = _mm256_loadu_ps(qp.add(2 * vol + n));
+        let tr = _mm256_add_ps(_mm256_add_ps(q0, q1), q2);
+        let lt = _mm256_mul_ps(vl, tr);
+        _mm256_storeu_ps(op.add(n), _mm256_add_ps(lt, _mm256_mul_ps(v2m, q0)));
+        _mm256_storeu_ps(op.add(vol + n), _mm256_add_ps(lt, _mm256_mul_ps(v2m, q1)));
+        _mm256_storeu_ps(op.add(2 * vol + n), _mm256_add_ps(lt, _mm256_mul_ps(v2m, q2)));
+        for f in 3..6 {
+            let qf = _mm256_loadu_ps(qp.add(f * vol + n));
+            _mm256_storeu_ps(op.add(f * vol + n), _mm256_mul_ps(v2m, qf));
+        }
+        n += 8;
+    }
+    stress_scalar(q, out, n, vol, vol, lam, mu);
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "sse2")]
+unsafe fn stress_sse2(q: &[f32], out: &mut [f32], vol: usize, lam: f32, mu: f32) {
+    use core::arch::x86_64::*;
+    let vl = _mm_set1_ps(lam);
+    let v2m = _mm_set1_ps(2.0 * mu);
+    let qp = q.as_ptr();
+    let op = out.as_mut_ptr();
+    let mut n = 0usize;
+    while n + 4 <= vol {
+        let q0 = _mm_loadu_ps(qp.add(n));
+        let q1 = _mm_loadu_ps(qp.add(vol + n));
+        let q2 = _mm_loadu_ps(qp.add(2 * vol + n));
+        let tr = _mm_add_ps(_mm_add_ps(q0, q1), q2);
+        let lt = _mm_mul_ps(vl, tr);
+        _mm_storeu_ps(op.add(n), _mm_add_ps(lt, _mm_mul_ps(v2m, q0)));
+        _mm_storeu_ps(op.add(vol + n), _mm_add_ps(lt, _mm_mul_ps(v2m, q1)));
+        _mm_storeu_ps(op.add(2 * vol + n), _mm_add_ps(lt, _mm_mul_ps(v2m, q2)));
+        for f in 3..6 {
+            let qf = _mm_loadu_ps(qp.add(f * vol + n));
+            _mm_storeu_ps(op.add(f * vol + n), _mm_mul_ps(v2m, qf));
+        }
+        n += 4;
+    }
+    stress_scalar(q, out, n, vol, vol, lam, mu);
+}
+
+// ---------------------------------------------------------------------------
+// rk_update: res <- a*res + dt*dq; q <- q + b*res   (low-storage stage)
+// ---------------------------------------------------------------------------
+
+pub(crate) fn rk_update(
+    lanes: Lanes,
+    q: &mut [f32],
+    res: &mut [f32],
+    dq: &[f32],
+    dt: f32,
+    a: f32,
+    b: f32,
+) {
+    debug_assert!(q.len() == res.len() && res.len() == dq.len());
+    check_lanes(lanes);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        match lanes {
+            Lanes::W8 => return unsafe { rk_avx2(q, res, dq, dt, a, b) },
+            Lanes::W4 => return unsafe { rk_sse2(q, res, dq, dt, a, b) },
+            Lanes::Scalar => {}
+        }
+    }
+    let _ = lanes;
+    for (r, d) in res.iter_mut().zip(dq) {
+        *r = a * *r + dt * *d;
+    }
+    for (qv, r) in q.iter_mut().zip(res.iter()) {
+        *qv += b * *r;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+unsafe fn rk_avx2(q: &mut [f32], res: &mut [f32], dq: &[f32], dt: f32, a: f32, b: f32) {
+    use core::arch::x86_64::*;
+    let n = q.len();
+    let va = _mm256_set1_ps(a);
+    let vdt = _mm256_set1_ps(dt);
+    let vb = _mm256_set1_ps(b);
+    let qp = q.as_mut_ptr();
+    let rp = res.as_mut_ptr();
+    let dp = dq.as_ptr();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let r = _mm256_loadu_ps(rp.add(i));
+        let d = _mm256_loadu_ps(dp.add(i));
+        let rn = _mm256_add_ps(_mm256_mul_ps(va, r), _mm256_mul_ps(vdt, d));
+        _mm256_storeu_ps(rp.add(i), rn);
+        let qv = _mm256_loadu_ps(qp.add(i));
+        _mm256_storeu_ps(qp.add(i), _mm256_add_ps(qv, _mm256_mul_ps(vb, rn)));
+        i += 8;
+    }
+    while i < n {
+        let rn = a * *rp.add(i) + dt * *dp.add(i);
+        *rp.add(i) = rn;
+        *qp.add(i) += b * rn;
+        i += 1;
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "sse2")]
+unsafe fn rk_sse2(q: &mut [f32], res: &mut [f32], dq: &[f32], dt: f32, a: f32, b: f32) {
+    use core::arch::x86_64::*;
+    let n = q.len();
+    let va = _mm_set1_ps(a);
+    let vdt = _mm_set1_ps(dt);
+    let vb = _mm_set1_ps(b);
+    let qp = q.as_mut_ptr();
+    let rp = res.as_mut_ptr();
+    let dp = dq.as_ptr();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let r = _mm_loadu_ps(rp.add(i));
+        let d = _mm_loadu_ps(dp.add(i));
+        let rn = _mm_add_ps(_mm_mul_ps(va, r), _mm_mul_ps(vdt, d));
+        _mm_storeu_ps(rp.add(i), rn);
+        let qv = _mm_loadu_ps(qp.add(i));
+        _mm_storeu_ps(qp.add(i), _mm_add_ps(qv, _mm_mul_ps(vb, rn)));
+        i += 4;
+    }
+    while i < n {
+        let rn = a * *rp.add(i) + dt * *dp.add(i);
+        *rp.add(i) = rn;
+        *qp.add(i) += b * rn;
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// riemann_vec: the exact Riemann face flux, W nodes per iteration
+// ---------------------------------------------------------------------------
+
+/// Vector prefix of the Riemann face flux: processes `face / W * W` nodes
+/// and returns that count; the caller runs the scalar kernel on the tail
+/// (`riemann_kernel` with a start offset). `mirror` folds the `(-E, v)`
+/// boundary-state fetch into the trace load, so `tr_p` is `tr_m` itself
+/// there. Returns 0 when no vector path applies (scalar lanes, tiny face,
+/// feature off) — the caller then does the whole face scalar.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn riemann_vec(
+    lanes: Lanes,
+    tr_m: &[f32],
+    tr_p: &[f32],
+    mirror: bool,
+    matm: [f32; 3],
+    matp: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) -> usize {
+    check_lanes(lanes);
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        match lanes {
+            Lanes::W8 if face >= 8 => {
+                return unsafe {
+                    riemann_avx2(tr_m, tr_p, mirror, matm, matp, axis, sign, face, out)
+                };
+            }
+            Lanes::W4 | Lanes::W8 if face >= 4 => {
+                return unsafe {
+                    riemann_sse2(tr_m, tr_p, mirror, matm, matp, axis, sign, face, out)
+                };
+            }
+            _ => {}
+        }
+    }
+    let _ = (lanes, tr_m, tr_p, mirror, matm, matp, axis, sign, face, out);
+    0
+}
+
+/// One macro body, two instantiations (AVX2 / SSE2): the per-node math is
+/// identical to `reference::riemann_kernel` with the per-face scalar
+/// constants (`k0`, `k0*zp_p`, `k1`, `k1*zs_p`, `0.5*sign`) hoisted and
+/// broadcast; mirror negation of the 6 strain rows is a sign-bit XOR.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+macro_rules! riemann_body {
+    ($tr_m:ident, $tr_p:ident, $mirror:ident, $matm:ident, $matp:ident,
+     $axis:ident, $sign:ident, $face:ident, $out:ident,
+     $w:expr, $set1:ident, $load:ident, $store:ident,
+     $add:ident, $sub:ident, $mul:ident, $xor:ident) => {{
+        use core::arch::x86_64::*;
+        let (rho_m, lam_m, mu_m) = ($matm[0], $matm[1], $matm[2]);
+        let (rho_p, lam_p, mu_p) = ($matp[0], $matp[1], $matp[2]);
+        let cp_m = ((lam_m + 2.0 * mu_m) / rho_m).sqrt();
+        let cs_m = (mu_m / rho_m).sqrt();
+        let cp_p = ((lam_p + 2.0 * mu_p) / rho_p).sqrt();
+        let cs_p = (mu_p / rho_p).sqrt();
+        let (zp_m, zs_m) = (rho_m * cp_m, rho_m * cs_m);
+        let (zp_p, zs_p) = (rho_p * cp_p, rho_p * cs_p);
+        let k0 = 1.0 / (zp_m + zp_p);
+        let zs_sum = zs_m + zs_p;
+        let k1 = if mu_m > 0.0 && zs_sum > 0.0 { 1.0 / zs_sum } else { 0.0 };
+
+        let vlam_m = $set1(lam_m);
+        let vlam_p = $set1(lam_p);
+        let v2mu_m = $set1(2.0 * mu_m);
+        let v2mu_p = $set1(2.0 * mu_p);
+        let vsign = $set1($sign);
+        let vk0 = $set1(k0);
+        let vk0zpp = $set1(k0 * zp_p);
+        let vk1 = $set1(k1);
+        let vk1zsp = $set1(k1 * zs_p);
+        let vhalf = $set1(0.5 * $sign);
+        let vzs_m = $set1(zs_m);
+        let vzp_m = $set1(zp_m);
+        let vzero = $set1(0.0);
+        let signbit = $set1(-0.0f32);
+
+        let mp = $tr_m.as_ptr();
+        let pp = $tr_p.as_ptr();
+        let op = $out.as_mut_ptr();
+        let done = $face / $w * $w;
+        let mut n = 0usize;
+        while n < done {
+            let mut qm = [vzero; 9];
+            let mut qp = [vzero; 9];
+            for f in 0..9 {
+                qm[f] = $load(mp.add(f * $face + n));
+                let raw = $load(pp.add(f * $face + n));
+                qp[f] = if $mirror && f < 6 { $xor(raw, signbit) } else { raw };
+            }
+            let tre_m = $add($add(qm[0], qm[1]), qm[2]);
+            let tre_p = $add($add(qp[0], qp[1]), qp[2]);
+            let mut tjump = [vzero; 3];
+            let mut vjump = [vzero; 3];
+            for i in 0..3 {
+                let sv = S_COL[$axis][i];
+                let s_m = if sv < 3 {
+                    $add($mul(vlam_m, tre_m), $mul(v2mu_m, qm[sv]))
+                } else {
+                    $mul(v2mu_m, qm[sv])
+                };
+                let s_p = if sv < 3 {
+                    $add($mul(vlam_p, tre_p), $mul(v2mu_p, qp[sv]))
+                } else {
+                    $mul(v2mu_p, qp[sv])
+                };
+                tjump[i] = $mul(vsign, $sub(s_m, s_p));
+                vjump[i] = $sub(qm[6 + i], qp[6 + i]);
+            }
+            let tn = $mul(vsign, tjump[$axis]);
+            let vn = $mul(vsign, vjump[$axis]);
+            let mut t_tan = tjump;
+            let mut v_tan = vjump;
+            t_tan[$axis] = $sub(tjump[$axis], $mul(tn, vsign));
+            v_tan[$axis] = $sub(vjump[$axis], $mul(vn, vsign));
+            let phi = $add($mul(vk0, tn), $mul(vk0zpp, vn));
+            // tangential flux, shared by the strain and velocity rows (the
+            // scalar kernel computes the same expression in both loops)
+            let mut tang = [vzero; 3];
+            for j in 0..3 {
+                tang[j] = $add($mul(vk1, t_tan[j]), $mul(vk1zsp, v_tan[j]));
+            }
+            // strain rows: zeroed, normal row = phi, symmetric pairs
+            let mut rows = [vzero; 6];
+            rows[$axis] = phi;
+            for j in 0..3 {
+                if j != $axis {
+                    let vi = VOIGT_PAIR[$axis][j];
+                    rows[vi] = $add(rows[vi], $mul(vhalf, tang[j]));
+                }
+            }
+            for (fld, row) in rows.iter().enumerate() {
+                $store(op.add(fld * $face + n), *row);
+            }
+            // velocity rows
+            for i in 0..3 {
+                let mut v = $mul(vzs_m, tang[i]);
+                if i == $axis {
+                    v = $add(v, $mul($mul(vsign, phi), vzp_m));
+                }
+                $store(op.add((6 + i) * $face + n), v);
+            }
+            n += $w;
+        }
+        done
+    }};
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn riemann_avx2(
+    tr_m: &[f32],
+    tr_p: &[f32],
+    mirror: bool,
+    matm: [f32; 3],
+    matp: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) -> usize {
+    riemann_body!(
+        tr_m, tr_p, mirror, matm, matp, axis, sign, face, out, 8, _mm256_set1_ps,
+        _mm256_loadu_ps, _mm256_storeu_ps, _mm256_add_ps, _mm256_sub_ps, _mm256_mul_ps,
+        _mm256_xor_ps
+    )
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[target_feature(enable = "sse2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn riemann_sse2(
+    tr_m: &[f32],
+    tr_p: &[f32],
+    mirror: bool,
+    matm: [f32; 3],
+    matp: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) -> usize {
+    riemann_body!(
+        tr_m, tr_p, mirror, matm, matp, axis, sign, face, out, 4, _mm_set1_ps, _mm_loadu_ps,
+        _mm_storeu_ps, _mm_add_ps, _mm_sub_ps, _mm_mul_ps, _mm_xor_ps
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detection_is_sane_and_cached() {
+        let a = detect();
+        let b = detect();
+        assert_eq!(a, b);
+        assert!(a.width() == 1 || a.width() == 4 || a.width() == 8);
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        assert!(a.width() >= 4, "SSE2 is the x86_64 baseline");
+    }
+
+    #[test]
+    fn forcing_clamps_to_capability() {
+        let cap = detect();
+        for want in [Lanes::Scalar, Lanes::W4, Lanes::W8] {
+            let eff = set_forced(Some(want));
+            assert!(eff.width() <= cap.width());
+            assert!(eff.width() <= want.width());
+            assert_eq!(active(), eff);
+        }
+        assert_eq!(set_forced(None), cap);
+        assert_eq!(active(), cap);
+    }
+
+    #[test]
+    fn axpy_matches_scalar_with_tails() {
+        for len in [1usize, 3, 4, 7, 8, 9, 27, 64, 65] {
+            let src: Vec<f32> = (0..len).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.3).collect();
+            let mut want: Vec<f32> = (0..len).map(|i| (i as f32) * 0.1).collect();
+            let c = 0.37f32;
+            for (o, &v) in want.iter_mut().zip(&src) {
+                *o += c * v;
+            }
+            for lanes in [Lanes::Scalar, Lanes::W4, Lanes::W8] {
+                if lanes.width() > detect().width() {
+                    continue;
+                }
+                let mut got: Vec<f32> = (0..len).map(|i| (i as f32) * 0.1).collect();
+                axpy(lanes, &mut got, &src, c);
+                assert_eq!(got, want, "len {len} lanes {lanes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rk_and_stress_match_scalar() {
+        let vol = 27usize; // odd chunk: exercises the vector tail
+        let q0: Vec<f32> = (0..9 * vol).map(|i| ((i * 11 % 19) as f32 - 9.0) * 0.21).collect();
+        let r0: Vec<f32> = (0..9 * vol).map(|i| ((i * 5 % 23) as f32 - 11.0) * 0.13).collect();
+        let dq: Vec<f32> = (0..9 * vol).map(|i| ((i * 3 % 29) as f32 - 14.0) * 0.09).collect();
+        let (mut qs, mut rs) = (q0.clone(), r0.clone());
+        rk_update(Lanes::Scalar, &mut qs, &mut rs, &dq, 1e-3, -0.4, 0.7);
+        let mut ss = vec![0.0f32; 6 * vol];
+        stress(Lanes::Scalar, &q0, &mut ss, vol, 2.0, 0.8);
+        for lanes in [Lanes::W4, Lanes::W8] {
+            if lanes.width() > detect().width() {
+                continue;
+            }
+            let (mut qv, mut rv) = (q0.clone(), r0.clone());
+            rk_update(lanes, &mut qv, &mut rv, &dq, 1e-3, -0.4, 0.7);
+            assert_eq!(qv, qs, "{lanes:?} q");
+            assert_eq!(rv, rs, "{lanes:?} res");
+            let mut sv = vec![0.0f32; 6 * vol];
+            stress(lanes, &q0, &mut sv, vol, 2.0, 0.8);
+            assert_eq!(sv, ss, "{lanes:?} stress");
+        }
+    }
+}

@@ -368,6 +368,18 @@ pub(crate) fn refresh_elem_traces(m: usize, q_e: &[f32], tr_e: &mut [f32]) {
     }
 }
 
+/// Refresh only the faces whose bit is set in `mask` (bit `f` = face `f`).
+/// The face-dirty path of the fused interior sweep: faces already
+/// refreshed by the boundary phase (the halo-facing ones) are skipped
+/// instead of being recomputed idempotently.
+pub(crate) fn refresh_elem_faces_masked(m: usize, q_e: &[f32], tr_e: &mut [f32], mask: u8) {
+    for f in 0..6 {
+        if mask & (1 << f) != 0 {
+            refresh_elem_face(m, q_e, tr_e, f);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -33,7 +33,7 @@
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Barrier, Condvar, Mutex, Once};
+use std::sync::{Arc, Condvar, Mutex, Once};
 use std::thread::JoinHandle;
 
 /// Process-wide pool id source (1-based so 0 can mean "no pool").
@@ -152,16 +152,69 @@ struct Ctl {
     /// epoch.
     epoch: u64,
     phases: usize,
+    /// Workers participating in this dispatch (caller included). Workers
+    /// with `w >= active` acknowledge the epoch and go straight back to
+    /// sleep without touching the job or the barrier — a small block's
+    /// rendezvous pays wake-ups only for the workers that have work.
+    active: usize,
     job: Option<Job>,
     shutdown: bool,
+}
+
+/// Reusable sense-reversing barrier whose participant count is set per
+/// dispatch (`std::sync::Barrier` is fixed-size, which would force every
+/// rendezvous to wake all workers just to park the idle ones at the
+/// barrier).
+struct PhaseBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    participants: usize,
+}
+
+impl PhaseBarrier {
+    fn new(participants: usize) -> PhaseBarrier {
+        PhaseBarrier {
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0, participants }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Set the participant count of subsequent waits. Only called under
+    /// the dispatch lock while no thread is inside [`PhaseBarrier::wait`]:
+    /// every waiter of the previous dispatch was released before that
+    /// dispatch returned (the dispatcher itself is a participant of the
+    /// final phase barrier), and idle workers never touch the barrier.
+    fn set_participants(&self, n: usize) {
+        self.state.lock().unwrap_or_else(|e| e.into_inner()).participants = n;
+    }
+
+    fn wait(&self) {
+        let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        s.arrived += 1;
+        if s.arrived >= s.participants {
+            s.arrived = 0;
+            s.generation = s.generation.wrapping_add(1);
+            self.cv.notify_all();
+        } else {
+            let gen = s.generation;
+            while s.generation == gen {
+                s = self.cv.wait(s).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
 }
 
 struct Shared {
     ctl: Mutex<Ctl>,
     work: Condvar,
-    /// One generation per phase; participants = all pool workers
-    /// including the dispatching caller.
-    barrier: Barrier,
+    /// One generation per phase; participants = the dispatch's active
+    /// workers including the dispatching caller.
+    barrier: PhaseBarrier,
     panicked: AtomicBool,
 }
 
@@ -200,9 +253,15 @@ impl WorkerPool {
         let mut handles = Vec::new();
         let shared = if threads > 1 {
             let shared = Arc::new(Shared {
-                ctl: Mutex::new(Ctl { epoch: 0, phases: 0, job: None, shutdown: false }),
+                ctl: Mutex::new(Ctl {
+                    epoch: 0,
+                    phases: 0,
+                    active: threads,
+                    job: None,
+                    shutdown: false,
+                }),
                 work: Condvar::new(),
-                barrier: Barrier::new(threads),
+                barrier: PhaseBarrier::new(threads),
                 panicked: AtomicBool::new(false),
             });
             for w in 1..threads {
@@ -256,6 +315,17 @@ impl WorkerPool {
     /// to every worker in phase p+1 — at a cost of a few atomic ops
     /// instead of a spawn/join sweep.
     pub fn run_phased(&self, phases: usize, f: impl Fn(usize, usize) + Sync) {
+        self.run_phased_limit(self.threads, phases, f);
+    }
+
+    /// [`WorkerPool::run_phased`] dispatched to at most `limit` workers
+    /// (clamped to `1..=threads`): `f(w, phase)` runs for workers
+    /// `0..limit` only, and only those wake and meet at the phase
+    /// barriers — a block with fewer work chunks than pool workers pays
+    /// wake-ups proportional to the work, not the pool size. With
+    /// `limit == 1` the whole dispatch runs inline on the caller (no
+    /// rendezvous at all).
+    pub fn run_phased_limit(&self, limit: usize, phases: usize, f: impl Fn(usize, usize) + Sync) {
         if phases == 0 {
             return;
         }
@@ -264,19 +334,27 @@ impl WorkerPool {
                 pin_current_thread(core);
             });
         }
-        let Some(shared) = &self.shared else {
+        let active = limit.clamp(1, self.threads);
+        let inline = match &self.shared {
+            None => true,
+            Some(_) => active == 1,
+        };
+        if inline {
             for phase in 0..phases {
                 f(0, phase);
             }
             return;
-        };
+        }
+        let shared = self.shared.as_ref().expect("checked above");
         // a panicked dispatch poisons this mutex while unwinding through
         // the guard; the () payload carries no invariants, so keep going
         let _serialize = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        shared.barrier.set_participants(active);
         {
             let mut ctl = shared.ctl.lock().unwrap();
             ctl.job = Some(erase_job(&f));
             ctl.phases = phases;
+            ctl.active = active;
             ctl.epoch = ctl.epoch.wrapping_add(1);
             shared.work.notify_all();
         }
@@ -319,7 +397,7 @@ fn worker_main(shared: Arc<Shared>, w: usize, pin: Option<usize>) {
     }
     let mut seen = 0u64;
     loop {
-        let (job, phases) = {
+        let (job, phases, active) = {
             let mut ctl = shared.ctl.lock().unwrap();
             loop {
                 if ctl.shutdown {
@@ -327,11 +405,16 @@ fn worker_main(shared: Arc<Shared>, w: usize, pin: Option<usize>) {
                 }
                 if ctl.epoch != seen {
                     seen = ctl.epoch;
-                    break (ctl.job.expect("dispatch published a job"), ctl.phases);
+                    break (ctl.job.expect("dispatch published a job"), ctl.phases, ctl.active);
                 }
                 ctl = shared.work.wait(ctl).unwrap();
             }
         };
+        if w >= active {
+            // not part of this dispatch: the epoch is acknowledged, the
+            // job and barrier stay untouched
+            continue;
+        }
         // SAFETY: see Job — the dispatcher blocks in run_phased until the
         // final barrier, keeping the closure alive for every use here.
         let f = unsafe { &*job.0 };
@@ -502,6 +585,41 @@ mod tests {
         for s in &sums {
             assert_eq!(s.load(Ordering::SeqCst), (1..=nw).sum::<usize>());
         }
+    }
+
+    #[test]
+    fn limited_dispatch_wakes_only_requested_workers() {
+        let pool = WorkerPool::new(4, None);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_phased_limit(2, 2, |w, _| {
+            assert!(w < 2, "idle workers must not run the job");
+            hits[w].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits[0].load(Ordering::SeqCst), 2);
+        assert_eq!(hits[1].load(Ordering::SeqCst), 2);
+        assert_eq!(hits[2].load(Ordering::SeqCst), 0);
+        assert_eq!(hits[3].load(Ordering::SeqCst), 0);
+        // limit 1 runs inline on the caller, no rendezvous
+        pool.run_phased_limit(1, 3, |w, _| {
+            assert_eq!(w, 0);
+            hits[w].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits[0].load(Ordering::SeqCst), 5);
+        // and full dispatches still engage every worker afterwards
+        // (the skipped workers acknowledged the limited epochs)
+        for _ in 0..50 {
+            pool.run(|w| {
+                hits[w].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for h in &hits[2..] {
+            assert_eq!(h.load(Ordering::SeqCst), 50);
+        }
+        // an out-of-range limit clamps to the pool size
+        pool.run_phased_limit(99, 1, |w, _| {
+            hits[w].fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits[3].load(Ordering::SeqCst), 51);
     }
 
     #[test]

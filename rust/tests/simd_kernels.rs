@@ -1,0 +1,193 @@
+//! SIMD/scalar kernel-equivalence property tests.
+//!
+//! The `solver::simd` vector paths are contracted to reproduce the scalar
+//! kernels *bitwise* (identical operand association, no FMA; the only
+//! permitted difference is the sign of zero, which `f32::eq` ignores).
+//! These tests enforce the contract end to end at the stage level and
+//! directly on the Riemann face kernels, sweeping
+//!
+//! * orders {2, 3, 7} (m = 3 / 4 / 8 — covers unpadded SIMD tails: face
+//!   sizes 9 and vol sizes 27 are not lane multiples),
+//! * lane widths {scalar, 4, 8} via `simd::set_forced` (widths the host
+//!   cannot execute are skipped — `set_forced` clamps and reports),
+//! * block sizes {27, 64, 512} elements.
+//!
+//! The forced lane width is process-global, so every test serializes on
+//! one lock and restores auto-detection before returning.
+
+use std::sync::Mutex;
+
+use repro::mesh::geometry::{discontinuous_brick, unit_cube_geometry};
+use repro::mesh::{build_local_blocks, Mesh};
+use repro::solver::analytic::standing_wave;
+use repro::solver::driver::{Driver, StageBackend};
+use repro::solver::reference::{riemann_face, riemann_face_mirror, stage, RefScratch};
+use repro::solver::simd::{self, Lanes};
+use repro::solver::{BlockState, LglBasis, ParallelRefBackend, LSRK_A, LSRK_B, N_STAGES};
+
+/// Serializes the tests of this binary (the forced lane width is global).
+static LANE_LOCK: Mutex<()> = Mutex::new(());
+
+const LANE_SWEEP: [Lanes; 3] = [Lanes::Scalar, Lanes::W4, Lanes::W8];
+
+/// Restores lane auto-detection when dropped (also on assertion panic, so
+/// one failing test doesn't poison the rest of the binary).
+struct LaneGuard;
+
+impl Drop for LaneGuard {
+    fn drop(&mut self) {
+        simd::set_forced(None);
+    }
+}
+
+/// Force `lanes`; `None` if this host cannot execute that width.
+fn force(lanes: Lanes) -> Option<Lanes> {
+    (simd::set_forced(Some(lanes)) == lanes).then_some(lanes)
+}
+
+/// Deterministic non-trivial filler in [-1, 1), varied per slot.
+fn filler(i: usize, salt: usize) -> f32 {
+    (((i * 31 + salt * 97 + 7) % 256) as f32) / 128.0 - 1.0
+}
+
+fn single_block_state(order: usize, n: usize) -> BlockState {
+    let mesh = unit_cube_geometry(n);
+    let owners = vec![0usize; mesh.len()];
+    let (blocks, _) = build_local_blocks(&mesh, &owners, 1);
+    let k = blocks[0].len();
+    let mut st = BlockState::from_local_block(&blocks[0], order, k, 8);
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    st.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+    st
+}
+
+/// Run `stages` low-storage RK stages of the scalar reference backend on
+/// a fresh copy of `st0` under the given forced lane width.
+fn run_ref_stages(st0: &BlockState, basis: &LglBasis, stages: usize, lanes: Lanes) -> BlockState {
+    let eff = simd::set_forced(Some(lanes));
+    assert_eq!(eff, lanes, "caller checked capability");
+    let mut st = st0.clone();
+    let mut scratch = RefScratch::new(&st);
+    for s in 0..stages {
+        let (a, b) = (LSRK_A[s % N_STAGES] as f32, LSRK_B[s % N_STAGES] as f32);
+        stage(&mut st, basis, &mut scratch, 1e-3, a, b);
+    }
+    st
+}
+
+#[test]
+fn reference_stage_equal_across_lane_widths() {
+    let _lock = LANE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = LaneGuard;
+    for order in [2usize, 3, 7] {
+        for n in [3usize, 4, 8] {
+            // full RK sweep on the small grids, one stage on the big ones
+            let stages = if n >= 8 || order >= 7 { 1 } else { N_STAGES };
+            let st0 = single_block_state(order, n);
+            assert_eq!(st0.k_real, n * n * n);
+            let basis = LglBasis::new(order);
+            let base = run_ref_stages(&st0, &basis, stages, Lanes::Scalar);
+            for lanes in [Lanes::W4, Lanes::W8] {
+                let Some(lanes) = force(lanes) else { continue };
+                let got = run_ref_stages(&st0, &basis, stages, lanes);
+                assert_eq!(base.q, got.q, "q: order {order} k {} {lanes:?}", st0.k_real);
+                assert_eq!(base.res, got.res, "res: order {order} {lanes:?}");
+                assert_eq!(base.traces, got.traces, "traces: order {order} {lanes:?}");
+            }
+        }
+    }
+}
+
+fn overlap_driver(mesh: &Mesh, owners: &[usize], order: usize) -> Driver {
+    let (lblocks, plan) = build_local_blocks(mesh, owners, 2);
+    let basis = LglBasis::new(order);
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    let mut blocks: Vec<BlockState> = lblocks
+        .iter()
+        .map(|lb| BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1)))
+        .collect();
+    for blk in blocks.iter_mut() {
+        blk.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+    }
+    let backends: Vec<Box<dyn StageBackend>> = (0..2)
+        .map(|_| Box::new(ParallelRefBackend::with_threads(order, 2)) as Box<dyn StageBackend>)
+        .collect();
+    let mut drv = Driver::new(blocks, plan, backends, order);
+    drv.overlap = true;
+    drv.prime();
+    drv
+}
+
+#[test]
+fn parallel_overlap_stage_equal_across_lane_widths() {
+    let _lock = LANE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = LaneGuard;
+    // mixed elastic/acoustic brick, two owners: exercises neighbor, halo
+    // and mirror flux paths plus the masked interior trace refresh
+    let mesh = discontinuous_brick([4, 4, 2], [1.0, 1.0, 0.5]);
+    let owners: Vec<usize> = (0..mesh.len()).map(|e| usize::from(e >= 16)).collect();
+    for order in [2usize, 3] {
+        simd::set_forced(Some(Lanes::Scalar));
+        let mut base = overlap_driver(&mesh, &owners, order);
+        base.run(1e-3, 2).unwrap();
+        for lanes in [Lanes::W4, Lanes::W8] {
+            let Some(lanes) = force(lanes) else { continue };
+            let mut got = overlap_driver(&mesh, &owners, order);
+            got.run(1e-3, 2).unwrap();
+            for (ba, bg) in base.blocks.iter().zip(&got.blocks) {
+                assert_eq!(ba.q, bg.q, "order {order} {lanes:?}");
+                let live = ba.k_real * 6 * repro::solver::state::NFIELDS * ba.m * ba.m;
+                assert_eq!(ba.traces[..live], bg.traces[..live], "order {order} {lanes:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn riemann_face_kernels_equal_across_lane_widths() {
+    let _lock = LANE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = LaneGuard;
+    let elastic = [1.0f32, 2.0, 1.0];
+    let acoustic = [1.2f32, 3.0, 0.0];
+    for m in [3usize, 4, 8] {
+        let face = m * m;
+        let tr_m: Vec<f32> = (0..9 * face).map(|i| filler(i, m)).collect();
+        let tr_p: Vec<f32> = (0..9 * face).map(|i| filler(i, m + 13)).collect();
+        for (matm, matp) in [(elastic, elastic), (elastic, acoustic), (acoustic, elastic)] {
+            for axis in 0..3 {
+                for sign in [1.0f32, -1.0] {
+                    let mut want = vec![0.0f32; 9 * face];
+                    let mut want_mir = vec![0.0f32; 9 * face];
+                    simd::set_forced(Some(Lanes::Scalar));
+                    riemann_face(&tr_m, &tr_p, matm, matp, axis, sign, face, &mut want);
+                    riemann_face_mirror(&tr_m, matm, axis, sign, face, &mut want_mir);
+                    for lanes in [Lanes::W4, Lanes::W8] {
+                        let Some(lanes) = force(lanes) else { continue };
+                        let mut got = vec![0.0f32; 9 * face];
+                        riemann_face(&tr_m, &tr_p, matm, matp, axis, sign, face, &mut got);
+                        assert_eq!(
+                            want, got,
+                            "riemann_face m {m} axis {axis} sign {sign} {lanes:?}"
+                        );
+                        let mut got_mir = vec![0.0f32; 9 * face];
+                        riemann_face_mirror(&tr_m, matm, axis, sign, face, &mut got_mir);
+                        assert_eq!(want_mir, got_mir, "mirror m {m} axis {axis} {lanes:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_sweep_covers_detected_width() {
+    let _lock = LANE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _guard = LaneGuard;
+    // the sweep above must include the width this host actually runs at
+    let cap = simd::detect();
+    assert!(
+        LANE_SWEEP.contains(&cap),
+        "detected lane width {cap:?} missing from the sweep"
+    );
+}
