@@ -13,7 +13,7 @@ use repro::coordinator::experiments::{cross_check, paper_mesh};
 use repro::coordinator::node::WorkerBackend;
 use repro::coordinator::profile::{busy_imbalance, node_busy_imbalance};
 use repro::coordinator::rebalance::RebalanceTotals;
-use repro::coordinator::{HeteroRun, ProfileReport};
+use repro::coordinator::{HeteroRun, ProfileReport, TransportKind};
 use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
 use repro::partition::{nested_partition, splice, DeviceKind};
 use repro::runtime::ArtifactManifest;
@@ -53,7 +53,8 @@ fn coupled_driver(order: usize, n: usize, parallel: bool, overlap: bool) -> Driv
 }
 
 /// The N-node cluster runtime: node-count scaling over one global mesh
-/// plus the rebalancer's imbalance win, written to `BENCH_cluster.json`.
+/// crossed with the transport matrix (inproc / shm / socket), plus the
+/// rebalancer's imbalance win, written to `BENCH_cluster.json`.
 fn cluster_bench(b: &Bench, smoke: bool) {
     let mut sink = JsonSink::new();
     let order = 2;
@@ -64,33 +65,80 @@ fn cluster_bench(b: &Bench, smoke: bool) {
     let ic = move |x: [f64; 3]| standing_wave(x, 0.0, 1.0, 1.0, w);
     let dt = 1e-4;
 
-    // ---- node-count scaling (same global mesh, P virtual nodes) --------
+    // ---- node-count scaling x transport matrix --------------------------
+    // same global mesh, P virtual nodes, stepped over all three message
+    // fabrics; shm/socket cost relative to the in-process baseline lands
+    // in BENCH_cluster.json as the transport_overhead_* scalars
     let ps: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let p_max = *ps.last().unwrap();
     let mut t1 = None;
     for &p in ps {
-        let mut spec = ClusterSpec::new(p, order);
-        spec.mic_fraction = Some(0.25);
-        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
-        let items = mesh.len() * 5 * steps_per_iter;
-        let r = b.run(&format!("cluster_step_p{p}_n{order}_k{}", mesh.len()), || {
-            run.run(dt, steps_per_iter).unwrap();
-        });
-        r.report_throughput(items, "elem-stages");
-        sink.push(&r, Some((items, "elem-stages")));
-        assert_eq!(
-            run.fabric().mic_inter_node_faces,
-            0,
-            "accelerators must stay off the inter-node fabric"
-        );
-        match t1 {
-            None => t1 = Some(r.mean()),
-            Some(base) => {
-                let eff = base / r.mean();
-                println!(
-                    "  P={p}: parallel efficiency {eff:.2} vs P=1 \
-                     (virtual nodes share this machine's cores)"
-                );
-                sink.push_scalar(&format!("cluster_parallel_efficiency_p{p}"), eff, "t1_over_tp");
+        let mut inproc_mean = None;
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            // the transports only diverge once an inter-node lane class
+            // exists; at P=1 the socket fabric degenerates to the rings
+            if p == 1 && kind != TransportKind::InProc {
+                continue;
+            }
+            let mut spec = ClusterSpec::new(p, order);
+            spec.mic_fraction = Some(0.25);
+            spec.transport = kind;
+            let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+            let items = mesh.len() * 5 * steps_per_iter;
+            let tag = match kind {
+                TransportKind::InProc => String::new(),
+                other => format!("{}_", other.label()),
+            };
+            let r = b.run(&format!("cluster_step_p{p}_{tag}n{order}_k{}", mesh.len()), || {
+                run.run(dt, steps_per_iter).unwrap();
+            });
+            r.report_throughput(items, "elem-stages");
+            sink.push(&r, Some((items, "elem-stages")));
+            // §5.5 refusal is transport-independent: classification comes
+            // from the routing tables, not the mechanism
+            assert_eq!(
+                run.fabric().mic_inter_node_faces,
+                0,
+                "accelerators must stay off the inter-node fabric ({kind})"
+            );
+            if kind == TransportKind::InProc {
+                inproc_mean = Some(r.mean());
+                if p == p_max {
+                    let f = run.fabric();
+                    let (lb_self, lb_intra, lb_inter) = f.lane_bytes_per_stage(order);
+                    sink.push_scalar("fabric_lane_self_bytes", lb_self as f64, "B_per_stage");
+                    sink.push_scalar("fabric_lane_intra_bytes", lb_intra as f64, "B_per_stage");
+                    sink.push_scalar("fabric_lane_inter_bytes", lb_inter as f64, "B_per_stage");
+                    let msgs_i = f.intra_node_msgs as f64;
+                    let msgs_x = f.inter_node_msgs as f64;
+                    sink.push_scalar("fabric_lane_intra_msgs", msgs_i, "msgs_per_stage");
+                    sink.push_scalar("fabric_lane_inter_msgs", msgs_x, "msgs_per_stage");
+                }
+                match t1 {
+                    None => t1 = Some(r.mean()),
+                    Some(base) => {
+                        let eff = base / r.mean();
+                        println!(
+                            "  P={p}: parallel efficiency {eff:.2} vs P=1 \
+                             (virtual nodes share this machine's cores)"
+                        );
+                        sink.push_scalar(
+                            &format!("cluster_parallel_efficiency_p{p}"),
+                            eff,
+                            "t1_over_tp",
+                        );
+                    }
+                }
+            } else {
+                let over = r.mean() / inproc_mean.expect("inproc benched first");
+                println!("  P={p} {kind}: {over:.2}x the in-process fabric");
+                if p == p_max {
+                    sink.push_scalar(
+                        &format!("transport_overhead_{}_over_inproc", kind.label()),
+                        over,
+                        "t_over_t_inproc",
+                    );
+                }
             }
         }
     }
@@ -170,6 +218,7 @@ fn cluster_bench(b: &Bench, smoke: bool) {
         order,
         if smoke { 2 } else { 4 },
         Some(2),
+        TransportKind::InProc,
         None,
         Some(&mut sink),
     )

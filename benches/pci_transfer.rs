@@ -1,9 +1,16 @@
 //! Bench: Fig 5.3's measured analogue — real in-process buffer copies
-//! (the halo fabric) timed across sizes, next to the calibrated PCI model.
+//! (the halo fabric) timed across sizes next to the calibrated PCI model,
+//! plus the measured message-fabric links (mpsc hop / shm ring / Unix
+//! socket) folded through `costmodel::{pci,network}::from_link` — the
+//! same path `coordinator::transport::measure_fabric_links` feeds — so
+//! the hand-fit `calib::fabric_pci` / `calib::fabric_network` defaults
+//! can be checked against this machine.
 //! `cargo bench --offline --bench pci_transfer`
 
-use repro::costmodel::calib::stampede_pci;
-use repro::costmodel::pci::Direction;
+use repro::coordinator::transport::{measure_fabric_links, TransportKind};
+use repro::costmodel::calib::{fabric_network, fabric_pci, stampede_pci};
+use repro::costmodel::network::NetworkModel;
+use repro::costmodel::pci::{Direction, PciModel};
 use repro::util::bench::Bench;
 
 fn main() {
@@ -29,4 +36,49 @@ fn main() {
         );
         mb *= 4;
     }
+
+    // ---- measured fabric links -> costmodel calibration -----------------
+    // probe what each transport actually puts on the two lane classes and
+    // price a representative 4 MiB transfer with the from_link models next
+    // to the hand-fit in-process defaults
+    println!("\nmeasured fabric links vs calib::fabric_pci / calib::fabric_network defaults:");
+    let probe_bytes = 4usize << 20;
+    let def_pci = fabric_pci().transfer_time(probe_bytes, Direction::ToDevice);
+    let def_net = fabric_network().exchange_time(probe_bytes / face_bytes(), paper_order());
+    for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+        let links = match measure_fabric_links(kind) {
+            Ok(l) => l,
+            Err(e) => {
+                println!("  {kind}: probe failed ({e}); skipping");
+                continue;
+            }
+        };
+        let mpci = PciModel::from_link(links.pci);
+        let mnet = NetworkModel::from_link(links.net);
+        println!(
+            "  {kind}: pci lane {:.1} us / {:.1} GB/s, net lane {:.1} us / {:.1} GB/s",
+            links.pci.latency_s * 1e6,
+            links.pci.bw_bytes_per_s / 1e9,
+            links.net.latency_s * 1e6,
+            links.net.bw_bytes_per_s / 1e9
+        );
+        println!(
+            "    4 MiB priced: pci {:.3} ms (default {:.3} ms), \
+             net exchange {:.3} ms (default {:.3} ms)",
+            mpci.transfer_time(probe_bytes, Direction::ToDevice) * 1e3,
+            def_pci * 1e3,
+            mnet.exchange_time(probe_bytes / face_bytes(), paper_order()) * 1e3,
+            def_net * 1e3
+        );
+    }
+}
+
+/// Bytes of one face trace at the paper's order, so the network pricing
+/// above can express 4 MiB as a face count.
+fn face_bytes() -> usize {
+    repro::costmodel::kernels::face_trace_bytes(paper_order())
+}
+
+fn paper_order() -> usize {
+    repro::costmodel::calib::PAPER_ORDER
 }

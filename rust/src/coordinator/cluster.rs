@@ -6,14 +6,21 @@
 //! level-2 boundary/interior split across **two workers** — a CPU worker
 //! (owner `2n`, the boundary elements, owns all communication) and an
 //! accelerator stand-in (owner `2n+1`, the interior elements). Workers are
-//! long-lived threads connected by an **in-process message fabric**: typed
-//! mpsc channels over which halo traces flow directly worker-to-worker,
-//! routed by tables derived from the [`ExchangePlan`]. The fabric
-//! distinguishes three lanes:
+//! long-lived threads connected by a **message fabric**: halo traces flow
+//! directly worker-to-worker, routed by tables derived from the
+//! [`ExchangePlan`]. The fabric distinguishes three lanes:
 //!
 //! * **self** — copies between blocks of one worker (applied in place),
 //! * **intra-node** — CPU <-> MIC of the same node (the PCI stand-in),
 //! * **inter-node** — CPU(n) <-> CPU(m) (the MPI stand-in).
+//!
+//! *How* a lane physically moves bytes is pluggable
+//! ([`super::transport`], [`ClusterSpec::transport`]): in-process mpsc
+//! channels, zero-copy shared-memory slot rings, or Unix-domain sockets
+//! with length-prefixed frames on the inter-node class. Routing tables,
+//! lane classification and the §5.5 refusal below are identical on every
+//! transport; the equivalence is pinned by `rust/tests/
+//! transport_equivalence.rs`.
 //!
 //! Exactly as in §5.5, accelerator workers never touch the inter-node
 //! lane: the interior-only constraint of [`crate::partition::nested`]
@@ -55,6 +62,7 @@ use anyhow::anyhow;
 use super::rebalance::{plan_two_level, TwoLevelPlan};
 // historical home of the report types (they moved to the planner module)
 pub use super::rebalance::{NodeRebalance, RebalanceReport};
+use super::transport::{build_endpoints, CopyRoute, FabricCtl, FabricEndpoint, TransportKind};
 use crate::costmodel::calib;
 use crate::mesh::{build_local_blocks, ExchangePlan, LocalBlock, Mesh};
 use crate::partition::nested::owner_migration;
@@ -319,14 +327,8 @@ impl WorkerBackend {
 // fabric protocol
 // ---------------------------------------------------------------------------
 
-/// One halo installment: (destination local block, halo slot, trace data).
-type Deliveries = Vec<(usize, usize, Vec<f32>)>;
-
-/// One routed copy:
-/// (src local block, src elem, src face, dst local block, dst halo slot).
-type CopyRoute = (usize, usize, usize, usize, usize);
-
-/// Outbound copies of one worker destined to one peer.
+/// Outbound copies of one worker destined to one peer (one delivery
+/// group per routed stage; [`CopyRoute`] lives in [`super::transport`]).
 struct OutboundGroup {
     dst: usize,
     items: Vec<CopyRoute>,
@@ -345,10 +347,11 @@ struct ReplaceMsg {
 
 enum Cmd {
     /// Run one LSRK stage on every owned block; ship traces through the
-    /// fabric and install incoming halos when `route`.
+    /// fabric and install incoming halos when `route`. (Trace data never
+    /// rides this channel — deliveries travel the worker's
+    /// [`FabricEndpoint`], so a peer racing ahead of our Stage command
+    /// simply queues in the data plane.)
     Stage { dt: f32, a: f32, b: f32, route: bool },
-    /// A peer's halo traces (fabric lane; never sent by the coordinator).
-    Deliver(Deliveries),
     /// Reply with the sum of block energies.
     Energy,
     /// Reply with a full clone of local block `i`'s state.
@@ -403,6 +406,13 @@ pub struct WorkerTimes {
     /// backends since they were built (memoized: flat across stages; a
     /// rebuild restarts the count).
     pub classify_computes: u64,
+    /// Trace payload bytes this worker shipped through the fabric since
+    /// the last reset (cross-worker lanes only; self copies never leave
+    /// the worker). Counted at the endpoint, so it reflects what the
+    /// active transport actually moved.
+    pub fabric_sent_bytes: u64,
+    /// Trace payload bytes received and installed from the fabric.
+    pub fabric_recv_bytes: u64,
 }
 
 impl WorkerTimes {
@@ -453,6 +463,11 @@ pub struct FabricStats {
     pub inter_node_faces: usize,
     /// Inter-node faces touching an accelerator worker (always 0).
     pub mic_inter_node_faces: usize,
+    /// Delivery groups (= messages) per routed stage on the intra-node
+    /// lane: one per directed worker pair that exchanges any face.
+    pub intra_node_msgs: usize,
+    /// Delivery groups per routed stage on the inter-node lane.
+    pub inter_node_msgs: usize,
 }
 
 impl FabricStats {
@@ -463,6 +478,15 @@ impl FabricStats {
         let sz = NFIELDS * m * m * 4;
         (self.intra_node_faces * sz, self.inter_node_faces * sz)
     }
+
+    /// Trace bytes moved per routed stage at `order` on each lane class:
+    /// (self, intra-node, inter-node). Self-lane bytes are copied in
+    /// place; the other two cross the active transport.
+    pub fn lane_bytes_per_stage(&self, order: usize) -> (usize, usize, usize) {
+        let m = order + 1;
+        let sz = NFIELDS * m * m * 4;
+        (self.self_faces * sz, self.intra_node_faces * sz, self.inter_node_faces * sz)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -472,8 +496,12 @@ impl FabricStats {
 struct WorkerInit {
     rx: Receiver<Cmd>,
     tx: Sender<Resp>,
-    /// Command senders of every worker, indexed by worker id (the fabric).
-    fabric: Vec<Sender<Cmd>>,
+    /// This worker's data plane: one lane per peer, mechanism chosen by
+    /// the cluster's [`TransportKind`].
+    endpoint: Box<dyn FabricEndpoint>,
+    /// Shared poison flag: set by the coordinator (or a failing peer) so
+    /// a worker blocked in the fabric bails instead of waiting forever.
+    ctl: FabricCtl,
     blocks: Vec<BlockState>,
     outbound: Vec<OutboundGroup>,
     self_copies: Vec<CopyRoute>,
@@ -486,7 +514,8 @@ fn worker_main(init: WorkerInit) {
     let WorkerInit {
         rx,
         tx,
-        fabric,
+        mut endpoint,
+        ctl,
         mut blocks,
         mut outbound,
         mut self_copies,
@@ -508,10 +537,6 @@ fn worker_main(init: WorkerInit) {
     let budget = factory.thread_budget();
     let fresh_times = || WorkerTimes { threads: budget, ..Default::default() };
     let mut times = fresh_times();
-    // Deliveries that raced ahead of this worker's Stage command (peers may
-    // ship before we even dequeue the stage); they belong to the next
-    // routed stage and are installed in its exchange window.
-    let mut pending: Vec<Deliveries> = Vec::new();
     loop {
         let cmd = match rx.recv() {
             Ok(c) => c,
@@ -539,21 +564,23 @@ fn worker_main(init: WorkerInit) {
                 if route {
                     // ship traces through the fabric *before* the interior
                     // sweep so peers route while this worker keeps
-                    // computing; on failure ship empty payloads so the
+                    // computing; on failure ship empty groups so the
                     // cluster lockstep (and every peer's exchange count)
                     // stays intact
                     for grp in &outbound {
-                        let payload: Deliveries = if fail.is_some() {
-                            Vec::new()
-                        } else {
-                            grp.items
-                                .iter()
-                                .map(|&(bi, e, f, dbi, slot)| {
-                                    (dbi, slot, blocks[bi].trace_slice(e, f).to_vec())
-                                })
-                                .collect()
-                        };
-                        fabric[grp.dst].send(Cmd::Deliver(payload)).ok();
+                        match endpoint.ship(grp.dst, &grp.items, &blocks, fail.is_some()) {
+                            Ok(bytes) => times.fabric_sent_bytes += bytes as u64,
+                            Err(e) => {
+                                // a dead lane starves every peer waiting on
+                                // our group — poison so their waits error
+                                // out and the lockstep still completes
+                                ctl.poison();
+                                if fail.is_none() {
+                                    fail = Some(format!("shipping to worker {}: {e}", grp.dst));
+                                }
+                                terminate = true;
+                            }
+                        }
                     }
                     if fail.is_none() {
                         // same-worker copies never touch the fabric; the
@@ -581,41 +608,27 @@ fn worker_main(init: WorkerInit) {
                 }
                 times.interior_s += t1.elapsed().as_secs_f64();
                 let mut exchange_s = 0.0;
-                if route {
+                if route && !terminate {
+                    // drain one delivery group per sending peer; a local
+                    // compute failure still drains (installs are harmless,
+                    // the cluster is poisoned after this stage) so peers'
+                    // lockstep never stalls on us
                     let t2 = Instant::now();
                     let mut got = 0usize;
-                    for upd in pending.drain(..) {
-                        got += 1;
-                        if fail.is_none() {
-                            for (bi, slot, data) in upd {
-                                blocks[bi].set_halo_slot(slot, &data);
-                            }
-                        }
-                    }
                     while got < expected_in {
-                        match rx.recv() {
-                            Ok(Cmd::Deliver(upd)) => {
+                        match endpoint.recv_group(&mut blocks) {
+                            Ok(bytes) => {
                                 got += 1;
+                                times.fabric_recv_bytes += bytes as u64;
+                            }
+                            Err(e) => {
+                                // poisoned fabric or dead lane: the run is
+                                // over — unblock peers and exit after the
+                                // stage bookkeeping
+                                ctl.poison();
                                 if fail.is_none() {
-                                    for (bi, slot, data) in upd {
-                                        blocks[bi].set_halo_slot(slot, &data);
-                                    }
+                                    fail = Some(format!("exchange: {e}"));
                                 }
-                            }
-                            Ok(Cmd::Shutdown) => {
-                                fail = Some("shutdown during exchange".into());
-                                terminate = true;
-                                break;
-                            }
-                            Ok(_) => {
-                                fail = Some(
-                                    "fabric protocol violation: non-delivery during exchange"
-                                        .into(),
-                                );
-                                break;
-                            }
-                            Err(_) => {
-                                fail = Some("fabric closed during exchange".into());
                                 terminate = true;
                                 break;
                             }
@@ -634,7 +647,6 @@ fn worker_main(init: WorkerInit) {
                     break;
                 }
             }
-            Cmd::Deliver(upd) => pending.push(upd),
             Cmd::Energy => {
                 let e: f64 = blocks.iter().map(|b| b.energy(&basis)).sum();
                 tx.send(Resp::Energy(e)).ok();
@@ -674,7 +686,7 @@ fn worker_main(init: WorkerInit) {
                 self_copies = nsc;
                 expected_in = nei;
                 times = fresh_times();
-                pending.clear();
+                endpoint.clear_pending();
                 tx.send(Resp::Replaced).ok();
             }
             Cmd::Shutdown => break,
@@ -784,6 +796,8 @@ fn fabric_stats(
     meta: &[(usize, DeviceKind)],
 ) -> Result<FabricStats> {
     let mut st = FabricStats::default();
+    let mut intra_pairs: HashSet<(usize, usize)> = HashSet::new();
+    let mut inter_pairs: HashSet<(usize, usize)> = HashSet::new();
     for (dst_owner, copies) in plan.copies.iter().enumerate() {
         let Some(&(wd, _)) = owner_map.get(&dst_owner) else { continue };
         for &(src_owner, _, _, _) in copies {
@@ -792,14 +806,18 @@ fn fabric_stats(
                 st.self_faces += 1;
             } else if meta[ws].0 == meta[wd].0 {
                 st.intra_node_faces += 1;
+                intra_pairs.insert((ws, wd));
             } else {
                 st.inter_node_faces += 1;
+                inter_pairs.insert((ws, wd));
                 if meta[ws].1 == DeviceKind::Mic || meta[wd].1 == DeviceKind::Mic {
                     st.mic_inter_node_faces += 1;
                 }
             }
         }
     }
+    st.intra_node_msgs = intra_pairs.len();
+    st.inter_node_msgs = inter_pairs.len();
     if st.mic_inter_node_faces > 0 {
         return Err(anyhow!(
             "{} halo faces would route between an accelerator worker and another \
@@ -871,6 +889,11 @@ pub struct ClusterSpec {
     /// assignment). Best-effort: refused affinity calls degrade to the
     /// unpinned behavior.
     pub pin_cores: bool,
+    /// How fabric lanes physically move bytes ([`super::transport`]):
+    /// in-process channels, shared-memory rings, or Unix-domain sockets
+    /// on the inter-node lane. Routing, lane classification and the §5.5
+    /// refusal are identical on all of them.
+    pub transport: TransportKind,
 }
 
 impl ClusterSpec {
@@ -886,6 +909,7 @@ impl ClusterSpec {
             level1_rebalance: true,
             node_backends: None,
             pin_cores: false,
+            transport: TransportKind::InProc,
         }
     }
 }
@@ -941,6 +965,11 @@ pub struct ClusterRun {
     pub rebalance_history: Vec<RebalanceReport>,
     routed_stages: usize,
     poisoned: bool,
+    /// Fabric poison flag shared with every worker endpoint: set before
+    /// shutdown (and on any stage failure) so workers blocked in the
+    /// data plane bail out instead of waiting forever.
+    ctl: FabricCtl,
+    transport: TransportKind,
     mesh_ctx: Option<MeshCtx>,
 }
 
@@ -1017,8 +1046,15 @@ impl ClusterRun {
             assign_pin_bases(&mut specs);
         }
         let worker_of_owner: Vec<usize> = (0..2 * nodes).collect();
-        let mut run =
-            ClusterRun::launch_parts(&lblocks, states, plan, &worker_of_owner, &specs, spec.order)?;
+        let mut run = ClusterRun::launch_parts_with(
+            &lblocks,
+            states,
+            plan,
+            &worker_of_owner,
+            &specs,
+            spec.order,
+            spec.transport,
+        )?;
         run.exchange_every_stage = spec.exchange_every_stage;
         run.rebalance_every = spec.rebalance_every;
         run.level1_rebalance = spec.level1_rebalance;
@@ -1033,11 +1069,35 @@ impl ClusterRun {
     /// mesh-aware [`ClusterRun::launch`] enables it.
     pub fn launch_parts(
         lblocks: &[LocalBlock],
+        states: Vec<BlockState>,
+        plan: ExchangePlan,
+        worker_of_owner: &[usize],
+        specs: &[WorkerSpec],
+        order: usize,
+    ) -> Result<ClusterRun> {
+        ClusterRun::launch_parts_with(
+            lblocks,
+            states,
+            plan,
+            worker_of_owner,
+            specs,
+            order,
+            TransportKind::InProc,
+        )
+    }
+
+    /// [`ClusterRun::launch_parts`] with an explicit fabric transport
+    /// ([`TransportKind`]); `launch_parts` keeps the historical in-process
+    /// default.
+    #[allow(clippy::too_many_arguments)]
+    pub fn launch_parts_with(
+        lblocks: &[LocalBlock],
         mut states: Vec<BlockState>,
         plan: ExchangePlan,
         worker_of_owner: &[usize],
         specs: &[WorkerSpec],
         order: usize,
+        transport: TransportKind,
     ) -> Result<ClusterRun> {
         assert_eq!(lblocks.len(), states.len());
         assert_eq!(worker_of_owner.len(), states.len());
@@ -1070,13 +1130,23 @@ impl ClusterRun {
             cmd_txs.push(t);
             cmd_rxs.push(Some(r));
         }
+        // the data plane: one endpoint per worker, lane mechanism chosen
+        // by `transport`; lanes exist for every cross-worker pair so a
+        // rebalance can swap routing tables without re-plumbing (kept
+        // workers keep live connections)
+        let ctl = FabricCtl::new();
+        let node_of_worker: Vec<usize> = specs.iter().map(|s| s.node).collect();
+        let m = order + 1;
+        let mut endpoints =
+            build_endpoints(transport, &node_of_worker, NFIELDS * m * m, &ctl)?.into_iter();
         let mut workers = Vec::with_capacity(nw);
         for (w, spec) in specs.iter().enumerate() {
             let (rtx, rrx) = channel::<Resp>();
             let init = WorkerInit {
                 rx: cmd_rxs[w].take().expect("receiver taken once"),
                 tx: rtx,
-                fabric: cmd_txs.clone(),
+                endpoint: Box::new(endpoints.next().expect("one endpoint per worker")),
+                ctl: ctl.clone(),
                 blocks: std::mem::take(&mut per_worker_blocks[w]),
                 outbound: std::mem::take(&mut outbound[w]),
                 self_copies: std::mem::take(&mut self_copies[w]),
@@ -1116,6 +1186,8 @@ impl ClusterRun {
             rebalance_history: Vec::new(),
             routed_stages: 0,
             poisoned: false,
+            ctl,
+            transport,
             mesh_ctx: None,
         };
         // readiness handshake: backend construction can fail (e.g. PJRT
@@ -1130,6 +1202,13 @@ impl ClusterRun {
         Ok(run)
     }
 
+    /// Mark the run dead *and* poison the fabric, so any worker blocked
+    /// in a data-plane wait errors out instead of hanging forever.
+    fn poison(&mut self) {
+        self.poisoned = true;
+        self.ctl.poison();
+    }
+
     fn stage_all(&mut self, dt: f32, a: f32, b: f32, route: bool) -> Result<()> {
         let t0 = Instant::now();
         for w in &self.workers {
@@ -1142,7 +1221,7 @@ impl ClusterRun {
                 Ok(Resp::StageDone { exchange_s }) => ex_max = ex_max.max(exchange_s),
                 Ok(Resp::Err(m)) => failure = Some(m),
                 _ => {
-                    self.poisoned = true;
+                    self.poison();
                     return Err(anyhow!("worker channel failed during stage"));
                 }
             }
@@ -1154,7 +1233,7 @@ impl ClusterRun {
             self.routed_stages += 1;
         }
         if let Some(m) = failure {
-            self.poisoned = true;
+            self.poison();
             return Err(anyhow!("stage failed: {m}"));
         }
         Ok(())
@@ -1274,6 +1353,11 @@ impl ClusterRun {
     /// Fabric traffic classification (faces per routed stage).
     pub fn fabric(&self) -> FabricStats {
         self.fabric
+    }
+
+    /// The transport every fabric lane of this run is built on.
+    pub fn transport(&self) -> TransportKind {
+        self.transport
     }
 
     /// Routed stages so far (for cumulative traffic accounting).
@@ -1562,7 +1646,7 @@ impl ClusterRun {
                 expected_in: expected[w],
             };
             if wk.tx.send(Cmd::Replace(Box::new(msg))).is_err() {
-                self.poisoned = true;
+                self.poison();
                 return Err(anyhow!("worker {w} died during migration"));
             }
         }
@@ -1570,11 +1654,11 @@ impl ClusterRun {
             match wk.rx.recv() {
                 Ok(Resp::Replaced) => {}
                 Ok(Resp::Err(msg)) => {
-                    self.poisoned = true;
+                    self.poison();
                     return Err(anyhow!("worker {w} failed migration: {msg}"));
                 }
                 _ => {
-                    self.poisoned = true;
+                    self.poison();
                     return Err(anyhow!("worker {w} died during migration"));
                 }
             }
@@ -1594,6 +1678,10 @@ impl ClusterRun {
 
 impl Drop for ClusterRun {
     fn drop(&mut self) {
+        // poison first: a worker blocked mid-exchange (peer died, its
+        // group never came) must wake from the data plane before it can
+        // see the Shutdown command
+        self.ctl.poison();
         for w in &self.workers {
             let _ = w.tx.send(Cmd::Shutdown);
         }
@@ -1677,5 +1765,103 @@ mod tests {
         let run = ClusterRun::launch(&mesh, &spec, wave_ic).unwrap();
         let total: usize = run.node_counts().iter().map(|&(c, m)| c + m).sum();
         assert_eq!(total, mesh.len());
+    }
+
+    /// The historical delivery race, forced deterministically: a fast
+    /// peer's delivery group arrives *before* this worker's Stage
+    /// command. The old fabric carried deliveries on the command channel
+    /// (buffered in a `pending` vec whose draining was easy to get
+    /// wrong); they now queue in the data plane, so an early group must
+    /// simply be waiting when the exchange window opens. The "peer" here
+    /// is the test thread holding worker 1's endpoint, which ships its
+    /// group and only then sends Stage — on every transport.
+    #[test]
+    fn early_deliveries_queue_in_the_data_plane() {
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            early_delivery_roundtrip(kind);
+        }
+    }
+
+    fn early_delivery_roundtrip(kind: TransportKind) {
+        let order = 1usize;
+        let m = order + 1;
+        let mesh = unit_cube_geometry(2);
+        // two single-block workers on *different* nodes, so the socket
+        // transport exercises its stream lane
+        let half = mesh.len() / 2;
+        let elem_owners: Vec<usize> = (0..mesh.len()).map(|e| usize::from(e >= half)).collect();
+        let (lblocks, plan) = build_local_blocks(&mesh, &elem_owners, 2);
+        let basis = LglBasis::new(order);
+        let mut states: Vec<BlockState> = lblocks
+            .iter()
+            .map(|lb| {
+                let mut st =
+                    BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1));
+                st.set_initial_condition(&basis, &wave_ic);
+                st
+            })
+            .collect();
+        for s in states.iter_mut() {
+            s.refresh_traces();
+        }
+        apply_exchange(&mut states, &plan);
+        let owner_map: HashMap<usize, (usize, usize)> =
+            [(0, (0, 0)), (1, (1, 0))].into_iter().collect();
+        let (mut outbound, mut self_copies, expected) = route_tables(&plan, &owner_map, 2);
+        assert_eq!(expected[0], 1, "worker 1 must feed worker 0");
+        assert_eq!(outbound[1].len(), 1, "worker 1 has exactly one peer");
+        let ctl = FabricCtl::new();
+        let mut eps =
+            build_endpoints(kind, &[0, 1], NFIELDS * m * m, &ctl).unwrap().into_iter();
+        let ep0 = eps.next().unwrap();
+        let mut ep1 = eps.next().unwrap();
+        let peer_blocks = vec![states[1].clone()];
+        let (ctx, crx) = channel::<Cmd>();
+        let (rtx, rrx) = channel::<Resp>();
+        let init = WorkerInit {
+            rx: crx,
+            tx: rtx,
+            endpoint: Box::new(ep0),
+            ctl: ctl.clone(),
+            blocks: vec![states.swap_remove(0)],
+            outbound: std::mem::take(&mut outbound[0]),
+            self_copies: std::mem::take(&mut self_copies[0]),
+            expected_in: expected[0],
+            factory: WorkerBackend::RustRef.factory(1, None),
+            order,
+        };
+        let handle = std::thread::spawn(move || worker_main(init));
+        match rrx.recv().unwrap() {
+            Resp::Ready => {}
+            Resp::Err(e) => panic!("worker not ready on {kind}: {e}"),
+            _ => panic!("unexpected startup response on {kind}"),
+        }
+        // the race, forced: the peer's group is in the data plane before
+        // the worker has even been told to stage
+        let grp = &outbound[1][0];
+        assert_eq!(grp.dst, 0);
+        ep1.ship(0, &grp.items, &peer_blocks, false).unwrap();
+        ctx.send(Cmd::Stage { dt: 1e-3, a: LSRK_A[0] as f32, b: LSRK_B[0] as f32, route: true })
+            .unwrap();
+        match rrx.recv().unwrap() {
+            Resp::StageDone { .. } => {}
+            Resp::Err(e) => panic!("stage failed on {kind}: {e}"),
+            _ => panic!("unexpected stage response on {kind}"),
+        }
+        // the staged worker must have installed the early group: its halo
+        // slots hold exactly the traces the peer shipped
+        ctx.send(Cmd::ReadBlock(0)).unwrap();
+        let got = match rrx.recv().unwrap() {
+            Resp::Block(b) => *b,
+            _ => panic!("unexpected read response on {kind}"),
+        };
+        let sz = NFIELDS * m * m;
+        for &(bs, se, sf, _bd, slot) in &grp.items {
+            let want = peer_blocks[bs].trace_slice(se, sf);
+            let have = &got.halo[slot * sz..(slot + 1) * sz];
+            assert_eq!(have, want, "halo slot {slot} mismatch on {kind}");
+        }
+        ctx.send(Cmd::Shutdown).unwrap();
+        handle.join().unwrap();
     }
 }

@@ -290,13 +290,18 @@ pub fn fig6_2(out_csv: Option<&str>) -> Result<String> {
 /// frozen measurement window). Reports the per-step discrepancy plus the
 /// **per-kernel** live-over-sim drift — the series that localizes where
 /// the calibrated functional forms break down — optionally emitted into a
-/// [`JsonSink`] (`BENCH_cluster.json`).
+/// [`JsonSink`] (`BENCH_cluster.json`). `transport` picks the live run's
+/// message fabric ([`crate::coordinator::TransportKind`]); the simulator
+/// side keeps the Stampede-calibrated network model, so the discrepancy
+/// column also exposes how much a slower fabric costs.
+#[allow(clippy::too_many_arguments)]
 pub fn cross_check(
     nodes: usize,
     n: usize,
     order: usize,
     steps: usize,
     rebalance_every: Option<usize>,
+    transport: crate::coordinator::TransportKind,
     out_csv: Option<&str>,
     mut sink: Option<&mut JsonSink>,
 ) -> Result<String> {
@@ -311,6 +316,7 @@ pub fn cross_check(
     let mut spec = ClusterSpec::new(nodes, order);
     spec.mic_fraction = Some(0.3);
     spec.rebalance_every = rebalance_every;
+    spec.transport = transport;
     let w = std::f64::consts::PI * 3f64.sqrt();
     let mut run = ClusterRun::launch(&mesh, &spec, |x| standing_wave(x, 0.0, 1.0, 1.0, w))?;
     if rebalance_every.is_some() {
@@ -528,7 +534,7 @@ mod tests {
 
     #[test]
     fn cross_check_live_vs_sim_runs() {
-        let s = cross_check(2, 4, 2, 3, None, None, None).unwrap();
+        let s = cross_check(2, 4, 2, 3, None, Default::default(), None, None).unwrap();
         assert!(s.contains("live_over_sim"), "{s}");
         assert!(s.contains("refitted"), "{s}");
         // per-kernel drift rows are part of the report
@@ -538,7 +544,8 @@ mod tests {
     #[test]
     fn cross_check_adaptive_emits_kernel_drift() {
         let mut sink = JsonSink::new();
-        let s = cross_check(2, 4, 2, 2, Some(2), None, Some(&mut sink)).unwrap();
+        let s =
+            cross_check(2, 4, 2, 2, Some(2), Default::default(), None, Some(&mut sink)).unwrap();
         assert!(s.contains("live_over_sim"), "{s}");
         let dump = sink.dump();
         assert!(dump.contains("cross_check_live_over_sim"), "{dump}");

@@ -36,8 +36,10 @@ pub mod node;
 pub mod profile;
 pub mod rebalance;
 pub mod report;
+pub mod transport;
 
 pub use cluster::{ClusterRun, ClusterSpec, FabricStats, WorkerBackendFactory, WorkerTimes};
 pub use node::{HeteroRun, WorkerBackend};
 pub use profile::ProfileReport;
 pub use rebalance::{NodeRebalance, RebalanceReport};
+pub use transport::TransportKind;

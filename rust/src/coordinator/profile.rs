@@ -67,14 +67,28 @@ impl ProfileReport {
     }
 }
 
+/// Human-scale byte counts for the fabric traffic column.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1024.0 * 1024.0 {
+        format!("{:.1}MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.1}KiB", b / 1024.0)
+    } else {
+        format!("{b:.0}B")
+    }
+}
+
 /// Render the per-worker phase breakdown of a cluster run: boundary /
-/// interior / exchange wall seconds per step plus the busy imbalance —
-/// the measurement the adaptive rebalancer drives to 1.0.
+/// interior / exchange wall seconds per step, fabric traffic (sent +
+/// received payload bytes, as counted by the worker's transport
+/// endpoint) per step, plus the busy imbalance — the measurement the
+/// adaptive rebalancer drives to 1.0.
 pub fn render_phase_table(summaries: &[WorkerSummary], times: &[WorkerTimes]) -> String {
     assert_eq!(summaries.len(), times.len());
     let mut rows = Vec::with_capacity(times.len());
     for (s, t) in summaries.iter().zip(times) {
         let steps = t.steps().max(1e-300);
+        let fabric = (t.fabric_sent_bytes + t.fabric_recv_bytes) as f64;
         rows.push(vec![
             format!("node{}-{}", s.node, if s.device == DeviceKind::Cpu { "cpu" } else { "mic" }),
             s.label.to_string(),
@@ -83,6 +97,7 @@ pub fn render_phase_table(summaries: &[WorkerSummary], times: &[WorkerTimes]) ->
             super::report::fmt_secs(t.boundary_s / steps),
             super::report::fmt_secs(t.interior_s / steps),
             super::report::fmt_secs(t.exchange_s / steps),
+            fmt_bytes(fabric / steps),
             super::report::fmt_secs(t.busy_per_step()),
         ]);
     }
@@ -95,6 +110,7 @@ pub fn render_phase_table(summaries: &[WorkerSummary], times: &[WorkerTimes]) ->
             "boundary/step",
             "interior/step",
             "exchange/step",
+            "fabric/step",
             "busy/step",
         ],
         &rows,
@@ -237,10 +253,21 @@ mod tests {
             interior_s: 0.2,
             exchange_s: 0.05,
             stages: 2 * N_STAGES,
+            fabric_sent_bytes: 4096,
+            fabric_recv_bytes: 4096,
             ..Default::default()
         };
         let s = render_phase_table(&summaries, &[t, t]);
         assert!(s.contains("node0-cpu") && s.contains("node0-mic"), "{s}");
         assert!(s.contains("busy imbalance"), "{s}");
+        // 8192 bytes over 2 steps = 4 KiB per step in the fabric column
+        assert!(s.contains("fabric/step") && s.contains("4.0KiB"), "{s}");
+    }
+
+    #[test]
+    fn bytes_formatting_scales() {
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(4.0 * 1024.0), "4.0KiB");
+        assert_eq!(fmt_bytes(3.5 * 1024.0 * 1024.0), "3.5MiB");
     }
 }

@@ -1,0 +1,957 @@
+//! Pluggable message-fabric transports for the cluster runtime.
+//!
+//! [`super::cluster`] routes halo traces worker-to-worker on three lanes
+//! (self / intra-node / inter-node). The routing tables and the §5.5 lane
+//! classification are transport-independent; this module owns *how* a
+//! delivery group actually crosses between two workers:
+//!
+//! * [`TransportKind::InProc`] — the original std `mpsc` channels on
+//!   every cross-worker lane (the baseline the equivalence tests pin
+//!   everything else to).
+//! * [`TransportKind::Shm`] — serialization-free shared-memory lanes:
+//!   one lock-free SPSC slot ring ([`crate::util::shm`]) per directed
+//!   worker pair. A trace is written once by the producer into a ring
+//!   slot and copied once by the consumer straight into the destination
+//!   block's halo storage — no queue-node allocation, no locks, no
+//!   intermediate framing.
+//! * [`TransportKind::Socket`] — the honest lane split: intra-node
+//!   (PCI stand-in) pairs keep the shared-memory rings, while every
+//!   inter-node (MPI stand-in) pair crosses a real kernel socket
+//!   (`UnixStream` pair) carrying length-prefixed Deliver frames
+//!   ([`crate::util::framing`]). Workers are still thread-hosted — the
+//!   bytes, syscalls and wakeups are the real inter-process cost, the
+//!   address-space split is the remaining step (see ROADMAP).
+//!
+//! Every worker holds one [`MixedEndpoint`]; `ship`/`recv_group` hide
+//! which mechanism each peer lane uses. Delivery is *grouped*: one group
+//! per (src, dst) pair per routed stage, empty groups on stage failure,
+//! so the cluster lockstep counts groups identically on all transports.
+//!
+//! [`measure_fabric_links`] probes the latency/bandwidth of the actual
+//! mechanisms (`mpsc` hop, ring hop, socket hop) so
+//! [`crate::costmodel::network`] / [`crate::costmodel::pci`] can be
+//! calibrated against measured links instead of guessed constants.
+
+use std::io::BufReader;
+use std::net::Shutdown;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail};
+
+use crate::solver::state::BlockState;
+use crate::util::framing::{self, FrameItem, FrameWriter};
+use crate::util::shm::{slot_ring, RingConsumer, RingProducer};
+use crate::Result;
+
+/// One halo installment: (destination local block, halo slot, trace data).
+pub type Delivery = (usize, usize, Vec<f32>);
+
+/// One delivery group — everything one peer ships this worker in one
+/// routed stage.
+pub type Deliveries = Vec<Delivery>;
+
+/// One routed copy:
+/// (src local block, src elem, src face, dst local block, dst halo slot).
+pub type CopyRoute = (usize, usize, usize, usize, usize);
+
+// ---------------------------------------------------------------------------
+// transport selection
+// ---------------------------------------------------------------------------
+
+/// Which mechanism carries cross-worker delivery groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process `mpsc` channels on every lane (baseline).
+    #[default]
+    InProc,
+    /// Lock-free shared-memory slot rings on every lane.
+    Shm,
+    /// Rings intra-node, Unix-domain sockets inter-node.
+    Socket,
+}
+
+impl TransportKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::Shm => "shm",
+            TransportKind::Socket => "socket",
+        }
+    }
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "inproc" => Ok(TransportKind::InProc),
+            "shm" => Ok(TransportKind::Shm),
+            "socket" => Ok(TransportKind::Socket),
+            other => Err(anyhow!("unknown transport {other:?} (inproc|shm|socket)")),
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fabric control plane
+// ---------------------------------------------------------------------------
+
+/// Shared poison flag: the coordinator (or any failing worker) sets it so
+/// every endpoint blocked in a ship/recv wait bails out instead of
+/// spinning on deliveries that will never come.
+#[derive(Debug, Clone, Default)]
+pub struct FabricCtl {
+    poison: Arc<AtomicBool>,
+}
+
+impl FabricCtl {
+    pub fn new() -> Self {
+        FabricCtl::default()
+    }
+
+    pub fn poison(&self) {
+        self.poison.store(true, Ordering::Release);
+    }
+
+    pub fn is_poisoned(&self) -> bool {
+        self.poison.load(Ordering::Acquire)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the endpoint
+// ---------------------------------------------------------------------------
+
+/// What one worker uses to talk to the fabric: ship one outbound group
+/// per peer per routed stage, receive one group per sending peer.
+///
+/// Both calls return the *payload* f32 bytes moved (headers/framing
+/// excluded) so the worker can account per-lane traffic honestly.
+pub trait FabricEndpoint: Send {
+    /// Ship one delivery group to `dst`. `items` are this worker's
+    /// routed copies for that peer; traces are read from `blocks`. When
+    /// `failed`, an empty group is shipped instead so the peer's
+    /// per-stage group count stays intact.
+    fn ship(
+        &mut self,
+        dst: usize,
+        items: &[CopyRoute],
+        blocks: &[BlockState],
+        failed: bool,
+    ) -> Result<usize>;
+
+    /// Block until one more inbound delivery group has been fully
+    /// installed into `blocks` (plus whatever else arrived while
+    /// waiting). Fails when the fabric is poisoned or a lane closed.
+    fn recv_group(&mut self, blocks: &mut [BlockState]) -> Result<usize>;
+
+    /// Drop any buffered/in-flight deliveries (rebalance swaps routing
+    /// tables between stages on empty lanes; a failed stage may leave
+    /// stragglers).
+    fn clear_pending(&mut self);
+}
+
+/// Per-destination send lane of a [`MixedEndpoint`].
+enum LaneTx {
+    /// No lane (self, or the worker itself).
+    None,
+    Mpsc(Sender<(usize, Deliveries)>),
+    Ring(RingProducer),
+    Stream(UnixStream),
+}
+
+/// One worker's fabric endpoint; mixes mechanisms per peer lane.
+///
+/// Ring protocol: a group is one *header* record (`w0 = n_items`,
+/// empty payload) followed by `n_items` face records (`w0 = dst block`,
+/// `w1 = halo slot`, payload = trace). Records of one group never
+/// interleave with another's on the same ring (SPSC, one group per
+/// stage), so the consumer tracks a (started, remaining) state machine
+/// per source ring.
+pub struct MixedEndpoint {
+    me: usize,
+    ctl: FabricCtl,
+    /// Send lanes by destination worker.
+    tx: Vec<LaneTx>,
+    /// Inbound rings by source worker.
+    rings_in: Vec<Option<RingConsumer>>,
+    /// Inbound channel: mpsc peers send whole groups here; socket reader
+    /// threads decode frames into it too.
+    chan_rx: Receiver<(usize, Deliveries)>,
+    /// Keeps `chan_rx` connected even when no peer holds a sender (a
+    /// worker whose peers are all ring-connected must still be able to
+    /// block on the channel with a timeout, not die on Disconnected).
+    _chan_keepalive: Sender<(usize, Deliveries)>,
+    /// Reusable socket frame encoder.
+    enc: FrameWriter,
+    /// Ring consumer state machine: mid-group flag per source…
+    ring_started: Vec<bool>,
+    /// …and face records remaining in the current group.
+    ring_remaining: Vec<usize>,
+    /// Ring groups fully consumed but not yet credited to a
+    /// `recv_group` call.
+    ring_groups_done: usize,
+    /// Halo installs drained from inbound rings while *shipping* blocked
+    /// on a full ring (breaks ship/ship deadlocks); flushed to blocks at
+    /// the next `recv_group`.
+    stash: Vec<Delivery>,
+    /// Socket reader threads (joined on drop; they exit once the socket
+    /// is shut down from either side).
+    readers: Vec<JoinHandle<()>>,
+}
+
+/// How long `recv_group` blocks on the channel between poison checks.
+const RECV_TICK: Duration = Duration::from_millis(20);
+
+impl MixedEndpoint {
+    fn has_rings(&self) -> bool {
+        self.rings_in.iter().any(|r| r.is_some())
+    }
+
+    /// Drain whatever is immediately available on the inbound rings,
+    /// installing via `install` and crediting completed groups. Returns
+    /// newly-installed payload bytes. An associated fn over disjoint
+    /// field borrows so both `ship` (stashing) and `recv_group`
+    /// (installing into blocks) can pump.
+    fn pump_rings(
+        rings: &mut [Option<RingConsumer>],
+        started: &mut [bool],
+        remaining: &mut [usize],
+        groups_done: &mut usize,
+        install: &mut dyn FnMut(usize, usize, &[f32]),
+    ) -> Result<usize> {
+        enum Ev {
+            Header(usize),
+            Face(usize),
+        }
+        let mut bytes = 0usize;
+        for (src, lane) in rings.iter_mut().enumerate() {
+            let Some(rc) = lane else { continue };
+            loop {
+                let ev = if !started[src] {
+                    rc.try_pop_with(|w0, _, _| Ev::Header(w0 as usize))
+                } else {
+                    rc.try_pop_with(|w0, w1, p| {
+                        install(w0 as usize, w1 as usize, p);
+                        Ev::Face(p.len() * 4)
+                    })
+                };
+                match ev {
+                    None => {
+                        if rc.is_closed() && started[src] {
+                            bail!("shm ring from worker {src} closed mid-group");
+                        }
+                        break;
+                    }
+                    Some(Ev::Header(0)) => *groups_done += 1, // empty (failed-stage) group
+                    Some(Ev::Header(n)) => {
+                        started[src] = true;
+                        remaining[src] = n;
+                    }
+                    Some(Ev::Face(b)) => {
+                        bytes += b;
+                        remaining[src] -= 1;
+                        if remaining[src] == 0 {
+                            started[src] = false;
+                            *groups_done += 1;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(bytes)
+    }
+
+    /// Push one record to `dst`'s ring, draining our own inbound rings
+    /// into the stash while the peer's ring is full (the peer may be
+    /// blocked shipping to *us* — mutual drain breaks the cycle).
+    fn ring_send(&mut self, dst: usize, w0: u32, w1: u32, payload: &[f32]) -> Result<()> {
+        loop {
+            let LaneTx::Ring(p) = &mut self.tx[dst] else {
+                bail!("lane to worker {dst} is not a ring");
+            };
+            match p.try_push(w0, w1, payload) {
+                Ok(true) => return Ok(()),
+                Ok(false) => {}
+                Err(_) => bail!("shm ring to worker {dst} closed"),
+            }
+            if self.ctl.is_poisoned() {
+                bail!("fabric poisoned while shipping to worker {dst}");
+            }
+            let stash = &mut self.stash;
+            Self::pump_rings(
+                &mut self.rings_in,
+                &mut self.ring_started,
+                &mut self.ring_remaining,
+                &mut self.ring_groups_done,
+                &mut |bi, slot, p| stash.push((bi, slot, p.to_vec())),
+            )?;
+            std::thread::yield_now();
+        }
+    }
+
+    fn install_group(blocks: &mut [BlockState], group: Deliveries) -> usize {
+        let mut bytes = 0usize;
+        for (bi, slot, data) in group {
+            bytes += data.len() * 4;
+            blocks[bi].set_halo_slot(slot, &data);
+        }
+        bytes
+    }
+}
+
+impl FabricEndpoint for MixedEndpoint {
+    fn ship(
+        &mut self,
+        dst: usize,
+        items: &[CopyRoute],
+        blocks: &[BlockState],
+        failed: bool,
+    ) -> Result<usize> {
+        // dispatch on a copied discriminant so the lane borrow doesn't
+        // outlive the match arm (ring_send re-borrows per record)
+        enum K {
+            Mpsc,
+            Ring,
+            Stream,
+        }
+        let kind = match &self.tx[dst] {
+            LaneTx::Mpsc(_) => K::Mpsc,
+            LaneTx::Ring(_) => K::Ring,
+            LaneTx::Stream(_) => K::Stream,
+            LaneTx::None => bail!("no fabric lane from worker {} to {dst}", self.me),
+        };
+        let mut bytes = 0usize;
+        match kind {
+            K::Mpsc => {
+                let payload: Deliveries = if failed {
+                    Vec::new()
+                } else {
+                    items
+                        .iter()
+                        .map(|&(bi, e, f, dbi, slot)| {
+                            let data = blocks[bi].trace_slice(e, f).to_vec();
+                            bytes += data.len() * 4;
+                            (dbi, slot, data)
+                        })
+                        .collect()
+                };
+                let LaneTx::Mpsc(tx) = &self.tx[dst] else { unreachable!() };
+                tx.send((self.me, payload))
+                    .map_err(|_| anyhow!("mpsc lane to worker {dst} closed"))?;
+            }
+            K::Ring => {
+                let n = if failed { 0 } else { items.len() };
+                self.ring_send(dst, n as u32, 0, &[])?;
+                if !failed {
+                    for &(bi, e, f, dbi, slot) in items {
+                        let data = blocks[bi].trace_slice(e, f);
+                        bytes += data.len() * 4;
+                        // the trace is copied once: source trace -> ring
+                        // slot; the consumer copies slot -> halo storage
+                        self.ring_send(dst, dbi as u32, slot as u32, data)?;
+                    }
+                }
+            }
+            K::Stream => {
+                let frame_items: Vec<FrameItem> = if failed {
+                    Vec::new()
+                } else {
+                    items
+                        .iter()
+                        .map(|&(bi, e, f, dbi, slot)| {
+                            (dbi, slot, blocks[bi].trace_slice(e, f).to_vec())
+                        })
+                        .collect()
+                };
+                let me = self.me;
+                let LaneTx::Stream(s) = &mut self.tx[dst] else { unreachable!() };
+                // write_all can't deadlock: the peer's dedicated reader
+                // thread always drains its end of the socket
+                bytes = framing::write_group(s, &mut self.enc, me, frame_items.into_iter())?;
+            }
+        }
+        Ok(bytes)
+    }
+
+    fn recv_group(&mut self, blocks: &mut [BlockState]) -> Result<usize> {
+        // installs drained during a blocked ship belong to this stage's
+        // inbound traffic — land them (and count them) now
+        let mut bytes = 0usize;
+        for (bi, slot, data) in self.stash.drain(..) {
+            bytes += data.len() * 4;
+            blocks[bi].set_halo_slot(slot, &data);
+        }
+        let spin = self.has_rings();
+        loop {
+            if self.ring_groups_done > 0 {
+                self.ring_groups_done -= 1;
+                return Ok(bytes);
+            }
+            match self.chan_rx.try_recv() {
+                Ok((_, group)) => {
+                    bytes += Self::install_group(blocks, group);
+                    return Ok(bytes);
+                }
+                Err(TryRecvError::Empty) => {}
+                Err(TryRecvError::Disconnected) => bail!("fabric channel closed"),
+            }
+            bytes += Self::pump_rings(
+                &mut self.rings_in,
+                &mut self.ring_started,
+                &mut self.ring_remaining,
+                &mut self.ring_groups_done,
+                &mut |bi, slot, p| blocks[bi].set_halo_slot(slot, p),
+            )?;
+            if self.ring_groups_done > 0 {
+                continue;
+            }
+            if self.ctl.is_poisoned() {
+                bail!("fabric poisoned during exchange");
+            }
+            if spin {
+                // ring lanes need polling; stay hot but yield the core
+                std::thread::yield_now();
+            } else {
+                // channel-only endpoint: block properly between checks
+                match self.chan_rx.recv_timeout(RECV_TICK) {
+                    Ok((_, group)) => {
+                        bytes += Self::install_group(blocks, group);
+                        return Ok(bytes);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => bail!("fabric channel closed"),
+                }
+            }
+        }
+    }
+
+    fn clear_pending(&mut self) {
+        self.stash.clear();
+        while self.chan_rx.try_recv().is_ok() {}
+        // rings are empty between stages by protocol (every shipped group
+        // is consumed in the same stage's exchange window); the state
+        // machine reset below covers a failed stage's stragglers
+        let _ = Self::pump_rings(
+            &mut self.rings_in,
+            &mut self.ring_started,
+            &mut self.ring_remaining,
+            &mut self.ring_groups_done,
+            &mut |_, _, _| {},
+        );
+        for s in self.ring_started.iter_mut() {
+            *s = false;
+        }
+        for r in self.ring_remaining.iter_mut() {
+            *r = 0;
+        }
+        self.ring_groups_done = 0;
+    }
+}
+
+impl Drop for MixedEndpoint {
+    fn drop(&mut self) {
+        // socket shutdown affects every clone of the fd, so this both
+        // signals EOF to the peer and unblocks our own reader thread
+        for lane in &self.tx {
+            if let LaneTx::Stream(s) = lane {
+                let _ = s.shutdown(Shutdown::Both);
+            }
+        }
+        for h in self.readers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fabric construction
+// ---------------------------------------------------------------------------
+
+/// Slots per ring: enough that a full stage group (header + a typical
+/// outbound face count) streams through without the producer stalling.
+const RING_SLOTS: usize = 64;
+
+fn spawn_reader(
+    name: String,
+    stream: UnixStream,
+    out: Sender<(usize, Deliveries)>,
+) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            let mut r = BufReader::new(stream);
+            // EOF/error/closed-channel all mean the run is over
+            while let Ok(Some((src, items))) = framing::read_group(&mut r) {
+                if out.send((src, items)).is_err() {
+                    break;
+                }
+            }
+        })
+        .map_err(|e| anyhow!("spawning socket reader: {e}"))
+}
+
+/// Build one endpoint per worker. `node_of_worker[w]` gives each
+/// worker's virtual node — the lane class of a pair (intra vs inter) is
+/// derived from it exactly as [`super::cluster`]'s `fabric_stats`
+/// classifies traffic, so the §5.5 story is the same on every transport.
+/// `face_words` bounds one trace's f32 payload (ring slot capacity).
+///
+/// Lanes are built for every cross-worker pair regardless of the current
+/// routing tables: rebalancing reshapes *routes*, never node membership,
+/// so kept workers keep their live lanes (including open sockets) across
+/// a routing-table swap.
+pub fn build_endpoints(
+    kind: TransportKind,
+    node_of_worker: &[usize],
+    face_words: usize,
+    ctl: &FabricCtl,
+) -> Result<Vec<MixedEndpoint>> {
+    let nw = node_of_worker.len();
+    let mut chan_txs = Vec::with_capacity(nw);
+    let mut endpoints: Vec<MixedEndpoint> = Vec::with_capacity(nw);
+    for me in 0..nw {
+        let (ctx, crx) = channel::<(usize, Deliveries)>();
+        chan_txs.push(ctx.clone());
+        endpoints.push(MixedEndpoint {
+            me,
+            ctl: ctl.clone(),
+            tx: (0..nw).map(|_| LaneTx::None).collect(),
+            rings_in: (0..nw).map(|_| None).collect(),
+            chan_rx: crx,
+            _chan_keepalive: ctx,
+            enc: FrameWriter::new(),
+            ring_started: vec![false; nw],
+            ring_remaining: vec![0; nw],
+            ring_groups_done: 0,
+            stash: Vec::new(),
+            readers: Vec::new(),
+        });
+    }
+    for a in 0..nw {
+        for b in (a + 1)..nw {
+            let intra = node_of_worker[a] == node_of_worker[b];
+            let ring_lane = match kind {
+                TransportKind::InProc => false,
+                TransportKind::Shm => true,
+                TransportKind::Socket => intra,
+            };
+            if ring_lane {
+                let (pa, ca) = slot_ring(RING_SLOTS, face_words); // a -> b
+                let (pb, cb) = slot_ring(RING_SLOTS, face_words); // b -> a
+                endpoints[a].tx[b] = LaneTx::Ring(pa);
+                endpoints[b].rings_in[a] = Some(ca);
+                endpoints[b].tx[a] = LaneTx::Ring(pb);
+                endpoints[a].rings_in[b] = Some(cb);
+            } else if kind == TransportKind::Socket {
+                // one socketpair carries both directions of the pair
+                let (sa, sb) =
+                    UnixStream::pair().map_err(|e| anyhow!("socketpair({a},{b}): {e}"))?;
+                let ra = sa.try_clone().map_err(|e| anyhow!("cloning socket: {e}"))?;
+                let rb = sb.try_clone().map_err(|e| anyhow!("cloning socket: {e}"))?;
+                endpoints[a]
+                    .readers
+                    .push(spawn_reader(format!("fab-r{a}-{b}"), ra, chan_txs[a].clone())?);
+                endpoints[b]
+                    .readers
+                    .push(spawn_reader(format!("fab-r{b}-{a}"), rb, chan_txs[b].clone())?);
+                endpoints[a].tx[b] = LaneTx::Stream(sa);
+                endpoints[b].tx[a] = LaneTx::Stream(sb);
+            } else {
+                endpoints[a].tx[b] = LaneTx::Mpsc(chan_txs[b].clone());
+                endpoints[b].tx[a] = LaneTx::Mpsc(chan_txs[a].clone());
+            }
+        }
+    }
+    Ok(endpoints)
+}
+
+// ---------------------------------------------------------------------------
+// link measurement
+// ---------------------------------------------------------------------------
+
+/// Measured point-to-point link characteristics of one fabric mechanism.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkMeasurement {
+    /// One-way small-message latency (seconds).
+    pub latency_s: f64,
+    /// Sustained one-way bandwidth (bytes/second).
+    pub bw_bytes_per_s: f64,
+}
+
+/// The two cross-worker link classes of a transport, measured.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricLinks {
+    /// Intra-node lane (the PCI stand-in).
+    pub pci: LinkMeasurement,
+    /// Inter-node lane (the MPI stand-in).
+    pub net: LinkMeasurement,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum LinkMech {
+    Mpsc,
+    Ring,
+    Uds,
+}
+
+const PING_ROUNDS: usize = 64;
+const BULK_CHUNK_F32: usize = 64 * 1024; // 256 KiB per message
+const BULK_CHUNKS: usize = 24; // 6 MiB total
+
+fn measure_mpsc() -> LinkMeasurement {
+    let (atx, arx) = channel::<Vec<f32>>();
+    let (btx, brx) = channel::<Vec<f32>>();
+    let echo = std::thread::spawn(move || {
+        while let Ok(v) = arx.recv() {
+            if v.is_empty() {
+                break;
+            }
+            btx.send(v).ok();
+        }
+        // bulk phase: drain until the empty sentinel, then ack once
+        let mut got = 0usize;
+        while let Ok(v) = arx.recv() {
+            if v.is_empty() {
+                break;
+            }
+            got += v.len();
+        }
+        btx.send(vec![got as f32]).ok();
+    });
+    let ping = vec![1.0f32; 16];
+    let t0 = Instant::now();
+    for _ in 0..PING_ROUNDS {
+        atx.send(ping.clone()).unwrap();
+        brx.recv().unwrap();
+    }
+    let latency_s = t0.elapsed().as_secs_f64() / (PING_ROUNDS as f64 * 2.0);
+    atx.send(Vec::new()).unwrap(); // end ping phase
+    let chunk = vec![0.5f32; BULK_CHUNK_F32];
+    let t1 = Instant::now();
+    for _ in 0..BULK_CHUNKS {
+        atx.send(chunk.clone()).unwrap();
+    }
+    atx.send(Vec::new()).unwrap();
+    brx.recv().unwrap();
+    let bulk_s = t1.elapsed().as_secs_f64();
+    echo.join().ok();
+    let bytes = (BULK_CHUNK_F32 * BULK_CHUNKS * 4) as f64;
+    LinkMeasurement { latency_s, bw_bytes_per_s: bytes / bulk_s.max(1e-9) }
+}
+
+fn measure_ring() -> LinkMeasurement {
+    let (mut fwd_tx, mut fwd_rx) = slot_ring(RING_SLOTS, BULK_CHUNK_F32.min(4096));
+    let (mut rev_tx, mut rev_rx) = slot_ring(RING_SLOTS, 16);
+    let payload_words = BULK_CHUNK_F32.min(4096);
+    let echo = std::thread::spawn(move || {
+        // ping phase: echo PING_ROUNDS records
+        for _ in 0..PING_ROUNDS {
+            while fwd_rx.try_pop_with(|_, _, _| ()).is_none() {
+                std::hint::spin_loop();
+            }
+            while let Ok(false) = rev_tx.try_push(0, 0, &[]) {
+                std::hint::spin_loop();
+            }
+        }
+        // bulk phase: drain records until the w0=1 sentinel, ack once
+        loop {
+            let done = loop {
+                if let Some(d) = fwd_rx.try_pop_with(|w0, _, _| w0 == 1) {
+                    break d;
+                }
+                std::hint::spin_loop();
+            };
+            if done {
+                break;
+            }
+        }
+        while let Ok(false) = rev_tx.try_push(0, 0, &[]) {
+            std::hint::spin_loop();
+        }
+    });
+    let ping = vec![1.0f32; 16];
+    let t0 = Instant::now();
+    for _ in 0..PING_ROUNDS {
+        while let Ok(false) = fwd_tx.try_push(0, 0, &ping) {
+            std::hint::spin_loop();
+        }
+        while rev_rx.try_pop_with(|_, _, _| ()).is_none() {
+            std::hint::spin_loop();
+        }
+    }
+    let latency_s = t0.elapsed().as_secs_f64() / (PING_ROUNDS as f64 * 2.0);
+    let chunk = vec![0.5f32; payload_words];
+    // push enough records to match the bulk volume of the other probes
+    let records = (BULK_CHUNK_F32 * BULK_CHUNKS) / payload_words;
+    let t1 = Instant::now();
+    for _ in 0..records {
+        while let Ok(false) = fwd_tx.try_push(0, 0, &chunk) {
+            std::hint::spin_loop();
+        }
+    }
+    while let Ok(false) = fwd_tx.try_push(1, 0, &[]) {
+        std::hint::spin_loop();
+    }
+    while rev_rx.try_pop_with(|_, _, _| ()).is_none() {
+        std::hint::spin_loop();
+    }
+    let bulk_s = t1.elapsed().as_secs_f64();
+    echo.join().ok();
+    let bytes = (records * payload_words * 4) as f64;
+    LinkMeasurement { latency_s, bw_bytes_per_s: bytes / bulk_s.max(1e-9) }
+}
+
+fn measure_uds() -> Result<LinkMeasurement> {
+    use std::io::{Read, Write};
+    let (mut a, mut b) = UnixStream::pair().map_err(|e| anyhow!("socketpair: {e}"))?;
+    let bulk_bytes = BULK_CHUNK_F32 * BULK_CHUNKS * 4;
+    let echo = std::thread::spawn(move || {
+        let mut byte = [0u8; 64];
+        for _ in 0..PING_ROUNDS {
+            if b.read_exact(&mut byte).is_err() {
+                return;
+            }
+            if b.write_all(&byte).is_err() {
+                return;
+            }
+        }
+        let mut buf = vec![0u8; 1 << 20];
+        let mut got = 0usize;
+        while got < bulk_bytes {
+            match b.read(&mut buf) {
+                Ok(0) | Err(_) => return,
+                Ok(n) => got += n,
+            }
+        }
+        b.write_all(&byte[..1]).ok();
+    });
+    let msg = [7u8; 64];
+    let mut back = [0u8; 64];
+    let t0 = Instant::now();
+    for _ in 0..PING_ROUNDS {
+        a.write_all(&msg).map_err(|e| anyhow!("uds probe: {e}"))?;
+        a.read_exact(&mut back).map_err(|e| anyhow!("uds probe: {e}"))?;
+    }
+    let latency_s = t0.elapsed().as_secs_f64() / (PING_ROUNDS as f64 * 2.0);
+    let chunk = vec![3u8; 1 << 20];
+    let mut sent = 0usize;
+    let t1 = Instant::now();
+    while sent < bulk_bytes {
+        let n = chunk.len().min(bulk_bytes - sent);
+        a.write_all(&chunk[..n]).map_err(|e| anyhow!("uds probe: {e}"))?;
+        sent += n;
+    }
+    a.read_exact(&mut back[..1]).map_err(|e| anyhow!("uds probe: {e}"))?;
+    let bulk_s = t1.elapsed().as_secs_f64();
+    echo.join().ok();
+    Ok(LinkMeasurement { latency_s, bw_bytes_per_s: bulk_bytes as f64 / bulk_s.max(1e-9) })
+}
+
+fn measure_mech(mech: LinkMech) -> Result<LinkMeasurement> {
+    match mech {
+        LinkMech::Mpsc => Ok(measure_mpsc()),
+        LinkMech::Ring => Ok(measure_ring()),
+        LinkMech::Uds => measure_uds(),
+    }
+}
+
+/// Probe the latency/bandwidth of the mechanisms `kind` actually puts on
+/// each lane class (a few milliseconds per mechanism). Feeds
+/// [`crate::costmodel::pci::PciModel::from_link`] and
+/// [`crate::costmodel::network::NetworkModel::from_link`] so pricing uses
+/// the measured fabric instead of hardcoded Stampede-era guesses.
+pub fn measure_fabric_links(kind: TransportKind) -> Result<FabricLinks> {
+    let (pci_mech, net_mech) = match kind {
+        TransportKind::InProc => (LinkMech::Mpsc, LinkMech::Mpsc),
+        TransportKind::Shm => (LinkMech::Ring, LinkMech::Ring),
+        TransportKind::Socket => (LinkMech::Ring, LinkMech::Uds),
+    };
+    let pci = measure_mech(pci_mech)?;
+    let net = if net_mech == pci_mech { pci } else { measure_mech(net_mech)? };
+    Ok(FabricLinks { pci, net })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::state::NFIELDS;
+
+    /// Tiny hand-built block: 1 boundary-only element with distinctive
+    /// trace data, `halo` halo slots.
+    fn test_block(order: usize, halo: usize) -> BlockState {
+        let m = order + 1;
+        let (vol, face) = (m * m * m, m * m);
+        let hp = halo.max(1);
+        BlockState {
+            uid: BlockState::fresh_uid(),
+            order,
+            m,
+            k_real: 1,
+            k_pad: 1,
+            halo_real: halo,
+            halo_pad: hp,
+            q: vec![0.0; NFIELDS * vol],
+            res: vec![0.0; NFIELDS * vol],
+            traces: (0..6 * NFIELDS * face).map(|i| i as f32 * 0.25 - 7.0).collect(),
+            halo: vec![0.0; hp * NFIELDS * face],
+            conn: vec![-2; 6],
+            halo_idx: vec![0; 6],
+            mats: vec![1.0; 3],
+            halo_mats: vec![1.0; 3 * hp],
+            h: vec![1.0; 3],
+            centers: vec![[0.0; 3]],
+        }
+    }
+
+    /// Read back halo slot contents (the field is plain storage).
+    fn halo_slot(st: &BlockState, slot: usize) -> &[f32] {
+        let sz = NFIELDS * st.m * st.m;
+        &st.halo[slot * sz..(slot + 1) * sz]
+    }
+
+    fn endpoints_pair(kind: TransportKind) -> (MixedEndpoint, MixedEndpoint) {
+        let ctl = FabricCtl::new();
+        let order = 2;
+        let m = order + 1;
+        let mut eps = build_endpoints(kind, &[0, 1], NFIELDS * m * m, &ctl).unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        (a, b)
+    }
+
+    /// One group ships across and installs into the right halo slot on
+    /// every transport mechanism.
+    #[test]
+    fn ship_and_recv_roundtrip_all_kinds() {
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            let (mut a, mut b) = endpoints_pair(kind);
+            let order = 2;
+            let src = vec![test_block(order, 1)];
+            let mut dst = vec![test_block(order, 2)];
+            // route: a's block 0, elem 0, face 3 -> b's block 0, slot 1
+            let items: Vec<CopyRoute> = vec![(0, 0, 3, 0, 1)];
+            let sent = a.ship(1, &items, &src, false).unwrap();
+            let m = order + 1;
+            assert_eq!(sent, NFIELDS * m * m * 4, "{kind}");
+            let got = b.recv_group(&mut dst).unwrap();
+            assert_eq!(got, sent, "{kind}");
+            let want = src[0].trace_slice(0, 3);
+            assert_eq!(halo_slot(&dst[0], 1), want, "{kind}: payload must install bit-exactly");
+        }
+    }
+
+    /// A failed stage ships an empty group that still counts.
+    #[test]
+    fn failed_stage_group_keeps_lockstep() {
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            let (mut a, mut b) = endpoints_pair(kind);
+            let src = vec![test_block(2, 1)];
+            let mut dst = vec![test_block(2, 2)];
+            let items: Vec<CopyRoute> = vec![(0, 0, 3, 0, 1)];
+            let sent = a.ship(1, &items, &src, true).unwrap();
+            assert_eq!(sent, 0, "{kind}");
+            let got = b.recv_group(&mut dst).unwrap();
+            assert_eq!(got, 0, "{kind}: empty group must still complete recv");
+        }
+    }
+
+    /// Poisoning unblocks a receiver waiting on a group that never comes.
+    #[test]
+    fn poison_unblocks_recv() {
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            let ctl = FabricCtl::new();
+            let mut eps = build_endpoints(kind, &[0, 1], 128, &ctl).unwrap();
+            let mut b = eps.pop().unwrap();
+            let _a = eps.pop().unwrap();
+            let h = std::thread::spawn(move || {
+                let mut dst = vec![test_block(2, 1)];
+                b.recv_group(&mut dst).unwrap_err()
+            });
+            std::thread::sleep(Duration::from_millis(10));
+            ctl.poison();
+            let err = h.join().unwrap();
+            assert!(err.to_string().contains("poisoned"), "{kind}: {err}");
+        }
+    }
+
+    /// Socket mode puts rings on intra-node pairs and sockets on
+    /// inter-node pairs (the lane-class split is derived from node ids).
+    #[test]
+    fn socket_mode_lane_classes() {
+        let ctl = FabricCtl::new();
+        let eps = build_endpoints(TransportKind::Socket, &[0, 0, 1, 1], 128, &ctl).unwrap();
+        let lane = |e: &MixedEndpoint, d: usize| match &e.tx[d] {
+            LaneTx::None => "none",
+            LaneTx::Mpsc(_) => "mpsc",
+            LaneTx::Ring(_) => "ring",
+            LaneTx::Stream(_) => "stream",
+        };
+        assert_eq!(lane(&eps[0], 1), "ring"); // same node
+        assert_eq!(lane(&eps[2], 3), "ring");
+        assert_eq!(lane(&eps[0], 2), "stream"); // across nodes
+        assert_eq!(lane(&eps[1], 3), "stream");
+        assert_eq!(lane(&eps[0], 0), "none");
+    }
+
+    /// Mutual full-ring ship must not deadlock: both endpoints ship a
+    /// group far larger than the ring capacity to each other at the same
+    /// time (drain-while-blocked breaks the cycle).
+    #[test]
+    fn mutual_large_ship_does_not_deadlock() {
+        let ctl = FabricCtl::new();
+        let order = 2;
+        let m = order + 1;
+        let n_items = RING_SLOTS * 3;
+        let mut eps = build_endpoints(TransportKind::Shm, &[0, 0], NFIELDS * m * m, &ctl).unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let items: Vec<CopyRoute> = (0..n_items).map(|i| (0, 0, i % 6, 0, i)).collect();
+        let run = |mut ep: MixedEndpoint, dst: usize, items: Vec<CopyRoute>| {
+            std::thread::spawn(move || {
+                let src = vec![test_block(2, 1)];
+                let mut blocks = vec![test_block(2, n_items)];
+                ep.ship(dst, &items, &src, false).unwrap();
+                let bytes = ep.recv_group(&mut blocks).unwrap();
+                assert_eq!(bytes, n_items * NFIELDS * (2 + 1) * (2 + 1) * 4);
+            })
+        };
+        let ha = run(a, 1, items.clone());
+        let hb = run(b, 0, items);
+        ha.join().unwrap();
+        hb.join().unwrap();
+    }
+
+    /// The probes return sane numbers for every transport kind.
+    #[test]
+    fn link_probes_are_sane() {
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            let links = measure_fabric_links(kind).unwrap();
+            for l in [links.pci, links.net] {
+                assert!(l.latency_s > 0.0 && l.latency_s < 0.1, "{kind}: {l:?}");
+                assert!(l.bw_bytes_per_s > 1e6, "{kind}: {l:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_prints() {
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            let s = kind.label();
+            assert_eq!(s.parse::<TransportKind>().unwrap(), kind);
+        }
+        assert!("tcp".parse::<TransportKind>().is_err());
+    }
+}

@@ -218,6 +218,25 @@ pub fn measured_node(
     cpu_times: &KernelTimes,
     mic_times: &KernelTimes,
 ) -> NodeModel {
+    measured_node_with_pci(n, k_cpu, k_mic, steps, cpu_times, mic_times, fabric_pci())
+}
+
+/// [`measured_node`] with an explicit intra-node transfer model —
+/// [`crate::costmodel::pci::PciModel::from_link`] over a probed fabric
+/// lane ([`crate::coordinator::transport::measure_fabric_links`]) closes
+/// the loop on *measured* links: the balance solve then prices the
+/// CPU<->MIC exchange at what the active transport actually costs
+/// instead of the default in-process guess.
+#[allow(clippy::too_many_arguments)]
+pub fn measured_node_with_pci(
+    n: usize,
+    k_cpu: usize,
+    k_mic: usize,
+    steps: f64,
+    cpu_times: &KernelTimes,
+    mic_times: &KernelTimes,
+    pci: PciModel,
+) -> NodeModel {
     let base = stampede_node();
     let cpu =
         measured_device(DeviceClass::CpuVector, "measured-cpu", n, k_cpu, steps, cpu_times, &base.cpu_vec);
@@ -244,7 +263,7 @@ pub fn measured_node(
         cpu_scalar: base.cpu_scalar,
         cpu_vec: cpu,
         mic,
-        pci: fabric_pci(),
+        pci,
         cores_per_socket: base.cores_per_socket,
     }
 }
@@ -389,6 +408,24 @@ mod tests {
         assert_eq!(measured_elem_rate(1.0, 0), None);
         assert_eq!(measured_elem_rate(f64::NAN, 100), None);
         assert_eq!(measured_elem_rate(-1.0, 100), None);
+    }
+
+    /// Measured-link constructors flow probe numbers straight into the
+    /// models, and the node refit accepts an explicit PCI model.
+    #[test]
+    fn measured_link_calibration() {
+        use crate::coordinator::transport::LinkMeasurement;
+        use crate::costmodel::network::NetworkModel;
+        let link = LinkMeasurement { latency_s: 3.0e-6, bw_bytes_per_s: 8.0e9 };
+        let net = NetworkModel::from_link(link);
+        assert_eq!(net.alpha_s, 3.0e-6);
+        assert_eq!(net.beta_bytes_per_s, 8.0e9);
+        assert_eq!(net.straggler_factor(64, true), 1.0, "measured links carry no jitter fit");
+        let pci = PciModel::from_link(link);
+        assert_eq!(pci.bw_to_device, pci.bw_from_device, "in-memory lanes are symmetric");
+        let t = KernelTimes { volume_loop: 1e-3, ..Default::default() };
+        let node = measured_node_with_pci(2, 100, 100, 1.0, &t, &t, pci);
+        assert_eq!(node.pci.latency_s, 3.0e-6);
     }
 
     /// Load balance: with these rates the equal-time split lands near the

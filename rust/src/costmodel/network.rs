@@ -23,6 +23,22 @@ pub struct NetworkModel {
 }
 
 impl NetworkModel {
+    /// Calibrate from a measured fabric link
+    /// ([`crate::coordinator::transport::measure_fabric_links`]): the
+    /// probe's one-way latency becomes the per-step alpha, its sustained
+    /// bandwidth the beta. The jitter terms are zero — a link measured on
+    /// one machine carries no cross-node straggler statistics; the Table
+    /// 6.1 jitter fit stays with
+    /// [`crate::costmodel::calib::stampede_node_network`].
+    pub fn from_link(link: crate::coordinator::transport::LinkMeasurement) -> Self {
+        NetworkModel {
+            alpha_s: link.latency_s,
+            beta_bytes_per_s: link.bw_bytes_per_s,
+            jitter_base: 0.0,
+            jitter_hetero: 0.0,
+        }
+    }
+
     /// Time for one node to exchange `faces` traces with its neighbors.
     pub fn exchange_time(&self, faces: usize, n: usize) -> f64 {
         if faces == 0 {

@@ -28,6 +28,20 @@ pub struct PciModel {
 }
 
 impl PciModel {
+    /// Calibrate from a measured fabric link
+    /// ([`crate::coordinator::transport::measure_fabric_links`]): the
+    /// probe's latency and bandwidth stand in for the bus, symmetric in
+    /// both directions (an in-memory lane has no PCIe up/down asymmetry)
+    /// and jitter-free (the probe reports a single sustained figure).
+    pub fn from_link(link: crate::coordinator::transport::LinkMeasurement) -> Self {
+        PciModel {
+            latency_s: link.latency_s,
+            bw_to_device: link.bw_bytes_per_s,
+            bw_from_device: link.bw_bytes_per_s,
+            jitter_rel: 0.0,
+        }
+    }
+
     /// Mean transfer time for `bytes` in `dir`.
     pub fn transfer_time(&self, bytes: usize, dir: Direction) -> f64 {
         let bw = match dir {

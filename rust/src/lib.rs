@@ -47,7 +47,10 @@
 //!   (`runtime::client` needs `--features pjrt`)
 //! * [`coordinator`]— the execution core: `coordinator::cluster` runs the
 //!   full two-level scheme as an N-node in-process cluster (two workers
-//!   per node on a typed message fabric); `coordinator::rebalance` plans
+//!   per node on a typed message fabric); `coordinator::transport` makes
+//!   the fabric pluggable — in-process channels, lock-free shared-memory
+//!   rings, or Unix-socket inter-node lanes (`TransportKind`), with
+//!   measured link probes feeding the cost model; `coordinator::rebalance` plans
 //!   the adaptive two-level rebalance (weighted level-1 re-splice across
 //!   nodes + per-node level-2 re-solve) that `ClusterRun` applies with
 //!   incremental, backend-preserving migration (kept workers keep blocks,
@@ -55,9 +58,11 @@
 //!   keeps the single-node two-worker API; experiments (incl. the
 //!   live-vs-sim cross-check with per-kernel drift), reports
 //! * [`util`]       — offline-build utilities: bench harness + JSON sink,
-//!   json, rng, and `util::pool` — the persistent execution substrate
+//!   json, rng, `util::pool` — the persistent execution substrate
 //!   (`WorkerPool` fork-join pool with phased barriers, optional core
-//!   pinning, generation ids; `TaskThread` for overlap work)
+//!   pinning, generation ids; `TaskThread` for overlap work) — plus the
+//!   transport building blocks `util::shm` (lock-free SPSC slot rings)
+//!   and `util::framing` (length-prefixed delivery-group frames)
 
 pub mod coordinator;
 pub mod costmodel;

@@ -16,7 +16,7 @@
 
 use std::collections::HashMap;
 
-use repro::coordinator::{experiments, node::WorkerBackend};
+use repro::coordinator::{experiments, node::WorkerBackend, TransportKind};
 use repro::costmodel::calib;
 use repro::mesh::build_local_blocks;
 use repro::mesh::geometry::{discontinuous_brick, two_tree_geometry, unit_cube_geometry};
@@ -40,11 +40,14 @@ COMMANDS
               message fabric) with optional adaptive two-level rebalancing
                 --n 6  --order 2  --steps 20  --nodes 2
                 [--mic-fraction F]  [--rebalance-every R]  [--no-level1]
+                [--transport inproc|shm|socket]
                 --rust-ref | --parallel [--threads N]  [--pin-cores]
                 --two-tree  --sync-per-step
               (--no-level1 restricts rebalancing to the in-node CPU/MIC
               split; default also re-splices the level-1 chunks across
-              nodes from measured rates)
+              nodes from measured rates. --transport picks the message
+              fabric: in-process channels, shared-memory rings, or Unix
+              sockets on the inter-node lanes)
   partition   nested-partition statistics
                 --n 16  --nodes 4  --order 7  [--mic-fraction F]
   balance     CPU/MIC load-balance solve   --order 7  --elems 8192
@@ -131,6 +134,10 @@ fn main() -> repro::Result<()> {
                 rest,
                 &["rust-ref", "parallel", "two-tree", "sync-per-step", "no-level1", "pin-cores"],
             );
+            let transport = match a.kv.get("transport") {
+                Some(v) => v.parse::<TransportKind>()?,
+                None => TransportKind::InProc,
+            };
             run_cluster(
                 a.get("n", 6),
                 a.get("order", 2),
@@ -139,6 +146,7 @@ fn main() -> repro::Result<()> {
                 a.get_opt::<f64>("mic-fraction"),
                 a.get_opt::<usize>("rebalance-every"),
                 !a.flag("no-level1"),
+                transport,
                 worker_backend(&a),
                 a.flag("two-tree"),
                 !a.flag("sync-per-step"),
@@ -207,6 +215,7 @@ fn main() -> repro::Result<()> {
                         2,
                         steps.min(10),
                         Some(2),
+                        TransportKind::InProc,
                         Some(&csv("cross_check")),
                         None,
                     )?,
@@ -375,6 +384,7 @@ fn run_cluster(
     mic_fraction: Option<f64>,
     rebalance_every: Option<usize>,
     level1_rebalance: bool,
+    transport: TransportKind,
     backend: WorkerBackend,
     two_tree: bool,
     exchange_every_stage: bool,
@@ -388,6 +398,7 @@ fn run_cluster(
     spec.mic_fraction = mic_fraction;
     spec.rebalance_every = rebalance_every;
     spec.level1_rebalance = level1_rebalance;
+    spec.transport = transport;
     spec.cpu_backend = backend.clone();
     spec.mic_backend = backend;
     spec.exchange_every_stage = exchange_every_stage;
@@ -400,9 +411,11 @@ fn run_cluster(
     let w = std::f64::consts::PI * 3f64.sqrt();
     let mut run = ClusterRun::launch(&mesh, &spec, |x| standing_wave(x, 0.0, 1.0, 1.0, w))?;
     println!(
-        "cluster: {} elements over {nodes} node(s) = {} workers, order {order}, dt {dt:.2e}",
+        "cluster: {} elements over {nodes} node(s) = {} workers, order {order}, dt {dt:.2e}, \
+         transport {}",
         mesh.len(),
-        2 * nodes
+        2 * nodes,
+        run.transport().label()
     );
     for (nd, &(kc, km)) in run.node_counts().iter().enumerate() {
         println!("  node {nd}: k_cpu {kc} k_mic {km}");
@@ -437,11 +450,12 @@ fn run_cluster(
         );
     }
     let f = run.fabric();
-    let (intra, inter) = f.bytes_per_routed_stage(order);
+    let (self_b, intra, inter) = f.lane_bytes_per_stage(order);
     println!(
-        "fabric per routed stage: {intra} B intra-node (PCI lane), {inter} B inter-node \
-         (MPI lane); accelerator faces on the inter-node lane: {} (always 0)",
-        f.mic_inter_node_faces
+        "fabric per routed stage: {self_b} B self (in-place), {intra} B / {} msg(s) \
+         intra-node (PCI lane), {inter} B / {} msg(s) inter-node (MPI lane); \
+         accelerator faces on the inter-node lane: {} (always 0)",
+        f.intra_node_msgs, f.inter_node_msgs, f.mic_inter_node_faces
     );
     print!("{}", render_phase_table(&run.worker_summaries(), &run.worker_times()?));
     Ok(())

@@ -1,0 +1,169 @@
+//! Length-prefixed `Deliver` frames for the socket transport
+//! ([`crate::coordinator::transport`]).
+//!
+//! One frame carries one delivery *group* — every halo trace a worker
+//! ships to one peer in one routed stage. The wire layout is a flat
+//! little-endian `u32` stream (the payload f32s travel as their bit
+//! patterns), self-describing enough that a reader can resynchronize
+//! detection of a corrupt stream via the leading magic:
+//!
+//! ```text
+//! [MAGIC][src][n_items]            group header
+//!   ( [dst_block][halo_slot][len_words][len_words x f32-bits] ) x n_items
+//! ```
+//!
+//! `n_items == 0` is a valid frame: a failed worker ships empty groups so
+//! every peer's per-stage delivery count stays intact (the cluster
+//! lockstep never counts bytes, only groups).
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail};
+
+use crate::Result;
+
+/// Leading word of every group frame ("FABR").
+pub const GROUP_MAGIC: u32 = 0x4641_4252;
+
+/// One decoded halo installment: (dst local block, halo slot, trace data).
+pub type FrameItem = (usize, usize, Vec<f32>);
+
+/// Reusable group-frame encoder: one heap buffer per endpoint, reused
+/// across stages so the socket lane never allocates in steady state.
+#[derive(Debug, Default)]
+pub struct FrameWriter {
+    buf: Vec<u8>,
+    items: u32,
+}
+
+impl FrameWriter {
+    pub fn new() -> Self {
+        FrameWriter::default()
+    }
+
+    /// Start a group frame from `src`; the item count is patched at
+    /// [`FrameWriter::finish`] so callers can stream items in.
+    pub fn begin_group(&mut self, src: usize) {
+        self.buf.clear();
+        self.items = 0;
+        self.push_u32(GROUP_MAGIC);
+        self.push_u32(src as u32);
+        self.push_u32(0); // n_items, patched in finish()
+    }
+
+    /// Append one halo trace destined for (`dst_block`, `halo_slot`).
+    pub fn push_item(&mut self, dst_block: usize, halo_slot: usize, data: &[f32]) {
+        self.push_u32(dst_block as u32);
+        self.push_u32(halo_slot as u32);
+        self.push_u32(data.len() as u32);
+        for &v in data {
+            self.push_u32(v.to_bits());
+        }
+        self.items += 1;
+    }
+
+    /// Patch the item count in; returns the wire bytes of the frame.
+    pub fn finish(&mut self) -> &[u8] {
+        let n = self.items.to_le_bytes();
+        self.buf[8..12].copy_from_slice(&n);
+        &self.buf
+    }
+
+    fn push_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Write one whole group frame to `w` (encode + `write_all`).
+pub fn write_group(
+    w: &mut impl Write,
+    enc: &mut FrameWriter,
+    src: usize,
+    items: impl Iterator<Item = FrameItem>,
+) -> Result<usize> {
+    enc.begin_group(src);
+    let mut payload_bytes = 0usize;
+    for (bi, slot, data) in items {
+        payload_bytes += data.len() * 4;
+        enc.push_item(bi, slot, &data);
+    }
+    let frame = enc.finish();
+    w.write_all(frame).map_err(|e| anyhow!("socket lane write: {e}"))?;
+    Ok(payload_bytes)
+}
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read one group frame; `Ok(None)` on a clean EOF at a frame boundary
+/// (the peer shut the socket down). Returns `(src, items)`.
+pub fn read_group(r: &mut impl Read) -> Result<Option<(usize, Vec<FrameItem>)>> {
+    let magic = match read_u32(r) {
+        Ok(m) => m,
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => bail!("socket lane read: {e}"),
+    };
+    if magic != GROUP_MAGIC {
+        bail!("socket lane lost frame sync (got {magic:#x}, want {GROUP_MAGIC:#x})");
+    }
+    let src = read_u32(r)? as usize;
+    let n = read_u32(r)? as usize;
+    let mut items = Vec::with_capacity(n);
+    for _ in 0..n {
+        let bi = read_u32(r)? as usize;
+        let slot = read_u32(r)? as usize;
+        let len = read_u32(r)? as usize;
+        let mut data = Vec::with_capacity(len);
+        for _ in 0..len {
+            data.push(f32::from_bits(read_u32(r)?));
+        }
+        items.push((bi, slot, data));
+    }
+    Ok(Some((src, items)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_two_groups() {
+        let mut wire = Vec::new();
+        let mut enc = FrameWriter::new();
+        let items = vec![(3usize, 7usize, vec![1.0f32, -2.5, 3.25]), (0, 1, vec![0.5])];
+        let bytes = write_group(&mut wire, &mut enc, 5, items.clone().into_iter()).unwrap();
+        assert_eq!(bytes, 4 * 4);
+        // an empty (failure) group rides the same stream
+        write_group(&mut wire, &mut enc, 2, std::iter::empty()).unwrap();
+        let mut r = wire.as_slice();
+        let (src, got) = read_group(&mut r).unwrap().unwrap();
+        assert_eq!(src, 5);
+        assert_eq!(got, items);
+        let (src2, got2) = read_group(&mut r).unwrap().unwrap();
+        assert_eq!(src2, 2);
+        assert!(got2.is_empty());
+        // clean EOF at the frame boundary
+        assert!(read_group(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn bad_magic_is_an_error() {
+        let mut wire = vec![0u8; 12];
+        wire[0] = 0xde;
+        let err = read_group(&mut wire.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("frame sync"), "{err}");
+    }
+
+    #[test]
+    fn truncated_frame_is_an_error_not_eof() {
+        let mut wire = Vec::new();
+        let mut enc = FrameWriter::new();
+        write_group(&mut wire, &mut enc, 0, std::iter::once((1, 2, vec![1.0f32; 8]))).unwrap();
+        wire.truncate(wire.len() - 3); // mid-payload cut
+        let res = read_group(&mut wire.as_slice());
+        assert!(res.is_err(), "torn frame must not read as clean EOF");
+    }
+}

@@ -2,9 +2,11 @@
 //! xla + anyhow is implemented here).
 
 pub mod bench;
+pub mod framing;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod shm;
 
 pub use json::Json;
 pub use pool::{TaskThread, WorkerPool};

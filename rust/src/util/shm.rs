@@ -1,0 +1,260 @@
+//! Lock-free SPSC slot ring for the shared-memory fabric lane
+//! ([`crate::coordinator::transport`]).
+//!
+//! One ring per directed worker pair. Records are fixed-stride slots of
+//! `u32` words — two header words, a payload length, then up to
+//! `payload_words` of f32 bit patterns — so a halo trace is written once
+//! by the producer into the slot and read once by the consumer straight
+//! into the destination block's halo storage: no intermediate
+//! serialization, no queue-node allocation, no locks.
+//!
+//! Single-producer / single-consumer is enforced by construction:
+//! [`slot_ring`] returns a ([`RingProducer`], [`RingConsumer`]) handle
+//! pair and neither is `Clone`. Head/tail are `AtomicUsize` on separate
+//! cache lines with release/acquire publication — the classic
+//! Lamport-style SPSC queue, specialized to fixed slots.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Pad to a cache line so the producer's tail and the consumer's head
+/// never false-share.
+#[repr(align(64))]
+struct CachePadded(AtomicUsize);
+
+struct RingShared {
+    /// Slot storage: `slots * stride` u32 words.
+    buf: Box<[UnsafeCell<u32>]>,
+    /// Words per slot: 3 header words + payload capacity.
+    stride: usize,
+    /// Max payload f32 words per record.
+    payload_words: usize,
+    /// Slot count, power of two (mask = slots - 1).
+    mask: usize,
+    /// Next slot the consumer will read. Written by consumer only.
+    head: CachePadded,
+    /// Next slot the producer will write. Written by producer only.
+    tail: CachePadded,
+    /// Either side can close; the other observes it on its next op.
+    closed: AtomicBool,
+}
+
+// The UnsafeCell storage is only ever touched by the single producer
+// (slots in [head, tail) are owned by the consumer, the rest by the
+// producer) with release/acquire handoff on tail/head — the same
+// argument as std's mpsc internals.
+unsafe impl Send for RingShared {}
+unsafe impl Sync for RingShared {}
+
+/// Producer half: `try_push` is wait-free (fails fast when full).
+pub struct RingProducer {
+    ring: Arc<RingShared>,
+}
+
+/// Consumer half: `try_pop_with` hands the slot payload to a closure by
+/// reference, so the caller can copy it straight to its destination.
+pub struct RingConsumer {
+    ring: Arc<RingShared>,
+}
+
+/// Build an SPSC slot ring with at least `min_slots` slots (rounded up
+/// to a power of two, minimum 4) of `payload_words` f32 capacity each.
+pub fn slot_ring(min_slots: usize, payload_words: usize) -> (RingProducer, RingConsumer) {
+    let slots = min_slots.max(4).next_power_of_two();
+    let stride = 3 + payload_words;
+    let buf: Box<[UnsafeCell<u32>]> = (0..slots * stride).map(|_| UnsafeCell::new(0)).collect();
+    let ring = Arc::new(RingShared {
+        buf,
+        stride,
+        payload_words,
+        mask: slots - 1,
+        head: CachePadded(AtomicUsize::new(0)),
+        tail: CachePadded(AtomicUsize::new(0)),
+        closed: AtomicBool::new(false),
+    });
+    (RingProducer { ring: ring.clone() }, RingConsumer { ring })
+}
+
+impl RingProducer {
+    /// Try to publish one record. Returns `Ok(true)` if published,
+    /// `Ok(false)` if the ring is full (caller should drain its own
+    /// inbound lanes and retry), `Err` if the consumer closed.
+    pub fn try_push(&mut self, w0: u32, w1: u32, payload: &[f32]) -> Result<bool, RingClosed> {
+        let r = &*self.ring;
+        assert!(
+            payload.len() <= r.payload_words,
+            "ring record payload {} exceeds slot capacity {}",
+            payload.len(),
+            r.payload_words
+        );
+        if r.closed.load(Ordering::Acquire) {
+            return Err(RingClosed);
+        }
+        let tail = r.tail.0.load(Ordering::Relaxed);
+        let head = r.head.0.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) > r.mask {
+            return Ok(false); // full
+        }
+        let base = (tail & r.mask) * r.stride;
+        unsafe {
+            *r.buf[base].get() = w0;
+            *r.buf[base + 1].get() = w1;
+            *r.buf[base + 2].get() = payload.len() as u32;
+            let dst = r.buf[base + 3].get();
+            std::ptr::copy_nonoverlapping(payload.as_ptr() as *const u32, dst, payload.len());
+        }
+        r.tail.0.store(tail.wrapping_add(1), Ordering::Release);
+        Ok(true)
+    }
+
+    /// Signal the consumer that no more records will come.
+    pub fn close(&mut self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+}
+
+impl Drop for RingProducer {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// The other side of the ring is gone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RingClosed;
+
+impl std::fmt::Display for RingClosed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "shm ring closed by peer")
+    }
+}
+
+impl std::error::Error for RingClosed {}
+
+impl RingConsumer {
+    /// Pop one record if available, handing `(w0, w1, payload)` to `f`
+    /// while the slot is still owned by the consumer; the slot is
+    /// released after `f` returns. `None` means the ring is currently
+    /// empty (check [`RingConsumer::is_closed`] to distinguish
+    /// drained-and-closed from momentarily-empty).
+    pub fn try_pop_with<T>(&mut self, f: impl FnOnce(u32, u32, &[f32]) -> T) -> Option<T> {
+        let r = &*self.ring;
+        let head = r.head.0.load(Ordering::Relaxed);
+        let tail = r.tail.0.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let base = (head & r.mask) * r.stride;
+        let out = unsafe {
+            let w0 = *r.buf[base].get();
+            let w1 = *r.buf[base + 1].get();
+            let len = (*r.buf[base + 2].get()) as usize;
+            debug_assert!(len <= r.payload_words);
+            let payload = std::slice::from_raw_parts(r.buf[base + 3].get() as *const f32, len);
+            f(w0, w1, payload)
+        };
+        r.head.0.store(head.wrapping_add(1), Ordering::Release);
+        Some(out)
+    }
+
+    /// True once the producer closed; records already published remain
+    /// poppable, so drain until `try_pop_with` returns `None` first.
+    pub fn is_closed(&self) -> bool {
+        self.ring.closed.load(Ordering::Acquire)
+    }
+
+    /// Close from the consumer side (producer's next push errors).
+    pub fn close(&mut self) {
+        self.ring.closed.store(true, Ordering::Release);
+    }
+}
+
+impl Drop for RingConsumer {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_preserves_bits_in_order() {
+        let (mut tx, mut rx) = slot_ring(4, 8);
+        for i in 0..3u32 {
+            let payload: Vec<f32> = (0..5).map(|j| (i * 10 + j) as f32 * 0.5 - 1.25).collect();
+            assert_eq!(tx.try_push(i, i + 100, &payload), Ok(true));
+        }
+        for i in 0..3u32 {
+            let got = rx
+                .try_pop_with(|w0, w1, p| (w0, w1, p.to_vec()))
+                .expect("record available");
+            assert_eq!(got.0, i);
+            assert_eq!(got.1, i + 100);
+            let want: Vec<f32> = (0..5).map(|j| (i * 10 + j) as f32 * 0.5 - 1.25).collect();
+            assert_eq!(got.2, want);
+        }
+        assert!(rx.try_pop_with(|_, _, _| ()).is_none());
+    }
+
+    #[test]
+    fn full_ring_reports_false_then_recovers() {
+        let (mut tx, mut rx) = slot_ring(4, 2);
+        for i in 0..4 {
+            assert_eq!(tx.try_push(i, 0, &[1.0]), Ok(true));
+        }
+        assert_eq!(tx.try_push(99, 0, &[1.0]), Ok(false), "5th push must report full");
+        assert!(rx.try_pop_with(|w0, _, _| assert_eq!(w0, 0)).is_some());
+        assert_eq!(tx.try_push(99, 0, &[1.0]), Ok(true), "freed slot is reusable");
+    }
+
+    #[test]
+    fn close_is_observed_both_ways() {
+        let (mut tx, rx) = slot_ring(4, 2);
+        drop(rx);
+        assert_eq!(tx.try_push(0, 0, &[]), Err(RingClosed));
+
+        let (mut tx, mut rx) = slot_ring(4, 2);
+        assert_eq!(tx.try_push(7, 8, &[0.5]), Ok(true));
+        drop(tx);
+        // already-published records still drain after producer close
+        assert!(rx.is_closed());
+        let got = rx.try_pop_with(|w0, w1, p| (w0, w1, p.to_vec())).unwrap();
+        assert_eq!(got, (7, 8, vec![0.5]));
+        assert!(rx.try_pop_with(|_, _, _| ()).is_none());
+    }
+
+    #[test]
+    fn cross_thread_spsc_stream() {
+        let (mut tx, mut rx) = slot_ring(8, 4);
+        const N: u32 = 10_000;
+        let producer = std::thread::spawn(move || {
+            for i in 0..N {
+                let payload = [i as f32, (i as f32) * -0.5];
+                loop {
+                    match tx.try_push(i, !i, &payload) {
+                        Ok(true) => break,
+                        Ok(false) => std::thread::yield_now(),
+                        Err(_) => panic!("consumer closed early"),
+                    }
+                }
+            }
+        });
+        let mut next = 0u32;
+        while next < N {
+            let popped = rx.try_pop_with(|w0, w1, p| {
+                assert_eq!(w0, next);
+                assert_eq!(w1, !next);
+                assert_eq!(p, [next as f32, (next as f32) * -0.5]);
+            });
+            if popped.is_some() {
+                next += 1;
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        producer.join().unwrap();
+    }
+}

@@ -1,0 +1,203 @@
+//! Transport-equivalence matrix for the cluster message fabric: the same
+//! nested two-level run must produce bit-identical (≤1e-6) element state
+//! on the in-process channel, shared-memory ring, and Unix-socket
+//! transports for P ∈ {2, 4} virtual nodes — including adaptive mid-run
+//! rebalancing, whose routing-table swap and element migration must work
+//! across a live socket lane. The §5.5 refusal (no accelerator on the
+//! inter-node lane) is classification, not mechanism, so every transport
+//! must reject the same hand-built bad plan.
+
+use repro::coordinator::cluster::{ClusterRun, ClusterSpec, WorkerSpec};
+use repro::coordinator::{TransportKind, WorkerBackend};
+use repro::mesh::{build_local_blocks, two_tree_geometry, unit_cube_geometry, Mesh};
+use repro::partition::DeviceKind;
+use repro::solver::analytic::standing_wave;
+use repro::solver::driver::{Driver, RustRefBackend, StageBackend};
+use repro::solver::{BlockState, LglBasis};
+
+const KINDS: [TransportKind; 3] =
+    [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket];
+
+fn ic(x: [f64; 3]) -> [f64; 9] {
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    standing_wave(x, 0.0, 1.0, 1.0, w)
+}
+
+/// The oracle: one block, one scalar backend, the plain driver. Returns
+/// per-element q in global Morton order.
+fn scalar_reference(mesh: &Mesh, order: usize, dt: f64, steps: usize) -> Vec<Vec<f32>> {
+    let owners = vec![0usize; mesh.len()];
+    let (lblocks, plan) = build_local_blocks(mesh, &owners, 1);
+    let basis = LglBasis::new(order);
+    let mut st = BlockState::from_local_block(
+        &lblocks[0],
+        order,
+        lblocks[0].len(),
+        lblocks[0].halo_len.max(1),
+    );
+    st.set_initial_condition(&basis, ic);
+    let backends: Vec<Box<dyn StageBackend>> = vec![Box::new(RustRefBackend::new(order))];
+    let mut drv = Driver::new(vec![st], plan, backends, order);
+    drv.prime();
+    drv.run(dt, steps).unwrap();
+    let m = order + 1;
+    let esz = 9 * m * m * m;
+    let st = &drv.blocks[0];
+    (0..mesh.len()).map(|e| st.q[e * esz..(e + 1) * esz].to_vec()).collect()
+}
+
+fn max_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut worst = 0.0f32;
+    for (ea, eb) in a.iter().zip(b) {
+        assert_eq!(ea.len(), eb.len());
+        for (&x, &y) in ea.iter().zip(eb) {
+            worst = worst.max((x - y).abs());
+        }
+    }
+    worst
+}
+
+/// The matrix itself: P ∈ {2, 4} × {inproc, shm, socket} on the mixed
+/// elastic/acoustic mesh, every cell within 1e-6 of the scalar oracle,
+/// with identical lane classification on every transport.
+#[test]
+fn transport_matrix_matches_scalar_p_2_4() {
+    let order = 2;
+    let mesh = two_tree_geometry(3); // 54 elements, acoustic + elastic trees
+    let dt = 2.5e-4;
+    let steps = 4;
+    let reference = scalar_reference(&mesh, order, dt, steps);
+    for nodes in [2usize, 4] {
+        let mut classified = None;
+        for kind in KINDS {
+            let mut spec = ClusterSpec::new(nodes, order);
+            spec.mic_fraction = Some(0.3);
+            spec.transport = kind;
+            let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+            assert_eq!(run.transport(), kind);
+            run.run(dt, steps).unwrap();
+            let got = run.gather_elements().unwrap();
+            let diff = max_diff(&reference, &got);
+            assert!(diff <= 1e-6, "P={nodes} {kind}: cluster vs scalar diff {diff}");
+            // classification comes from the routing tables, not the
+            // mechanism: identical counts on every transport, §5.5 upheld
+            let f = run.fabric();
+            assert!(f.inter_node_faces > 0, "P={nodes} {kind}: {f:?}");
+            assert_eq!(f.mic_inter_node_faces, 0, "P={nodes} {kind}: {f:?}");
+            let lanes = (f.self_faces, f.intra_node_faces, f.inter_node_faces);
+            match classified {
+                None => classified = Some(lanes),
+                Some(c) => assert_eq!(c, lanes, "P={nodes} {kind}: lane classes diverged"),
+            }
+        }
+    }
+}
+
+/// Adaptive mid-run rebalancing on every transport: elements must migrate
+/// (the split starts deliberately starved) and the final state must still
+/// match the oracle — on the socket transport the migrated blocks and the
+/// swapped routing tables cross a live kernel socket.
+#[test]
+fn adaptive_rebalance_matches_on_every_transport() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4); // 64 elements
+    let dt = 1e-3;
+    let steps = 6;
+    let reference = scalar_reference(&mesh, order, dt, steps);
+    for kind in KINDS {
+        let mut spec = ClusterSpec::new(2, order);
+        spec.mic_fraction = Some(0.1);
+        spec.rebalance_every = Some(2);
+        spec.transport = kind;
+        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+        run.run(dt, steps).unwrap();
+        let migrated: usize = run.rebalance_history.iter().map(|r| r.migrated_elems()).sum();
+        assert!(migrated > 0, "{kind}: the starved split must trigger migration");
+        let got = run.gather_elements().unwrap();
+        let diff = max_diff(&reference, &got);
+        assert!(diff <= 1e-6, "{kind} adaptive: cluster vs scalar diff {diff}");
+    }
+}
+
+/// Level-1 (across-node) migration over the socket lane: a throttled node
+/// sheds elements to its peer across the inter-node socket, the kept
+/// workers keep their connections through the routing-table swap, and the
+/// run stays bit-compatible afterwards.
+#[test]
+fn level1_migration_crosses_the_socket_lane() {
+    let order = 2;
+    let mesh = unit_cube_geometry(6); // 216 elements
+    let dt = 1e-3;
+    let mut spec = ClusterSpec::new(2, order);
+    spec.mic_fraction = Some(0.2);
+    let mut backends = vec![(WorkerBackend::RustRef, WorkerBackend::RustRef); 2];
+    backends[1] = (
+        WorkerBackend::Throttled { spin_us_per_elem: 30 },
+        WorkerBackend::Throttled { spin_us_per_elem: 30 },
+    );
+    spec.node_backends = Some(backends);
+    spec.transport = TransportKind::Socket;
+    let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    run.run(dt, 2).unwrap();
+    for _ in 0..2 {
+        run.rebalance().unwrap();
+        run.run(dt, 2).unwrap();
+    }
+    let l1: usize = run.rebalance_history.iter().map(|r| r.level1_migrated).sum();
+    assert!(l1 > 0, "level-1 elements must cross the node boundary");
+    let sizes = run.node_partition().unwrap().sizes();
+    assert!(sizes[1] < mesh.len() / 2, "throttled node must shed: {sizes:?}");
+    // 2 static + 2x2 rebalanced = 6 steps, all priced through the socket
+    let reference = scalar_reference(&mesh, order, dt, 6);
+    let got = run.gather_elements().unwrap();
+    let diff = max_diff(&reference, &got);
+    assert!(diff <= 1e-6, "post-socket-migration diff {diff}");
+}
+
+/// §5.5 enforcement is transport-independent: the hand-built plan that
+/// puts two accelerator workers of different nodes in contact is refused
+/// at launch with the same error on all three transports.
+#[test]
+fn inter_node_mic_traffic_refused_on_every_transport() {
+    let order = 1;
+    let mesh = unit_cube_geometry(2); // 8 elements, morton halves touch
+    for kind in KINDS {
+        let owners: Vec<usize> = (0..mesh.len()).map(|e| if e < 4 { 1 } else { 3 }).collect();
+        let (lblocks, plan) = build_local_blocks(&mesh, &owners, 4);
+        let basis = LglBasis::new(order);
+        let states: Vec<BlockState> = lblocks
+            .iter()
+            .map(|lb| {
+                let mut st =
+                    BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1));
+                st.set_initial_condition(&basis, ic);
+                st
+            })
+            .collect();
+        let specs: Vec<WorkerSpec> = (0..4)
+            .map(|w| WorkerSpec {
+                node: w / 2,
+                device: if w % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic },
+                backend: WorkerBackend::RustRef,
+                name: format!("w{w}"),
+                pin_base: None,
+            })
+            .collect();
+        let worker_of_owner: Vec<usize> = (0..4).collect();
+        let res = ClusterRun::launch_parts_with(
+            &lblocks,
+            states,
+            plan,
+            &worker_of_owner,
+            &specs,
+            order,
+            kind,
+        );
+        let err = match res {
+            Ok(_) => panic!("{kind}: mic<->mic inter-node plan must be refused"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("inter-node"), "{kind}: {err}");
+    }
+}
