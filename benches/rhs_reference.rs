@@ -18,6 +18,11 @@
 //! `simd_over_scalar_nN_kK` scalars are nosimd-mean / simd-mean on one
 //! thread — the vector kernels' own speedup, fused/threading excluded.
 //!
+//! On `simd-fma` builds whose host reports FMA, the stage is priced a
+//! third way with the contraction toggled off/on on the same build
+//! (`ref_stage_nofma_*` / `ref_stage_fma_*`); `fma_over_nofma_nN_kK` is
+//! nofma-mean / fma-mean — what `_mm256_fmadd_ps` alone buys.
+//!
 //! Writes `BENCH_rhs.json` (see PERF.md for the schema).
 //! `cargo bench --offline --bench rhs_reference` — pass `-- --smoke` for
 //! the CI-sized run (fewer warmup/sample iterations, same series, so the
@@ -84,6 +89,33 @@ fn main() {
             let speedup = nosimd.mean() / scalar.mean();
             println!("  order {order}, k {k}: simd {speedup:.2}x over scalar lanes");
             sink.push_scalar(&format!("simd_over_scalar_n{order}_k{k}"), speedup, "speedup");
+        }
+
+        // ---- FMA-contracted W8 kernels vs the bitwise-exact ones -------
+        // (simd-fma builds on FMA hosts only; both legs run on this same
+        // build via the runtime toggle, so the delta prices the fused
+        // multiply-adds alone)
+        if lanes == Lanes::W8 && simd::fma_available() {
+            let mut st = block_state(order, n);
+            let mut scratch = RefScratch::new(&st);
+            simd::set_fma(Some(false));
+            let nofma = b.run(&format!("ref_stage_nofma_n{order}_k{k}"), || {
+                stage(&mut st, &basis, &mut scratch, 1e-4, -0.5, 0.3);
+            });
+            let mut st = block_state(order, n);
+            let mut scratch = RefScratch::new(&st);
+            simd::set_fma(Some(true));
+            let fma = b.run(&format!("ref_stage_fma_n{order}_k{k}"), || {
+                stage(&mut st, &basis, &mut scratch, 1e-4, -0.5, 0.3);
+            });
+            simd::set_fma(None);
+            nofma.report_throughput(k, "elem-stages");
+            fma.report_throughput(k, "elem-stages");
+            sink.push(&nofma, Some((k, "elem-stages")));
+            sink.push(&fma, Some((k, "elem-stages")));
+            let speedup = nofma.mean() / fma.mean();
+            println!("  order {order}, k {k}: fma {speedup:.2}x over separate mul+add");
+            sink.push_scalar(&format!("fma_over_nofma_n{order}_k{k}"), speedup, "speedup");
         }
 
         // ---- fused pool backend, thread sweep --------------------------

@@ -79,7 +79,13 @@ use crate::solver::rk::{LSRK_A, LSRK_B, N_STAGES};
 use crate::solver::state::{BlockState, NFIELDS};
 use crate::solver::{LglBasis, StageBackend};
 use crate::util::pool::WorkerPool;
+use crate::util::ring::History;
 use crate::Result;
+
+/// Rebalance reports kept per run (older entries are evicted; totals over
+/// the retained window stay exact and [`History::evicted`] says how much
+/// scrolled away).
+pub const REBALANCE_HISTORY_CAP: usize = 512;
 
 // ---------------------------------------------------------------------------
 // backends
@@ -960,9 +966,11 @@ pub struct ClusterRun {
     /// Adapt the level-1 across-node splice during rebalancing (see
     /// [`ClusterSpec::level1_rebalance`]).
     pub level1_rebalance: bool,
-    /// Every rebalance performed so far, in order — benches and the CLI
+    /// The most recent rebalances, in order — benches and the CLI
     /// aggregate level-1/level-2 migration counts and stall time from it.
-    pub rebalance_history: Vec<RebalanceReport>,
+    /// Bounded ([`REBALANCE_HISTORY_CAP`]) so a long-serving run that
+    /// rebalances every R steps doesn't grow memory without limit.
+    pub rebalance_history: History<RebalanceReport>,
     routed_stages: usize,
     poisoned: bool,
     /// Fabric poison flag shared with every worker endpoint: set before
@@ -1183,7 +1191,7 @@ impl ClusterRun {
             exchange_wall_s: 0.0,
             rebalance_every: None,
             level1_rebalance: false,
-            rebalance_history: Vec::new(),
+            rebalance_history: History::new(REBALANCE_HISTORY_CAP),
             routed_stages: 0,
             poisoned: false,
             ctl,
@@ -1358,6 +1366,14 @@ impl ClusterRun {
     /// The transport every fabric lane of this run is built on.
     pub fn transport(&self) -> TransportKind {
         self.transport
+    }
+
+    /// A clone of the run's fabric poison handle. The serving layer arms
+    /// per-job cancellation with it: poisoning unblocks every worker of
+    /// *this* run's fabric (and only this run's) so an in-flight job can
+    /// be abandoned without hanging or touching its neighbours.
+    pub fn fabric_ctl(&self) -> FabricCtl {
+        self.ctl.clone()
     }
 
     /// Routed stages so far (for cumulative traffic accounting).

@@ -28,7 +28,11 @@
 //! [`node`] keeps the historical single-node two-worker API
 //! ([`HeteroRun`]) as a wrapper over the cluster runtime; [`experiments`]
 //! drives the paper's tables/figures plus the live-vs-simulated
-//! cross-check; [`profile`]/[`report`] render the results.
+//! cross-check; [`profile`]/[`report`] render the results. One level
+//! above all of it, [`serve`] co-schedules *many independent
+//! simulations* over the shared substrate — disjoint pool slices, a
+//! bounded admission queue, cost-model placement and work-conserving
+//! backfill.
 
 pub mod cluster;
 pub mod experiments;
@@ -36,10 +40,12 @@ pub mod node;
 pub mod profile;
 pub mod rebalance;
 pub mod report;
+pub mod serve;
 pub mod transport;
 
 pub use cluster::{ClusterRun, ClusterSpec, FabricStats, WorkerBackendFactory, WorkerTimes};
 pub use node::{HeteroRun, WorkerBackend};
 pub use profile::ProfileReport;
 pub use rebalance::{NodeRebalance, RebalanceReport};
+pub use serve::{JobCtl, JobReport, JobSpec, JobStatus, ServeOptions, ServeReport, ServeSpec};
 pub use transport::TransportKind;

@@ -96,8 +96,10 @@ pub struct RebalanceTotals {
 }
 
 impl RebalanceTotals {
-    /// Fold a rebalance history (e.g. `ClusterRun::rebalance_history`).
-    pub fn of(history: &[RebalanceReport]) -> Self {
+    /// Fold a rebalance history — a slice, or the bounded
+    /// `ClusterRun::rebalance_history` ring (`crate::util::ring::History`
+    /// iterates by reference).
+    pub fn of<'a>(history: impl IntoIterator<Item = &'a RebalanceReport>) -> Self {
         let mut t = RebalanceTotals::default();
         for r in history {
             t.calls += 1;

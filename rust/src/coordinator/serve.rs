@@ -1,0 +1,764 @@
+//! `coordinator::serve` — many concurrent simulations over one substrate.
+//!
+//! The nested partition keeps one simulation's CPU and accelerator busy;
+//! this layer keeps the *whole machine* busy under a fleet of independent
+//! wave-propagation scenarios. It is the level-1 idea played one level
+//! up: where the weighted splice places *elements across nodes* by
+//! measured per-element rates, the job scheduler places *jobs across
+//! pool slices* by predicted wall time
+//! ([`crate::costmodel::placement::PlacementModel`] — calibrated
+//! bootstrap, measured EWMA closed loop).
+//!
+//! Mechanics:
+//!
+//! * **One shared [`WorkerPool`]**, carved into disjoint [`PoolSlice`]s
+//!   (one runner thread per slice = that slice's lane 0). Small jobs gang
+//!   co-schedule onto disjoint core ranges: an order-2 smoke job's stage
+//!   rendezvous wakes only its own slice's workers — dispatches on
+//!   disjoint slices proceed fully concurrently (`util::pool`'s
+//!   participant-scoped ledger).
+//! * **Bounded admission queue with a batch front end**: jobs stream in
+//!   (admission blocks while `queue_cap` jobs are pending) and are placed
+//!   on admission — each job goes to the slice minimizing the fleet
+//!   makespan contribution `eta(slice) + predicted(job, slice)`.
+//! * **Work-conserving backfill**: a runner whose queue drains steals the
+//!   tail of the most-loaded slice's queue, so an early-finishing slice
+//!   never idles while work is waiting elsewhere.
+//! * **Per-job accounting** mirrors `RebalanceReport`: a [`JobReport`]
+//!   (queue wait, placement decision, wall time, elements·steps/s)
+//!   per job, retained in a bounded [`History`] ring and serialized
+//!   through `util::bench::JsonSink` by the `repro serve` driver into
+//!   BENCH_serve.json.
+//! * **Cancellation**: each job carries a [`JobCtl`]; cancelling poisons
+//!   the job's own cluster fabric (if it runs on one) and trips a
+//!   between-steps check, so one abandoned job neither hangs nor touches
+//!   its neighbours.
+//!
+//! Jobs with `nodes >= 2` run on their own in-process [`ClusterRun`]
+//! (two fabric workers per virtual node); jobs with `nodes <= 1` run as
+//! a single-block [`Driver`] solve on the job's pool slice. Everything
+//! shares one address space — see PERF.md "Serving" for what that does
+//! and doesn't prove.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use crate::coordinator::cluster::{ClusterRun, ClusterSpec};
+use crate::coordinator::transport::FabricCtl;
+use crate::costmodel::placement::PlacementModel;
+use crate::mesh::{build_local_blocks, unit_cube_geometry, Mesh};
+use crate::solver::analytic::standing_wave;
+use crate::solver::driver::{Driver, StageBackend};
+use crate::solver::parallel::ParallelRefBackend;
+use crate::solver::rk::stable_dt;
+use crate::solver::state::NFIELDS;
+use crate::solver::{BlockState, LglBasis};
+use crate::util::pool::{PoolSlice, WorkerPool};
+use crate::util::ring::History;
+use crate::util::Json;
+use crate::Result;
+
+/// One scenario: its own mesh size, order and step count.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub name: String,
+    /// `unit_cube_geometry(n)` — `n^3` elements.
+    pub n: usize,
+    pub order: usize,
+    pub steps: usize,
+    /// `>= 2` runs the job on its own in-process cluster (two fabric
+    /// workers per virtual node); `<= 1` runs it as a single-block solve
+    /// on the job's pool slice.
+    pub nodes: usize,
+}
+
+impl JobSpec {
+    pub fn elems(&self) -> usize {
+        self.n * self.n * self.n
+    }
+
+    /// Parse one job object: `{"name"?, "n", "order", "steps", "nodes"?}`.
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let n = j.get("n").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("job needs \"n\""))?;
+        let order =
+            j.get("order").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("job needs \"order\""))?;
+        let steps =
+            j.get("steps").and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("job needs \"steps\""))?;
+        let nodes = j.get("nodes").and_then(|v| v.as_usize()).unwrap_or(1);
+        anyhow::ensure!(n >= 1 && order >= 1 && steps >= 1, "job n/order/steps must be >= 1");
+        let name = j
+            .get("name")
+            .and_then(|v| v.as_str())
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("n{n}_p{order}_s{steps}"));
+        Ok(JobSpec { name, n, order, steps, nodes })
+    }
+}
+
+/// A batch of jobs plus the scheduler's shape.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub jobs: Vec<JobSpec>,
+    /// Bounded admission queue: at most this many jobs pending (queued on
+    /// slices, waiting or running) at once; the batch front end blocks
+    /// admission beyond it.
+    pub queue_cap: usize,
+    /// Lane count per pool slice (each slice = one runner thread + its
+    /// `lanes - 1` OS workers of the shared pool).
+    pub slices: Vec<usize>,
+}
+
+/// Default slicing: four slices splitting the hardware threads (floor one
+/// lane each) — four concurrent jobs on an idle machine.
+pub fn default_slices() -> Vec<usize> {
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    vec![(hw / 4).max(1); 4]
+}
+
+impl ServeSpec {
+    pub fn new(jobs: Vec<JobSpec>) -> ServeSpec {
+        ServeSpec { jobs, queue_cap: 8, slices: default_slices() }
+    }
+
+    /// Parse a spec file: either a bare array of job objects, or
+    /// `{"jobs": [...], "queue_cap"?: N, "slices"?: [lanes, ...]}`.
+    pub fn parse(text: &str) -> Result<ServeSpec> {
+        let j = Json::parse(text)?;
+        let jobs_json = match &j {
+            Json::Arr(a) => a.as_slice(),
+            _ => j
+                .get("jobs")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("serve spec needs a \"jobs\" array"))?,
+        };
+        let jobs = jobs_json.iter().map(JobSpec::from_json).collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!jobs.is_empty(), "serve spec has no jobs");
+        let mut spec = ServeSpec::new(jobs);
+        if let Some(c) = j.get("queue_cap").and_then(|v| v.as_usize()) {
+            spec.queue_cap = c.max(1);
+        }
+        if let Some(arr) = j.get("slices").and_then(|v| v.as_arr()) {
+            let lanes = arr
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("\"slices\" must be lane counts")))
+                .collect::<Result<Vec<_>>>()?;
+            anyhow::ensure!(!lanes.is_empty(), "\"slices\" must not be empty");
+            spec.slices = lanes;
+        }
+        Ok(spec)
+    }
+
+    /// The baseline the headline scalar compares against: the same jobs
+    /// through the same scheduler, but a single slice owning the whole
+    /// lane budget — back-to-back execution at full width.
+    pub fn serial(&self) -> ServeSpec {
+        let total: usize = self.slices.iter().map(|&l| l.max(1)).sum();
+        ServeSpec { jobs: self.jobs.clone(), queue_cap: self.queue_cap, slices: vec![total] }
+    }
+}
+
+/// Per-job cancellation handle. [`JobCtl::cancel`] trips the job's
+/// between-steps check and poisons its cluster fabric (once armed), so an
+/// in-flight job unblocks promptly without corrupting its neighbours.
+#[derive(Debug, Default)]
+pub struct JobCtl {
+    cancel: AtomicBool,
+    fabric: Mutex<Option<FabricCtl>>,
+}
+
+impl JobCtl {
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::SeqCst);
+        if let Some(ctl) = self.fabric.lock().unwrap_or_else(|e| e.into_inner()).as_ref() {
+            ctl.poison();
+        }
+    }
+
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::SeqCst)
+    }
+
+    /// Point the handle at a live cluster fabric. A cancel that already
+    /// happened poisons it immediately (no lost-wakeup window).
+    fn arm(&self, ctl: FabricCtl) {
+        *self.fabric.lock().unwrap_or_else(|e| e.into_inner()) = Some(ctl.clone());
+        if self.cancelled() {
+            ctl.poison();
+        }
+    }
+
+    fn disarm(&self) {
+        *self.fabric.lock().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+}
+
+/// How a job ended.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobStatus {
+    Done,
+    Cancelled,
+    Failed(String),
+}
+
+/// What one job did — the serving analogue of `RebalanceReport`.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub name: String,
+    pub n: usize,
+    pub order: usize,
+    pub steps: usize,
+    pub nodes: usize,
+    /// Placement decision: which slice ran it, at how many lanes, and
+    /// whether backfill stole it from its originally chosen slice.
+    pub slice: usize,
+    pub lanes: usize,
+    pub stolen: bool,
+    /// Admission-to-start latency.
+    pub queue_wait_s: f64,
+    /// The placement model's prediction at admission (for the slice that
+    /// ran it).
+    pub predicted_s: f64,
+    pub wall_s: f64,
+    pub steps_done: usize,
+    /// Realized throughput, `elems * steps_done / wall_s`.
+    pub elem_steps_per_s: f64,
+    pub energy: f64,
+    pub status: JobStatus,
+}
+
+impl JobReport {
+    /// One flat record for the JSON sink (`"kind": "job"` marks it).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("kind".into(), Json::Str("job".into()));
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("n".into(), Json::Num(self.n as f64));
+        o.insert("order".into(), Json::Num(self.order as f64));
+        o.insert("steps".into(), Json::Num(self.steps as f64));
+        o.insert("nodes".into(), Json::Num(self.nodes as f64));
+        o.insert("slice".into(), Json::Num(self.slice as f64));
+        o.insert("lanes".into(), Json::Num(self.lanes as f64));
+        o.insert("stolen".into(), Json::Bool(self.stolen));
+        o.insert("queue_wait_s".into(), Json::Num(self.queue_wait_s));
+        o.insert("predicted_s".into(), Json::Num(self.predicted_s));
+        o.insert("wall_s".into(), Json::Num(self.wall_s));
+        o.insert("steps_done".into(), Json::Num(self.steps_done as f64));
+        o.insert("elem_steps_per_s".into(), Json::Num(self.elem_steps_per_s));
+        o.insert("energy".into(), Json::Num(self.energy));
+        let status = match &self.status {
+            JobStatus::Done => "done".to_string(),
+            JobStatus::Cancelled => "cancelled".to_string(),
+            JobStatus::Failed(m) => format!("failed: {m}"),
+        };
+        o.insert("status".into(), Json::Str(status));
+        Json::Obj(o)
+    }
+}
+
+/// What one [`serve`] call did.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Completed jobs in completion order — the retained window of the
+    /// bounded report ring (see `evicted_reports`).
+    pub jobs: Vec<JobReport>,
+    /// Wall seconds from first admission to last completion.
+    pub wall_s: f64,
+    /// Aggregate completed work over the wall: `sum(elems * steps) /
+    /// wall_s` over jobs that ran to completion.
+    pub elem_steps_per_s: f64,
+    /// Per admitted job (submission order): its final per-element fields,
+    /// kept only with [`ServeOptions::keep_fields`] (validation runs).
+    pub fields: Vec<Option<Vec<Vec<f32>>>>,
+    /// Reports that scrolled off the bounded ring.
+    pub evicted_reports: usize,
+}
+
+/// Serving knobs that aren't part of the job spec.
+#[derive(Debug, Clone, Default)]
+pub struct ServeOptions {
+    /// Retain each job's final per-element field (memory-heavy; tests and
+    /// validation only).
+    pub keep_fields: bool,
+    /// Cap of the per-job report ring (0 = default 1024).
+    pub report_cap: usize,
+}
+
+/// The initial condition every scenario solves (the standing wave the
+/// whole repo validates against).
+pub fn job_ic(x: [f64; 3]) -> [f64; NFIELDS] {
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    standing_wave(x, 0.0, 1.0, 1.0, w)
+}
+
+/// The stable timestep a job runs at — shared with the solo-oracle tests
+/// so serve-vs-solo comparisons integrate the same trajectory.
+pub fn job_dt(mesh: &Mesh, order: usize) -> f64 {
+    let cmax = mesh.elements.iter().map(|e| e.material.cp()).fold(0.0f32, f32::max);
+    let hmin =
+        mesh.elements.iter().map(|e| e.h[0].min(e.h[1]).min(e.h[2])).fold(f64::MAX, f64::min);
+    stable_dt(0.3, hmin, cmax as f64, order)
+}
+
+/// Run a batch to completion. See the module docs for the scheduling
+/// discipline.
+pub fn serve(spec: &ServeSpec, opts: &ServeOptions) -> Result<ServeReport> {
+    serve_with_ctls(spec, opts, None)
+}
+
+/// [`serve`] with caller-owned cancellation handles (one per job, aligned
+/// with `spec.jobs`) — the cancellation tests drive mid-flight
+/// [`JobCtl::cancel`] through these.
+pub fn serve_with_ctls(
+    spec: &ServeSpec,
+    opts: &ServeOptions,
+    ctls: Option<&[Arc<JobCtl>]>,
+) -> Result<ServeReport> {
+    anyhow::ensure!(!spec.jobs.is_empty(), "no jobs to serve");
+    anyhow::ensure!(!spec.slices.is_empty(), "serve needs at least one slice");
+    if let Some(c) = ctls {
+        anyhow::ensure!(c.len() == spec.jobs.len(), "need one JobCtl per job");
+    }
+    let lanes: Vec<usize> = spec.slices.iter().map(|&l| l.max(1)).collect();
+    // one OS worker per non-runner lane; every slice's runner thread is
+    // that slice's lane 0, so no pool thread idles behind a runner
+    let os_workers: usize = lanes.iter().map(|l| l - 1).sum();
+    let pool = Arc::new(WorkerPool::new(os_workers + 1, None));
+    let mut slices = Vec::with_capacity(lanes.len());
+    let mut start = 0;
+    for &l in &lanes {
+        slices.push(PoolSlice::range(pool.clone(), start, l));
+        start += l - 1;
+    }
+    let queue_cap = spec.queue_cap.max(1);
+    let report_cap = if opts.report_cap == 0 { 1024 } else { opts.report_cap };
+    let sched = Sched {
+        state: Mutex::new(SchedState {
+            fifos: vec![VecDeque::new(); lanes.len()],
+            etas: vec![0.0; lanes.len()],
+            queued: 0,
+            all_submitted: false,
+            model: PlacementModel::new(),
+            reports: History::new(report_cap),
+            fields: vec![None; spec.jobs.len()],
+            completed_elem_steps: 0.0,
+        }),
+        cv: Condvar::new(),
+    };
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for (s, slice) in slices.iter().enumerate() {
+            let sched = &sched;
+            let lanes = &lanes;
+            let slice = slice.clone();
+            let keep_fields = opts.keep_fields;
+            scope.spawn(move || runner(s, slice, sched, lanes, keep_fields));
+        }
+        // batch admission through the bounded queue; placement happens at
+        // admission so a queued job already has a slice and an eta
+        for (idx, job) in spec.jobs.iter().enumerate() {
+            let ctl = match ctls {
+                Some(c) => c[idx].clone(),
+                None => Arc::new(JobCtl::default()),
+            };
+            let mut st = sched.state.lock().unwrap();
+            while st.queued >= queue_cap {
+                st = sched.cv.wait(st).unwrap();
+            }
+            let mut best = 0usize;
+            let mut best_score = f64::INFINITY;
+            let mut best_pred = 0.0;
+            for (s, &l) in lanes.iter().enumerate() {
+                let pred = st.model.predict_wall_s(job.order, job.elems(), job.steps, l);
+                let score = st.etas[s] + pred;
+                if score < best_score {
+                    best_score = score;
+                    best = s;
+                    best_pred = pred;
+                }
+            }
+            st.etas[best] += best_pred;
+            st.queued += 1;
+            st.fifos[best].push_back(Admitted {
+                idx,
+                job: job.clone(),
+                ctl,
+                admitted_at: Instant::now(),
+                predicted_s: best_pred,
+                stolen: false,
+            });
+            drop(st);
+            sched.cv.notify_all();
+        }
+        sched.state.lock().unwrap().all_submitted = true;
+        sched.cv.notify_all();
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let st = sched.state.into_inner().unwrap_or_else(|e| e.into_inner());
+    let evicted_reports = st.reports.evicted();
+    let jobs: Vec<JobReport> = st.reports.iter().cloned().collect();
+    Ok(ServeReport {
+        jobs,
+        wall_s,
+        elem_steps_per_s: st.completed_elem_steps / wall_s.max(1e-12),
+        fields: st.fields,
+        evicted_reports,
+    })
+}
+
+/// A job sitting in (or popped from) a slice queue.
+struct Admitted {
+    idx: usize,
+    job: JobSpec,
+    ctl: Arc<JobCtl>,
+    admitted_at: Instant,
+    predicted_s: f64,
+    stolen: bool,
+}
+
+struct SchedState {
+    fifos: Vec<VecDeque<Admitted>>,
+    /// Predicted seconds of queued + running work per slice.
+    etas: Vec<f64>,
+    /// Jobs admitted but not yet completed (bounds the admission queue).
+    queued: usize,
+    all_submitted: bool,
+    model: PlacementModel,
+    reports: History<JobReport>,
+    fields: Vec<Option<Vec<Vec<f32>>>>,
+    completed_elem_steps: f64,
+}
+
+struct Sched {
+    state: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+/// The queue a backfilling runner steals from: the most-loaded (by eta)
+/// slice with anything still queued.
+fn steal_victim(st: &SchedState) -> Option<usize> {
+    let mut best = None;
+    let mut best_eta = f64::NEG_INFINITY;
+    for (v, fifo) in st.fifos.iter().enumerate() {
+        if !fifo.is_empty() && st.etas[v] > best_eta {
+            best = Some(v);
+            best_eta = st.etas[v];
+        }
+    }
+    best
+}
+
+fn runner(s: usize, slice: PoolSlice, sched: &Sched, lanes: &[usize], keep_fields: bool) {
+    loop {
+        let next = {
+            let mut st = sched.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                if let Some(a) = st.fifos[s].pop_front() {
+                    break Some(a);
+                }
+                // work-conserving backfill: steal the tail of the
+                // most-loaded queue (the job that would wait longest)
+                match steal_victim(&st) {
+                    Some(v) if v != s => {
+                        let mut a = st.fifos[v].pop_back().expect("victim has a queued job");
+                        st.etas[v] = (st.etas[v] - a.predicted_s).max(0.0);
+                        let pred = st.model.predict_wall_s(
+                            a.job.order,
+                            a.job.elems(),
+                            a.job.steps,
+                            lanes[s],
+                        );
+                        st.etas[s] += pred;
+                        a.predicted_s = pred;
+                        a.stolen = true;
+                        break Some(a);
+                    }
+                    _ => {}
+                }
+                if st.all_submitted {
+                    break None;
+                }
+                st = sched.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let Some(a) = next else { return };
+        let queue_wait_s = a.admitted_at.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let outcome = run_job(&a.job, &slice, &a.ctl, keep_fields);
+        let wall_s = t0.elapsed().as_secs_f64();
+        let mut st = sched.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.etas[s] = (st.etas[s] - a.predicted_s).max(0.0);
+        st.queued -= 1;
+        let (status, steps_done, energy) = match outcome {
+            Ok(o) => {
+                if o.status == JobStatus::Done {
+                    // close the placement loop (pool jobs only: a cluster
+                    // job's workers are its own, not this slice's lanes)
+                    if a.job.nodes < 2 {
+                        st.model.observe(a.job.order, a.job.elems(), a.job.steps, lanes[s], wall_s);
+                    }
+                    st.completed_elem_steps += (a.job.elems() * a.job.steps) as f64;
+                }
+                if let Some(f) = o.fields {
+                    st.fields[a.idx] = Some(f);
+                }
+                (o.status, o.steps_done, o.energy)
+            }
+            Err(_) if a.ctl.cancelled() => (JobStatus::Cancelled, 0, 0.0),
+            Err(e) => (JobStatus::Failed(e.to_string()), 0, 0.0),
+        };
+        let steps_done_f = steps_done as f64;
+        st.reports.push(JobReport {
+            name: a.job.name.clone(),
+            n: a.job.n,
+            order: a.job.order,
+            steps: a.job.steps,
+            nodes: a.job.nodes,
+            slice: s,
+            lanes: lanes[s],
+            stolen: a.stolen,
+            queue_wait_s,
+            predicted_s: a.predicted_s,
+            wall_s,
+            steps_done,
+            elem_steps_per_s: a.job.elems() as f64 * steps_done_f / wall_s.max(1e-12),
+            energy,
+            status,
+        });
+        drop(st);
+        sched.cv.notify_all();
+    }
+}
+
+struct JobOutcome {
+    status: JobStatus,
+    steps_done: usize,
+    energy: f64,
+    fields: Option<Vec<Vec<f32>>>,
+}
+
+fn run_job(job: &JobSpec, slice: &PoolSlice, ctl: &JobCtl, keep_fields: bool) -> Result<JobOutcome> {
+    let mesh = unit_cube_geometry(job.n);
+    let dt = job_dt(&mesh, job.order);
+    if job.nodes >= 2 {
+        run_cluster_job(job, &mesh, dt, ctl, keep_fields)
+    } else {
+        run_pool_job(job, &mesh, dt, slice, ctl, keep_fields)
+    }
+}
+
+/// Single-block solve on the job's pool slice — the gang-scheduling path:
+/// its stage dispatches engage only the slice's workers.
+fn run_pool_job(
+    job: &JobSpec,
+    mesh: &Mesh,
+    dt: f64,
+    slice: &PoolSlice,
+    ctl: &JobCtl,
+    keep_fields: bool,
+) -> Result<JobOutcome> {
+    let owners = vec![0usize; mesh.len()];
+    let (lblocks, plan) = build_local_blocks(mesh, &owners, 1);
+    let basis = LglBasis::new(job.order);
+    let mut st = BlockState::from_local_block(
+        &lblocks[0],
+        job.order,
+        lblocks[0].len(),
+        lblocks[0].halo_len.max(1),
+    );
+    st.set_initial_condition(&basis, job_ic);
+    let backends: Vec<Box<dyn StageBackend>> =
+        vec![Box::new(ParallelRefBackend::with_slice(job.order, slice.clone()))];
+    let mut drv = Driver::new(vec![st], plan, backends, job.order);
+    drv.prime();
+    let mut steps_done = 0;
+    for _ in 0..job.steps {
+        if ctl.cancelled() {
+            return Ok(JobOutcome {
+                status: JobStatus::Cancelled,
+                steps_done,
+                energy: drv.energy(),
+                fields: None,
+            });
+        }
+        drv.step(dt)?;
+        steps_done += 1;
+    }
+    let fields = if keep_fields {
+        Some(gather_driver_fields(&drv, mesh.len(), job.order))
+    } else {
+        None
+    };
+    Ok(JobOutcome { status: JobStatus::Done, steps_done, energy: drv.energy(), fields })
+}
+
+/// Per-element final q of a single-block driver, global Morton order —
+/// shape-compatible with `ClusterRun::gather_elements`.
+fn gather_driver_fields(drv: &Driver, k: usize, order: usize) -> Vec<Vec<f32>> {
+    let m = order + 1;
+    let esz = NFIELDS * m * m * m;
+    let st = &drv.blocks[0];
+    (0..k).map(|e| st.q[e * esz..(e + 1) * esz].to_vec()).collect()
+}
+
+/// Cluster-backed job: its own virtual nodes, workers and fabric; the
+/// job's `JobCtl` is armed with the fabric poison handle so a cancel
+/// unblocks it promptly wherever it is in a step.
+fn run_cluster_job(
+    job: &JobSpec,
+    mesh: &Mesh,
+    dt: f64,
+    ctl: &JobCtl,
+    keep_fields: bool,
+) -> Result<JobOutcome> {
+    let spec = ClusterSpec::new(job.nodes, job.order);
+    let mut run = ClusterRun::launch(mesh, &spec, job_ic)?;
+    ctl.arm(run.fabric_ctl());
+    let mut steps_done = 0;
+    let stepped: Result<()> = loop {
+        if steps_done >= job.steps || ctl.cancelled() {
+            break Ok(());
+        }
+        if let Err(e) = run.run(dt, 1) {
+            break Err(e);
+        }
+        steps_done += 1;
+    };
+    ctl.disarm();
+    if let Err(e) = stepped {
+        if ctl.cancelled() {
+            return Ok(JobOutcome {
+                status: JobStatus::Cancelled,
+                steps_done,
+                energy: 0.0,
+                fields: None,
+            });
+        }
+        return Err(e);
+    }
+    if ctl.cancelled() {
+        return Ok(JobOutcome { status: JobStatus::Cancelled, steps_done, energy: 0.0, fields: None });
+    }
+    let energy = run.energy()?;
+    let fields = if keep_fields { Some(run.gather_elements()?) } else { None };
+    Ok(JobOutcome { status: JobStatus::Done, steps_done, energy, fields })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_jobs(k: usize) -> Vec<JobSpec> {
+        (0..k)
+            .map(|i| JobSpec {
+                name: format!("tiny{i}"),
+                n: 2,
+                order: 2,
+                steps: 2,
+                nodes: 1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spec_parses_bare_array_and_object() {
+        let bare = r#"[{"n": 2, "order": 2, "steps": 3}]"#;
+        let s = ServeSpec::parse(bare).unwrap();
+        assert_eq!(s.jobs.len(), 1);
+        assert_eq!(s.jobs[0].steps, 3);
+        assert_eq!(s.jobs[0].nodes, 1);
+        assert_eq!(s.jobs[0].name, "n2_p2_s3");
+
+        let obj = r#"{"jobs": [{"name": "a", "n": 3, "order": 3, "steps": 1, "nodes": 2}],
+                      "queue_cap": 2, "slices": [2, 1]}"#;
+        let s = ServeSpec::parse(obj).unwrap();
+        assert_eq!(s.jobs[0].name, "a");
+        assert_eq!(s.jobs[0].nodes, 2);
+        assert_eq!(s.queue_cap, 2);
+        assert_eq!(s.slices, vec![2, 1]);
+        let serial = s.serial();
+        assert_eq!(serial.slices, vec![3]);
+        assert_eq!(serial.jobs.len(), 1);
+
+        assert!(ServeSpec::parse("[]").is_err());
+        assert!(ServeSpec::parse(r#"[{"order": 2, "steps": 1}]"#).is_err());
+    }
+
+    #[test]
+    fn serves_a_batch_and_accounts_every_job() {
+        let mut spec = ServeSpec::new(tiny_jobs(5));
+        spec.queue_cap = 2; // exercise the bounded admission queue
+        spec.slices = vec![1, 1];
+        let report =
+            serve(&spec, &ServeOptions { keep_fields: true, ..Default::default() }).unwrap();
+        assert_eq!(report.jobs.len(), 5);
+        assert_eq!(report.evicted_reports, 0);
+        for j in &report.jobs {
+            assert_eq!(j.status, JobStatus::Done, "{}: {:?}", j.name, j.status);
+            assert_eq!(j.steps_done, j.steps);
+            assert!(j.slice < 2);
+            assert!(j.wall_s > 0.0 && j.elem_steps_per_s > 0.0);
+            assert!(j.energy > 0.0);
+        }
+        assert!(report.wall_s > 0.0);
+        assert!(report.elem_steps_per_s > 0.0);
+        // keep_fields retained one field set per admitted job
+        assert_eq!(report.fields.len(), 5);
+        for f in &report.fields {
+            let f = f.as_ref().expect("fields kept");
+            assert_eq!(f.len(), 8); // 2^3 elements
+            assert_eq!(f[0].len(), 9 * 27);
+        }
+    }
+
+    #[test]
+    fn report_ring_is_bounded() {
+        let mut spec = ServeSpec::new(tiny_jobs(4));
+        spec.slices = vec![1];
+        let opts = ServeOptions { report_cap: 2, ..Default::default() };
+        let report = serve(&spec, &opts).unwrap();
+        assert_eq!(report.jobs.len(), 2, "ring retains the cap");
+        assert_eq!(report.evicted_reports, 2);
+    }
+
+    #[test]
+    fn pre_cancelled_job_skips_and_survivors_complete() {
+        let spec = {
+            let mut s = ServeSpec::new(tiny_jobs(3));
+            s.slices = vec![1];
+            s
+        };
+        let ctls: Vec<Arc<JobCtl>> = (0..3).map(|_| Arc::new(JobCtl::default())).collect();
+        ctls[1].cancel();
+        let report = serve_with_ctls(
+            &spec,
+            &ServeOptions { keep_fields: true, ..Default::default() },
+            Some(&ctls),
+        )
+        .unwrap();
+        assert_eq!(report.jobs.len(), 3);
+        let cancelled: Vec<_> =
+            report.jobs.iter().filter(|j| j.status == JobStatus::Cancelled).collect();
+        assert_eq!(cancelled.len(), 1);
+        assert_eq!(cancelled[0].name, "tiny1");
+        assert_eq!(cancelled[0].steps_done, 0);
+        assert_eq!(report.jobs.iter().filter(|j| j.status == JobStatus::Done).count(), 2);
+        assert!(report.fields[0].is_some() && report.fields[2].is_some());
+        assert!(report.fields[1].is_none(), "cancelled job keeps no fields");
+    }
+
+    #[test]
+    fn placement_spreads_jobs_over_equal_slices() {
+        let mut spec = ServeSpec::new(tiny_jobs(4));
+        spec.slices = vec![1, 1];
+        let report = serve(&spec, &ServeOptions::default()).unwrap();
+        // with equal slices and equal jobs, greedy makespan placement
+        // (plus backfill) must use both slices
+        let used: std::collections::HashSet<usize> =
+            report.jobs.iter().map(|j| j.slice).collect();
+        assert_eq!(used.len(), 2, "{:?}", report.jobs.iter().map(|j| j.slice).collect::<Vec<_>>());
+    }
+}

@@ -15,11 +15,13 @@ pub mod device;
 pub mod kernels;
 pub mod network;
 pub mod pci;
+pub mod placement;
 
 pub use device::{DeviceClass, DeviceModel};
 pub use kernels::PaperKernel;
 pub use network::NetworkModel;
 pub use pci::PciModel;
+pub use placement::PlacementModel;
 
 /// Everything the simulator / balancer needs about one compute node.
 #[derive(Debug, Clone)]

@@ -1,0 +1,123 @@
+//! Placement scoring for the serving layer (jobs across pool slices).
+//!
+//! The level-1 splice places *elements across nodes* by measured
+//! per-element rates; the job scheduler plays the same move one level up,
+//! placing *jobs across pool slices*. [`PlacementModel`] prices a
+//! candidate placement: predicted wall seconds for a (order, elements,
+//! steps) job on a given lane count. Before anything ran, predictions
+//! bootstrap from the calibrated Stampede CPU model
+//! ([`calib::stampede_node`], or a node refit via
+//! [`calib::measured_node_with_pci`] handed to
+//! [`PlacementModel::with_node`]); every finished job then closes the
+//! loop through [`PlacementModel::observe`], folding the realized
+//! per-element·step·lane rate into an EWMA per order — the same
+//! measured-over-calibrated progression the rebalancer uses.
+
+use std::collections::HashMap;
+
+use crate::costmodel::{calib, NodeModel};
+
+/// Smoothing of the measured-rate update (0.5 = equal weight to the last
+/// job and all history — jobs are whole runs, already well averaged).
+const EWMA_ALPHA: f64 = 0.5;
+
+/// Predicts job wall time per candidate slice; learns from finished jobs.
+#[derive(Debug, Clone)]
+pub struct PlacementModel {
+    node: NodeModel,
+    /// Measured seconds per element·step on one lane, EWMA per order.
+    measured: HashMap<usize, f64>,
+}
+
+impl PlacementModel {
+    /// Bootstrap from the calibrated Stampede node.
+    pub fn new() -> PlacementModel {
+        PlacementModel::with_node(calib::stampede_node())
+    }
+
+    /// Bootstrap from an explicit node model (e.g. one refit from live
+    /// times via [`calib::measured_node_with_pci`]).
+    pub fn with_node(node: NodeModel) -> PlacementModel {
+        PlacementModel { node, measured: HashMap::new() }
+    }
+
+    /// Predicted wall seconds for a `k_elems`-element, order-`order` job
+    /// of `steps` timesteps on `lanes` parallel lanes. Measured rates are
+    /// lane-normalized at observation time, so imperfect scaling at the
+    /// lane counts actually used is folded in; the calibrated bootstrap
+    /// assumes ideal scaling and only has to rank candidates until the
+    /// first job of that order lands.
+    pub fn predict_wall_s(&self, order: usize, k_elems: usize, steps: usize, lanes: usize) -> f64 {
+        let k = k_elems.max(1);
+        let per_elem_step = match self.measured.get(&order) {
+            Some(&rate) => rate,
+            None => {
+                // same face-count ansatz as calib::measured_device: ~3k
+                // interior faces, ~6k^(2/3) on the chunk surface
+                let int_faces = 3 * k;
+                let bound_faces = (6.0 * (k as f64).powf(2.0 / 3.0)).ceil() as usize;
+                self.node.cpu_vec.step_time(order, k, int_faces, bound_faces, 0) / k as f64
+            }
+        };
+        k as f64 * steps as f64 * per_elem_step / lanes.max(1) as f64
+    }
+
+    /// Fold a finished job's realized rate back in (closing the loop the
+    /// way the rebalancer's `measured_node` refit does).
+    pub fn observe(&mut self, order: usize, k_elems: usize, steps: usize, lanes: usize, wall_s: f64) {
+        if wall_s <= 0.0 || k_elems == 0 || steps == 0 {
+            return;
+        }
+        let rate = wall_s * lanes.max(1) as f64 / (k_elems as f64 * steps as f64);
+        self.measured
+            .entry(order)
+            .and_modify(|e| *e = (1.0 - EWMA_ALPHA) * *e + EWMA_ALPHA * rate)
+            .or_insert(rate);
+    }
+
+    /// How many orders have measured (non-bootstrap) rates.
+    pub fn measured_orders(&self) -> usize {
+        self.measured.len()
+    }
+}
+
+impl Default for PlacementModel {
+    fn default() -> Self {
+        PlacementModel::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bootstrap_ranks_big_jobs_slower_and_more_lanes_faster() {
+        let m = PlacementModel::new();
+        let small = m.predict_wall_s(2, 64, 10, 1);
+        let big = m.predict_wall_s(2, 512, 10, 1);
+        assert!(big > small, "{big} vs {small}");
+        let wide = m.predict_wall_s(2, 512, 10, 4);
+        assert!(wide < big, "{wide} vs {big}");
+        assert!(small > 0.0);
+    }
+
+    #[test]
+    fn observed_rates_replace_the_bootstrap() {
+        let mut m = PlacementModel::new();
+        assert_eq!(m.measured_orders(), 0);
+        // a job that really took 2s: 100 elems x 10 steps on 2 lanes
+        m.observe(3, 100, 10, 2, 2.0);
+        assert_eq!(m.measured_orders(), 1);
+        let p = m.predict_wall_s(3, 100, 10, 2);
+        assert!((p - 2.0).abs() < 1e-12, "first observation is adopted verbatim: {p}");
+        // a second, 2x slower observation moves the EWMA halfway
+        m.observe(3, 100, 10, 2, 4.0);
+        let p = m.predict_wall_s(3, 100, 10, 2);
+        assert!((p - 3.0).abs() < 1e-12, "{p}");
+        // degenerate observations are ignored
+        m.observe(3, 0, 10, 2, 1.0);
+        m.observe(3, 100, 10, 2, 0.0);
+        assert!((m.predict_wall_s(3, 100, 10, 2) - 3.0).abs() < 1e-12);
+    }
+}

@@ -31,13 +31,17 @@
 //! * [`costmodel`]  — calibrated Stampede kernel/PCI/network time models,
 //!   plus `calib::measured_node` / `calib::measured_elem_rate`: node
 //!   models and level-1 rates refitted from live times (the rebalancer's
-//!   and cross-check's closed loop)
+//!   and cross-check's closed loop); `costmodel::placement` predicts
+//!   whole-job wall time for the serve scheduler (calibrated bootstrap
+//!   closed by a measured EWMA per completed job)
 //! * [`sim`]        — discrete-event heterogeneous cluster simulator;
 //!   `simulate_parts` prices an explicit (possibly rebalanced) two-level
 //!   partition and `SimReport::discrepancy` cross-checks it live
 //! * [`solver`]     — DGSEM state, LGL basis, pure-rust reference kernels
 //!   (`solver::simd`: runtime-dispatched AVX2/SSE2 vector paths for the
-//!   hot kernels, bitwise-equal to scalar, `simd` feature on by default);
+//!   hot kernels, bitwise-equal to scalar, `simd` feature on by default;
+//!   the opt-in `simd-fma` feature adds FMA-contracted W8 twins, ~1 ulp
+//!   from scalar, behind a runtime `set_fma` toggle);
 //!   `solver::parallel` is the multithreaded boundary/interior CPU backend
 //!   (fused RHS+RK stage pipeline with memoized classification on a
 //!   persistent worker pool) and `solver::driver` the multi-block driver
@@ -55,14 +59,22 @@
 //!   nodes + per-node level-2 re-solve) that `ClusterRun` applies with
 //!   incremental, backend-preserving migration (kept workers keep blocks,
 //!   backends, pools and memoized classification); `coordinator::node`
-//!   keeps the single-node two-worker API; experiments (incl. the
-//!   live-vs-sim cross-check with per-kernel drift), reports
+//!   keeps the single-node two-worker API; `coordinator::serve` is the
+//!   multi-scenario job scheduler — N independent simulations admitted
+//!   through a bounded queue onto disjoint slices of one shared pool,
+//!   placed by predicted wall time, backfilled by work stealing, with
+//!   per-job reports and fabric-poison cancellation (`repro serve`);
+//!   experiments (incl. the live-vs-sim cross-check with per-kernel
+//!   drift), reports
 //! * [`util`]       — offline-build utilities: bench harness + JSON sink,
 //!   json, rng, `util::pool` — the persistent execution substrate
-//!   (`WorkerPool` fork-join pool with phased barriers, optional core
-//!   pinning, generation ids; `TaskThread` for overlap work) — plus the
-//!   transport building blocks `util::shm` (lock-free SPSC slot rings)
-//!   and `util::framing` (length-prefixed delivery-group frames)
+//!   (`WorkerPool` fork-join pool with phased barriers, participant-
+//!   scoped [`util::pool::PoolSlice`] ranges for concurrent disjoint
+//!   dispatch, optional core pinning, generation ids; `TaskThread` for
+//!   overlap work), `util::ring::History` — the bounded report ring —
+//!   plus the transport building blocks `util::shm` (lock-free SPSC
+//!   slot rings) and `util::framing` (length-prefixed delivery-group
+//!   frames)
 
 pub mod coordinator;
 pub mod costmodel;

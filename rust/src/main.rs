@@ -4,6 +4,7 @@
 //! ```text
 //! repro run         solve a wave problem end to end (PJRT or rust-ref)
 //! repro cluster     N-node cluster runtime with adaptive rebalancing
+//! repro serve       co-schedule many independent simulations on one pool
 //! repro partition   print nested-partition statistics for a workload
 //! repro balance     solve the CPU/MIC load-balance split (paper §5.6)
 //! repro experiment  regenerate a paper table/figure (fig4-1, fig5-2, ...)
@@ -48,6 +49,15 @@ COMMANDS
               nodes from measured rates. --transport picks the message
               fabric: in-process channels, shared-memory rings, or Unix
               sockets on the inter-node lanes)
+  serve       co-schedule independent simulations (a scenario sweep) over
+              one shared worker pool carved into slices
+                --jobs examples/serve_smoke.json
+                [--slices 1,1,1,1]  [--queue-cap 8]
+                [--out BENCH_serve.json]  [--smoke]
+              (runs the batch twice — concurrent on the sliced pool, then
+              serial on one full-width slice — and writes per-job records
+              plus the serve_aggregate_over_serial scalar to --out;
+              --smoke caps every job at 4 steps for CI)
   partition   nested-partition statistics
                 --n 16  --nodes 4  --order 7  [--mic-fraction F]
   balance     CPU/MIC load-balance solve   --order 7  --elems 8192
@@ -151,6 +161,16 @@ fn main() -> repro::Result<()> {
                 a.flag("two-tree"),
                 !a.flag("sync-per-step"),
                 a.flag("pin-cores"),
+            )
+        }
+        "serve" => {
+            let a = Args::parse(rest, &["smoke"]);
+            run_serve(
+                &a.get_str("jobs", "examples/serve_smoke.json"),
+                a.kv.get("slices").cloned(),
+                a.get_opt::<usize>("queue-cap"),
+                &a.get_str("out", "BENCH_serve.json"),
+                a.flag("smoke"),
             )
         }
         "partition" => {
@@ -458,6 +478,92 @@ fn run_cluster(
         f.intra_node_msgs, f.inter_node_msgs, f.mic_inter_node_faces
     );
     print!("{}", render_phase_table(&run.worker_summaries(), &run.worker_times()?));
+    Ok(())
+}
+
+/// The scenario-sweep driver: run the batch concurrently over the sliced
+/// pool, then serially on one full-width slice (same scheduler, same
+/// total lane budget), and write per-job records plus the
+/// `serve_aggregate_over_serial` headline scalar to BENCH_serve.json.
+fn run_serve(
+    jobs_path: &str,
+    slices: Option<String>,
+    queue_cap: Option<usize>,
+    out: &str,
+    smoke: bool,
+) -> repro::Result<()> {
+    use repro::coordinator::serve::{serve, JobStatus, ServeOptions, ServeSpec};
+    use repro::util::bench::JsonSink;
+
+    let text = std::fs::read_to_string(jobs_path)
+        .map_err(|e| anyhow::anyhow!("reading {jobs_path}: {e}"))?;
+    let mut spec = ServeSpec::parse(&text)?;
+    if let Some(s) = slices {
+        spec.slices = s
+            .split(',')
+            .map(|t| t.trim().parse::<usize>())
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| anyhow::anyhow!("--slices: {e}"))?;
+        anyhow::ensure!(!spec.slices.is_empty(), "--slices must not be empty");
+    }
+    if let Some(c) = queue_cap {
+        spec.queue_cap = c.max(1);
+    }
+    if smoke {
+        for j in &mut spec.jobs {
+            j.steps = j.steps.min(4);
+        }
+    }
+    let total_lanes: usize = spec.slices.iter().map(|&l| l.max(1)).sum();
+    println!(
+        "serve: {} job(s) over {} slice(s) ({total_lanes} lanes total), queue cap {}{}",
+        spec.jobs.len(),
+        spec.slices.len(),
+        spec.queue_cap,
+        if smoke { ", smoke (steps capped at 4)" } else { "" },
+    );
+    let opts = ServeOptions::default();
+    let concurrent = serve(&spec, &opts)?;
+    for j in &concurrent.jobs {
+        println!(
+            "  {:<18} slice {} x{} lane(s){} wait {:>7.3} s  wall {:>7.3} s  \
+             {:>9.0} elem-steps/s  [{:?}]",
+            j.name,
+            j.slice,
+            j.lanes,
+            if j.stolen { " (stolen)" } else { "" },
+            j.queue_wait_s,
+            j.wall_s,
+            j.elem_steps_per_s,
+            j.status,
+        );
+    }
+    println!("serial baseline (one {total_lanes}-lane slice):");
+    let serial = serve(&spec.serial(), &opts)?;
+    let speedup = serial.wall_s / concurrent.wall_s.max(1e-12);
+
+    let mut sink = JsonSink::new();
+    for j in &concurrent.jobs {
+        sink.push_entry(j.to_json());
+    }
+    sink.push_scalar("serve_wall_s", concurrent.wall_s, "s");
+    sink.push_scalar("serve_elem_steps_per_s", concurrent.elem_steps_per_s, "elem-steps/s");
+    sink.push_scalar("serial_wall_s", serial.wall_s, "s");
+    sink.push_scalar("serial_elem_steps_per_s", serial.elem_steps_per_s, "elem-steps/s");
+    sink.push_scalar("serve_aggregate_over_serial", speedup, "x");
+    sink.write(out)?;
+    println!(
+        "concurrent {:.2} s vs serial {:.2} s -> serve_aggregate_over_serial {speedup:.2}x; \
+         wrote {out}",
+        concurrent.wall_s, serial.wall_s,
+    );
+    let failed = concurrent
+        .jobs
+        .iter()
+        .chain(&serial.jobs)
+        .filter(|j| matches!(j.status, JobStatus::Failed(_)))
+        .count();
+    anyhow::ensure!(failed == 0, "{failed} job(s) failed");
     Ok(())
 }
 

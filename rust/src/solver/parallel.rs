@@ -63,7 +63,7 @@ use super::state::{
 };
 use crate::mesh::halo::LOCAL_HALO;
 use crate::partition::nested::split_block_elements;
-use crate::util::pool::WorkerPool;
+use crate::util::pool::{PoolSlice, WorkerPool};
 use crate::Result;
 
 /// Boundary/interior element split of one block, plus the halo-facing
@@ -114,9 +114,11 @@ struct SplitCache {
 pub struct ParallelRefBackend {
     basis: LglBasis,
     threads: usize,
-    /// The persistent pool; possibly shared with the other backends of
-    /// one cluster worker ([`ParallelRefBackend::with_pool`]).
-    pool: Arc<WorkerPool>,
+    /// The persistent pool slice this backend dispatches onto; possibly
+    /// shared with the other backends of one cluster worker
+    /// ([`ParallelRefBackend::with_pool`]) or carved out of a bigger
+    /// serving pool ([`ParallelRefBackend::with_slice`]).
+    pool: PoolSlice,
     /// One element-scratch per pool worker (locked once per dispatch —
     /// each worker touches exactly its own slot).
     scratch: Vec<Mutex<ElemScratch>>,
@@ -161,6 +163,13 @@ impl ParallelRefBackend {
     /// worker factory builds one pool per worker and hands it to every
     /// block backend of that worker.
     pub fn with_pool(order: usize, pool: Arc<WorkerPool>) -> Self {
+        Self::with_slice(order, PoolSlice::full(pool))
+    }
+
+    /// Backend on a [`PoolSlice`] — the serving layer gives each
+    /// co-scheduled job a disjoint slice of one shared pool, so the jobs'
+    /// stage dispatches proceed concurrently.
+    pub fn with_slice(order: usize, pool: PoolSlice) -> Self {
         let basis = LglBasis::new(order);
         let m = basis.m();
         let threads = pool.threads();
@@ -627,7 +636,7 @@ const INLINE_NODES: usize = 512;
 #[allow(clippy::too_many_arguments)]
 fn fused_sweep(
     basis: &LglBasis,
-    pool: &WorkerPool,
+    pool: &PoolSlice,
     scratch: &[Mutex<ElemScratch>],
     worker_times: &[Mutex<KernelTimes>],
     elems: &[usize],

@@ -22,6 +22,19 @@
 //! supports) so tests and benches can price the SIMD delta
 //! (`simd_over_scalar_*` scalars in BENCH_rhs.json) and assert
 //! scalar-vs-vector equality on the same machine.
+//!
+//! ## Opt-in FMA (`simd-fma` feature)
+//!
+//! With the `simd-fma` cargo feature the W8/AVX2 kernels get
+//! `_mm256_fmadd_ps`-contracted twins, dispatched at runtime when the
+//! host reports FMA (and [`set_fma`] hasn't pinned it off). Contraction
+//! skips the intermediate rounding of each multiply, so **the bitwise
+//! contract above is deliberately traded away on exactly that leg**:
+//! tests widen their gate from `assert_eq!` to a 1e-6 relative tolerance
+//! precisely where [`fma_possible`] says contraction may happen, and
+//! nowhere else (SSE2 and the scalar path stay bitwise). The
+//! `fma_over_nofma_*` scalars in BENCH_rhs.json price what the fused ops
+//! buy, toggled via [`set_fma`] on the same build.
 #![allow(clippy::needless_range_loop)]
 
 use std::sync::atomic::{AtomicU8, Ordering};
@@ -138,6 +151,99 @@ fn check_lanes(lanes: Lanes) {
 }
 
 // ---------------------------------------------------------------------------
+// FMA contraction state (simd-fma feature)
+// ---------------------------------------------------------------------------
+
+/// 0 = auto (on if available), 1 = pinned off, 2 = pinned on (still
+/// clamped to availability).
+static FMA_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Whether this build + host can execute the FMA-contracted W8 kernels at
+/// all: `simd-fma` compiled in and CPUID reports FMA.
+pub fn fma_available() -> bool {
+    #[cfg(all(feature = "simd-fma", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(all(feature = "simd-fma", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// Pin FMA contraction on/off (benches price the delta by toggling on one
+/// build); `None` restores auto (on when available). Returns the
+/// *effective* state — always clamped to [`fma_available`], so pinning
+/// "on" on a host or build without FMA is a no-op reported as `false`.
+pub fn set_fma(on: Option<bool>) -> bool {
+    let code = match on {
+        None => 0,
+        Some(false) => 1,
+        Some(true) => 2,
+    };
+    FMA_MODE.store(code, Ordering::SeqCst);
+    fma_active()
+}
+
+/// Whether the next W8 dispatch will use the contracted kernels.
+#[inline]
+pub fn fma_active() -> bool {
+    match FMA_MODE.load(Ordering::Relaxed) {
+        1 => false,
+        _ => fma_available(),
+    }
+}
+
+/// Whether kernels at `lanes` use FMA right now (W8 only; SSE2 and scalar
+/// never contract).
+#[inline]
+pub fn fma_contracts(lanes: Lanes) -> bool {
+    lanes == Lanes::W8 && fma_active()
+}
+
+/// Whether kernels at `lanes` *may* contract in this build on this host,
+/// regardless of the runtime toggle. Equality tests key their gate on
+/// this (bitwise vs 1e-6) so they stay race-free against a concurrent
+/// [`set_fma`] — the toggle changes which result appears, not whether it
+/// is within the widened gate.
+#[inline]
+pub fn fma_possible(lanes: Lanes) -> bool {
+    lanes == Lanes::W8 && fma_available()
+}
+
+// ---------------------------------------------------------------------------
+// multiply-accumulate selection
+// ---------------------------------------------------------------------------
+//
+// Every AVX2 kernel body below is written against a `$madd` macro with the
+// uniform shape `madd(a, b, c) = c + a*b`. The `nofma` expansion keeps the
+// separate multiply and add in exactly the operand order the scalar
+// kernels use (the addend `c` first), so the non-contracted twins stay
+// bitwise identical to the code they replaced; the `fma` expansion
+// (`simd-fma` builds only) is a single `_mm256_fmadd_ps`.
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+macro_rules! madd256_nofma {
+    ($a:expr, $b:expr, $c:expr) => {
+        _mm256_add_ps($c, _mm256_mul_ps($a, $b))
+    };
+}
+
+#[cfg(all(feature = "simd-fma", target_arch = "x86_64"))]
+macro_rules! madd256_fma {
+    ($a:expr, $b:expr, $c:expr) => {
+        _mm256_fmadd_ps($a, $b, $c)
+    };
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+macro_rules! madd128_nofma {
+    ($a:expr, $b:expr, $c:expr) => {
+        _mm_add_ps($c, _mm_mul_ps($a, $b))
+    };
+}
+
+// ---------------------------------------------------------------------------
 // axpy: dst[i] += c * src[i]   (axis-0/1 derivative sweeps)
 // ---------------------------------------------------------------------------
 
@@ -148,7 +254,15 @@ pub(crate) fn axpy(lanes: Lanes, dst: &mut [f32], src: &[f32], c: f32) {
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
         match lanes {
-            Lanes::W8 => return unsafe { axpy_avx2(dst, src, c) },
+            Lanes::W8 => {
+                #[cfg(feature = "simd-fma")]
+                {
+                    if fma_active() {
+                        return unsafe { axpy_avx2_fma(dst, src, c) };
+                    }
+                }
+                return unsafe { axpy_avx2(dst, src, c) };
+            }
             Lanes::W4 => return unsafe { axpy_sse2(dst, src, c) },
             Lanes::Scalar => {}
         }
@@ -160,24 +274,37 @@ pub(crate) fn axpy(lanes: Lanes, dst: &mut [f32], src: &[f32], c: f32) {
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+macro_rules! axpy256_body {
+    ($dst:ident, $src:ident, $c:ident, $madd:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $dst.len();
+        let cv = _mm256_set1_ps($c);
+        let dp = $dst.as_mut_ptr();
+        let sp = $src.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(dp.add(i));
+            let s = _mm256_loadu_ps(sp.add(i));
+            _mm256_storeu_ps(dp.add(i), $madd!(cv, s, d));
+            i += 8;
+        }
+        while i < n {
+            *dp.add(i) += $c * *sp.add(i);
+            i += 1;
+        }
+    }};
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_avx2(dst: &mut [f32], src: &[f32], c: f32) {
-    use core::arch::x86_64::*;
-    let n = dst.len();
-    let cv = _mm256_set1_ps(c);
-    let dp = dst.as_mut_ptr();
-    let sp = src.as_ptr();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let d = _mm256_loadu_ps(dp.add(i));
-        let s = _mm256_loadu_ps(sp.add(i));
-        _mm256_storeu_ps(dp.add(i), _mm256_add_ps(d, _mm256_mul_ps(cv, s)));
-        i += 8;
-    }
-    while i < n {
-        *dp.add(i) += c * *sp.add(i);
-        i += 1;
-    }
+    axpy256_body!(dst, src, c, madd256_nofma)
+}
+
+#[cfg(all(feature = "simd-fma", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy_avx2_fma(dst: &mut [f32], src: &[f32], c: f32) {
+    axpy256_body!(dst, src, c, madd256_fma)
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
@@ -226,6 +353,13 @@ pub(crate) fn matvec_rows(
     {
         match (lanes, m) {
             (Lanes::W8, 8) => {
+                #[cfg(feature = "simd-fma")]
+                {
+                    if fma_active() {
+                        unsafe { matvec8_avx2_fma(dt_pad, src, dst, scale) };
+                        return true;
+                    }
+                }
                 unsafe { matvec8_avx2(dt_pad, src, dst, scale) };
                 return true;
             }
@@ -245,28 +379,41 @@ pub(crate) fn matvec_rows(
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+macro_rules! matvec8x256_body {
+    ($dt:ident, $src:ident, $dst:ident, $scale:ident, $madd:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $dst.len();
+        debug_assert_eq!(n % 8, 0);
+        let mut d = [_mm256_setzero_ps(); 8];
+        for (t, dv) in d.iter_mut().enumerate() {
+            *dv = _mm256_loadu_ps($dt.as_ptr().add(t * 8));
+        }
+        let vs = _mm256_set1_ps($scale);
+        let sp = $src.as_ptr();
+        let dp = $dst.as_mut_ptr();
+        let mut r = 0usize;
+        while r < n {
+            let mut acc = _mm256_mul_ps(_mm256_set1_ps(*sp.add(r)), d[0]);
+            for t in 1..8 {
+                acc = $madd!(_mm256_set1_ps(*sp.add(r + t)), d[t], acc);
+            }
+            let prev = _mm256_loadu_ps(dp.add(r));
+            _mm256_storeu_ps(dp.add(r), $madd!(vs, acc, prev));
+            r += 8;
+        }
+    }};
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[target_feature(enable = "avx2")]
 unsafe fn matvec8_avx2(dt: &[f32], src: &[f32], dst: &mut [f32], scale: f32) {
-    use core::arch::x86_64::*;
-    let n = dst.len();
-    debug_assert_eq!(n % 8, 0);
-    let mut d = [_mm256_setzero_ps(); 8];
-    for (t, dv) in d.iter_mut().enumerate() {
-        *dv = _mm256_loadu_ps(dt.as_ptr().add(t * 8));
-    }
-    let vs = _mm256_set1_ps(scale);
-    let sp = src.as_ptr();
-    let dp = dst.as_mut_ptr();
-    let mut r = 0usize;
-    while r < n {
-        let mut acc = _mm256_mul_ps(_mm256_set1_ps(*sp.add(r)), d[0]);
-        for t in 1..8 {
-            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*sp.add(r + t)), d[t]));
-        }
-        let prev = _mm256_loadu_ps(dp.add(r));
-        _mm256_storeu_ps(dp.add(r), _mm256_add_ps(prev, _mm256_mul_ps(vs, acc)));
-        r += 8;
-    }
+    matvec8x256_body!(dt, src, dst, scale, madd256_nofma)
+}
+
+#[cfg(all(feature = "simd-fma", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn matvec8_avx2_fma(dt: &[f32], src: &[f32], dst: &mut [f32], scale: f32) {
+    matvec8x256_body!(dt, src, dst, scale, madd256_fma)
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
@@ -341,7 +488,15 @@ pub(crate) fn stress(lanes: Lanes, q: &[f32], out: &mut [f32], vol: usize, lam: 
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
         match lanes {
-            Lanes::W8 => return unsafe { stress_avx2(q, out, vol, lam, mu) },
+            Lanes::W8 => {
+                #[cfg(feature = "simd-fma")]
+                {
+                    if fma_active() {
+                        return unsafe { stress_avx2_fma(q, out, vol, lam, mu) };
+                    }
+                }
+                return unsafe { stress_avx2(q, out, vol, lam, mu) };
+            }
             Lanes::W4 => return unsafe { stress_sse2(q, out, vol, lam, mu) },
             Lanes::Scalar => {}
         }
@@ -366,30 +521,43 @@ fn stress_scalar(q: &[f32], out: &mut [f32], n0: usize, n1: usize, vol: usize, l
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+macro_rules! stress256_body {
+    ($q:ident, $out:ident, $vol:ident, $lam:ident, $mu:ident, $madd:ident) => {{
+        use core::arch::x86_64::*;
+        let vl = _mm256_set1_ps($lam);
+        let v2m = _mm256_set1_ps(2.0 * $mu);
+        let qp = $q.as_ptr();
+        let op = $out.as_mut_ptr();
+        let mut n = 0usize;
+        while n + 8 <= $vol {
+            let q0 = _mm256_loadu_ps(qp.add(n));
+            let q1 = _mm256_loadu_ps(qp.add($vol + n));
+            let q2 = _mm256_loadu_ps(qp.add(2 * $vol + n));
+            let tr = _mm256_add_ps(_mm256_add_ps(q0, q1), q2);
+            let lt = _mm256_mul_ps(vl, tr);
+            _mm256_storeu_ps(op.add(n), $madd!(v2m, q0, lt));
+            _mm256_storeu_ps(op.add($vol + n), $madd!(v2m, q1, lt));
+            _mm256_storeu_ps(op.add(2 * $vol + n), $madd!(v2m, q2, lt));
+            for f in 3..6 {
+                let qf = _mm256_loadu_ps(qp.add(f * $vol + n));
+                _mm256_storeu_ps(op.add(f * $vol + n), _mm256_mul_ps(v2m, qf));
+            }
+            n += 8;
+        }
+        stress_scalar($q, $out, n, $vol, $vol, $lam, $mu);
+    }};
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[target_feature(enable = "avx2")]
 unsafe fn stress_avx2(q: &[f32], out: &mut [f32], vol: usize, lam: f32, mu: f32) {
-    use core::arch::x86_64::*;
-    let vl = _mm256_set1_ps(lam);
-    let v2m = _mm256_set1_ps(2.0 * mu);
-    let qp = q.as_ptr();
-    let op = out.as_mut_ptr();
-    let mut n = 0usize;
-    while n + 8 <= vol {
-        let q0 = _mm256_loadu_ps(qp.add(n));
-        let q1 = _mm256_loadu_ps(qp.add(vol + n));
-        let q2 = _mm256_loadu_ps(qp.add(2 * vol + n));
-        let tr = _mm256_add_ps(_mm256_add_ps(q0, q1), q2);
-        let lt = _mm256_mul_ps(vl, tr);
-        _mm256_storeu_ps(op.add(n), _mm256_add_ps(lt, _mm256_mul_ps(v2m, q0)));
-        _mm256_storeu_ps(op.add(vol + n), _mm256_add_ps(lt, _mm256_mul_ps(v2m, q1)));
-        _mm256_storeu_ps(op.add(2 * vol + n), _mm256_add_ps(lt, _mm256_mul_ps(v2m, q2)));
-        for f in 3..6 {
-            let qf = _mm256_loadu_ps(qp.add(f * vol + n));
-            _mm256_storeu_ps(op.add(f * vol + n), _mm256_mul_ps(v2m, qf));
-        }
-        n += 8;
-    }
-    stress_scalar(q, out, n, vol, vol, lam, mu);
+    stress256_body!(q, out, vol, lam, mu, madd256_nofma)
+}
+
+#[cfg(all(feature = "simd-fma", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn stress_avx2_fma(q: &[f32], out: &mut [f32], vol: usize, lam: f32, mu: f32) {
+    stress256_body!(q, out, vol, lam, mu, madd256_fma)
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
@@ -437,7 +605,15 @@ pub(crate) fn rk_update(
     #[cfg(all(feature = "simd", target_arch = "x86_64"))]
     {
         match lanes {
-            Lanes::W8 => return unsafe { rk_avx2(q, res, dq, dt, a, b) },
+            Lanes::W8 => {
+                #[cfg(feature = "simd-fma")]
+                {
+                    if fma_active() {
+                        return unsafe { rk_avx2_fma(q, res, dq, dt, a, b) };
+                    }
+                }
+                return unsafe { rk_avx2(q, res, dq, dt, a, b) };
+            }
             Lanes::W4 => return unsafe { rk_sse2(q, res, dq, dt, a, b) },
             Lanes::Scalar => {}
         }
@@ -452,32 +628,45 @@ pub(crate) fn rk_update(
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+macro_rules! rk256_body {
+    ($q:ident, $res:ident, $dq:ident, $dt:ident, $a:ident, $b:ident, $madd:ident) => {{
+        use core::arch::x86_64::*;
+        let n = $q.len();
+        let va = _mm256_set1_ps($a);
+        let vdt = _mm256_set1_ps($dt);
+        let vb = _mm256_set1_ps($b);
+        let qp = $q.as_mut_ptr();
+        let rp = $res.as_mut_ptr();
+        let dp = $dq.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let r = _mm256_loadu_ps(rp.add(i));
+            let d = _mm256_loadu_ps(dp.add(i));
+            let rn = $madd!(vdt, d, _mm256_mul_ps(va, r));
+            _mm256_storeu_ps(rp.add(i), rn);
+            let qv = _mm256_loadu_ps(qp.add(i));
+            _mm256_storeu_ps(qp.add(i), $madd!(vb, rn, qv));
+            i += 8;
+        }
+        while i < n {
+            let rn = $a * *rp.add(i) + $dt * *dp.add(i);
+            *rp.add(i) = rn;
+            *qp.add(i) += $b * rn;
+            i += 1;
+        }
+    }};
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
 #[target_feature(enable = "avx2")]
 unsafe fn rk_avx2(q: &mut [f32], res: &mut [f32], dq: &[f32], dt: f32, a: f32, b: f32) {
-    use core::arch::x86_64::*;
-    let n = q.len();
-    let va = _mm256_set1_ps(a);
-    let vdt = _mm256_set1_ps(dt);
-    let vb = _mm256_set1_ps(b);
-    let qp = q.as_mut_ptr();
-    let rp = res.as_mut_ptr();
-    let dp = dq.as_ptr();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let r = _mm256_loadu_ps(rp.add(i));
-        let d = _mm256_loadu_ps(dp.add(i));
-        let rn = _mm256_add_ps(_mm256_mul_ps(va, r), _mm256_mul_ps(vdt, d));
-        _mm256_storeu_ps(rp.add(i), rn);
-        let qv = _mm256_loadu_ps(qp.add(i));
-        _mm256_storeu_ps(qp.add(i), _mm256_add_ps(qv, _mm256_mul_ps(vb, rn)));
-        i += 8;
-    }
-    while i < n {
-        let rn = a * *rp.add(i) + dt * *dp.add(i);
-        *rp.add(i) = rn;
-        *qp.add(i) += b * rn;
-        i += 1;
-    }
+    rk256_body!(q, res, dq, dt, a, b, madd256_nofma)
+}
+
+#[cfg(all(feature = "simd-fma", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn rk_avx2_fma(q: &mut [f32], res: &mut [f32], dq: &[f32], dt: f32, a: f32, b: f32) {
+    rk256_body!(q, res, dq, dt, a, b, madd256_fma)
 }
 
 #[cfg(all(feature = "simd", target_arch = "x86_64"))]
@@ -537,6 +726,14 @@ pub(crate) fn riemann_vec(
     {
         match lanes {
             Lanes::W8 if face >= 8 => {
+                #[cfg(feature = "simd-fma")]
+                {
+                    if fma_active() {
+                        return unsafe {
+                            riemann_avx2_fma(tr_m, tr_p, mirror, matm, matp, axis, sign, face, out)
+                        };
+                    }
+                }
                 return unsafe {
                     riemann_avx2(tr_m, tr_p, mirror, matm, matp, axis, sign, face, out)
                 };
@@ -562,7 +759,7 @@ macro_rules! riemann_body {
     ($tr_m:ident, $tr_p:ident, $mirror:ident, $matm:ident, $matp:ident,
      $axis:ident, $sign:ident, $face:ident, $out:ident,
      $w:expr, $set1:ident, $load:ident, $store:ident,
-     $add:ident, $sub:ident, $mul:ident, $xor:ident) => {{
+     $add:ident, $sub:ident, $mul:ident, $xor:ident, $madd:ident) => {{
         use core::arch::x86_64::*;
         let (rho_m, lam_m, mu_m) = ($matm[0], $matm[1], $matm[2]);
         let (rho_p, lam_p, mu_p) = ($matp[0], $matp[1], $matp[2]);
@@ -611,12 +808,12 @@ macro_rules! riemann_body {
             for i in 0..3 {
                 let sv = S_COL[$axis][i];
                 let s_m = if sv < 3 {
-                    $add($mul(vlam_m, tre_m), $mul(v2mu_m, qm[sv]))
+                    $madd!(v2mu_m, qm[sv], $mul(vlam_m, tre_m))
                 } else {
                     $mul(v2mu_m, qm[sv])
                 };
                 let s_p = if sv < 3 {
-                    $add($mul(vlam_p, tre_p), $mul(v2mu_p, qp[sv]))
+                    $madd!(v2mu_p, qp[sv], $mul(vlam_p, tre_p))
                 } else {
                     $mul(v2mu_p, qp[sv])
                 };
@@ -629,12 +826,12 @@ macro_rules! riemann_body {
             let mut v_tan = vjump;
             t_tan[$axis] = $sub(tjump[$axis], $mul(tn, vsign));
             v_tan[$axis] = $sub(vjump[$axis], $mul(vn, vsign));
-            let phi = $add($mul(vk0, tn), $mul(vk0zpp, vn));
+            let phi = $madd!(vk0zpp, vn, $mul(vk0, tn));
             // tangential flux, shared by the strain and velocity rows (the
             // scalar kernel computes the same expression in both loops)
             let mut tang = [vzero; 3];
             for j in 0..3 {
-                tang[j] = $add($mul(vk1, t_tan[j]), $mul(vk1zsp, v_tan[j]));
+                tang[j] = $madd!(vk1zsp, v_tan[j], $mul(vk1, t_tan[j]));
             }
             // strain rows: zeroed, normal row = phi, symmetric pairs
             let mut rows = [vzero; 6];
@@ -642,7 +839,7 @@ macro_rules! riemann_body {
             for j in 0..3 {
                 if j != $axis {
                     let vi = VOIGT_PAIR[$axis][j];
-                    rows[vi] = $add(rows[vi], $mul(vhalf, tang[j]));
+                    rows[vi] = $madd!(vhalf, tang[j], rows[vi]);
                 }
             }
             for (fld, row) in rows.iter().enumerate() {
@@ -652,7 +849,7 @@ macro_rules! riemann_body {
             for i in 0..3 {
                 let mut v = $mul(vzs_m, tang[i]);
                 if i == $axis {
-                    v = $add(v, $mul($mul(vsign, phi), vzp_m));
+                    v = $madd!($mul(vsign, phi), vzp_m, v);
                 }
                 $store(op.add((6 + i) * $face + n), v);
             }
@@ -679,7 +876,28 @@ unsafe fn riemann_avx2(
     riemann_body!(
         tr_m, tr_p, mirror, matm, matp, axis, sign, face, out, 8, _mm256_set1_ps,
         _mm256_loadu_ps, _mm256_storeu_ps, _mm256_add_ps, _mm256_sub_ps, _mm256_mul_ps,
-        _mm256_xor_ps
+        _mm256_xor_ps, madd256_nofma
+    )
+}
+
+#[cfg(all(feature = "simd-fma", target_arch = "x86_64"))]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn riemann_avx2_fma(
+    tr_m: &[f32],
+    tr_p: &[f32],
+    mirror: bool,
+    matm: [f32; 3],
+    matp: [f32; 3],
+    axis: usize,
+    sign: f32,
+    face: usize,
+    out: &mut [f32],
+) -> usize {
+    riemann_body!(
+        tr_m, tr_p, mirror, matm, matp, axis, sign, face, out, 8, _mm256_set1_ps,
+        _mm256_loadu_ps, _mm256_storeu_ps, _mm256_add_ps, _mm256_sub_ps, _mm256_mul_ps,
+        _mm256_xor_ps, madd256_fma
     )
 }
 
@@ -699,13 +917,29 @@ unsafe fn riemann_sse2(
 ) -> usize {
     riemann_body!(
         tr_m, tr_p, mirror, matm, matp, axis, sign, face, out, 4, _mm_set1_ps, _mm_loadu_ps,
-        _mm_storeu_ps, _mm_add_ps, _mm_sub_ps, _mm_mul_ps, _mm_xor_ps
+        _mm_storeu_ps, _mm_add_ps, _mm_sub_ps, _mm_mul_ps, _mm_xor_ps, madd128_nofma
     )
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Bitwise unless `lanes` may FMA-contract in this build/host, then
+    /// a 1e-6 relative gate (see the module docs).
+    fn assert_lane_eq(got: &[f32], want: &[f32], lanes: Lanes, ctx: &str) {
+        assert_eq!(got.len(), want.len(), "{ctx}");
+        if fma_possible(lanes) {
+            for (i, (g, w)) in got.iter().zip(want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-6 * w.abs().max(1.0),
+                    "{ctx}: [{i}] {g} vs {w}"
+                );
+            }
+        } else {
+            assert!(got == want, "{ctx}");
+        }
+    }
 
     #[test]
     fn detection_is_sane_and_cached() {
@@ -745,7 +979,7 @@ mod tests {
                 }
                 let mut got: Vec<f32> = (0..len).map(|i| (i as f32) * 0.1).collect();
                 axpy(lanes, &mut got, &src, c);
-                assert_eq!(got, want, "len {len} lanes {lanes:?}");
+                assert_lane_eq(&got, &want, lanes, &format!("len {len} lanes {lanes:?}"));
             }
         }
     }
@@ -766,11 +1000,37 @@ mod tests {
             }
             let (mut qv, mut rv) = (q0.clone(), r0.clone());
             rk_update(lanes, &mut qv, &mut rv, &dq, 1e-3, -0.4, 0.7);
-            assert_eq!(qv, qs, "{lanes:?} q");
-            assert_eq!(rv, rs, "{lanes:?} res");
+            assert_lane_eq(&qv, &qs, lanes, &format!("{lanes:?} q"));
+            assert_lane_eq(&rv, &rs, lanes, &format!("{lanes:?} res"));
             let mut sv = vec![0.0f32; 6 * vol];
             stress(lanes, &q0, &mut sv, vol, 2.0, 0.8);
-            assert_eq!(sv, ss, "{lanes:?} stress");
+            assert_lane_eq(&sv, &ss, lanes, &format!("{lanes:?} stress"));
         }
+    }
+
+    #[test]
+    fn fma_toggle_is_clamped_and_off_means_bitwise() {
+        // default (auto): active iff available; pinning mirrors that clamp
+        assert_eq!(fma_active(), fma_available());
+        assert!(!set_fma(Some(false)));
+        assert!(!fma_active());
+        assert!(!fma_contracts(Lanes::W8));
+        // with contraction pinned off, W8 must be bitwise-equal to scalar
+        // even on simd-fma builds
+        if detect() == Lanes::W8 {
+            let len = 64usize;
+            let src: Vec<f32> = (0..len).map(|i| ((i * 7 % 13) as f32 - 6.0) * 0.3).collect();
+            let mut want: Vec<f32> = (0..len).map(|i| (i as f32) * 0.1).collect();
+            let mut got = want.clone();
+            axpy(Lanes::Scalar, &mut want, &src, 0.37);
+            axpy(Lanes::W8, &mut got, &src, 0.37);
+            assert!(got == want, "pinned-off FMA must not contract");
+        }
+        assert_eq!(set_fma(Some(true)), fma_available(), "pin-on clamps to capability");
+        assert_eq!(set_fma(None), fma_available());
+        // scalar and W4 never contract regardless of the toggle
+        assert!(!fma_contracts(Lanes::Scalar));
+        assert!(!fma_contracts(Lanes::W4));
+        assert!(!fma_possible(Lanes::W4));
     }
 }

@@ -121,6 +121,14 @@ impl JsonSink {
         self.entries.push(Json::Obj(obj));
     }
 
+    /// Record one pre-built entry (e.g. a serving-layer `JobReport`
+    /// record). The sink stays a flat array; consumers distinguish entry
+    /// kinds by their keys, so record objects ride alongside timing and
+    /// scalar entries.
+    pub fn push_entry(&mut self, entry: Json) {
+        self.entries.push(entry);
+    }
+
     /// Serialize all entries as a JSON array.
     pub fn dump(&self) -> String {
         Json::Arr(self.entries.clone()).dump()

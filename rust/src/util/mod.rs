@@ -5,9 +5,11 @@ pub mod bench;
 pub mod framing;
 pub mod json;
 pub mod pool;
+pub mod ring;
 pub mod rng;
 pub mod shm;
 
 pub use json::Json;
-pub use pool::{TaskThread, WorkerPool};
+pub use pool::{PoolSlice, TaskThread, WorkerPool};
+pub use ring::History;
 pub use rng::Rng;

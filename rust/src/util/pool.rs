@@ -7,11 +7,18 @@
 //!   the pool (one per hardware-thread of the worker's budget, minus the
 //!   caller, which participates as worker 0). A dispatch is a
 //!   *rendezvous*: publish one shared closure, run it as
-//!   `f(worker, phase)` on every worker, meet at a reusable barrier. A
-//!   multi-phase dispatch reuses the same wake-up: phases are separated
-//!   by pool-internal barriers (a few atomic ops), not by fresh
+//!   `f(worker, phase)` on every worker, meet at a per-dispatch barrier.
+//!   A multi-phase dispatch reuses the same wake-up: phases are separated
+//!   by dispatch-internal barriers (a few atomic ops), not by fresh
 //!   spawn/join cycles, so a fused RHS + RK + trace-refresh stage costs
 //!   one wake-up instead of three thread-spawn sweeps.
+//! * [`PoolSlice`] — a contiguous sub-range of one pool's OS workers
+//!   behaving like a smaller pool. Dispatch is *participant-scoped*:
+//!   each dispatch engages exactly the OS workers of its slice (claimed
+//!   all-or-nothing from a slot ledger, so overlapping slices serialize
+//!   and disjoint slices run **concurrently** — the serving layer
+//!   co-schedules independent simulations onto disjoint core ranges of
+//!   one pool this way). Idle workers are never woken at all.
 //! * [`TaskThread`] — a single persistent thread for overlap work (the
 //!   driver's halo scatter), replacing a `std::thread::spawn` per stage.
 //!
@@ -133,8 +140,12 @@ fn allowed_cpus() -> Vec<usize> {
 struct Job(*const (dyn Fn(usize, usize) + Sync + 'static));
 
 // SAFETY: the pointee is Sync (shared calls from many threads are fine)
-// and outlives every dereference (see Job docs).
+// and outlives every dereference (see Job docs). Sync on the wrapper is
+// needed because a Job rides inside an `Arc<Dispatch>` shared with every
+// engaged worker; `&Job` only exposes the pointer value, dereferencing
+// stays unsafe.
 unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
 
 fn erase_job<'a>(f: &'a (dyn Fn(usize, usize) + Sync + 'a)) -> Job {
     // SAFETY: pure lifetime erasure of a fat pointer (layout-identical
@@ -147,24 +158,9 @@ fn erase_job<'a>(f: &'a (dyn Fn(usize, usize) + Sync + 'a)) -> Job {
     })
 }
 
-struct Ctl {
-    /// Bumped once per dispatch; workers run a job when they see a fresh
-    /// epoch.
-    epoch: u64,
-    phases: usize,
-    /// Workers participating in this dispatch (caller included). Workers
-    /// with `w >= active` acknowledge the epoch and go straight back to
-    /// sleep without touching the job or the barrier — a small block's
-    /// rendezvous pays wake-ups only for the workers that have work.
-    active: usize,
-    job: Option<Job>,
-    shutdown: bool,
-}
-
-/// Reusable sense-reversing barrier whose participant count is set per
-/// dispatch (`std::sync::Barrier` is fixed-size, which would force every
-/// rendezvous to wake all workers just to park the idle ones at the
-/// barrier).
+/// Sense-reversing barrier sized for one dispatch's participants
+/// (`std::sync::Barrier` would work here too, but this one tolerates a
+/// poisoned mutex after a participant panicked mid-phase).
 struct PhaseBarrier {
     state: Mutex<BarrierState>,
     cv: Condvar,
@@ -184,15 +180,6 @@ impl PhaseBarrier {
         }
     }
 
-    /// Set the participant count of subsequent waits. Only called under
-    /// the dispatch lock while no thread is inside [`PhaseBarrier::wait`]:
-    /// every waiter of the previous dispatch was released before that
-    /// dispatch returned (the dispatcher itself is a participant of the
-    /// final phase barrier), and idle workers never touch the barrier.
-    fn set_participants(&self, n: usize) {
-        self.state.lock().unwrap_or_else(|e| e.into_inner()).participants = n;
-    }
-
     fn wait(&self) {
         let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
         s.arrived += 1;
@@ -209,13 +196,68 @@ impl PhaseBarrier {
     }
 }
 
-struct Shared {
-    ctl: Mutex<Ctl>,
-    work: Condvar,
-    /// One generation per phase; participants = the dispatch's active
-    /// workers including the dispatching caller.
+/// One rendezvous, fully self-contained: the job, the phase count, the
+/// phase barrier, and the panic flag all live here, so two dispatches on
+/// disjoint worker slices share *nothing* and proceed concurrently. The
+/// dispatcher allocates one `Arc<Dispatch>` per rendezvous; the engaged
+/// workers hold it alive through their final barrier wait.
+struct Dispatch {
+    job: Job,
+    phases: usize,
+    /// Participants = the slice's OS workers + the dispatching caller.
     barrier: PhaseBarrier,
     panicked: AtomicBool,
+}
+
+/// One OS worker's mailbox: a dispatch is delivered by the thread that
+/// holds this worker's ledger slot, so publications never race.
+struct Slot {
+    ctl: Mutex<SlotCtl>,
+    work: Condvar,
+}
+
+struct SlotCtl {
+    /// The pending rendezvous (taken by the worker) and the worker's
+    /// slice-local lane for it (`global - slice_start + 1`; lane 0 is the
+    /// dispatching caller).
+    dispatch: Option<Arc<Dispatch>>,
+    local: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    /// One mailbox per OS worker (`threads - 1` of them).
+    slots: Vec<Slot>,
+    /// Which OS workers are currently engaged by a dispatch. A dispatcher
+    /// claims its whole slice all-or-nothing under this one mutex (no
+    /// hold-and-wait, hence no deadlock between overlapping slices) and
+    /// each worker frees its own flag when done.
+    ledger: Mutex<Vec<bool>>,
+    freed: Condvar,
+}
+
+impl Shared {
+    /// Block until every OS worker in `[start, start+count)` is free,
+    /// then claim them all atomically.
+    fn acquire(&self, start: usize, count: usize) {
+        let mut busy = self.ledger.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if busy[start..start + count].iter().all(|b| !*b) {
+                for b in &mut busy[start..start + count] {
+                    *b = true;
+                }
+                return;
+            }
+            busy = self.freed.wait(busy).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn free(&self, g: usize) {
+        let mut busy = self.ledger.lock().unwrap_or_else(|e| e.into_inner());
+        busy[g] = false;
+        drop(busy);
+        self.freed.notify_all();
+    }
 }
 
 /// The persistent fork-join pool (see module docs).
@@ -228,8 +270,6 @@ pub struct WorkerPool {
     /// The allowed CPU worker 0 (the caller) pins to, when pinning.
     caller_core: Option<usize>,
     caller_pin: Once,
-    /// Serializes dispatches from multiple owners of a shared pool.
-    dispatch: Mutex<()>,
 }
 
 impl WorkerPool {
@@ -252,26 +292,25 @@ impl WorkerPool {
         });
         let mut handles = Vec::new();
         let shared = if threads > 1 {
+            let os_workers = threads - 1;
             let shared = Arc::new(Shared {
-                ctl: Mutex::new(Ctl {
-                    epoch: 0,
-                    phases: 0,
-                    active: threads,
-                    job: None,
-                    shutdown: false,
-                }),
-                work: Condvar::new(),
-                barrier: PhaseBarrier::new(threads),
-                panicked: AtomicBool::new(false),
+                slots: (0..os_workers)
+                    .map(|_| Slot {
+                        ctl: Mutex::new(SlotCtl { dispatch: None, local: 0, shutdown: false }),
+                        work: Condvar::new(),
+                    })
+                    .collect(),
+                ledger: Mutex::new(vec![false; os_workers]),
+                freed: Condvar::new(),
             });
-            for w in 1..threads {
+            for g in 0..os_workers {
                 let sh = shared.clone();
-                let pin = pin_cores.as_ref().map(|c| c[w]);
+                let pin = pin_cores.as_ref().map(|c| c[g + 1]);
                 SPAWNED.fetch_add(1, Ordering::SeqCst);
                 handles.push(
                     std::thread::Builder::new()
-                        .name(format!("pool{generation}-w{w}"))
-                        .spawn(move || worker_main(sh, w, pin))
+                        .name(format!("pool{generation}-w{}", g + 1))
+                        .spawn(move || worker_main(sh, g, pin))
                         .expect("spawning pool worker"),
                 );
             }
@@ -286,7 +325,6 @@ impl WorkerPool {
             generation,
             caller_core: pin_cores.map(|c| c[0]),
             caller_pin: Once::new(),
-            dispatch: Mutex::new(()),
         }
     }
 
@@ -326,6 +364,26 @@ impl WorkerPool {
     /// `limit == 1` the whole dispatch runs inline on the caller (no
     /// rendezvous at all).
     pub fn run_phased_limit(&self, limit: usize, phases: usize, f: impl Fn(usize, usize) + Sync) {
+        let active = limit.clamp(1, self.threads);
+        self.run_phased_slice(0, active - 1, phases, f);
+    }
+
+    /// Participant-scoped rendezvous: engage OS workers
+    /// `[os_start, os_start + os_count)` plus the caller. The caller runs
+    /// as lane 0 and OS worker `g` as lane `g - os_start + 1`, so `f`
+    /// always sees dense lanes `0..=os_count` regardless of where the
+    /// slice sits. The slice's slots are claimed all-or-nothing from the
+    /// ledger: dispatches on overlapping slices serialize, dispatches on
+    /// disjoint slices run concurrently, and workers outside the slice
+    /// are neither woken nor barriered. With `os_count == 0` the whole
+    /// dispatch runs inline on the caller.
+    pub fn run_phased_slice(
+        &self,
+        os_start: usize,
+        os_count: usize,
+        phases: usize,
+        f: impl Fn(usize, usize) + Sync,
+    ) {
         if phases == 0 {
             return;
         }
@@ -334,46 +392,52 @@ impl WorkerPool {
                 pin_current_thread(core);
             });
         }
-        let active = limit.clamp(1, self.threads);
-        let inline = match &self.shared {
-            None => true,
-            Some(_) => active == 1,
-        };
-        if inline {
-            for phase in 0..phases {
-                f(0, phase);
+        let shared = match &self.shared {
+            Some(s) if os_count > 0 => s,
+            _ => {
+                for phase in 0..phases {
+                    f(0, phase);
+                }
+                return;
             }
-            return;
-        }
-        let shared = self.shared.as_ref().expect("checked above");
-        // a panicked dispatch poisons this mutex while unwinding through
-        // the guard; the () payload carries no invariants, so keep going
-        let _serialize = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
-        shared.barrier.set_participants(active);
-        {
-            let mut ctl = shared.ctl.lock().unwrap();
-            ctl.job = Some(erase_job(&f));
-            ctl.phases = phases;
-            ctl.active = active;
-            ctl.epoch = ctl.epoch.wrapping_add(1);
-            shared.work.notify_all();
+        };
+        assert!(
+            os_start + os_count <= shared.slots.len(),
+            "slice [{os_start}, {}) exceeds the pool's {} OS workers",
+            os_start + os_count,
+            shared.slots.len(),
+        );
+        let d = Arc::new(Dispatch {
+            job: erase_job(&f),
+            phases,
+            barrier: PhaseBarrier::new(os_count + 1),
+            panicked: AtomicBool::new(false),
+        });
+        shared.acquire(os_start, os_count);
+        for g in os_start..os_start + os_count {
+            let slot = &shared.slots[g];
+            let mut ctl = slot.ctl.lock().unwrap_or_else(|e| e.into_inner());
+            ctl.local = g - os_start + 1;
+            ctl.dispatch = Some(d.clone());
+            drop(ctl);
+            slot.work.notify_one();
         }
         let mut caller_panic: Option<Box<dyn std::any::Any + Send>> = None;
         for phase in 0..phases {
-            if caller_panic.is_none() && !shared.panicked.load(Ordering::Relaxed) {
+            if caller_panic.is_none() && !d.panicked.load(Ordering::Relaxed) {
                 if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(0, phase))) {
                     caller_panic = Some(p);
                 }
             }
-            shared.barrier.wait();
+            d.barrier.wait();
         }
-        // every worker is past its last use of `f` once the final barrier
-        // released, so returning (and dropping f) is safe
+        // every engaged worker is past its last call into `f` once the
+        // final barrier released, so returning (and dropping f) is safe;
+        // the Arc keeps the barrier itself alive for late leavers
         if let Some(p) = caller_panic {
-            shared.panicked.store(false, Ordering::SeqCst);
             resume_unwind(p);
         }
-        if shared.panicked.swap(false, Ordering::SeqCst) {
+        if d.panicked.load(Ordering::SeqCst) {
             panic!("pool worker panicked");
         }
     }
@@ -382,8 +446,10 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         if let Some(shared) = &self.shared {
-            shared.ctl.lock().unwrap_or_else(|e| e.into_inner()).shutdown = true;
-            shared.work.notify_all();
+            for slot in &shared.slots {
+                slot.ctl.lock().unwrap_or_else(|e| e.into_inner()).shutdown = true;
+                slot.work.notify_one();
+            }
         }
         for h in self.handles.drain(..) {
             let _ = h.join();
@@ -391,41 +457,112 @@ impl Drop for WorkerPool {
     }
 }
 
-fn worker_main(shared: Arc<Shared>, w: usize, pin: Option<usize>) {
+fn worker_main(shared: Arc<Shared>, g: usize, pin: Option<usize>) {
     if let Some(core) = pin {
         pin_current_thread(core);
     }
-    let mut seen = 0u64;
+    let slot = &shared.slots[g];
     loop {
-        let (job, phases, active) = {
-            let mut ctl = shared.ctl.lock().unwrap();
+        let (d, local) = {
+            let mut ctl = slot.ctl.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if ctl.shutdown {
                     return;
                 }
-                if ctl.epoch != seen {
-                    seen = ctl.epoch;
-                    break (ctl.job.expect("dispatch published a job"), ctl.phases, ctl.active);
+                if let Some(d) = ctl.dispatch.take() {
+                    break (d, ctl.local);
                 }
-                ctl = shared.work.wait(ctl).unwrap();
+                ctl = slot.work.wait(ctl).unwrap_or_else(|e| e.into_inner());
             }
         };
-        if w >= active {
-            // not part of this dispatch: the epoch is acknowledged, the
-            // job and barrier stay untouched
-            continue;
-        }
-        // SAFETY: see Job — the dispatcher blocks in run_phased until the
-        // final barrier, keeping the closure alive for every use here.
-        let f = unsafe { &*job.0 };
-        for phase in 0..phases {
-            if !shared.panicked.load(Ordering::Relaxed)
-                && catch_unwind(AssertUnwindSafe(|| f(w, phase))).is_err()
-            {
-                shared.panicked.store(true, Ordering::SeqCst);
+        for phase in 0..d.phases {
+            if !d.panicked.load(Ordering::Relaxed) {
+                // SAFETY: see Job — the dispatcher blocks in
+                // run_phased_slice until the final barrier, which this
+                // worker only reaches after its last call into the job.
+                let f = unsafe { &*d.job.0 };
+                if catch_unwind(AssertUnwindSafe(|| f(local, phase))).is_err() {
+                    d.panicked.store(true, Ordering::SeqCst);
+                }
             }
-            shared.barrier.wait();
+            d.barrier.wait();
         }
+        drop(d);
+        // only after dropping the dispatch: a freed slot may be re-claimed
+        // and re-published immediately
+        shared.free(g);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// slices: a sub-pool view for co-scheduled callers
+// ---------------------------------------------------------------------------
+
+/// A contiguous slice of one [`WorkerPool`]'s OS workers, plus the
+/// dispatching caller — a smaller pool carved out of a bigger one. The
+/// serving layer hands each concurrent job a disjoint slice: their
+/// dispatches touch disjoint ledger slots, so they proceed fully in
+/// parallel, while two owners of *overlapping* slices are safe (the
+/// ledger serializes them). Cloning is cheap (an `Arc` bump).
+#[derive(Clone)]
+pub struct PoolSlice {
+    pool: Arc<WorkerPool>,
+    os_start: usize,
+    os_count: usize,
+}
+
+impl PoolSlice {
+    /// The whole pool as one slice (lane count = `pool.threads()`).
+    pub fn full(pool: Arc<WorkerPool>) -> PoolSlice {
+        let os_count = pool.threads() - 1;
+        PoolSlice { pool, os_start: 0, os_count }
+    }
+
+    /// A slice of `lanes` total workers (the caller plus `lanes - 1` OS
+    /// workers starting at OS-worker index `os_start`). Panics if the
+    /// range falls outside the pool.
+    pub fn range(pool: Arc<WorkerPool>, os_start: usize, lanes: usize) -> PoolSlice {
+        let os_count = lanes.max(1) - 1;
+        assert!(
+            os_start + os_count <= pool.threads() - 1,
+            "slice [{os_start}, {}) exceeds the pool's {} OS workers",
+            os_start + os_count,
+            pool.threads() - 1,
+        );
+        PoolSlice { pool, os_start, os_count }
+    }
+
+    /// Total lanes of this slice (caller included) — the slice-local
+    /// analogue of [`WorkerPool::threads`].
+    pub fn threads(&self) -> usize {
+        self.os_count + 1
+    }
+
+    /// Generation id of the underlying pool.
+    pub fn generation(&self) -> u64 {
+        self.pool.generation()
+    }
+
+    /// The pool this slice draws workers from.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
+    /// Slice-scoped [`WorkerPool::run`].
+    pub fn run(&self, f: impl Fn(usize) + Sync) {
+        self.run_phased(1, |w, _| f(w));
+    }
+
+    /// Slice-scoped [`WorkerPool::run_phased`].
+    pub fn run_phased(&self, phases: usize, f: impl Fn(usize, usize) + Sync) {
+        self.run_phased_limit(self.threads(), phases, f);
+    }
+
+    /// Slice-scoped [`WorkerPool::run_phased_limit`]: lanes are always
+    /// `0..limit` with 0 the caller, whatever `os_start` is.
+    pub fn run_phased_limit(&self, limit: usize, phases: usize, f: impl Fn(usize, usize) + Sync) {
+        let active = limit.clamp(1, self.threads());
+        self.pool.run_phased_slice(self.os_start, active - 1, phases, f);
     }
 }
 
@@ -673,6 +810,102 @@ mod tests {
             count.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(count.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn slice_lanes_are_dense_and_local() {
+        // a slice in the middle of the pool still sees lanes 0..threads
+        let pool = Arc::new(WorkerPool::new(5, None));
+        let slice = PoolSlice::range(pool.clone(), 2, 3);
+        assert_eq!(slice.threads(), 3);
+        assert_eq!(slice.generation(), pool.generation());
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        slice.run(|w| {
+            assert!(w < 3, "slice lanes must be slice-local");
+            hits[w].fetch_add(1, Ordering::SeqCst);
+        });
+        for h in &hits[..3] {
+            assert_eq!(h.load(Ordering::SeqCst), 1);
+        }
+        // the full-slice view behaves like the pool itself
+        let full = PoolSlice::full(pool);
+        assert_eq!(full.threads(), 5);
+        let count = AtomicUsize::new(0);
+        full.run_phased(2, |_, _| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn disjoint_slices_dispatch_concurrently() {
+        // slice A's job spins until slice B's job has run: this deadlocks
+        // unless dispatches on disjoint slices genuinely overlap
+        let pool = Arc::new(WorkerPool::new(5, None));
+        let a = PoolSlice::range(pool.clone(), 0, 2);
+        let b = PoolSlice::range(pool.clone(), 2, 2);
+        let b_ran = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|s| {
+            let flag = b_ran.clone();
+            s.spawn(move || {
+                a.run(|_| {
+                    while !flag.load(Ordering::SeqCst) {
+                        std::thread::yield_now();
+                    }
+                });
+            });
+            let flag = b_ran.clone();
+            s.spawn(move || {
+                b.run(|_| {}); // rendezvous completes while A is parked
+                flag.store(true, Ordering::SeqCst);
+            });
+        });
+        assert!(b_ran.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn overlapping_slices_serialize_on_the_ledger() {
+        let pool = Arc::new(WorkerPool::new(3, None));
+        let a = PoolSlice::range(pool.clone(), 0, 2);
+        let b = PoolSlice::range(pool.clone(), 1, 2);
+        let count = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for slice in [a, b] {
+                let count = count.clone();
+                s.spawn(move || {
+                    for _ in 0..100 {
+                        slice.run(|_| {
+                            count.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 2 * 100 * 2);
+    }
+
+    #[test]
+    fn slice_panic_stays_on_its_slice() {
+        let pool = Arc::new(WorkerPool::new(5, None));
+        let a = PoolSlice::range(pool.clone(), 0, 2);
+        let b = PoolSlice::range(pool.clone(), 2, 3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            a.run(|w| {
+                if w == 1 {
+                    panic!("slice boom");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // the sibling slice and the panicked slice both stay usable
+        let count = AtomicUsize::new(0);
+        b.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        a.run(|_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 5);
     }
 
     #[test]

@@ -1,0 +1,108 @@
+//! Bounded report history — a fixed-capacity ring over `VecDeque`.
+//!
+//! Long serving runs accumulate per-rebalance and per-job reports
+//! indefinitely; [`History`] keeps the most recent `cap` of them and
+//! counts what it evicted, so memory stays bounded while the totals a
+//! summary needs (how much history scrolled away) remain honest.
+
+use std::collections::VecDeque;
+
+/// The most recent `cap` pushed values, oldest first.
+#[derive(Debug, Clone)]
+pub struct History<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    evicted: usize,
+}
+
+impl<T> History<T> {
+    /// An empty history keeping at most `cap` entries (floor 1).
+    pub fn new(cap: usize) -> History<T> {
+        let cap = cap.max(1);
+        History { buf: VecDeque::with_capacity(cap.min(64)), cap, evicted: 0 }
+    }
+
+    /// Append, evicting the oldest entry once full.
+    pub fn push(&mut self, value: T) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.evicted += 1;
+        }
+        self.buf.push_back(value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Maximum entries retained.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Entries dropped off the front so far (total pushes = `len +
+    /// evicted`).
+    pub fn evicted(&self) -> usize {
+        self.evicted
+    }
+
+    pub fn last(&self) -> Option<&T> {
+        self.buf.back()
+    }
+
+    /// Oldest-first iteration over the retained entries.
+    pub fn iter(&self) -> std::collections::vec_deque::Iter<'_, T> {
+        self.buf.iter()
+    }
+}
+
+impl<'a, T> IntoIterator for &'a History<T> {
+    type Item = &'a T;
+    type IntoIter = std::collections::vec_deque::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.buf.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_the_most_recent_cap_entries() {
+        let mut h = History::new(3);
+        for i in 0..7 {
+            h.push(i);
+        }
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.evicted(), 4);
+        assert_eq!(h.iter().copied().collect::<Vec<_>>(), vec![4, 5, 6]);
+        assert_eq!(h.last(), Some(&6));
+    }
+
+    #[test]
+    fn under_capacity_is_lossless() {
+        let mut h = History::new(8);
+        h.push("a");
+        h.push("b");
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.evicted(), 0);
+        assert!(!h.is_empty());
+        assert_eq!((&h).into_iter().count(), 2);
+    }
+
+    #[test]
+    fn zero_cap_is_clamped() {
+        let mut h = History::new(0);
+        h.push(1);
+        h.push(2);
+        assert_eq!(h.cap(), 1);
+        assert_eq!(h.last(), Some(&2));
+        assert_eq!(h.len(), 1);
+    }
+}
