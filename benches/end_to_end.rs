@@ -13,7 +13,7 @@ use repro::coordinator::experiments::{cross_check, paper_mesh};
 use repro::coordinator::node::WorkerBackend;
 use repro::coordinator::profile::{busy_imbalance, node_busy_imbalance};
 use repro::coordinator::rebalance::RebalanceTotals;
-use repro::coordinator::{HeteroRun, ProfileReport, TransportKind};
+use repro::coordinator::{FaultPlan, HeteroRun, KillMode, KillSpec, ProfileReport, TransportKind};
 use repro::mesh::{build_local_blocks, geometry::unit_cube_geometry};
 use repro::partition::{nested_partition, splice, DeviceKind};
 use repro::runtime::ArtifactManifest;
@@ -210,6 +210,33 @@ fn cluster_bench(b: &Bench, smoke: bool) {
     sink.push_scalar("cluster_rebalance_level2_elems", t.level2_migrated as f64, "elems");
     sink.push_scalar("cluster_rebalance_rebuilt_workers", t.rebuilt_workers as f64, "workers");
     sink.push_scalar("cluster_rebalance_wall_s", t.wall_s, "s");
+
+    // ---- fault tolerance: kill one node mid-run, recover, keep going ----
+    // detection + checkpoint rewind + resplice onto the survivor, priced
+    // as the recovery_wall_s / replayed_steps scalars
+    let ft_steps = if smoke { 6 } else { 8 };
+    let mut ft_spec = ClusterSpec::new(2, order);
+    ft_spec.mic_fraction = Some(0.25);
+    ft_spec.checkpoint_every = Some(2);
+    ft_spec.faults = FaultPlan {
+        seed: 7,
+        kills: vec![KillSpec { node: 1, step: 3, mode: KillMode::Crash }],
+        ..FaultPlan::default()
+    };
+    let mut ft_run = ClusterRun::launch(&mesh, &ft_spec, ic).unwrap();
+    ft_run.run(dt, ft_steps).unwrap();
+    assert!(ft_run.last_error().is_none(), "recovery must leave the run healthy");
+    let ft = RebalanceTotals::of(&ft_run.rebalance_history);
+    assert_eq!(ft.recoveries, 1, "the injected kill must trigger exactly one recovery");
+    println!(
+        "  fault tolerance: killed node 1 at step 3, recovered in {:.1} ms \
+         replaying {} step(s)",
+        ft.recovery_wall_s * 1e3,
+        ft.replayed_steps
+    );
+    sink.push_scalar("recovery_wall_s", ft.recovery_wall_s, "s");
+    sink.push_scalar("replayed_steps", ft.replayed_steps as f64, "steps");
+    drop(ft_run);
 
     // ---- live-vs-sim drift per kernel (two-level cross-check) -----------
     let ck = cross_check(

@@ -52,14 +52,15 @@
 //! both and merely swaps routing tables.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::anyhow;
 
-use super::rebalance::{plan_two_level, TwoLevelPlan};
+use super::fault::{kill_mode_of, ClusterError, FaultPlan, JoinSpec, KillMode};
+use super::rebalance::{plan_two_level, RebalanceCause, TwoLevelPlan};
 // historical home of the report types (they moved to the planner module)
 pub use super::rebalance::{NodeRebalance, RebalanceReport};
 use super::transport::{build_endpoints, CopyRoute, FabricCtl, FabricEndpoint, TransportKind};
@@ -67,7 +68,8 @@ use crate::costmodel::calib;
 use crate::mesh::{build_local_blocks, ExchangePlan, LocalBlock, Mesh};
 use crate::partition::nested::owner_migration;
 use crate::partition::{
-    nested_partition_fractions, solve_mic_fraction, splice, DeviceKind, Partition,
+    nested_partition_fractions, solve_mic_fraction, splice, splice_weighted_excluding,
+    DeviceKind, Partition,
 };
 #[cfg(feature = "pjrt")]
 use crate::runtime::PjrtRuntime;
@@ -241,6 +243,107 @@ impl WorkerBackendFactory for ThrottledWorker {
     }
 }
 
+/// Wraps another factory with an injected kill: after `kill_stage` LSRK
+/// stages the produced backends raise the [`KillMode`] sentinel on every
+/// call, and the worker loop turns that into the configured death (an
+/// announced crash, a silent thread exit, or a hang). The numerics up to
+/// the kill are exactly the inner backend's.
+pub struct FaultyWorker {
+    pub inner: Arc<dyn WorkerBackendFactory>,
+    pub kill_stage: usize,
+    pub mode: KillMode,
+}
+
+struct FaultyBackend {
+    inner: Box<dyn StageBackend>,
+    /// Boundary stages executed so far (one per stage in the worker loop:
+    /// only `stage`/`stage_boundary` tick, and the delegated inner default
+    /// path never re-enters this wrapper).
+    done: usize,
+    kill_stage: usize,
+    mode: KillMode,
+}
+
+impl FaultyBackend {
+    fn tick(&mut self) -> Result<()> {
+        if self.done >= self.kill_stage {
+            return Err(anyhow!("{}", self.mode.sentinel()));
+        }
+        self.done += 1;
+        Ok(())
+    }
+}
+
+impl StageBackend for FaultyBackend {
+    fn stage(&mut self, st: &mut BlockState, dt: f32, a: f32, b: f32) -> Result<KernelTimes> {
+        self.tick()?;
+        self.inner.stage(st, dt, a, b)
+    }
+
+    fn stage_boundary(
+        &mut self,
+        st: &mut BlockState,
+        dt: f32,
+        a: f32,
+        b: f32,
+    ) -> Result<KernelTimes> {
+        self.tick()?;
+        self.inner.stage_boundary(st, dt, a, b)
+    }
+
+    fn stage_interior(
+        &mut self,
+        v: &mut crate::solver::state::InteriorView<'_>,
+        dt: f32,
+        a: f32,
+        b: f32,
+    ) -> Result<KernelTimes> {
+        self.inner.stage_interior(v, dt, a, b)
+    }
+
+    fn supports_overlap(&self) -> bool {
+        self.inner.supports_overlap()
+    }
+
+    fn pool_generation(&self) -> Option<u64> {
+        self.inner.pool_generation()
+    }
+
+    fn classify_computes(&self) -> u64 {
+        self.inner.classify_computes()
+    }
+
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+}
+
+impl WorkerBackendFactory for FaultyWorker {
+    fn build(&self, order: usize, blocks: &[BlockState]) -> Result<Vec<Box<dyn StageBackend>>> {
+        Ok(self
+            .inner
+            .build(order, blocks)?
+            .into_iter()
+            .map(|inner| {
+                Box::new(FaultyBackend {
+                    inner,
+                    done: 0,
+                    kill_stage: self.kill_stage,
+                    mode: self.mode,
+                }) as Box<dyn StageBackend>
+            })
+            .collect())
+    }
+
+    fn label(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn thread_budget(&self) -> usize {
+        self.inner.thread_budget()
+    }
+}
+
 /// AOT artifacts through PJRT (needs the `pjrt` cargo feature).
 pub struct PjrtWorker {
     pub artifact_dir: std::path::PathBuf,
@@ -290,6 +393,11 @@ pub enum WorkerBackend {
     /// injector for rebalancing tests and benches (identical numerics,
     /// inflated measured times).
     Throttled { spin_us_per_elem: u64 },
+    /// Any backend wrapped with an injected kill at the start of step
+    /// `kill_step` ([`FaultyWorker`]); how the death manifests is the
+    /// [`KillMode`]. [`ClusterRun::launch`] wraps a node's workers in
+    /// this when the [`ClusterSpec::faults`] plan schedules its death.
+    Faulty { inner: Box<WorkerBackend>, kill_step: usize, mode: KillMode },
 }
 
 impl WorkerBackend {
@@ -316,6 +424,11 @@ impl WorkerBackend {
             WorkerBackend::Throttled { spin_us_per_elem } => {
                 Arc::new(ThrottledWorker { spin_us_per_elem: *spin_us_per_elem })
             }
+            WorkerBackend::Faulty { inner, kill_step, mode } => Arc::new(FaultyWorker {
+                inner: inner.factory(concurrent_parallel, pin_base),
+                kill_stage: kill_step * N_STAGES,
+                mode: *mode,
+            }),
         }
     }
 
@@ -325,6 +438,7 @@ impl WorkerBackend {
             WorkerBackend::RustParallel { .. } => "rust-parallel",
             WorkerBackend::Pjrt { .. } => "pjrt",
             WorkerBackend::Throttled { .. } => "throttled-ref",
+            WorkerBackend::Faulty { .. } => "faulty",
         }
     }
 }
@@ -551,10 +665,11 @@ fn worker_main(init: WorkerInit) {
         match cmd {
             Cmd::Stage { dt, a, b, route } => {
                 let mut fail: Option<String> = None;
-                // set when Shutdown arrives mid-exchange (a peer died and
-                // its deliveries will never come): finish the stage
-                // bookkeeping, then exit instead of blocking forever
-                let mut terminate = false;
+                // set when this worker's own fabric lane died: skip the
+                // exchange (its deliveries will never come) but keep
+                // serving commands — the coordinator decides whether the
+                // run is recoverable
+                let mut aborted = false;
                 // boundary phase (full stage for non-split backends): after
                 // this every outbound trace of the exchange plan is final
                 let t0 = Instant::now();
@@ -565,6 +680,27 @@ fn worker_main(init: WorkerInit) {
                             fail = Some(format!("boundary stage: {e}"));
                             break;
                         }
+                    }
+                }
+                // injected kills surface here as sentinel errors from the
+                // FaultyBackend wrapper; how the death manifests depends on
+                // the mode. Crash falls through: empty groups keep the
+                // peers' lockstep intact and the sentinel reply announces
+                // the death. Silent vanishes without a word — detection is
+                // the coordinator noticing the hung-up reply channel. Stall
+                // keeps the thread alive but mute — only the stage
+                // deadline catches it (it still honors Shutdown so Drop
+                // can join the thread).
+                if let Some(mode) = fail.as_deref().and_then(kill_mode_of) {
+                    match mode {
+                        KillMode::Silent => return,
+                        KillMode::Stall => loop {
+                            match rx.recv() {
+                                Ok(Cmd::Shutdown) | Err(_) => return,
+                                Ok(_) => {}
+                            }
+                        },
+                        KillMode::Crash => {}
                     }
                 }
                 if route {
@@ -578,13 +714,14 @@ fn worker_main(init: WorkerInit) {
                             Ok(bytes) => times.fabric_sent_bytes += bytes as u64,
                             Err(e) => {
                                 // a dead lane starves every peer waiting on
-                                // our group — poison so their waits error
-                                // out and the lockstep still completes
-                                ctl.poison();
+                                // our group — halt the fabric so their
+                                // waits error out; the coordinator clears
+                                // the halt if the run can be recovered
+                                ctl.halt();
                                 if fail.is_none() {
                                     fail = Some(format!("shipping to worker {}: {e}", grp.dst));
                                 }
-                                terminate = true;
+                                aborted = true;
                             }
                         }
                     }
@@ -614,7 +751,7 @@ fn worker_main(init: WorkerInit) {
                 }
                 times.interior_s += t1.elapsed().as_secs_f64();
                 let mut exchange_s = 0.0;
-                if route && !terminate {
+                if route && !aborted {
                     // drain one delivery group per sending peer; a local
                     // compute failure still drains (installs are harmless,
                     // the cluster is poisoned after this stage) so peers'
@@ -628,14 +765,14 @@ fn worker_main(init: WorkerInit) {
                                 times.fabric_recv_bytes += bytes as u64;
                             }
                             Err(e) => {
-                                // poisoned fabric or dead lane: the run is
-                                // over — unblock peers and exit after the
-                                // stage bookkeeping
-                                ctl.poison();
+                                // stopped fabric or dead lane: this stage
+                                // is lost — halt so peers unblock, report,
+                                // and let the coordinator sort out whether
+                                // the cluster can recover
+                                ctl.halt();
                                 if fail.is_none() {
                                     fail = Some(format!("exchange: {e}"));
                                 }
-                                terminate = true;
                                 break;
                             }
                         }
@@ -649,9 +786,6 @@ fn worker_main(init: WorkerInit) {
                     Some(m) => Resp::Err(m),
                 };
                 tx.send(resp).ok();
-                if terminate {
-                    break;
-                }
             }
             Cmd::Energy => {
                 let e: f64 = blocks.iter().map(|b| b.energy(&basis)).sum();
@@ -863,6 +997,9 @@ pub struct WorkerSummary {
     pub device: DeviceKind,
     pub k_elems: usize,
     pub label: &'static str,
+    /// False once the worker's node was declared failed (injected or
+    /// detected); dead workers own no elements and receive no commands.
+    pub alive: bool,
 }
 
 /// High-level cluster configuration for [`ClusterRun::launch`].
@@ -900,6 +1037,22 @@ pub struct ClusterSpec {
     /// on the inter-node lane. Routing, lane classification and the §5.5
     /// refusal are identical on all of them.
     pub transport: TransportKind,
+    /// Seeded fault-injection plan: scheduled node kills, elastic joins
+    /// and fabric sabotage ([`FaultPlan`]). Default = no faults.
+    pub faults: FaultPlan,
+    /// Extra nodes launched idle (zero elements, inactive) so an elastic
+    /// join has somewhere to land. Spares run real worker threads on the
+    /// fabric but own nothing until [`ClusterRun::join_node`].
+    pub spare_nodes: usize,
+    /// Snapshot q every C steps so a node failure rewinds at most C-1
+    /// completed steps ([`ClusterRun::checkpoint_now`]). `None` = no
+    /// checkpoints — a failure is then unrecoverable.
+    pub checkpoint_every: Option<usize>,
+    /// Upper bound on one stage's wall time before the coordinator halts
+    /// the fabric and declares non-responding workers dead (the only way
+    /// to catch a worker that stalls without crashing). `None` defaults
+    /// to 10s when `faults` is armed, unbounded otherwise.
+    pub stage_deadline: Option<Duration>,
 }
 
 impl ClusterSpec {
@@ -916,6 +1069,10 @@ impl ClusterSpec {
             node_backends: None,
             pin_cores: false,
             transport: TransportKind::InProc,
+            faults: FaultPlan::default(),
+            spare_nodes: 0,
+            checkpoint_every: None,
+            stage_deadline: None,
         }
     }
 }
@@ -930,6 +1087,10 @@ struct WorkerHandle {
     device: DeviceKind,
     k_elems: usize,
     label: &'static str,
+    /// Cleared when the worker's node is declared failed: dead workers
+    /// receive no further commands (their thread may still be parked in
+    /// the command loop until shutdown, or already gone).
+    alive: bool,
 }
 
 /// Everything the mesh-aware launch keeps for re-splitting + migration.
@@ -979,6 +1140,35 @@ pub struct ClusterRun {
     ctl: FabricCtl,
     transport: TransportKind,
     mesh_ctx: Option<MeshCtx>,
+    /// Which nodes currently own part of the mesh: spares start false,
+    /// a detected failure flips its node false, an elastic join flips a
+    /// spare true. Indexed by node id.
+    node_active: Vec<bool>,
+    /// Snapshot q every C steps ([`ClusterSpec::checkpoint_every`]).
+    checkpoint_every: Option<usize>,
+    /// Most recent q snapshot (recovery rewinds to it).
+    checkpoint: Option<Checkpoint>,
+    /// The typed failure a stage surfaced; cleared by a successful
+    /// [`ClusterRun::recover`].
+    last_error: Option<ClusterError>,
+    /// See [`ClusterSpec::stage_deadline`].
+    stage_deadline: Option<Duration>,
+    /// Scheduled elastic joins not yet executed, from the fault plan.
+    pending_joins: Vec<JoinSpec>,
+}
+
+/// A q-only snapshot at a step boundary. Traces and halos are pure
+/// functions of q (and res enters a step scaled by `LSRK_A[0] == 0`), so
+/// restoring q and rebuilding traces reproduces the checkpointed step
+/// boundary bit-for-bit. q is keyed by global element id, which makes the
+/// snapshot membership-agnostic: it restores onto any node partition that
+/// covers the mesh, not just the one it was taken under.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// `steps_taken` at snapshot time.
+    pub step: usize,
+    /// Per-global-element q block, Morton order.
+    q: Vec<Vec<f32>>,
 }
 
 impl ClusterRun {
@@ -992,7 +1182,28 @@ impl ClusterRun {
     ) -> Result<ClusterRun> {
         let nodes = spec.nodes.max(1);
         anyhow::ensure!(mesh.len() >= nodes, "mesh has fewer elements than nodes");
-        let node_part = splice(mesh, nodes);
+        // spares are full fabric members with zero elements until a join
+        let total = nodes + spec.spare_nodes;
+        for k in &spec.faults.kills {
+            anyhow::ensure!(
+                k.node < nodes,
+                "kill plan targets node {}, but only nodes 0..{nodes} start active",
+                k.node
+            );
+        }
+        for j in &spec.faults.joins {
+            match j.node {
+                Some(n) => anyhow::ensure!(
+                    n >= nodes && n < total,
+                    "join plan targets node {n}; spare nodes are {nodes}..{total}"
+                ),
+                None => anyhow::ensure!(
+                    spec.spare_nodes > 0,
+                    "join plan needs at least one spare node (ClusterSpec::spare_nodes)"
+                ),
+            }
+        }
+        let node_part = Partition { assignment: splice(mesh, nodes).assignment, nparts: total };
         let k_node = (mesh.len() / nodes).max(1);
         let frac = spec.mic_fraction.unwrap_or_else(|| {
             let sol = solve_mic_fraction(&calib::stampede_node(), spec.order, k_node);
@@ -1002,7 +1213,7 @@ impl ClusterRun {
             (0.0..=1.0).contains(&frac),
             "MIC fraction {frac} outside [0, 1]"
         );
-        let fractions = vec![frac; nodes];
+        let fractions = vec![frac; total];
         let np = nested_partition_fractions(mesh, &node_part, &fractions);
         let elem_owners = np.owners();
         let (lblocks, plan) = build_local_blocks(mesh, &elem_owners, np.n_owners());
@@ -1016,17 +1227,17 @@ impl ClusterRun {
         }
         if let Some(nb) = &spec.node_backends {
             anyhow::ensure!(
-                nb.len() == nodes,
-                "node_backends has {} entries for {nodes} nodes",
-                nb.len()
+                nb.len() == nodes || nb.len() == total,
+                "node_backends has {} entries for {nodes} nodes (+{} spares)",
+                nb.len(),
+                spec.spare_nodes
             );
         }
-        let mut specs: Vec<WorkerSpec> = (0..2 * nodes)
+        let mut specs: Vec<WorkerSpec> = (0..2 * total)
             .map(|w| {
                 let device = if w % 2 == 0 { DeviceKind::Cpu } else { DeviceKind::Mic };
-                let backend = match &spec.node_backends {
-                    Some(nb) => {
-                        let pair = &nb[w / 2];
+                let backend = match spec.node_backends.as_ref().and_then(|nb| nb.get(w / 2)) {
+                    Some(pair) => {
                         if device == DeviceKind::Cpu { pair.0.clone() } else { pair.1.clone() }
                     }
                     None => {
@@ -1053,8 +1264,17 @@ impl ClusterRun {
         if spec.pin_cores {
             assign_pin_bases(&mut specs);
         }
-        let worker_of_owner: Vec<usize> = (0..2 * nodes).collect();
-        let mut run = ClusterRun::launch_parts_with(
+        // wrap scheduled-death nodes' backends after pinning so the pin
+        // pass still sees the parallel backends underneath
+        for k in &spec.faults.kills {
+            for w in [2 * k.node, 2 * k.node + 1] {
+                let inner = Box::new(specs[w].backend.clone());
+                specs[w].backend =
+                    WorkerBackend::Faulty { inner, kill_step: k.step, mode: k.mode };
+            }
+        }
+        let worker_of_owner: Vec<usize> = (0..2 * total).collect();
+        let mut run = ClusterRun::launch_parts_inner(
             &lblocks,
             states,
             plan,
@@ -1062,10 +1282,17 @@ impl ClusterRun {
             &specs,
             spec.order,
             spec.transport,
+            spec.faults.is_armed().then_some(&spec.faults),
         )?;
         run.exchange_every_stage = spec.exchange_every_stage;
         run.rebalance_every = spec.rebalance_every;
         run.level1_rebalance = spec.level1_rebalance;
+        run.node_active = (0..total).map(|nd| nd < nodes).collect();
+        run.checkpoint_every = spec.checkpoint_every;
+        run.pending_joins = spec.faults.joins.clone();
+        run.stage_deadline = spec
+            .stage_deadline
+            .or_else(|| spec.faults.is_armed().then(|| Duration::from_secs(10)));
         run.mesh_ctx = Some(MeshCtx { mesh: mesh.clone(), node_part, fractions, lblocks, elem_owners });
         Ok(run)
     }
@@ -1097,8 +1324,33 @@ impl ClusterRun {
     /// [`ClusterRun::launch_parts`] with an explicit fabric transport
     /// ([`TransportKind`]); `launch_parts` keeps the historical in-process
     /// default.
-    #[allow(clippy::too_many_arguments)]
     pub fn launch_parts_with(
+        lblocks: &[LocalBlock],
+        states: Vec<BlockState>,
+        plan: ExchangePlan,
+        worker_of_owner: &[usize],
+        specs: &[WorkerSpec],
+        order: usize,
+        transport: TransportKind,
+    ) -> Result<ClusterRun> {
+        ClusterRun::launch_parts_inner(
+            lblocks,
+            states,
+            plan,
+            worker_of_owner,
+            specs,
+            order,
+            transport,
+            None,
+        )
+    }
+
+    /// The real launcher: `faults`, when armed, hands each worker's fabric
+    /// endpoint its seeded message-sabotage injector. Kill scheduling is
+    /// *not* done here — [`ClusterRun::launch`] wraps doomed backends in
+    /// [`WorkerBackend::Faulty`] before calling in.
+    #[allow(clippy::too_many_arguments)]
+    fn launch_parts_inner(
         lblocks: &[LocalBlock],
         mut states: Vec<BlockState>,
         plan: ExchangePlan,
@@ -1106,6 +1358,7 @@ impl ClusterRun {
         specs: &[WorkerSpec],
         order: usize,
         transport: TransportKind,
+        faults: Option<&FaultPlan>,
     ) -> Result<ClusterRun> {
         assert_eq!(lblocks.len(), states.len());
         assert_eq!(worker_of_owner.len(), states.len());
@@ -1150,10 +1403,14 @@ impl ClusterRun {
         let mut workers = Vec::with_capacity(nw);
         for (w, spec) in specs.iter().enumerate() {
             let (rtx, rrx) = channel::<Resp>();
+            let mut endpoint = endpoints.next().expect("one endpoint per worker");
+            if let Some(plan) = faults {
+                endpoint.set_injector(plan.injector_for(w));
+            }
             let init = WorkerInit {
                 rx: cmd_rxs[w].take().expect("receiver taken once"),
                 tx: rtx,
-                endpoint: Box::new(endpoints.next().expect("one endpoint per worker")),
+                endpoint: Box::new(endpoint),
                 ctl: ctl.clone(),
                 blocks: std::mem::take(&mut per_worker_blocks[w]),
                 outbound: std::mem::take(&mut outbound[w]),
@@ -1176,6 +1433,7 @@ impl ClusterRun {
                 device: spec.device,
                 k_elems,
                 label: spec.backend.label(),
+                alive: true,
             });
         }
         let run = ClusterRun {
@@ -1197,6 +1455,15 @@ impl ClusterRun {
             ctl,
             transport,
             mesh_ctx: None,
+            node_active: {
+                let n_nodes = specs.iter().map(|s| s.node).max().map_or(0, |m| m + 1);
+                vec![true; n_nodes]
+            },
+            checkpoint_every: None,
+            checkpoint: None,
+            last_error: None,
+            stage_deadline: None,
+            pending_joins: Vec::new(),
         };
         // readiness handshake: backend construction can fail (e.g. PJRT
         // without the feature) — surface it now, not as a first-stage hang
@@ -1217,21 +1484,100 @@ impl ClusterRun {
         self.ctl.poison();
     }
 
+    /// Dispatch one stage to every live worker and collect the replies by
+    /// *polling* — a dead or mute worker can therefore never hang the
+    /// coordinator. The poll sleeps inside `recv_timeout`, so the wall
+    /// cost over a blocking receive is at most ~1ms per live worker per
+    /// sweep. Deaths are classified here: injected-kill sentinels and
+    /// hung-up reply channels mark the whole node dead (nodes are the
+    /// failure domain — the partner worker is marked dead too, its thread
+    /// left parked until shutdown); fabric errors on *other* workers
+    /// while a death is in flight are collateral, not failures of their
+    /// own. A genuine failure with no death in flight still poisons the
+    /// run exactly as before.
     fn stage_all(&mut self, dt: f32, a: f32, b: f32, route: bool) -> Result<()> {
+        const POLL: Duration = Duration::from_millis(1);
+        /// After the fabric halts, survivors unblock within one fabric
+        /// tick — anything still silent this much later is stalled.
+        const STAGE_GRACE: Duration = Duration::from_secs(5);
         let t0 = Instant::now();
-        for w in &self.workers {
-            w.tx.send(Cmd::Stage { dt, a, b, route }).map_err(|_| anyhow!("worker died"))?;
+        let mut newly_dead: Vec<usize> = Vec::new();
+        let mut death_detail = String::new();
+        for (w, wk) in self.workers.iter().enumerate() {
+            if !wk.alive {
+                continue;
+            }
+            if wk.tx.send(Cmd::Stage { dt, a, b, route }).is_err() {
+                newly_dead.push(w);
+                death_detail = format!("worker {w} hung up before the stage");
+            }
         }
-        let mut failure: Option<String> = None;
+        let mut pending: Vec<usize> = (0..self.workers.len())
+            .filter(|w| self.workers[*w].alive && !newly_dead.contains(w))
+            .collect();
+        let mut halt_time: Option<Instant> = None;
+        if !newly_dead.is_empty() {
+            self.ctl.halt();
+            halt_time = Some(Instant::now());
+        }
+        let mut survivor_err: Option<String> = None;
+        let mut collateral: Option<String> = None;
         let mut ex_max = 0.0f64;
-        for w in &self.workers {
-            match w.rx.recv() {
-                Ok(Resp::StageDone { exchange_s }) => ex_max = ex_max.max(exchange_s),
-                Ok(Resp::Err(m)) => failure = Some(m),
-                _ => {
-                    self.poison();
-                    return Err(anyhow!("worker channel failed during stage"));
+        while !pending.is_empty() {
+            let mut i = 0;
+            while i < pending.len() {
+                let w = pending[i];
+                match self.workers[w].rx.recv_timeout(POLL) {
+                    Ok(Resp::StageDone { exchange_s }) => {
+                        ex_max = ex_max.max(exchange_s);
+                        pending.swap_remove(i);
+                    }
+                    Ok(Resp::Err(m)) => {
+                        if kill_mode_of(&m).is_some() {
+                            // an injected death announcing itself
+                            newly_dead.push(w);
+                            death_detail = m;
+                            self.ctl.halt();
+                            halt_time.get_or_insert_with(Instant::now);
+                        } else if halt_time.is_some() {
+                            // a survivor tripping over the halted fabric
+                            collateral.get_or_insert(m);
+                        } else {
+                            survivor_err.get_or_insert(m);
+                        }
+                        pending.swap_remove(i);
+                    }
+                    Ok(_) => {
+                        survivor_err.get_or_insert_with(|| {
+                            format!("worker {w} sent an unexpected reply during the stage")
+                        });
+                        pending.swap_remove(i);
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        // silent death: the thread is gone without a word
+                        newly_dead.push(w);
+                        death_detail = format!("worker {w} vanished mid-stage");
+                        self.ctl.halt();
+                        halt_time.get_or_insert_with(Instant::now);
+                        pending.swap_remove(i);
+                    }
+                    Err(RecvTimeoutError::Timeout) => i += 1,
                 }
+            }
+            // the stage deadline catches workers that neither reply nor
+            // hang up (stalled); the grace window after a halt catches
+            // workers that ignore even the halted fabric
+            if let Some(t) = halt_time {
+                if t.elapsed() > STAGE_GRACE && !pending.is_empty() {
+                    for &w in &pending {
+                        newly_dead.push(w);
+                        death_detail = format!("worker {w}: no reply within deadline (stalled)");
+                    }
+                    pending.clear();
+                }
+            } else if self.stage_deadline.is_some_and(|dl| t0.elapsed() > dl) {
+                self.ctl.halt();
+                halt_time = Some(Instant::now());
             }
         }
         let full = t0.elapsed().as_secs_f64();
@@ -1240,9 +1586,44 @@ impl ClusterRun {
         if route {
             self.routed_stages += 1;
         }
-        if let Some(m) = failure {
+        if !newly_dead.is_empty() {
+            // nodes are the failure domain: losing either worker severs
+            // the node's boundary/interior pairing, so both go
+            let mut nodes: Vec<usize> =
+                newly_dead.iter().map(|&w| self.workers[w].node).collect();
+            nodes.sort_unstable();
+            nodes.dedup();
+            for wk in self.workers.iter_mut() {
+                if nodes.contains(&wk.node) {
+                    wk.alive = false;
+                }
+            }
+            for &nd in &nodes {
+                if nd < self.node_active.len() {
+                    self.node_active[nd] = false;
+                }
+            }
+            let err =
+                ClusterError::NodeFailure { nodes, step: self.steps_taken, detail: death_detail };
+            let msg = err.to_string();
+            self.last_error = Some(err);
+            return Err(anyhow!("{msg}"));
+        }
+        if let Some(m) = survivor_err {
             self.poison();
+            self.last_error = Some(ClusterError::Poisoned { detail: m.clone() });
             return Err(anyhow!("stage failed: {m}"));
+        }
+        if halt_time.is_some() {
+            if let Some(m) = collateral {
+                // the deadline halted the fabric mid-exchange and broke
+                // the stage, but nobody actually died: unrecoverable
+                self.poison();
+                self.last_error = Some(ClusterError::Poisoned { detail: m.clone() });
+                return Err(anyhow!("stage deadline halted the fabric mid-stage: {m}"));
+            }
+            // spurious deadline — everyone finished anyway
+            self.ctl.clear_halt();
         }
         Ok(())
     }
@@ -1252,6 +1633,9 @@ impl ClusterRun {
         if self.poisoned {
             return Err(anyhow!("cluster poisoned by an earlier failure; relaunch"));
         }
+        if let Some(e) = &self.last_error {
+            return Err(anyhow!("cluster degraded ({e}); recover() or relaunch"));
+        }
         for s in 0..N_STAGES {
             let route = self.exchange_every_stage || s == N_STAGES - 1;
             self.stage_all(dt as f32, LSRK_A[s] as f32, LSRK_B[s] as f32, route)?;
@@ -1260,27 +1644,326 @@ impl ClusterRun {
         Ok(())
     }
 
-    /// Advance `steps` timesteps, rebalancing every `rebalance_every` steps
-    /// when configured (mesh-aware launches only).
+    /// Advance `steps` timesteps, rebalancing every `rebalance_every`
+    /// steps when configured, snapshotting every `checkpoint_every` steps,
+    /// executing scheduled elastic joins, and — when a node failure
+    /// surfaces and a checkpoint exists — recovering in place: the dead
+    /// node's elements are respliced across the survivors and the run
+    /// rewinds to the last snapshot (mesh-aware launches only).
     pub fn run(&mut self, dt: f64, steps: usize) -> Result<()> {
-        for _ in 0..steps {
-            self.step(dt)?;
-            if let Some(every) = self.rebalance_every {
-                if every > 0 && self.steps_taken % every == 0 && self.mesh_ctx.is_some() {
-                    self.rebalance()?;
+        let target = self.steps_taken + steps;
+        if self.checkpoint_every.is_some()
+            && self.checkpoint.is_none()
+            && self.mesh_ctx.is_some()
+        {
+            self.checkpoint_now()?;
+        }
+        while self.steps_taken < target {
+            self.process_due_joins()?;
+            match self.step(dt) {
+                Ok(()) => {
+                    if let Some(every) = self.checkpoint_every {
+                        if every > 0 && self.steps_taken % every == 0 && self.mesh_ctx.is_some() {
+                            self.checkpoint_now()?;
+                        }
+                    }
+                    if let Some(every) = self.rebalance_every {
+                        if every > 0 && self.steps_taken % every == 0 && self.mesh_ctx.is_some() {
+                            self.rebalance()?;
+                        }
+                    }
+                }
+                Err(e) => {
+                    if self.can_recover() {
+                        self.recover()?;
+                    } else {
+                        return Err(e);
+                    }
                 }
             }
         }
         Ok(())
     }
 
-    /// Total energy across all blocks.
+    /// Run any fault-plan joins whose scheduled step has arrived.
+    fn process_due_joins(&mut self) -> Result<()> {
+        while let Some(pos) =
+            self.pending_joins.iter().position(|j| j.step <= self.steps_taken)
+        {
+            let j = self.pending_joins.remove(pos);
+            self.join_node(j.node)?;
+        }
+        Ok(())
+    }
+
+    /// The typed failure the last stage surfaced, if any.
+    pub fn last_error(&self) -> Option<&ClusterError> {
+        self.last_error.as_ref()
+    }
+
+    /// Per-node liveness: spares start inactive, a detected failure flips
+    /// its node off, an elastic join flips a spare on.
+    pub fn node_active(&self) -> &[bool] {
+        &self.node_active
+    }
+
+    /// True when a recoverable node failure is pending *and* the run
+    /// holds everything [`ClusterRun::recover`] needs.
+    pub fn can_recover(&self) -> bool {
+        !self.poisoned
+            && self.last_error.as_ref().is_some_and(|e| e.recoverable())
+            && self.checkpoint.is_some()
+            && self.mesh_ctx.is_some()
+    }
+
+    /// Snapshot q at the current step boundary (mesh-aware launches
+    /// only). [`ClusterRun::run`] calls this every
+    /// [`ClusterSpec::checkpoint_every`] steps.
+    pub fn checkpoint_now(&mut self) -> Result<()> {
+        anyhow::ensure!(self.mesh_ctx.is_some(), "checkpoints need the mesh-aware launch");
+        anyhow::ensure!(
+            self.last_error.is_none() && !self.poisoned,
+            "refusing to checkpoint a degraded run"
+        );
+        let q = self.gather_elements()?;
+        self.checkpoint = Some(Checkpoint { step: self.steps_taken, q });
+        Ok(())
+    }
+
+    /// Recover from a detected node failure: resplice the dead node's
+    /// elements across the surviving nodes (weighted level-1 path,
+    /// excluding inactive parts), restore every live worker's state from
+    /// the last q snapshot, rewind `steps_taken` to it, and clear the
+    /// failure. The returned report carries
+    /// [`RebalanceReport::replayed_steps`] (completed steps the rewind
+    /// discards) and, as `wall_s`, the recovery stall — both also land in
+    /// [`ClusterRun::rebalance_history`] under
+    /// [`RebalanceCause::Recovery`].
+    pub fn recover(&mut self) -> Result<RebalanceReport> {
+        anyhow::ensure!(!self.poisoned, "cluster poisoned; relaunch");
+        match &self.last_error {
+            Some(e) if e.recoverable() => {}
+            Some(e) => return Err(anyhow!("failure is not recoverable: {e}")),
+            None => return Err(anyhow!("nothing to recover from")),
+        }
+        let ckpt = self
+            .checkpoint
+            .clone()
+            .ok_or_else(|| anyhow!("no checkpoint to recover from (set checkpoint_every)"))?;
+        let t0 = Instant::now();
+        let mut ctx = self
+            .mesh_ctx
+            .take()
+            .ok_or_else(|| anyhow!("recovery needs the mesh-aware ClusterRun::launch"))?;
+        let res = self.recover_inner(&mut ctx, &ckpt);
+        self.mesh_ctx = Some(ctx);
+        let mut report = res?;
+        report.wall_s = t0.elapsed().as_secs_f64();
+        self.rebalance_history.push(report.clone());
+        Ok(report)
+    }
+
+    fn recover_inner(&mut self, ctx: &mut MeshCtx, ckpt: &Checkpoint) -> Result<RebalanceReport> {
+        anyhow::ensure!(
+            self.worker_of_owner.iter().enumerate().all(|(o, &w)| o == w),
+            "recovery needs the standard one-owner-per-worker layout"
+        );
+        let total = ctx.node_part.nparts;
+        anyhow::ensure!(
+            self.node_active.iter().any(|&a| a),
+            "no live nodes left to recover onto"
+        );
+        let failed_step = self.steps_taken;
+        let old_counts = self.node_counts();
+        let old_sizes = ctx.node_part.sizes();
+        // survivors (and already-joined spares) inherit the dead node's
+        // elements: uniform weighted splice over the live parts only —
+        // the adaptive rebalancer re-tunes the weights from measurements
+        // once the run is healthy again
+        let node_part =
+            splice_weighted_excluding(&vec![1.0; ctx.mesh.len()], total, &self.node_active);
+        let np = nested_partition_fractions(&ctx.mesh, &node_part, &ctx.fractions);
+        let new_owners = np.owners();
+        let mig = owner_migration(&ctx.elem_owners, &new_owners);
+        let nw = self.workers.len();
+        let (new_lblocks, new_plan) = build_local_blocks(&ctx.mesh, &new_owners, nw);
+        let order = self.order;
+        let m = order + 1;
+        let esz = NFIELDS * m * m * m;
+        // the failure hit mid-step, so every live block is tainted:
+        // rebuild ALL workers' blocks from the snapshot. Dead and spare
+        // workers get padded empty blocks used only to index the central
+        // halo priming — they are never shipped anywhere.
+        let mut states: Vec<BlockState> = Vec::with_capacity(nw);
+        for (w, lb) in new_lblocks.iter().enumerate() {
+            if !self.workers[w].alive {
+                anyhow::ensure!(
+                    lb.global_ids.is_empty(),
+                    "recovery plan assigns elements to dead worker {w}"
+                );
+            }
+            let mut st =
+                BlockState::from_local_block(lb, order, lb.len().max(1), lb.halo_len.max(1));
+            for (li, &g) in lb.global_ids.iter().enumerate() {
+                let q = ckpt
+                    .q
+                    .get(g)
+                    .filter(|q| q.len() == esz)
+                    .ok_or_else(|| anyhow!("checkpoint is missing element {g}"))?;
+                st.q[li * esz..(li + 1) * esz].copy_from_slice(q);
+            }
+            // res is irrelevant at a step boundary (LSRK_A[0] == 0 wipes
+            // it before first use) and traces are pure functions of q, so
+            // this reproduces the checkpointed boundary bit-for-bit
+            st.refresh_traces();
+            states.push(st);
+        }
+        apply_exchange(&mut states, &new_plan);
+        let meta: Vec<(usize, DeviceKind)> =
+            self.workers.iter().map(|w| (w.node, w.device)).collect();
+        let fabric = fabric_stats(&new_plan, &self.owner_map, &meta)?;
+        let (mut outbound, mut self_copies, expected) =
+            route_tables(&new_plan, &self.owner_map, nw);
+        // nobody is blocked in the fabric any more — every live worker
+        // replied to the failed stage before we got here — so the halt
+        // can lift before the swap; Replace drains stale deliveries from
+        // the failed stage via clear_pending
+        self.ctl.clear_halt();
+        let mut states: Vec<Option<BlockState>> = states.into_iter().map(Some).collect();
+        let mut sent = vec![false; nw];
+        for (w, wk) in self.workers.iter().enumerate() {
+            if !wk.alive {
+                continue;
+            }
+            let msg = ReplaceMsg {
+                blocks: Some(vec![states[w].take().expect("state built for live worker")]),
+                outbound: std::mem::take(&mut outbound[w]),
+                self_copies: std::mem::take(&mut self_copies[w]),
+                expected_in: expected[w],
+            };
+            if wk.tx.send(Cmd::Replace(Box::new(msg))).is_err() {
+                self.poison();
+                return Err(anyhow!("worker {w} died during recovery"));
+            }
+            sent[w] = true;
+        }
+        for (w, wk) in self.workers.iter().enumerate() {
+            if !sent[w] {
+                continue;
+            }
+            match wk.rx.recv() {
+                Ok(Resp::Replaced) => {}
+                Ok(Resp::Err(msg)) => {
+                    self.poison();
+                    return Err(anyhow!("worker {w} failed recovery: {msg}"));
+                }
+                _ => {
+                    self.poison();
+                    return Err(anyhow!("worker {w} died during recovery"));
+                }
+            }
+        }
+        for (w, wk) in self.workers.iter_mut().enumerate() {
+            wk.k_elems = new_lblocks[w].len();
+        }
+        let new_sizes = node_part.sizes();
+        let per_node = (0..total)
+            .map(|nd| NodeRebalance {
+                node: nd,
+                old_k: old_sizes[nd],
+                new_k: new_sizes[nd],
+                old_k_mic: old_counts[nd].1,
+                new_k_mic: np.node_counts[nd].1,
+                target_fraction: ctx.fractions[nd],
+                rate_s_per_elem: 0.0,
+            })
+            .collect();
+        self.plan = new_plan;
+        self.fabric = fabric;
+        ctx.lblocks = new_lblocks;
+        ctx.elem_owners = new_owners;
+        ctx.node_part = node_part;
+        let replayed = failed_step - ckpt.step;
+        self.steps_taken = ckpt.step;
+        self.last_error = None;
+        Ok(RebalanceReport {
+            level1_migrated: mig.level1,
+            level2_migrated: mig.level2,
+            rebuilt_workers: self.workers.iter().filter(|w| w.alive).count(),
+            kept_workers: 0,
+            wall_s: 0.0,
+            cause: RebalanceCause::Recovery,
+            replayed_steps: replayed,
+            per_node,
+        })
+    }
+
+    /// Bring an inactive node into the run (elastic join): a spare node
+    /// announced at launch — or an explicit `Some(node)` — starts
+    /// receiving elements via a fresh level-1 splice over the now-larger
+    /// active set. Runs the normal live-state migration path, which is
+    /// exact at step boundaries; the report lands in the history under
+    /// [`RebalanceCause::Join`]. A crashed node cannot rejoin (its worker
+    /// threads are gone); only never-activated spares and cleanly shed
+    /// nodes qualify.
+    pub fn join_node(&mut self, node: Option<usize>) -> Result<RebalanceReport> {
+        anyhow::ensure!(!self.poisoned, "cluster poisoned; relaunch");
+        anyhow::ensure!(self.last_error.is_none(), "recover() before joining a node");
+        let nd = match node {
+            Some(n) => {
+                anyhow::ensure!(n < self.node_active.len(), "no such node {n}");
+                anyhow::ensure!(!self.node_active[n], "node {n} is already active");
+                n
+            }
+            None => self
+                .node_active
+                .iter()
+                .position(|&a| !a)
+                .ok_or_else(|| anyhow!("no inactive node available to join"))?,
+        };
+        anyhow::ensure!(
+            self.workers.iter().filter(|w| w.node == nd).all(|w| w.alive),
+            "node {nd}'s workers are dead; only live spares can join"
+        );
+        self.node_active[nd] = true;
+        let res = self.rebalance_with(RebalanceCause::Join, |run, ctx| {
+            let node_part = splice_weighted_excluding(
+                &vec![1.0; ctx.mesh.len()],
+                ctx.node_part.nparts,
+                &run.node_active,
+            );
+            let fractions = ctx.fractions.clone();
+            let old_sizes = ctx.node_part.sizes();
+            let new_sizes = node_part.sizes();
+            let np = nested_partition_fractions(&ctx.mesh, &node_part, &fractions);
+            let per_node = (0..node_part.nparts)
+                .map(|n| NodeRebalance {
+                    node: n,
+                    old_k: old_sizes[n],
+                    new_k: new_sizes[n],
+                    old_k_mic: run.workers[2 * n + 1].k_elems,
+                    new_k_mic: np.node_counts[n].1,
+                    target_fraction: fractions[n],
+                    rate_s_per_elem: 0.0,
+                })
+                .collect();
+            let level1_moved = node_part.assignment != ctx.node_part.assignment;
+            Ok(TwoLevelPlan { node_part, fractions, np, level1_moved, per_node })
+        });
+        if res.is_err() {
+            self.node_active[nd] = false;
+        }
+        res
+    }
+
+    /// Total energy across all blocks (live workers only — a dead node's
+    /// elements either migrated to survivors or are lost with it).
     pub fn energy(&self) -> Result<f64> {
-        for w in &self.workers {
+        for w in self.workers.iter().filter(|w| w.alive) {
             w.tx.send(Cmd::Energy).map_err(|_| anyhow!("worker died"))?;
         }
         let mut e = 0.0;
-        for w in &self.workers {
+        for w in self.workers.iter().filter(|w| w.alive) {
             match w.rx.recv() {
                 Ok(Resp::Energy(v)) => e += v,
                 Ok(Resp::Err(m)) => return Err(anyhow!("energy failed: {m}")),
@@ -1296,6 +1979,7 @@ impl ClusterRun {
             .owner_map
             .get(&owner)
             .ok_or_else(|| anyhow!("unknown owner {owner}"))?;
+        anyhow::ensure!(self.workers[w].alive, "owner {owner} lives on dead worker {w}");
         self.workers[w].tx.send(Cmd::ReadBlock(bi)).map_err(|_| anyhow!("worker died"))?;
         match self.workers[w].rx.recv() {
             Ok(Resp::Block(b)) => Ok(*b),
@@ -1318,6 +2002,7 @@ impl ClusterRun {
                 device: w.device,
                 k_elems: w.k_elems,
                 label: w.label,
+                alive: w.alive,
             })
             .collect()
     }
@@ -1343,12 +2028,18 @@ impl ClusterRun {
     }
 
     fn collect_times(&self, take: bool) -> Result<Vec<WorkerTimes>> {
-        for w in &self.workers {
+        for w in self.workers.iter().filter(|w| w.alive) {
             let cmd = if take { Cmd::TakeTimes } else { Cmd::ReadTimes };
             w.tx.send(cmd).map_err(|_| anyhow!("worker died"))?;
         }
         let mut out = Vec::with_capacity(self.workers.len());
+        // dead workers hold a zeroed slot so the 2-per-node layout every
+        // consumer indexes by stays intact
         for w in &self.workers {
+            if !w.alive {
+                out.push(WorkerTimes::default());
+                continue;
+            }
             match w.rx.recv() {
                 Ok(Resp::Times(t)) => out.push(t),
                 Ok(Resp::Err(m)) => return Err(anyhow!("times: {m}")),
@@ -1400,7 +2091,9 @@ impl ClusterRun {
         let esz = NFIELDS * m * m * m;
         let mut out: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; ctx.mesh.len()];
         for (owner, lb) in ctx.lblocks.iter().enumerate() {
-            if only.is_some_and(|f| !f.contains(&owner)) {
+            // empty owners (dead nodes, unjoined spares, zero-share MICs)
+            // contribute nothing and may not even be readable
+            if lb.global_ids.is_empty() || only.is_some_and(|f| !f.contains(&owner)) {
                 continue;
             }
             let st = self.read_block(owner)?;
@@ -1453,7 +2146,7 @@ impl ClusterRun {
     /// tables are swapped, since peers' local indices and halo slots may
     /// have moved. The run continues bit-exactly either way.
     pub fn rebalance(&mut self) -> Result<RebalanceReport> {
-        self.rebalance_with(|run, ctx| {
+        self.rebalance_with(RebalanceCause::Adaptive, |run, ctx| {
             // standard layout: worker 2n = node n CPU, worker 2n+1 = node
             // n MIC (guaranteed by the mesh-aware launch)
             let times = run.take_worker_times()?;
@@ -1466,6 +2159,7 @@ impl ClusterRun {
                 &counts,
                 run.order,
                 run.level1_rebalance,
+                Some(&run.node_active),
             ))
         })
     }
@@ -1480,7 +2174,7 @@ impl ClusterRun {
         node_part: Partition,
         fractions: Vec<f64>,
     ) -> Result<RebalanceReport> {
-        self.rebalance_with(move |run, ctx| {
+        self.rebalance_with(RebalanceCause::Adaptive, move |run, ctx| {
             anyhow::ensure!(
                 node_part.assignment.len() == ctx.mesh.len(),
                 "partition covers {} elements, mesh has {}",
@@ -1521,6 +2215,7 @@ impl ClusterRun {
     /// the context, stamp the wall time and append to the history.
     fn rebalance_with(
         &mut self,
+        cause: RebalanceCause,
         build: impl FnOnce(&mut ClusterRun, &mut MeshCtx) -> Result<TwoLevelPlan>,
     ) -> Result<RebalanceReport> {
         let t0 = Instant::now();
@@ -1533,6 +2228,7 @@ impl ClusterRun {
         })();
         self.mesh_ctx = Some(ctx);
         let mut report = res?;
+        report.cause = cause;
         report.wall_s = t0.elapsed().as_secs_f64();
         self.rebalance_history.push(report.clone());
         Ok(report)
@@ -1559,6 +2255,8 @@ impl ClusterRun {
             rebuilt_workers: 0,
             kept_workers: nw,
             wall_s: 0.0,
+            cause: RebalanceCause::Adaptive,
+            replayed_steps: 0,
             per_node,
         };
         if mig.changed_owners.is_empty() {
@@ -1654,7 +2352,17 @@ impl ClusterRun {
             route_tables(&new_plan, &self.owner_map, nw);
         report.rebuilt_workers = mig.changed_owners.len();
         report.kept_workers = nw - report.rebuilt_workers;
+        let mut sent = vec![false; nw];
         for (w, wk) in self.workers.iter().enumerate() {
+            if !wk.alive {
+                // dead workers can't be re-plumbed; a valid plan never
+                // routes anything to or from them
+                anyhow::ensure!(
+                    new_lblocks[w].global_ids.is_empty(),
+                    "migration plan assigns elements to dead worker {w}"
+                );
+                continue;
+            }
             let msg = ReplaceMsg {
                 blocks: new_states[w].take().map(|st| vec![st]),
                 outbound: std::mem::take(&mut outbound[w]),
@@ -1665,8 +2373,12 @@ impl ClusterRun {
                 self.poison();
                 return Err(anyhow!("worker {w} died during migration"));
             }
+            sent[w] = true;
         }
         for (w, wk) in self.workers.iter().enumerate() {
+            if !sent[w] {
+                continue;
+            }
             match wk.rx.recv() {
                 Ok(Resp::Replaced) => {}
                 Ok(Resp::Err(msg)) => {

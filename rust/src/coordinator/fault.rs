@@ -1,0 +1,342 @@
+//! Fault injection and typed failure classification for the cluster
+//! runtime.
+//!
+//! A [`FaultPlan`] is a *seeded, deterministic* schedule of bad events:
+//! kill a chosen node's workers at step S (three modes — announced crash,
+//! silent thread death, or a hung stall), and optionally sabotage the
+//! message fabric by dropping or delaying delivery groups. The same plan
+//! drives both the live cluster ([`super::cluster::ClusterSpec::faults`])
+//! and the simulator ([`crate::sim::simulate_elastic`]), so an observed
+//! failure schedule reproduces exactly from `(plan, seed)`.
+//!
+//! Failures surface as a typed [`ClusterError`] kept on the run
+//! (`ClusterRun::last_error`) *in addition* to the rendered `anyhow`
+//! message — the vendored `anyhow` shim is string-only (no downcasting),
+//! so callers that need to branch on the failure kind read the typed value
+//! off the run instead of parsing strings.
+
+use std::time::Duration;
+
+use anyhow::anyhow;
+
+use crate::util::Rng;
+use crate::Result;
+
+// ---------------------------------------------------------------------------
+// kill specification
+// ---------------------------------------------------------------------------
+
+/// How an injected kill manifests to the rest of the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KillMode {
+    /// The worker announces the failure (error reply + empty fabric
+    /// groups) and stops staging — the polite death; nobody ever blocks.
+    #[default]
+    Crash,
+    /// The worker thread exits without a word: no reply, no groups, lanes
+    /// closed. Detected through the dropped reply channel.
+    Silent,
+    /// The worker hangs: alive but never replies nor ships. Only the
+    /// coordinator's stage deadline can detect this one.
+    Stall,
+}
+
+impl KillMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            KillMode::Crash => "crash",
+            KillMode::Silent => "silent",
+            KillMode::Stall => "stall",
+        }
+    }
+
+    /// The sentinel error string the fault-injecting backend raises; the
+    /// coordinator classifies replies containing it as injected deaths.
+    pub fn sentinel(self) -> &'static str {
+        match self {
+            KillMode::Crash => "injected-kill:crash",
+            KillMode::Silent => "injected-kill:silent",
+            KillMode::Stall => "injected-kill:stall",
+        }
+    }
+}
+
+impl std::str::FromStr for KillMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "crash" => Ok(KillMode::Crash),
+            "silent" => Ok(KillMode::Silent),
+            "stall" => Ok(KillMode::Stall),
+            other => Err(anyhow!("unknown kill mode {other:?} (crash|silent|stall)")),
+        }
+    }
+}
+
+/// Which injected kill (if any) an error message carries.
+pub fn kill_mode_of(msg: &str) -> Option<KillMode> {
+    for mode in [KillMode::Crash, KillMode::Silent, KillMode::Stall] {
+        if msg.contains(mode.sentinel()) {
+            return Some(mode);
+        }
+    }
+    None
+}
+
+/// Kill node `node`'s workers at the start of step `step`.
+///
+/// Parses from `"N@S"` or `"N@S:mode"` (the `--kill-node` flag syntax).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillSpec {
+    pub node: usize,
+    pub step: usize,
+    pub mode: KillMode,
+}
+
+impl std::str::FromStr for KillSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        let (head, mode) = match s.split_once(':') {
+            Some((h, m)) => (h, m.parse::<KillMode>()?),
+            None => (s, KillMode::Crash),
+        };
+        let (node, step) = head
+            .split_once('@')
+            .ok_or_else(|| anyhow!("kill spec {s:?} is not N@S[:crash|silent|stall]"))?;
+        Ok(KillSpec {
+            node: node.trim().parse().map_err(|_| anyhow!("bad node in kill spec {s:?}"))?,
+            step: step.trim().parse().map_err(|_| anyhow!("bad step in kill spec {s:?}"))?,
+            mode,
+        })
+    }
+}
+
+/// Bring a (provisioned-but-inactive) spare node into the cluster at the
+/// start of step `step`. `node: None` picks the first idle spare.
+///
+/// Parses from `"@S"` (first spare) or `"N@S"`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JoinSpec {
+    pub node: Option<usize>,
+    pub step: usize,
+}
+
+impl std::str::FromStr for JoinSpec {
+    fn from_str(s: &str) -> Result<Self> {
+        let (node, step) = s
+            .split_once('@')
+            .ok_or_else(|| anyhow!("join spec {s:?} is not [N]@S"))?;
+        let node = match node.trim() {
+            "" => None,
+            t => Some(t.parse().map_err(|_| anyhow!("bad node in join spec {s:?}"))?),
+        };
+        Ok(JoinSpec {
+            node,
+            step: step.trim().parse().map_err(|_| anyhow!("bad step in join spec {s:?}"))?,
+        })
+    }
+
+    type Err = anyhow::Error;
+}
+
+// ---------------------------------------------------------------------------
+// the plan
+// ---------------------------------------------------------------------------
+
+/// A deterministic schedule of injected faults and membership changes.
+///
+/// Everything random (message drops) derives from `seed`, and everything
+/// scheduled (kills, joins) is pinned to a step — rerunning the same plan
+/// on the same cluster reproduces the same failure history bit-for-bit.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Seed for every stochastic choice the plan makes (message drops in
+    /// the live fabric, straggler jitter in the simulator).
+    pub seed: u64,
+    pub kills: Vec<KillSpec>,
+    pub joins: Vec<JoinSpec>,
+    /// Probability that any one fabric delivery group is silently dropped
+    /// (shipped as an empty group, so the stage lockstep survives — the
+    /// receiver just keeps its stale halo).
+    pub drop_prob: f64,
+    /// Fixed delay added before every fabric ship (a slow-link stand-in).
+    pub delay_us: u64,
+}
+
+impl FaultPlan {
+    /// Whether the plan does anything at all (armed plans turn on the
+    /// coordinator's deadline-bounded stage detection by default).
+    pub fn is_armed(&self) -> bool {
+        !self.kills.is_empty()
+            || !self.joins.is_empty()
+            || self.drop_prob > 0.0
+            || self.delay_us > 0
+    }
+
+    /// The kill scheduled for `node`, if any.
+    pub fn kill_for_node(&self, node: usize) -> Option<KillSpec> {
+        self.kills.iter().copied().find(|k| k.node == node)
+    }
+
+    /// The per-worker fabric saboteur, seeded as a pure function of
+    /// `(plan seed, worker)` so every worker draws an independent but
+    /// reproducible stream.
+    pub fn injector_for(&self, worker: usize) -> Option<FaultInjector> {
+        if self.drop_prob <= 0.0 && self.delay_us == 0 {
+            return None;
+        }
+        Some(FaultInjector {
+            rng: Rng::seed_from_u64(
+                self.seed ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            ),
+            drop_prob: self.drop_prob,
+            delay: Duration::from_micros(self.delay_us),
+        })
+    }
+}
+
+/// Per-worker fabric saboteur installed into the worker's endpoint: called
+/// once per outbound delivery group (every transport funnels through one
+/// `ship` entry point), it may delay the ship and/or decide to drop the
+/// group's payload.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    rng: Rng,
+    drop_prob: f64,
+    delay: Duration,
+}
+
+impl FaultInjector {
+    /// Apply the configured delay, then decide whether this group's
+    /// payload is dropped (`true` = ship an empty group instead).
+    pub fn sabotage_ship(&mut self) -> bool {
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        self.drop_prob > 0.0 && self.rng.uniform() < self.drop_prob
+    }
+}
+
+// ---------------------------------------------------------------------------
+// typed failure
+// ---------------------------------------------------------------------------
+
+/// What took the cluster down (or degraded it), as a typed value.
+///
+/// The vendored `anyhow` shim carries strings only, so the run keeps the
+/// last `ClusterError` alongside the rendered message
+/// (`ClusterRun::last_error`); tests and the serving layer branch on this
+/// instead of string-matching.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ClusterError {
+    /// One or more workers died or went silent; the listed *nodes* are now
+    /// out of the membership. Recoverable via checkpoint restore + forced
+    /// level-1 re-splice ([`ClusterRun::recover`]).
+    ///
+    /// [`ClusterRun::recover`]: super::cluster::ClusterRun::recover
+    NodeFailure {
+        /// Nodes lost in this failure event.
+        nodes: Vec<usize>,
+        /// Timestep the failure was detected in (not yet completed).
+        step: usize,
+        /// How the first dead worker manifested.
+        detail: String,
+    },
+    /// A non-recoverable failure: the whole fabric is permanently
+    /// poisoned and the run must be relaunched.
+    Poisoned { detail: String },
+}
+
+impl ClusterError {
+    /// Whether a checkpointed run can recover from this error.
+    pub fn recoverable(&self) -> bool {
+        matches!(self, ClusterError::NodeFailure { .. })
+    }
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::NodeFailure { nodes, step, detail } => write!(
+                f,
+                "node failure at step {step}: node(s) {nodes:?} lost ({detail})"
+            ),
+            ClusterError::Poisoned { detail } => {
+                write!(f, "cluster poisoned: {detail}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_spec_parses_all_forms() {
+        let k: KillSpec = "1@5".parse().unwrap();
+        assert_eq!(k, KillSpec { node: 1, step: 5, mode: KillMode::Crash });
+        let k: KillSpec = "2@10:silent".parse().unwrap();
+        assert_eq!(k.mode, KillMode::Silent);
+        let k: KillSpec = "0@3:stall".parse().unwrap();
+        assert_eq!(k.mode, KillMode::Stall);
+        assert!("3".parse::<KillSpec>().is_err());
+        assert!("a@b".parse::<KillSpec>().is_err());
+        assert!("1@2:explode".parse::<KillSpec>().is_err());
+    }
+
+    #[test]
+    fn join_spec_parses_both_forms() {
+        let j: JoinSpec = "@4".parse().unwrap();
+        assert_eq!(j, JoinSpec { node: None, step: 4 });
+        let j: JoinSpec = "2@7".parse().unwrap();
+        assert_eq!(j, JoinSpec { node: Some(2), step: 7 });
+        assert!("7".parse::<JoinSpec>().is_err());
+    }
+
+    #[test]
+    fn sentinels_classify() {
+        assert_eq!(kill_mode_of("boundary stage: injected-kill:crash"), Some(KillMode::Crash));
+        assert_eq!(kill_mode_of("injected-kill:stall"), Some(KillMode::Stall));
+        assert_eq!(kill_mode_of("shipping to worker 3: lane closed"), None);
+    }
+
+    #[test]
+    fn injector_is_deterministic_in_seed_and_worker() {
+        let plan = FaultPlan { seed: 42, drop_prob: 0.5, ..Default::default() };
+        let draws = |w: usize| -> Vec<bool> {
+            let mut inj = plan.injector_for(w).unwrap();
+            (0..64).map(|_| inj.sabotage_ship()).collect()
+        };
+        assert_eq!(draws(0), draws(0), "same worker, same stream");
+        assert_ne!(draws(0), draws(1), "workers draw independent streams");
+        assert!(plan.injector_for(0).is_some());
+        assert!(FaultPlan::default().injector_for(0).is_none());
+    }
+
+    #[test]
+    fn armed_plans_know_it() {
+        assert!(!FaultPlan::default().is_armed());
+        let k = FaultPlan {
+            kills: vec!["0@1".parse().unwrap()],
+            ..Default::default()
+        };
+        assert!(k.is_armed());
+        assert!(FaultPlan { drop_prob: 0.1, ..Default::default() }.is_armed());
+    }
+
+    #[test]
+    fn cluster_error_renders_and_classifies() {
+        let e = ClusterError::NodeFailure {
+            nodes: vec![1],
+            step: 5,
+            detail: "worker reply channel disconnected".into(),
+        };
+        assert!(e.recoverable());
+        assert!(e.to_string().contains("step 5"));
+        let p = ClusterError::Poisoned { detail: "backend exploded".into() };
+        assert!(!p.recoverable());
+    }
+}

@@ -36,6 +36,7 @@
 
 pub mod cluster;
 pub mod experiments;
+pub mod fault;
 pub mod node;
 pub mod profile;
 pub mod rebalance;
@@ -44,6 +45,7 @@ pub mod serve;
 pub mod transport;
 
 pub use cluster::{ClusterRun, ClusterSpec, FabricStats, WorkerBackendFactory, WorkerTimes};
+pub use fault::{ClusterError, FaultPlan, JoinSpec, KillMode, KillSpec};
 pub use node::{HeteroRun, WorkerBackend};
 pub use profile::ProfileReport;
 pub use rebalance::{NodeRebalance, RebalanceReport};

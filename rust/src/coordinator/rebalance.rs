@@ -32,10 +32,35 @@
 use crate::costmodel::calib;
 use crate::mesh::Mesh;
 use crate::partition::{
-    nested_partition_fractions, solve_mic_fraction, splice_weighted, NestedPartition, Partition,
+    nested_partition_fractions, solve_mic_fraction, splice_weighted, splice_weighted_excluding,
+    NestedPartition, Partition,
 };
 
 use super::cluster::WorkerTimes;
+
+/// Why a rebalance happened — adaptive load-chasing, or one of the
+/// membership events of the fault-tolerant runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RebalanceCause {
+    /// The periodic measured-window rebalance (the original path).
+    #[default]
+    Adaptive,
+    /// A node died: its chunk was re-spliced across survivors and state
+    /// was restored from the last checkpoint.
+    Recovery,
+    /// A node joined: the splice shed elements onto it from live state.
+    Join,
+}
+
+impl RebalanceCause {
+    pub fn label(self) -> &'static str {
+        match self {
+            RebalanceCause::Adaptive => "adaptive",
+            RebalanceCause::Recovery => "recovery",
+            RebalanceCause::Join => "join",
+        }
+    }
+}
 
 /// One node's row of a [`RebalanceReport`].
 #[derive(Debug, Clone, Copy)]
@@ -70,8 +95,15 @@ pub struct RebalanceReport {
     /// kept alive; only their routing tables were swapped.
     pub kept_workers: usize,
     /// Wall seconds of the whole rebalance call (plan + migration +
-    /// rebuilds) — the stall the incremental path minimizes.
+    /// rebuilds) — the stall the incremental path minimizes. For a
+    /// `Recovery` this is the recovery wall time: detection handoff,
+    /// re-splice, checkpoint restore and worker rebuilds.
     pub wall_s: f64,
+    /// What triggered this rebalance.
+    pub cause: RebalanceCause,
+    /// Steps lost to the checkpoint rewind (`Recovery` only): the run
+    /// re-executes `steps_at_failure - checkpoint_step` steps.
+    pub replayed_steps: usize,
     pub per_node: Vec<NodeRebalance>,
 }
 
@@ -93,6 +125,14 @@ pub struct RebalanceTotals {
     pub rebuilt_workers: usize,
     pub kept_workers: usize,
     pub wall_s: f64,
+    /// Rebalances triggered by node death.
+    pub recoveries: usize,
+    /// Rebalances triggered by elastic join.
+    pub joins: usize,
+    /// Total steps re-executed after checkpoint rewinds.
+    pub replayed_steps: usize,
+    /// Wall seconds spent inside recovery rebalances only.
+    pub recovery_wall_s: f64,
 }
 
 impl RebalanceTotals {
@@ -108,6 +148,15 @@ impl RebalanceTotals {
             t.rebuilt_workers += r.rebuilt_workers;
             t.kept_workers += r.kept_workers;
             t.wall_s += r.wall_s;
+            t.replayed_steps += r.replayed_steps;
+            match r.cause {
+                RebalanceCause::Adaptive => {}
+                RebalanceCause::Recovery => {
+                    t.recoveries += 1;
+                    t.recovery_wall_s += r.wall_s;
+                }
+                RebalanceCause::Join => t.joins += 1,
+            }
         }
         t
     }
@@ -142,14 +191,19 @@ pub fn node_rates(times: &[WorkerTimes], counts: &[(usize, usize)]) -> Vec<Optio
 /// node's measured rate, re-splice, and adopt the candidate only if it
 /// improves the predicted slowest-node time by more than `min_gain`
 /// (relative). Nodes with nothing measured inherit the mean measured rate.
-/// Returns `None` when level 1 should stay put.
+/// With an `active` mask, inactive nodes (dead, or provisioned spares not
+/// yet joined) are excluded from the candidate splice so adaptive
+/// rebalancing never re-feeds them. Returns `None` when level 1 should
+/// stay put.
 fn level1_resplice(
     node_part: &Partition,
     rates: &[Option<f64>],
     min_gain: f64,
+    active: Option<&[bool]>,
 ) -> Option<(Partition, Vec<f64>)> {
     let nodes = node_part.nparts;
-    if nodes < 2 {
+    let live = active.map_or(nodes, |a| a.iter().filter(|&&x| x).count());
+    if live < 2 {
         return None;
     }
     let measured: Vec<f64> = rates.iter().flatten().copied().collect();
@@ -160,7 +214,10 @@ fn level1_resplice(
     let rate: Vec<f64> = rates.iter().map(|r| r.unwrap_or(mean)).collect();
     let weights: Vec<f64> =
         node_part.assignment.iter().map(|&nd| rate[nd]).collect();
-    let cand = splice_weighted(&weights, nodes);
+    let cand = match active {
+        Some(a) if live < nodes => splice_weighted_excluding(&weights, nodes, a),
+        _ => splice_weighted(&weights, nodes),
+    };
     if cand.assignment == node_part.assignment {
         return None;
     }
@@ -184,6 +241,9 @@ fn level1_resplice(
 /// * `counts` — current per-node realized `(k_cpu, k_mic)`.
 /// * `level1` — whether the across-node re-splice is enabled (level 2
 ///   always re-solves).
+/// * `active` — optional node liveness mask; inactive nodes never receive
+///   elements from the re-splice (`None` = all nodes active).
+#[allow(clippy::too_many_arguments)]
 pub fn plan_two_level(
     mesh: &Mesh,
     node_part: &Partition,
@@ -192,13 +252,15 @@ pub fn plan_two_level(
     counts: &[(usize, usize)],
     order: usize,
     level1: bool,
+    active: Option<&[bool]>,
 ) -> TwoLevelPlan {
     let nodes = node_part.nparts;
     assert_eq!(times.len(), 2 * nodes, "two workers per node");
     assert_eq!(counts.len(), nodes);
     assert_eq!(fractions.len(), nodes);
     let rates = node_rates(times, counts);
-    let respliced = if level1 { level1_resplice(node_part, &rates, 0.01) } else { None };
+    let respliced =
+        if level1 { level1_resplice(node_part, &rates, 0.01, active) } else { None };
     let level1_moved = respliced.is_some();
     let new_part = respliced.map(|(p, _)| p).unwrap_or_else(|| node_part.clone());
     let old_sizes = node_part.sizes();
@@ -283,7 +345,7 @@ mod tests {
         let times =
             vec![worker(1e-3), worker(1e-3), worker(3e-3), worker(3e-3)];
         let plan =
-            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, true);
+            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, true, None);
         assert!(plan.level1_moved);
         let sizes = plan.node_part.sizes();
         assert!(sizes[0] > sizes[1], "fast node must grow: {sizes:?}");
@@ -302,7 +364,7 @@ mod tests {
         let times =
             vec![worker(1e-3), worker(1e-3), worker(1e-3), worker(1e-3)];
         let plan =
-            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, true);
+            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, true, None);
         assert!(!plan.level1_moved, "equal rates must not move level 1");
         assert_eq!(plan.node_part.assignment, part.assignment);
     }
@@ -315,11 +377,48 @@ mod tests {
         let times =
             vec![worker(1e-3), worker(1e-3), worker(5e-3), worker(5e-3)];
         let plan =
-            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, false);
+            plan_two_level(&mesh, &part, &[0.2, 0.2], &times, &counts, 2, false, None);
         assert!(!plan.level1_moved);
         assert_eq!(plan.node_part.sizes(), part.sizes());
         // level 2 still re-solves from the measured profile
         assert!(plan.per_node[0].target_fraction > 0.0);
+    }
+
+    #[test]
+    fn degraded_mask_never_refeeds_dead_nodes() {
+        let mesh = unit_cube_geometry(6); // 216 elements
+        // node 1 is dead: its chunk already re-spliced away
+        let active = [true, false, true];
+        let part =
+            crate::partition::splice_weighted_excluding(&vec![1.0; mesh.len()], 3, &active);
+        let sizes0 = part.sizes();
+        assert_eq!(sizes0[1], 0);
+        let counts =
+            vec![(sizes0[0] - 20, 20), (0, 0), (sizes0[2] - 20, 20)];
+        // node 2 measured 3x slower than node 0; node 1 unmeasured (dead)
+        let times = vec![
+            worker(1e-3),
+            worker(1e-3),
+            WorkerTimes::default(),
+            WorkerTimes::default(),
+            worker(3e-3),
+            worker(3e-3),
+        ];
+        let plan = plan_two_level(
+            &mesh,
+            &part,
+            &[0.2, 0.2, 0.2],
+            &times,
+            &counts,
+            2,
+            true,
+            Some(&active),
+        );
+        assert!(plan.level1_moved, "skewed survivors must re-splice");
+        let sizes = plan.node_part.sizes();
+        assert_eq!(sizes[1], 0, "dead node must stay empty: {sizes:?}");
+        assert!(sizes[0] > sizes[2], "fast survivor grows: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), mesh.len());
     }
 
     #[test]
@@ -329,7 +428,7 @@ mod tests {
         let counts = vec![(26, 6), (26, 6)];
         let times = vec![WorkerTimes::default(); 4];
         let plan =
-            plan_two_level(&mesh, &part, &[0.19, 0.19], &times, &counts, 2, true);
+            plan_two_level(&mesh, &part, &[0.19, 0.19], &times, &counts, 2, true, None);
         assert!(!plan.level1_moved);
         assert_eq!(plan.fractions, vec![0.19, 0.19]);
         assert_eq!(plan.node_part.assignment, part.assignment);

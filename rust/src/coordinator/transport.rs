@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail};
 
+use super::fault::FaultInjector;
 use crate::solver::state::BlockState;
 use crate::util::framing::{self, FrameItem, FrameWriter};
 use crate::util::shm::{slot_ring, RingConsumer, RingProducer};
@@ -108,12 +109,20 @@ impl std::fmt::Display for TransportKind {
 // fabric control plane
 // ---------------------------------------------------------------------------
 
-/// Shared poison flag: the coordinator (or any failing worker) sets it so
-/// every endpoint blocked in a ship/recv wait bails out instead of
-/// spinning on deliveries that will never come.
+/// Shared fabric stop flags, split by failure domain:
+///
+/// * **poison** — permanent. Set on teardown, job cancellation, or a
+///   genuine unrecoverable failure; every endpoint blocked in a ship/recv
+///   wait bails out instead of spinning on deliveries that will never
+///   come, and the run refuses further steps.
+/// * **halt** — clearable. Set when a worker dies mid-stage so the
+///   *survivors* unblock from the broken exchange, then cleared once
+///   recovery has restored a consistent membership. Survivors stay
+///   schedulable; only the interrupted stage is lost.
 #[derive(Debug, Clone, Default)]
 pub struct FabricCtl {
     poison: Arc<AtomicBool>,
+    halt: Arc<AtomicBool>,
 }
 
 impl FabricCtl {
@@ -127,6 +136,35 @@ impl FabricCtl {
 
     pub fn is_poisoned(&self) -> bool {
         self.poison.load(Ordering::Acquire)
+    }
+
+    /// Stop the current exchange without condemning the fabric: blocked
+    /// endpoints bail, but [`FabricCtl::clear_halt`] re-arms them.
+    pub fn halt(&self) {
+        self.halt.store(true, Ordering::Release);
+    }
+
+    pub fn clear_halt(&self) {
+        self.halt.store(false, Ordering::Release);
+    }
+
+    pub fn is_halted(&self) -> bool {
+        self.halt.load(Ordering::Acquire)
+    }
+
+    /// Whether endpoints should stop waiting right now (either flag).
+    pub fn is_stopped(&self) -> bool {
+        self.is_poisoned() || self.is_halted()
+    }
+
+    /// Human label for error messages; "poisoned" is pinned by tests and
+    /// by the serve layer's cancellation path.
+    pub fn stop_reason(&self) -> &'static str {
+        if self.is_poisoned() {
+            "poisoned"
+        } else {
+            "halted for recovery"
+        }
     }
 }
 
@@ -210,12 +248,21 @@ pub struct MixedEndpoint {
     /// Socket reader threads (joined on drop; they exit once the socket
     /// is shut down from either side).
     readers: Vec<JoinHandle<()>>,
+    /// Optional fault saboteur: consulted once per outbound group (all
+    /// lane mechanisms funnel through `ship`), may delay the ship or
+    /// force the group empty (a dropped message).
+    injector: Option<FaultInjector>,
 }
 
 /// How long `recv_group` blocks on the channel between poison checks.
 const RECV_TICK: Duration = Duration::from_millis(20);
 
 impl MixedEndpoint {
+    /// Install (or remove) the per-worker fault saboteur.
+    pub fn set_injector(&mut self, injector: Option<FaultInjector>) {
+        self.injector = injector;
+    }
+
     fn has_rings(&self) -> bool {
         self.rings_in.iter().any(|r| r.is_some())
     }
@@ -287,8 +334,8 @@ impl MixedEndpoint {
                 Ok(false) => {}
                 Err(_) => bail!("shm ring to worker {dst} closed"),
             }
-            if self.ctl.is_poisoned() {
-                bail!("fabric poisoned while shipping to worker {dst}");
+            if self.ctl.is_stopped() {
+                bail!("fabric {} while shipping to worker {dst}", self.ctl.stop_reason());
             }
             let stash = &mut self.stash;
             Self::pump_rings(
@@ -320,6 +367,10 @@ impl FabricEndpoint for MixedEndpoint {
         blocks: &[BlockState],
         failed: bool,
     ) -> Result<usize> {
+        // injected sabotage: a dropped group ships exactly like a failed
+        // stage's (empty, still counted), so lockstep survives the loss
+        let failed = failed
+            || self.injector.as_mut().is_some_and(|i| i.sabotage_ship());
         // dispatch on a copied discriminant so the lane borrow doesn't
         // outlive the match arm (ring_send re-borrows per record)
         enum K {
@@ -418,8 +469,8 @@ impl FabricEndpoint for MixedEndpoint {
             if self.ring_groups_done > 0 {
                 continue;
             }
-            if self.ctl.is_poisoned() {
-                bail!("fabric poisoned during exchange");
+            if self.ctl.is_stopped() {
+                bail!("fabric {} during exchange", self.ctl.stop_reason());
             }
             if spin {
                 // ring lanes need polling; stay hot but yield the core
@@ -538,6 +589,7 @@ pub fn build_endpoints(
             ring_groups_done: 0,
             stash: Vec::new(),
             readers: Vec::new(),
+            injector: None,
         });
     }
     for a in 0..nw {
@@ -943,6 +995,55 @@ mod tests {
                 assert!(l.latency_s > 0.0 && l.latency_s < 0.1, "{kind}: {l:?}");
                 assert!(l.bw_bytes_per_s > 1e6, "{kind}: {l:?}");
             }
+        }
+    }
+
+    /// Halting unblocks a waiting receiver like poison does, but the
+    /// fabric comes back after `clear_halt` — the recovery-domain split.
+    #[test]
+    fn halt_unblocks_recv_and_clears() {
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            let ctl = FabricCtl::new();
+            let mut eps = build_endpoints(kind, &[0, 1], 128, &ctl).unwrap();
+            let mut b = eps.pop().unwrap();
+            let mut a = eps.pop().unwrap();
+            let h = std::thread::spawn(move || {
+                let mut dst = vec![test_block(2, 1)];
+                let err = b.recv_group(&mut dst).unwrap_err();
+                (b, err)
+            });
+            std::thread::sleep(Duration::from_millis(10));
+            ctl.halt();
+            let (mut b, err) = h.join().unwrap();
+            assert!(err.to_string().contains("halted"), "{kind}: {err}");
+            assert!(!err.to_string().contains("poisoned"), "{kind}: {err}");
+            // after clearing, the same endpoints exchange again
+            ctl.clear_halt();
+            a.clear_pending();
+            b.clear_pending();
+            let src = vec![test_block(2, 1)];
+            let mut dst = vec![test_block(2, 2)];
+            a.ship(1, &[(0, 0, 3, 0, 1)], &src, false).unwrap();
+            let got = b.recv_group(&mut dst).unwrap();
+            assert!(got > 0, "{kind}: fabric must revive after clear_halt");
+        }
+    }
+
+    /// An injector with drop_prob=1 turns every shipped group empty while
+    /// keeping the group count intact (the receiver still completes).
+    #[test]
+    fn injector_drops_ship_as_empty_groups() {
+        use crate::coordinator::fault::FaultPlan;
+        for kind in [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket] {
+            let (mut a, mut b) = endpoints_pair(kind);
+            let plan = FaultPlan { seed: 1, drop_prob: 1.0, ..Default::default() };
+            a.set_injector(plan.injector_for(0));
+            let src = vec![test_block(2, 1)];
+            let mut dst = vec![test_block(2, 2)];
+            let sent = a.ship(1, &[(0, 0, 3, 0, 1)], &src, false).unwrap();
+            assert_eq!(sent, 0, "{kind}: dropped group ships no payload");
+            let got = b.recv_group(&mut dst).unwrap();
+            assert_eq!(got, 0, "{kind}: dropped group still counts for lockstep");
         }
     }
 

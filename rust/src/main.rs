@@ -17,7 +17,7 @@
 
 use std::collections::HashMap;
 
-use repro::coordinator::{experiments, node::WorkerBackend, TransportKind};
+use repro::coordinator::{experiments, node::WorkerBackend, FaultPlan, TransportKind};
 use repro::costmodel::calib;
 use repro::mesh::build_local_blocks;
 use repro::mesh::geometry::{discontinuous_brick, two_tree_geometry, unit_cube_geometry};
@@ -44,11 +44,22 @@ COMMANDS
                 [--transport inproc|shm|socket]
                 --rust-ref | --parallel [--threads N]  [--pin-cores]
                 --two-tree  --sync-per-step
+                [--kill-node N@S[:crash|silent|stall][,...]]
+                [--join-node [N]@S[,...]]  [--spare-nodes K]
+                [--checkpoint-every C]  [--seed S]  [--drop-prob P]
+                [--delay-us U]  [--stage-deadline-ms D]  [--verify-oracle]
               (--no-level1 restricts rebalancing to the in-node CPU/MIC
               split; default also re-splices the level-1 chunks across
               nodes from measured rates. --transport picks the message
               fabric: in-process channels, shared-memory rings, or Unix
-              sockets on the inter-node lanes)
+              sockets on the inter-node lanes. --kill-node injects a
+              deterministic node death at step S; recovery rewinds to the
+              last --checkpoint-every q-snapshot and resplices the dead
+              chunk across the survivors. --join-node brings a spare node
+              online at step S — reserve spares with --spare-nodes
+              (defaults to the number of joins). --verify-oracle checks
+              the final field against the single-block scalar driver,
+              max diff <= 1e-6)
   serve       co-schedule independent simulations (a scenario sweep) over
               one shared worker pool carved into slices
                 --jobs examples/serve_smoke.json
@@ -142,12 +153,37 @@ fn main() -> repro::Result<()> {
         "cluster" => {
             let a = Args::parse(
                 rest,
-                &["rust-ref", "parallel", "two-tree", "sync-per-step", "no-level1", "pin-cores"],
+                &[
+                    "rust-ref",
+                    "parallel",
+                    "two-tree",
+                    "sync-per-step",
+                    "no-level1",
+                    "pin-cores",
+                    "verify-oracle",
+                ],
             );
             let transport = match a.kv.get("transport") {
                 Some(v) => v.parse::<TransportKind>()?,
                 None => TransportKind::InProc,
             };
+            let mut faults = FaultPlan {
+                seed: a.get("seed", 0u64),
+                drop_prob: a.get("drop-prob", 0.0f64),
+                delay_us: a.get("delay-us", 0u64),
+                ..FaultPlan::default()
+            };
+            if let Some(spec) = a.kv.get("kill-node") {
+                for tok in spec.split(',') {
+                    faults.kills.push(tok.trim().parse()?);
+                }
+            }
+            if let Some(spec) = a.kv.get("join-node") {
+                for tok in spec.split(',') {
+                    faults.joins.push(tok.trim().parse()?);
+                }
+            }
+            let spare_default = faults.joins.len();
             run_cluster(
                 a.get("n", 6),
                 a.get("order", 2),
@@ -161,6 +197,11 @@ fn main() -> repro::Result<()> {
                 a.flag("two-tree"),
                 !a.flag("sync-per-step"),
                 a.flag("pin-cores"),
+                faults,
+                a.get("spare-nodes", spare_default),
+                a.get_opt::<usize>("checkpoint-every"),
+                a.get_opt::<u64>("stage-deadline-ms"),
+                a.flag("verify-oracle"),
             )
         }
         "serve" => {
@@ -394,7 +435,8 @@ fn run_solve(
 }
 
 /// The full two-level scheme live: P virtual nodes on the message fabric,
-/// optional adaptive rebalancing, per-worker phase table at the end.
+/// optional adaptive rebalancing and fault injection, per-worker phase
+/// table at the end.
 #[allow(clippy::too_many_arguments)]
 fn run_cluster(
     n: usize,
@@ -409,11 +451,18 @@ fn run_cluster(
     two_tree: bool,
     exchange_every_stage: bool,
     pin_cores: bool,
+    faults: FaultPlan,
+    spare_nodes: usize,
+    checkpoint_every: Option<usize>,
+    stage_deadline_ms: Option<u64>,
+    verify_oracle: bool,
 ) -> repro::Result<()> {
     use repro::coordinator::cluster::{ClusterRun, ClusterSpec};
     use repro::coordinator::profile::render_phase_table;
 
     let mesh = if two_tree { two_tree_geometry(n) } else { unit_cube_geometry(n) };
+    let faults_armed = faults.is_armed();
+    let drop_prob = faults.drop_prob;
     let mut spec = ClusterSpec::new(nodes, order);
     spec.mic_fraction = mic_fraction;
     spec.rebalance_every = rebalance_every;
@@ -423,6 +472,12 @@ fn run_cluster(
     spec.mic_backend = backend;
     spec.exchange_every_stage = exchange_every_stage;
     spec.pin_cores = pin_cores;
+    spec.faults = faults;
+    spec.spare_nodes = spare_nodes;
+    spec.checkpoint_every = checkpoint_every;
+    if let Some(ms) = stage_deadline_ms {
+        spec.stage_deadline = Some(std::time::Duration::from_millis(ms));
+    }
 
     let cmax = mesh.elements.iter().map(|e| e.material.cp()).fold(0.0f32, f32::max);
     let hmin =
@@ -431,10 +486,15 @@ fn run_cluster(
     let w = std::f64::consts::PI * 3f64.sqrt();
     let mut run = ClusterRun::launch(&mesh, &spec, |x| standing_wave(x, 0.0, 1.0, 1.0, w))?;
     println!(
-        "cluster: {} elements over {nodes} node(s) = {} workers, order {order}, dt {dt:.2e}, \
-         transport {}",
+        "cluster: {} elements over {nodes} node(s) = {} workers{}, order {order}, \
+         dt {dt:.2e}, transport {}",
         mesh.len(),
         2 * nodes,
+        if spare_nodes > 0 {
+            format!(" (+{spare_nodes} spare node(s))")
+        } else {
+            String::new()
+        },
         run.transport().label()
     );
     for (nd, &(kc, km)) in run.node_counts().iter().enumerate() {
@@ -450,12 +510,12 @@ fn run_cluster(
         wall * 1e3 / steps as f64,
         e1 / e0
     );
+    let t = repro::coordinator::rebalance::RebalanceTotals::of(&run.rebalance_history);
     if rebalance_every.is_some() {
         println!("after rebalancing:");
         for (nd, &(kc, km)) in run.node_counts().iter().enumerate() {
             println!("  node {nd}: k_cpu {kc} k_mic {km}");
         }
-        let t = repro::coordinator::rebalance::RebalanceTotals::of(&run.rebalance_history);
         println!(
             "rebalance: {} call(s), level-1 migrated {} elem(s), level-2 migrated \
              {} elem(s); rebuilt {} worker backend(s), kept {} alive; \
@@ -469,6 +529,36 @@ fn run_cluster(
             if level1_rebalance { "on" } else { "off" },
         );
     }
+    if faults_armed || t.recoveries + t.joins > 0 {
+        println!(
+            "fault tolerance: {} recovery(ies) replaying {} step(s) in {:.1} ms, {} join(s)",
+            t.recoveries,
+            t.replayed_steps,
+            t.recovery_wall_s * 1e3,
+            t.joins,
+        );
+        println!("final membership:");
+        let counts = run.node_counts();
+        for (nd, (&alive, &(kc, km))) in run.node_active().iter().zip(counts.iter()).enumerate() {
+            println!("  node {nd}: k_cpu {kc} k_mic {km}{}", if alive { "" } else { " (down)" });
+        }
+    }
+    if verify_oracle {
+        anyhow::ensure!(
+            drop_prob == 0.0,
+            "--verify-oracle needs --drop-prob 0: message drops change the numerics"
+        );
+        let reference = scalar_oracle(&mesh, order, dt, steps)?;
+        let got = run.gather_elements()?;
+        let mut diff = 0.0f32;
+        for (ea, eb) in reference.iter().zip(&got) {
+            for (&x, &y) in ea.iter().zip(eb) {
+                diff = diff.max((x - y).abs());
+            }
+        }
+        anyhow::ensure!(diff <= 1e-6, "cluster vs scalar oracle diff {diff} > 1e-6");
+        println!("oracle check: max |cluster - scalar| = {diff:.2e} (<= 1e-6)");
+    }
     let f = run.fabric();
     let (self_b, intra, inter) = f.lane_bytes_per_stage(order);
     println!(
@@ -479,6 +569,36 @@ fn run_cluster(
     );
     print!("{}", render_phase_table(&run.worker_summaries(), &run.worker_times()?));
     Ok(())
+}
+
+/// The recovery oracle: one block, one scalar backend, the plain driver —
+/// per-element final q in global Morton order, same IC as `run_cluster`.
+fn scalar_oracle(
+    mesh: &repro::mesh::Mesh,
+    order: usize,
+    dt: f64,
+    steps: usize,
+) -> repro::Result<Vec<Vec<f32>>> {
+    use repro::solver::driver::{Driver, RustRefBackend, StageBackend};
+    let owners = vec![0usize; mesh.len()];
+    let (lblocks, plan) = build_local_blocks(mesh, &owners, 1);
+    let basis = LglBasis::new(order);
+    let mut st = BlockState::from_local_block(
+        &lblocks[0],
+        order,
+        lblocks[0].len(),
+        lblocks[0].halo_len.max(1),
+    );
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    st.set_initial_condition(&basis, |x| standing_wave(x, 0.0, 1.0, 1.0, w));
+    let backends: Vec<Box<dyn StageBackend>> = vec![Box::new(RustRefBackend::new(order))];
+    let mut drv = Driver::new(vec![st], plan, backends, order);
+    drv.prime();
+    drv.run(dt, steps)?;
+    let m = order + 1;
+    let esz = 9 * m * m * m;
+    let st = &drv.blocks[0];
+    Ok((0..mesh.len()).map(|e| st.q[e * esz..(e + 1) * esz].to_vec()).collect())
 }
 
 /// The scenario-sweep driver: run the batch concurrently over the sliced

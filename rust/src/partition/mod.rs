@@ -23,5 +23,7 @@ pub use nested::{
     migration_diff, nested_partition, nested_partition_fractions, owner_migration, DeviceKind,
     NestedPartition, OwnerMigration,
 };
-pub use splice::{splice, splice_counts, splice_weighted, Partition};
+pub use splice::{
+    splice, splice_counts, splice_weighted, splice_weighted_excluding, Partition,
+};
 pub use stats::{partition_stats, PartitionStats};

@@ -119,6 +119,23 @@ pub fn splice_weighted(weights: &[f64], nparts: usize) -> Partition {
     Partition { assignment, nparts }
 }
 
+/// Weighted splice over the *active* subset of a degraded membership:
+/// splice across the live parts only, then remap chunk indices back to the
+/// caller's part ids so inactive (dead or not-yet-joined spare) parts end
+/// up with zero elements. This is the recovery/elastic form of
+/// [`splice_weighted`] — that function guarantees every part at least one
+/// element, which would re-feed a dead node.
+pub fn splice_weighted_excluding(weights: &[f64], nparts: usize, active: &[bool]) -> Partition {
+    assert_eq!(active.len(), nparts, "active mask must cover all parts");
+    let live: Vec<usize> = (0..nparts).filter(|&p| active[p]).collect();
+    assert!(!live.is_empty(), "cannot splice with zero active parts");
+    let inner = splice_weighted(weights, live.len());
+    Partition {
+        assignment: inner.assignment.iter().map(|&p| live[p]).collect(),
+        nparts,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,6 +199,23 @@ mod tests {
             }
         }
         n / 2
+    }
+
+    #[test]
+    fn excluding_splice_starves_inactive_parts() {
+        let weights = vec![1.0; 30];
+        let p = splice_weighted_excluding(&weights, 4, &[true, false, true, true]);
+        let sizes = p.sizes();
+        assert_eq!(p.nparts, 4);
+        assert_eq!(sizes[1], 0, "dead part must receive nothing: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), 30);
+        for &p in [0usize, 2, 3].iter() {
+            assert!(sizes[p] >= 9, "live parts share evenly: {sizes:?}");
+        }
+        // contiguity is preserved over live parts
+        for w in p.assignment.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use std::collections::HashMap;
 
+use crate::coordinator::fault::{FaultPlan, KillMode};
 use crate::costmodel::kernels::{element_state_bytes, PaperKernel, ALL_KERNELS};
 use crate::costmodel::pci::Direction;
 use crate::costmodel::DeviceModel;
@@ -26,6 +27,7 @@ use crate::partition::{
 };
 use crate::sim::events::{EventKind, EventQueue};
 use crate::sim::topology::Cluster;
+use crate::util::Rng;
 
 /// Execution scheme under simulation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -344,6 +346,193 @@ pub fn simulate_parts(
     }
 }
 
+/// Outcome of an elastic-membership simulation ([`simulate_elastic`]).
+#[derive(Debug, Clone)]
+pub struct ElasticSimReport {
+    pub scheme: &'static str,
+    pub steps: usize,
+    /// Wall seconds including degraded epochs, detection and recovery.
+    pub wall_s: f64,
+    /// The same workload on the initial membership with no faults — the
+    /// denominator for fault-tolerance overhead.
+    pub baseline_wall_s: f64,
+    /// Seconds between each node death and the coordinator noticing
+    /// (deadline-bounded, kill-mode dependent).
+    pub detect_s: f64,
+    /// Seconds spent resplicing state and replaying checkpointed steps.
+    pub recover_s: f64,
+    /// Timesteps re-executed from the last q-snapshot across all failures.
+    pub replayed_steps: usize,
+    pub failures: usize,
+    pub joins: usize,
+    /// Live nodes when the run finished (0 = every node died).
+    pub final_nodes: usize,
+}
+
+/// Per-step wall for a healthy epoch over `live` nodes, memoized —
+/// epochs before/after membership changes revisit the same sizes, and
+/// [`simulate`] is linear in steps (`wall_time_linear_in_steps`).
+fn epoch_step_s(
+    cache: &mut HashMap<usize, f64>,
+    cluster: &Cluster,
+    mesh: &Mesh,
+    order: usize,
+    scheme: Scheme,
+    live: usize,
+) -> f64 {
+    *cache.entry(live).or_insert_with(|| {
+        let sub = Cluster::custom(live, cluster.node_model.clone(), cluster.network.clone());
+        simulate(&sub, mesh, order, 1, scheme).wall_s
+    })
+}
+
+/// Simulate a run whose membership changes mid-flight: nodes die at the
+/// steps a [`FaultPlan`] dictates and spares join where it says, with the
+/// coordinator's detect/checkpoint/recover cycle priced on the critical
+/// path. The mirror of the live runtime's recovery-as-rebalance story:
+///
+/// * each join in the plan holds one node of `cluster` back as a spare,
+///   so the initial membership is `cluster.nodes - joins`;
+/// * a kill removes a node's chunk: detection costs about one step
+///   (bounded by the stage deadline — fast for a `Silent` kill, deadline +
+///   grace for a `Stall`), then its elements resplice across survivors
+///   over the network and the run replays from the last q-snapshot
+///   (every `checkpoint_every` steps) at the degraded rate;
+/// * a join sheds elements onto the newcomer at a step boundary —
+///   migration cost only, no replay.
+///
+/// Deterministic in `faults.seed`: the only randomness is the detection
+/// jitter, drawn from the plan's own RNG.
+pub fn simulate_elastic(
+    cluster: &Cluster,
+    mesh: &Mesh,
+    order: usize,
+    steps: usize,
+    scheme: Scheme,
+    faults: &FaultPlan,
+    checkpoint_every: usize,
+) -> ElasticSimReport {
+    let total = cluster.nodes;
+    let spares = faults.joins.len().min(total.saturating_sub(1));
+    let initial = total - spares;
+    let every = checkpoint_every.max(1);
+    let mut rng = Rng::seed_from_u64(faults.seed);
+    let mut cache: HashMap<usize, f64> = HashMap::new();
+
+    // Membership timeline through the event queue for deterministic
+    // ordering; joins first on ties — the live runtime admits pending
+    // joins at the step boundary before a mid-step failure can fire.
+    let mut q = EventQueue::new();
+    for j in &faults.joins {
+        if j.step < steps {
+            q.schedule(
+                j.step as f64,
+                EventKind::NodeJoined { node: j.node.unwrap_or(usize::MAX) },
+            );
+        }
+    }
+    let mut mode_of: HashMap<usize, KillMode> = HashMap::new();
+    for k in &faults.kills {
+        if k.step < steps && k.node < total {
+            q.schedule(k.step as f64, EventKind::NodeFailed { node: k.node });
+            mode_of.insert(k.node, k.mode);
+        }
+    }
+
+    let mut active: Vec<bool> = (0..total).map(|nd| nd < initial).collect();
+    let mut wall = 0.0;
+    let mut detect_s = 0.0;
+    let mut recover_s = 0.0;
+    let mut replayed = 0usize;
+    let mut failures = 0usize;
+    let mut joins = 0usize;
+    let mut cur = 0usize; // next step to price
+
+    while let Some(ev) = q.next() {
+        let at = (ev.time as usize).min(steps);
+        let live = active.iter().filter(|&&a| a).count();
+        if at > cur {
+            wall += (at - cur) as f64
+                * epoch_step_s(&mut cache, cluster, mesh, order, scheme, live);
+            cur = at;
+        }
+        match ev.kind {
+            EventKind::NodeFailed { node } => {
+                if !active[node] {
+                    continue; // already down (or was never admitted)
+                }
+                active[node] = false;
+                failures += 1;
+                let survivors = live - 1;
+                // a silent drop trips the disconnect path within a recv
+                // tick; a crash surfaces its sentinel at stage end; a
+                // stall only expires the stage deadline plus grace
+                let factor = match mode_of.get(&node) {
+                    Some(KillMode::Silent) => 0.25,
+                    Some(KillMode::Stall) => 1.5,
+                    _ => 1.0,
+                };
+                detect_s += epoch_step_s(&mut cache, cluster, mesh, order, scheme, live)
+                    * factor
+                    * (1.0 + 0.5 * rng.uniform());
+                if survivors == 0 {
+                    break; // nobody left to recover onto
+                }
+                // recovery = resplice the dead chunk over the network +
+                // replay from the last q-snapshot at the degraded rate
+                let k_moved = mesh.len().div_ceil(live);
+                let bytes = k_moved * element_state_bytes(order);
+                let replay = cur % every;
+                recover_s += cluster.network.alpha_s
+                    + bytes as f64 / cluster.network.beta_bytes_per_s
+                    + replay as f64
+                        * epoch_step_s(&mut cache, cluster, mesh, order, scheme, survivors);
+                replayed += replay;
+            }
+            EventKind::NodeJoined { node } => {
+                let nd = if node == usize::MAX {
+                    active.iter().position(|&a| !a)
+                } else if node < total && !active[node] {
+                    Some(node)
+                } else {
+                    None
+                };
+                let Some(nd) = nd else { continue };
+                active[nd] = true;
+                joins += 1;
+                // step-boundary migration: the newcomer's share of live
+                // state crosses the network once
+                let k_moved = mesh.len() / (live + 1);
+                let bytes = k_moved * element_state_bytes(order);
+                recover_s += cluster.network.alpha_s
+                    + bytes as f64 / cluster.network.beta_bytes_per_s;
+            }
+            _ => {}
+        }
+    }
+
+    let live = active.iter().filter(|&&a| a).count();
+    if live > 0 && cur < steps {
+        wall += (steps - cur) as f64
+            * epoch_step_s(&mut cache, cluster, mesh, order, scheme, live);
+    }
+    let baseline = steps as f64
+        * epoch_step_s(&mut cache, cluster, mesh, order, scheme, initial.max(1));
+
+    ElasticSimReport {
+        scheme: scheme.name(),
+        steps,
+        wall_s: wall + detect_s + recover_s,
+        baseline_wall_s: baseline,
+        detect_s,
+        recover_s,
+        replayed_steps: replayed,
+        failures,
+        joins,
+        final_nodes: live,
+    }
+}
+
 /// Event-driven execution of one step: device compute in parallel per
 /// node, then PCI sync, then the network exchange; the step completes when
 /// every node is done (bulk-synchronous neighbor exchange).
@@ -380,6 +569,7 @@ fn simulate_one_step(per_node: &[NodeStep]) -> (f64, f64, f64) {
                     break;
                 }
             }
+            EventKind::NodeFailed { .. } | EventKind::NodeJoined { .. } => {}
             EventKind::Marker(_) => {}
         }
     }
@@ -572,6 +762,89 @@ mod tests {
     fn stampede_pci_floor() -> f64 {
         // zero faces still pay two latency hits in step_exchange_time
         2.0 * crate::costmodel::calib::stampede_pci().latency_s
+    }
+
+    #[test]
+    fn elastic_kill_costs_wall_and_replays() {
+        let c = Cluster::stampede(2);
+        let m = small_mesh();
+        let plan = FaultPlan {
+            seed: 11,
+            kills: vec![crate::coordinator::fault::KillSpec {
+                node: 1,
+                step: 5,
+                mode: KillMode::Crash,
+            }],
+            ..FaultPlan::default()
+        };
+        let rep =
+            simulate_elastic(&c, &m, 7, 10, Scheme::Nested { mic_fraction: Some(0.2) }, &plan, 2);
+        assert_eq!(rep.failures, 1);
+        assert_eq!(rep.final_nodes, 1);
+        // kill at step 5, snapshots every 2 steps -> replay 1 step
+        assert_eq!(rep.replayed_steps, 1);
+        assert!(rep.detect_s > 0.0 && rep.recover_s > 0.0);
+        assert!(
+            rep.wall_s > rep.baseline_wall_s,
+            "faulty {} baseline {}",
+            rep.wall_s,
+            rep.baseline_wall_s
+        );
+    }
+
+    #[test]
+    fn elastic_join_beats_staying_degraded() {
+        let c = Cluster::stampede(2);
+        let m = small_mesh();
+        let plan = FaultPlan {
+            seed: 3,
+            joins: vec![crate::coordinator::fault::JoinSpec { node: None, step: 2 }],
+            ..FaultPlan::default()
+        };
+        let rep =
+            simulate_elastic(&c, &m, 7, 10, Scheme::Nested { mic_fraction: Some(0.2) }, &plan, 2);
+        assert_eq!(rep.joins, 1);
+        assert_eq!(rep.final_nodes, 2);
+        assert_eq!(rep.replayed_steps, 0);
+        // the spare is held back, so the baseline is the 1-node run; the
+        // join sheds half the elements after 2 steps and wins
+        assert!(
+            rep.wall_s < rep.baseline_wall_s,
+            "joined {} degraded {}",
+            rep.wall_s,
+            rep.baseline_wall_s
+        );
+    }
+
+    #[test]
+    fn elastic_is_deterministic_in_seed() {
+        let c = Cluster::stampede(4);
+        let m = small_mesh();
+        let mk = |seed| FaultPlan {
+            seed,
+            kills: vec![crate::coordinator::fault::KillSpec {
+                node: 2,
+                step: 3,
+                mode: KillMode::Silent,
+            }],
+            ..FaultPlan::default()
+        };
+        let s = Scheme::Nested { mic_fraction: Some(0.2) };
+        let a = simulate_elastic(&c, &m, 7, 8, s, &mk(42), 2);
+        let b = simulate_elastic(&c, &m, 7, 8, s, &mk(42), 2);
+        assert_eq!(a.wall_s.to_bits(), b.wall_s.to_bits(), "same seed, same wall");
+        let d = simulate_elastic(&c, &m, 7, 8, s, &mk(43), 2);
+        assert_ne!(a.detect_s.to_bits(), d.detect_s.to_bits(), "seed moves the jitter");
+    }
+
+    #[test]
+    fn elastic_without_faults_matches_plain_run() {
+        let c = Cluster::stampede(2);
+        let m = small_mesh();
+        let s = Scheme::Nested { mic_fraction: Some(0.2) };
+        let rep = simulate_elastic(&c, &m, 7, 6, s, &FaultPlan::default(), 2);
+        assert_eq!(rep.failures + rep.joins, 0);
+        assert_eq!(rep.wall_s.to_bits(), rep.baseline_wall_s.to_bits());
     }
 
     #[test]

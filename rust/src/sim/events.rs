@@ -17,6 +17,12 @@ pub enum EventKind {
     PciDone { node: usize },
     /// The inter-node exchange finished for a node.
     MpiDone { node: usize },
+    /// A node died (fault injection): its chunk must be respliced across
+    /// the survivors and the run replayed from the last checkpoint.
+    NodeFailed { node: usize },
+    /// A spare node came online (elastic join): the next rebalance sheds
+    /// elements onto it.
+    NodeJoined { node: usize },
     /// Generic marker.
     Marker(&'static str),
 }

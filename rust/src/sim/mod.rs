@@ -15,6 +15,9 @@ pub mod engine;
 pub mod events;
 pub mod topology;
 
-pub use engine::{simulate, simulate_parts, KernelBreakdown, Scheme, SimReport};
+pub use engine::{
+    simulate, simulate_elastic, simulate_parts, ElasticSimReport, KernelBreakdown, Scheme,
+    SimReport,
+};
 pub use events::{Event, EventKind, EventQueue};
 pub use topology::Cluster;

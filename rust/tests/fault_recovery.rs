@@ -1,0 +1,322 @@
+//! Fault-tolerant cluster runtime, end to end: a seeded `FaultPlan` kills
+//! a chosen node mid-run on every transport, the coordinator detects the
+//! death within bounded time (polling collection + stage deadline — no
+//! run path may hang on a dead worker), recovery resplices the dead
+//! node's elements across the survivors and rewinds to the last
+//! q-snapshot, and the final field still matches the single-block scalar
+//! oracle to 1e-6. Elastic join is the mirror image: a spare node comes
+//! online mid-run and the splice sheds elements onto it, again without
+//! leaving the oracle. Teardown under poison must leave no hung thread
+//! and no leaked transport resources on any lane.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use repro::coordinator::cluster::{ClusterRun, ClusterSpec};
+use repro::coordinator::rebalance::RebalanceCause;
+use repro::coordinator::{ClusterError, FaultPlan, JoinSpec, KillMode, KillSpec, TransportKind};
+use repro::mesh::{build_local_blocks, unit_cube_geometry, Mesh};
+use repro::solver::analytic::standing_wave;
+use repro::solver::driver::{Driver, RustRefBackend, StageBackend};
+use repro::solver::{BlockState, LglBasis};
+
+const KINDS: [TransportKind; 3] =
+    [TransportKind::InProc, TransportKind::Shm, TransportKind::Socket];
+
+fn ic(x: [f64; 3]) -> [f64; 9] {
+    let w = std::f64::consts::PI * 3f64.sqrt();
+    standing_wave(x, 0.0, 1.0, 1.0, w)
+}
+
+/// The oracle: one block, one scalar backend, the plain driver. Returns
+/// per-element q in global Morton order.
+fn scalar_reference(mesh: &Mesh, order: usize, dt: f64, steps: usize) -> Vec<Vec<f32>> {
+    let owners = vec![0usize; mesh.len()];
+    let (lblocks, plan) = build_local_blocks(mesh, &owners, 1);
+    let basis = LglBasis::new(order);
+    let mut st = BlockState::from_local_block(
+        &lblocks[0],
+        order,
+        lblocks[0].len(),
+        lblocks[0].halo_len.max(1),
+    );
+    st.set_initial_condition(&basis, ic);
+    let backends: Vec<Box<dyn StageBackend>> = vec![Box::new(RustRefBackend::new(order))];
+    let mut drv = Driver::new(vec![st], plan, backends, order);
+    drv.prime();
+    drv.run(dt, steps).unwrap();
+    let m = order + 1;
+    let esz = 9 * m * m * m;
+    let st = &drv.blocks[0];
+    (0..mesh.len()).map(|e| st.q[e * esz..(e + 1) * esz].to_vec()).collect()
+}
+
+fn max_diff(a: &[Vec<f32>], b: &[Vec<f32>]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let mut worst = 0.0f32;
+    for (ea, eb) in a.iter().zip(b) {
+        assert_eq!(ea.len(), eb.len());
+        for (&x, &y) in ea.iter().zip(eb) {
+            worst = worst.max((x - y).abs());
+        }
+    }
+    worst
+}
+
+fn faulty_spec(nodes: usize, order: usize, kind: TransportKind, plan: FaultPlan) -> ClusterSpec {
+    let mut spec = ClusterSpec::new(nodes, order);
+    spec.mic_fraction = Some(0.2);
+    spec.transport = kind;
+    spec.faults = plan;
+    spec
+}
+
+/// The tentpole path on every transport: node 1 crashes at step 5 of 8,
+/// snapshots run every 2 steps, so recovery rewinds exactly 1 completed
+/// step, resplices node 1's chunk over node 0, and the finished run still
+/// matches the scalar oracle.
+#[test]
+fn crash_kill_recovers_on_every_transport() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4); // 64 elements
+    let dt = 1e-3;
+    let steps = 8;
+    let reference = scalar_reference(&mesh, order, dt, steps);
+    for kind in KINDS {
+        let plan = FaultPlan {
+            seed: 7,
+            kills: vec![KillSpec { node: 1, step: 5, mode: KillMode::Crash }],
+            ..FaultPlan::default()
+        };
+        let mut spec = faulty_spec(2, order, kind, plan);
+        spec.checkpoint_every = Some(2);
+        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+        run.run(dt, steps).unwrap();
+
+        assert_eq!(run.node_active(), &[true, false], "{kind}: node 1 must be down");
+        let counts = run.node_counts();
+        assert_eq!(counts[1], (0, 0), "{kind}: dead node keeps no elements");
+        assert_eq!(counts[0].0 + counts[0].1, mesh.len(), "{kind}: survivor owns everything");
+
+        let rec: Vec<_> = run
+            .rebalance_history
+            .iter()
+            .filter(|r| r.cause == RebalanceCause::Recovery)
+            .collect();
+        assert_eq!(rec.len(), 1, "{kind}: exactly one recovery");
+        assert_eq!(rec[0].replayed_steps, 1, "{kind}: snapshots at 0/2/4 -> replay 1 step");
+        assert!(rec[0].level1_migrated > 0, "{kind}: the dead chunk must move");
+        assert!(run.last_error().is_none(), "{kind}: recovery clears the failure");
+
+        let got = run.gather_elements().unwrap();
+        let diff = max_diff(&reference, &got);
+        assert!(diff <= 1e-6, "{kind}: recovered field vs scalar oracle diff {diff}");
+    }
+}
+
+/// A silent kill (the worker thread vanishes without shipping or
+/// replying) is detected through the hung-up reply channel and recovers
+/// just like a crash.
+#[test]
+fn silent_kill_recovers() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let dt = 1e-3;
+    let steps = 8;
+    let reference = scalar_reference(&mesh, order, dt, steps);
+    let plan = FaultPlan {
+        seed: 5,
+        kills: vec![KillSpec { node: 0, step: 3, mode: KillMode::Silent }],
+        ..FaultPlan::default()
+    };
+    let mut spec = faulty_spec(2, order, TransportKind::InProc, plan);
+    spec.checkpoint_every = Some(2);
+    let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    run.run(dt, steps).unwrap();
+    assert_eq!(run.node_active(), &[false, true]);
+    let rec: Vec<_> = run
+        .rebalance_history
+        .iter()
+        .filter(|r| r.cause == RebalanceCause::Recovery)
+        .collect();
+    assert_eq!(rec.len(), 1);
+    assert_eq!(rec[0].replayed_steps, 1, "kill at 3, snapshots at 0/2 -> replay 1");
+    let got = run.gather_elements().unwrap();
+    let diff = max_diff(&reference, &got);
+    assert!(diff <= 1e-6, "silent-kill recovery vs scalar oracle diff {diff}");
+}
+
+/// A worker that stalls (mute but alive) can only be caught by the stage
+/// deadline; detection must be bounded, the failure typed, and — with no
+/// checkpoint configured — the run must surface the error instead of
+/// recovering, refuse further steps, and still tear down cleanly.
+#[test]
+fn stall_is_caught_by_the_stage_deadline() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let dt = 1e-3;
+    let plan = FaultPlan {
+        seed: 1,
+        kills: vec![KillSpec { node: 0, step: 2, mode: KillMode::Stall }],
+        ..FaultPlan::default()
+    };
+    let mut spec = faulty_spec(2, order, TransportKind::InProc, plan);
+    spec.stage_deadline = Some(Duration::from_millis(300));
+    // no checkpoint_every: the failure is detected but not recoverable
+    let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    let t0 = Instant::now();
+    let err = run.run(dt, 6).expect_err("a stalled node without checkpoints is fatal");
+    let detected = t0.elapsed();
+    // deadline 300ms + the fixed 5s post-halt grace, with slack for CI
+    assert!(detected < Duration::from_secs(60), "detection took {detected:?}");
+    assert!(err.to_string().contains("node failure"), "{err}");
+    match run.last_error() {
+        Some(ClusterError::NodeFailure { nodes, step, .. }) => {
+            assert_eq!(nodes, &[0]);
+            assert_eq!(*step, 2);
+        }
+        other => panic!("expected a typed NodeFailure, got {other:?}"),
+    }
+    assert!(!run.can_recover(), "no checkpoint -> not recoverable");
+    let again = run.step(dt).expect_err("degraded run must refuse to step");
+    assert!(again.to_string().contains("degraded"), "{again}");
+    drop(run); // must join the stalled (but Shutdown-honoring) thread
+}
+
+/// Elastic membership: a spare node held back at launch joins at step 3
+/// and the splice sheds elements onto it; the result still matches the
+/// oracle because joins migrate live state at a step boundary.
+#[test]
+fn elastic_join_sheds_elements_onto_the_spare() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let dt = 1e-3;
+    let steps = 6;
+    let reference = scalar_reference(&mesh, order, dt, steps);
+    for kind in [TransportKind::InProc, TransportKind::Socket] {
+        let plan = FaultPlan {
+            seed: 2,
+            joins: vec![JoinSpec { node: None, step: 3 }],
+            ..FaultPlan::default()
+        };
+        let mut spec = faulty_spec(2, order, kind, plan);
+        spec.spare_nodes = 1;
+        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+        assert_eq!(run.node_active(), &[true, true, false], "{kind}: spare starts inactive");
+        run.run(dt, steps).unwrap();
+        assert_eq!(run.node_active(), &[true, true, true], "{kind}: spare joined");
+        let counts = run.node_counts();
+        assert!(counts[2].0 + counts[2].1 > 0, "{kind}: join must shed elements: {counts:?}");
+        let joins: Vec<_> = run
+            .rebalance_history
+            .iter()
+            .filter(|r| r.cause == RebalanceCause::Join)
+            .collect();
+        assert_eq!(joins.len(), 1, "{kind}");
+        assert!(joins[0].level1_migrated > 0, "{kind}");
+        let got = run.gather_elements().unwrap();
+        let diff = max_diff(&reference, &got);
+        assert!(diff <= 1e-6, "{kind}: post-join field vs scalar oracle diff {diff}");
+    }
+}
+
+/// A crash with no checkpoint surfaces a typed, recoverable=false path
+/// fast (sentinel reply, no deadline involved) and never hangs.
+#[test]
+fn crash_without_checkpoint_is_fatal_but_fast() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let dt = 1e-3;
+    let plan = FaultPlan {
+        seed: 3,
+        kills: vec![KillSpec { node: 1, step: 2, mode: KillMode::Crash }],
+        ..FaultPlan::default()
+    };
+    let spec = faulty_spec(2, order, TransportKind::Shm, plan);
+    let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+    let t0 = Instant::now();
+    run.run(dt, 6).expect_err("no checkpoint -> the kill is fatal");
+    assert!(t0.elapsed() < Duration::from_secs(30));
+    assert!(matches!(run.last_error(), Some(ClusterError::NodeFailure { .. })));
+    assert!(!run.can_recover());
+}
+
+/// Teardown under poison across the transport matrix: a side thread
+/// poisons the fabric mid-run (the permanent control flag, distinct from
+/// the clearable recovery halt), the run surfaces an error instead of
+/// hanging, further steps are refused, Drop joins every thread, and the
+/// transport's resources are released (a fresh cluster on the same lane
+/// kind must launch and run).
+#[test]
+fn teardown_under_poison_never_hangs() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let dt = 1e-3;
+    for kind in KINDS {
+        for nodes in [2usize, 4] {
+            let mut spec = ClusterSpec::new(nodes, order);
+            spec.mic_fraction = Some(0.2);
+            spec.transport = kind;
+            let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+            let ctl = run.fabric_ctl();
+            let killer = thread::spawn(move || {
+                thread::sleep(Duration::from_millis(30));
+                ctl.poison();
+            });
+            let res = run.run(dt, 500_000);
+            killer.join().unwrap();
+            assert!(res.is_err(), "{kind} P={nodes}: poisoned run must error");
+            assert!(run.step(dt).is_err(), "{kind} P={nodes}: refuse to step when poisoned");
+            drop(run); // joins all worker threads or the test times out
+
+            // lane resources must be back: relaunch and take real steps
+            let mut spec2 = ClusterSpec::new(nodes, order);
+            spec2.mic_fraction = Some(0.2);
+            spec2.transport = kind;
+            let mut again = ClusterRun::launch(&mesh, &spec2, ic).unwrap();
+            again.run(dt, 2).unwrap();
+        }
+    }
+}
+
+/// Seeded determinism: the same plan (message drops armed) produces a
+/// bitwise-identical field; the drop pattern is a pure function of the
+/// seed, never of thread timing.
+#[test]
+fn same_seed_same_field_under_message_drops() {
+    let order = 2;
+    let mesh = unit_cube_geometry(4);
+    let dt = 1e-3;
+    let steps = 4;
+    let field = |seed: u64| {
+        let plan = FaultPlan { seed, drop_prob: 0.3, ..FaultPlan::default() };
+        let spec = faulty_spec(2, order, TransportKind::InProc, plan);
+        let mut run = ClusterRun::launch(&mesh, &spec, ic).unwrap();
+        run.run(dt, steps).unwrap();
+        run.gather_elements().unwrap()
+    };
+    let a = field(9);
+    let b = field(9);
+    assert_eq!(a.len(), b.len());
+    for (ea, eb) in a.iter().zip(&b) {
+        for (&x, &y) in ea.iter().zip(eb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "same seed must be bitwise identical");
+        }
+    }
+}
+
+/// The spec parser behind `--kill-node` / `--join-node`.
+#[test]
+fn fault_specs_parse_from_cli_syntax() {
+    let k: KillSpec = "1@5".parse().unwrap();
+    assert_eq!(k, KillSpec { node: 1, step: 5, mode: KillMode::Crash });
+    let k: KillSpec = "0@9:silent".parse().unwrap();
+    assert_eq!(k.mode, KillMode::Silent);
+    let k: KillSpec = "2@4:stall".parse().unwrap();
+    assert_eq!(k.mode, KillMode::Stall);
+    assert!("nope".parse::<KillSpec>().is_err());
+    let j: JoinSpec = "@3".parse().unwrap();
+    assert_eq!(j, JoinSpec { node: None, step: 3 });
+    let j: JoinSpec = "4@3".parse().unwrap();
+    assert_eq!(j, JoinSpec { node: Some(4), step: 3 });
+}
