@@ -1,0 +1,22 @@
+//! Static analysis over cluster plans — checks that run *without*
+//! launching anything.
+//!
+//! [`plan_check`] walks a [`ClusterSpec`](crate::coordinator::ClusterSpec)
+//! (and the `ExchangePlan` the launch sequence would build from it) and
+//! reports typed diagnostics: ownership disjointness/exhaustiveness,
+//! route-table symmetry, the paper's §5.5 accelerator-silence constraint,
+//! checkpoint-interval vs kill-step feasibility, and serve slice-budget
+//! sanity. The same checks back three surfaces:
+//!
+//! * `repro check` — the CLI front end, machine-readable JSON-line output;
+//! * [`ClusterRun::launch`](crate::coordinator::ClusterRun::launch) — its
+//!   plan-shape refusals are these diagnostics rendered as errors, plus a
+//!   debug-build deep preflight over the built blocks;
+//! * unit tests pinning each rejection to a distinct [`plan_check::DiagCode`].
+//!
+//! CORRECTNESS.md describes how this layer fits next to the loom model
+//! suite and the Miri/TSan CI lanes.
+
+pub mod plan_check;
+
+pub use plan_check::{DiagCode, PlanCheckError, PlanDiag, PlanReport, Severity};

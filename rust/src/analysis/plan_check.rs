@@ -1,0 +1,710 @@
+//! Static plan checker: typed diagnostics over a cluster plan, computed
+//! without launching a single thread.
+//!
+//! The checker mirrors [`ClusterRun::launch`]'s construction sequence
+//! (level-1 splice → MIC-fraction solve → nested level-2 split → local
+//! blocks + exchange plan) and then audits the result:
+//!
+//! * **ownership** — every mesh element is owned by exactly one block
+//!   (disjoint and exhaustive), and every id is in range;
+//! * **route symmetry** — each pair of owners exchanges the same number
+//!   of halo faces in both directions (a shared face produces one trace
+//!   copy each way), and every copy's indices are in range;
+//! * **§5.5 accelerator silence** — no halo face may route between an
+//!   accelerator worker and another node (the paper's interior-only
+//!   constraint; accelerators talk only to their own node's CPU);
+//! * **fault feasibility** — a [`FaultPlan`] kill is only recoverable if
+//!   checkpointing is on (`run()` snapshots at step 0 and every
+//!   `checkpoint_every` steps, so *any* armed checkpoint interval makes
+//!   every kill step recoverable — the infeasible case is exactly a kill
+//!   with `checkpoint_every: None`);
+//! * **serve slice budgets** — slice lane counts and per-job node counts
+//!   that the scheduler could actually place.
+//!
+//! Severity is two-level: `Error` is a plan the runtime would refuse (or
+//! corrupt on), `Warning` is legal-but-lossy (e.g. an unrecoverable kill
+//! — `rust/tests/fault_recovery.rs` launches one on purpose to observe
+//! the typed failure). `strict` mode — what `repro check` uses —
+//! escalates the feasibility warnings to errors.
+//!
+//! Diagnostics are machine-readable: [`PlanDiag::to_json_line`] emits one
+//! JSON object per line (`{"severity":..,"code":..,"message":..}`), and
+//! [`DiagCode`] is a closed enum tests can match on. See CORRECTNESS.md
+//! for how this static layer complements the loom/Miri/TSan dynamic
+//! layers.
+//!
+//! [`ClusterRun::launch`]: crate::coordinator::ClusterRun::launch
+//! [`FaultPlan`]: crate::coordinator::FaultPlan
+
+use crate::coordinator::cluster::ClusterSpec;
+use crate::coordinator::serve::ServeSpec;
+use crate::costmodel::calib;
+use crate::mesh::{build_local_blocks, ExchangePlan, LocalBlock, Mesh};
+use crate::partition::{nested_partition_fractions, solve_mic_fraction, splice, Partition};
+
+// ---------------------------------------------------------------------------
+// diagnostic types
+// ---------------------------------------------------------------------------
+
+/// How bad a finding is: `Error` = the runtime would refuse or misbehave,
+/// `Warning` = legal but probably not what the operator meant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Closed set of diagnostic codes — tests and tooling match on these
+/// instead of message substrings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DiagCode {
+    /// Mesh has fewer elements than requested level-1 chunks.
+    MeshSmallerThanNodes,
+    /// A kill targets a node outside the initially-active range.
+    KillTargetsUnknownNode,
+    /// A pinned join targets a node that is not a provisioned spare.
+    JoinTargetsNonSpare,
+    /// An unpinned join exists but no spare nodes are provisioned.
+    JoinNeedsSpare,
+    /// Explicit MIC fraction outside `[0, 1]`.
+    MicFractionOutOfRange,
+    /// `node_backends` length matches neither `nodes` nor `nodes + spares`.
+    NodeBackendsLengthMismatch,
+    /// A kill is scheduled but `checkpoint_every` is unset, so the kill
+    /// precedes any checkpoint and the failure is unrecoverable.
+    KillWithoutCheckpoint,
+    /// `checkpoint_every == 0`: only the step-0 snapshot is ever taken.
+    CheckpointIntervalZero,
+    /// A mesh element appears in more than one owner's block.
+    OverlappingOwnership,
+    /// A mesh element appears in no owner's block.
+    UnownedElement,
+    /// A block claims a global element id outside the mesh.
+    ElementIdOutOfRange,
+    /// Owner pair exchanging unequal face counts in the two directions.
+    AsymmetricRoute,
+    /// An exchange copy indexes outside its source block or halo buffer.
+    RouteOutOfRange,
+    /// A halo face routes between an accelerator worker and another node
+    /// (violates the paper's §5.5 interior-only constraint).
+    AcceleratorOnInterNodeLane,
+    /// Serve spec has no slices (or a slice with zero lanes).
+    EmptySliceBudget,
+    /// Serve slices request more lanes than the machine has threads.
+    SliceOversubscribed,
+    /// A serve job's mesh has fewer elements than its cluster nodes.
+    JobMeshSmallerThanNodes,
+}
+
+impl DiagCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DiagCode::MeshSmallerThanNodes => "mesh-smaller-than-nodes",
+            DiagCode::KillTargetsUnknownNode => "kill-targets-unknown-node",
+            DiagCode::JoinTargetsNonSpare => "join-targets-non-spare",
+            DiagCode::JoinNeedsSpare => "join-needs-spare",
+            DiagCode::MicFractionOutOfRange => "mic-fraction-out-of-range",
+            DiagCode::NodeBackendsLengthMismatch => "node-backends-length-mismatch",
+            DiagCode::KillWithoutCheckpoint => "kill-without-checkpoint",
+            DiagCode::CheckpointIntervalZero => "checkpoint-interval-zero",
+            DiagCode::OverlappingOwnership => "overlapping-ownership",
+            DiagCode::UnownedElement => "unowned-element",
+            DiagCode::ElementIdOutOfRange => "element-id-out-of-range",
+            DiagCode::AsymmetricRoute => "asymmetric-route",
+            DiagCode::RouteOutOfRange => "route-out-of-range",
+            DiagCode::AcceleratorOnInterNodeLane => "accelerator-on-inter-node-lane",
+            DiagCode::EmptySliceBudget => "empty-slice-budget",
+            DiagCode::SliceOversubscribed => "slice-oversubscribed",
+            DiagCode::JobMeshSmallerThanNodes => "job-mesh-smaller-than-nodes",
+        }
+    }
+}
+
+/// One finding: severity + typed code + human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanDiag {
+    pub severity: Severity,
+    pub code: DiagCode,
+    pub message: String,
+}
+
+impl PlanDiag {
+    pub fn error(code: DiagCode, message: impl Into<String>) -> PlanDiag {
+        PlanDiag { severity: Severity::Error, code, message: message.into() }
+    }
+
+    pub fn warning(code: DiagCode, message: impl Into<String>) -> PlanDiag {
+        PlanDiag { severity: Severity::Warning, code, message: message.into() }
+    }
+
+    /// One JSON object per diagnostic — the `repro check` wire format.
+    pub fn to_json_line(&self) -> String {
+        format!(
+            "{{\"severity\":\"{}\",\"code\":\"{}\",\"message\":\"{}\"}}",
+            self.severity.as_str(),
+            self.code.as_str(),
+            json_escape(&self.message)
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// All findings from one check pass.
+#[derive(Debug, Clone, Default)]
+pub struct PlanReport {
+    pub diags: Vec<PlanDiag>,
+}
+
+impl PlanReport {
+    pub fn has_errors(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn errors(&self) -> impl Iterator<Item = &PlanDiag> {
+        self.diags.iter().filter(|d| d.severity == Severity::Error)
+    }
+
+    /// First diagnostic with the given code, if any.
+    pub fn find(&self, code: DiagCode) -> Option<&PlanDiag> {
+        self.diags.iter().find(|d| d.code == code)
+    }
+
+    pub fn merge(&mut self, other: PlanReport) {
+        self.diags.extend(other.diags);
+    }
+
+    /// Error messages joined for a one-line refusal.
+    pub fn render_errors(&self) -> String {
+        self.errors().map(|d| d.message.as_str()).collect::<Vec<_>>().join("; ")
+    }
+
+    /// `Ok(self)` when clean of errors, else the typed refusal (which
+    /// converts into `anyhow::Error` via `?`).
+    pub fn into_result(self) -> Result<PlanReport, PlanCheckError> {
+        if self.has_errors() {
+            Err(PlanCheckError { diags: self.diags })
+        } else {
+            Ok(self)
+        }
+    }
+}
+
+/// A plan rejected by the checker. Carries every diagnostic (warnings
+/// included) so callers can render or match; `Display` shows the errors.
+#[derive(Debug, Clone)]
+pub struct PlanCheckError {
+    pub diags: Vec<PlanDiag>,
+}
+
+impl PlanCheckError {
+    pub fn find(&self, code: DiagCode) -> Option<&PlanDiag> {
+        self.diags.iter().find(|d| d.code == code)
+    }
+}
+
+impl std::fmt::Display for PlanCheckError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let msgs: Vec<&str> = self
+            .diags
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .map(|d| d.message.as_str())
+            .collect();
+        write!(f, "{}", msgs.join("; "))
+    }
+}
+
+impl std::error::Error for PlanCheckError {}
+
+// ---------------------------------------------------------------------------
+// spec-shape checks (no mesh walk needed)
+// ---------------------------------------------------------------------------
+
+/// The out-of-range-fraction diagnostic, shared with `launch` (which
+/// checks the *solved* fraction too, not just an explicit override).
+pub fn fraction_diag(frac: f64) -> Option<PlanDiag> {
+    if (0.0..=1.0).contains(&frac) {
+        None
+    } else {
+        Some(PlanDiag::error(
+            DiagCode::MicFractionOutOfRange,
+            format!("MIC fraction {frac} outside [0, 1]"),
+        ))
+    }
+}
+
+/// Shape-check a [`ClusterSpec`] against a mesh of `mesh_len` elements:
+/// everything [`ClusterRun::launch`] would refuse before building blocks,
+/// plus checkpoint-vs-kill feasibility. `strict` escalates the
+/// feasibility warnings to errors (`repro check` mode); `launch` itself
+/// uses `strict = false` so an unrecoverable kill stays launchable (the
+/// fault-injection tests observe exactly that typed failure).
+///
+/// [`ClusterRun::launch`]: crate::coordinator::ClusterRun::launch
+pub fn check_spec(mesh_len: usize, spec: &ClusterSpec, strict: bool) -> PlanReport {
+    let mut rep = PlanReport::default();
+    let nodes = spec.nodes.max(1);
+    let total = nodes + spec.spare_nodes;
+    if mesh_len < nodes {
+        rep.diags.push(PlanDiag::error(
+            DiagCode::MeshSmallerThanNodes,
+            format!("mesh has fewer elements than nodes ({mesh_len} < {nodes})"),
+        ));
+    }
+    for k in &spec.faults.kills {
+        if k.node >= nodes {
+            rep.diags.push(PlanDiag::error(
+                DiagCode::KillTargetsUnknownNode,
+                format!(
+                    "kill plan targets node {}, but only nodes 0..{nodes} start active",
+                    k.node
+                ),
+            ));
+        }
+    }
+    for j in &spec.faults.joins {
+        match j.node {
+            Some(n) if n < nodes || n >= total => {
+                rep.diags.push(PlanDiag::error(
+                    DiagCode::JoinTargetsNonSpare,
+                    format!("join plan targets node {n}; spare nodes are {nodes}..{total}"),
+                ));
+            }
+            None if spec.spare_nodes == 0 => {
+                rep.diags.push(PlanDiag::error(
+                    DiagCode::JoinNeedsSpare,
+                    "join plan needs at least one spare node (ClusterSpec::spare_nodes)"
+                        .to_string(),
+                ));
+            }
+            _ => {}
+        }
+    }
+    if let Some(f) = spec.mic_fraction {
+        rep.diags.extend(fraction_diag(f));
+    }
+    if let Some(nb) = &spec.node_backends {
+        if nb.len() != nodes && nb.len() != total {
+            rep.diags.push(PlanDiag::error(
+                DiagCode::NodeBackendsLengthMismatch,
+                format!(
+                    "node_backends has {} entries for {nodes} nodes (+{} spares)",
+                    nb.len(),
+                    spec.spare_nodes
+                ),
+            ));
+        }
+    }
+    // Feasibility: run() snapshots at step 0 whenever checkpointing is on,
+    // so with any Some(_) interval no kill step can precede the first
+    // checkpoint. The infeasible plan is a kill with checkpointing off.
+    if spec.checkpoint_every.is_none() {
+        if let Some(k) = spec.faults.kills.iter().min_by_key(|k| k.step) {
+            let sev = if strict { Severity::Error } else { Severity::Warning };
+            rep.diags.push(PlanDiag {
+                severity: sev,
+                code: DiagCode::KillWithoutCheckpoint,
+                message: format!(
+                    "kill at step {} precedes the first checkpoint: checkpoint_every is \
+                     unset, so the node failure will be unrecoverable (set \
+                     ClusterSpec::checkpoint_every to snapshot at step 0 and every C steps)",
+                    k.step
+                ),
+            });
+        }
+    } else if spec.checkpoint_every == Some(0) {
+        rep.diags.push(PlanDiag::warning(
+            DiagCode::CheckpointIntervalZero,
+            "checkpoint_every is 0: only the step-0 snapshot is taken, so a late \
+             failure rewinds the whole run"
+                .to_string(),
+        ));
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------------
+// block/plan structural checks
+// ---------------------------------------------------------------------------
+
+/// Structural audit of built blocks + exchange plan: ownership is
+/// disjoint and exhaustive over `mesh_len` elements, route tables are
+/// symmetric, and every copy's indices are in range. Pure invariants of
+/// `build_local_blocks` — `launch` debug-asserts them as a preflight.
+pub fn check_blocks(blocks: &[LocalBlock], plan: &ExchangePlan, mesh_len: usize) -> PlanReport {
+    let mut rep = PlanReport::default();
+    // ownership: exactly-one-owner per element
+    let mut owner_of: Vec<Option<usize>> = vec![None; mesh_len];
+    for blk in blocks {
+        for &g in &blk.global_ids {
+            if g >= mesh_len {
+                rep.diags.push(PlanDiag::error(
+                    DiagCode::ElementIdOutOfRange,
+                    format!(
+                        "owner {} claims element {g}, but the mesh has {mesh_len} elements",
+                        blk.owner
+                    ),
+                ));
+                continue;
+            }
+            match owner_of[g] {
+                Some(prev) => rep.diags.push(PlanDiag::error(
+                    DiagCode::OverlappingOwnership,
+                    format!("element {g} owned by both owner {prev} and owner {}", blk.owner),
+                )),
+                None => owner_of[g] = Some(blk.owner),
+            }
+        }
+    }
+    let unowned = owner_of.iter().filter(|o| o.is_none()).count();
+    if unowned > 0 {
+        let first = owner_of.iter().position(|o| o.is_none()).unwrap();
+        rep.diags.push(PlanDiag::error(
+            DiagCode::UnownedElement,
+            format!("{unowned} mesh element(s) have no owner (first: element {first})"),
+        ));
+    }
+
+    // route ranges + per-ordered-pair face counts
+    let mut pair_faces: std::collections::HashMap<(usize, usize), usize> =
+        std::collections::HashMap::new();
+    for (dst, copies) in plan.copies.iter().enumerate() {
+        for &(src, se, sf, slot) in copies {
+            *pair_faces.entry((src, dst)).or_insert(0) += 1;
+            if src >= blocks.len() || dst >= blocks.len() {
+                rep.diags.push(PlanDiag::error(
+                    DiagCode::RouteOutOfRange,
+                    format!("copy {src}->{dst} references an owner beyond {}", blocks.len()),
+                ));
+                continue;
+            }
+            if se >= blocks[src].len() || sf >= 6 {
+                rep.diags.push(PlanDiag::error(
+                    DiagCode::RouteOutOfRange,
+                    format!(
+                        "copy {src}->{dst} reads element {se} face {sf}, but owner {src} \
+                         has {} element(s)",
+                        blocks[src].len()
+                    ),
+                ));
+            }
+            if slot >= blocks[dst].halo_len {
+                rep.diags.push(PlanDiag::error(
+                    DiagCode::RouteOutOfRange,
+                    format!(
+                        "copy {src}->{dst} writes halo slot {slot}, but owner {dst} has \
+                         {} slot(s)",
+                        blocks[dst].halo_len
+                    ),
+                ));
+            }
+        }
+    }
+    // symmetry: a shared face produces one trace copy in each direction
+    for (&(a, b), &n_ab) in &pair_faces {
+        if a < b {
+            let n_ba = pair_faces.get(&(b, a)).copied().unwrap_or(0);
+            if n_ab != n_ba {
+                rep.diags.push(PlanDiag::error(
+                    DiagCode::AsymmetricRoute,
+                    format!(
+                        "route table asymmetric between owners {a} and {b}: \
+                         {n_ab} face(s) {a}->{b} but {n_ba} face(s) {b}->{a}"
+                    ),
+                ));
+            }
+        } else if a > b && !pair_faces.contains_key(&(b, a)) {
+            rep.diags.push(PlanDiag::error(
+                DiagCode::AsymmetricRoute,
+                format!(
+                    "route table asymmetric between owners {b} and {a}: \
+                     0 face(s) {b}->{a} but {n_ab} face(s) {a}->{b}"
+                ),
+            ));
+        }
+    }
+    rep
+}
+
+/// The §5.5 accelerator-silence audit under the canonical nested owner
+/// layout (`owner = node*2 + device`, device 1 = accelerator): no copy
+/// may connect an accelerator owner to a *different node*. Kept separate
+/// from [`check_blocks`] because a violating plan is a legal data
+/// structure the runtime refuses at fabric-build time with this same
+/// diagnostic — the launch preflight asserts only the structural
+/// invariants and leaves §5.5 to the typed refusal.
+pub fn check_silence(plan: &ExchangePlan) -> PlanReport {
+    let mut rep = PlanReport::default();
+    let mut mic_inter_node = 0usize;
+    for (dst, copies) in plan.copies.iter().enumerate() {
+        for &(src, _, _, _) in copies {
+            let (src_node, dst_node) = (src / 2, dst / 2);
+            if src_node != dst_node && (src % 2 == 1 || dst % 2 == 1) {
+                mic_inter_node += 1;
+            }
+        }
+    }
+    if mic_inter_node > 0 {
+        rep.diags.push(PlanDiag::error(
+            DiagCode::AcceleratorOnInterNodeLane,
+            format!(
+                "{mic_inter_node} halo faces would route between an accelerator worker \
+                 and another node; accelerators never touch the inter-node fabric \
+                 (paper §5.5 interior-only constraint) — fix the nested partition"
+            ),
+        ));
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------------
+// whole-plan + serve checks
+// ---------------------------------------------------------------------------
+
+/// Full static check of a cluster plan: shape-check the spec, then mirror
+/// the launch construction (level-1 splice → fraction solve → nested
+/// level-2 split → blocks + exchange plan) and audit the result — without
+/// spawning a worker or opening a fabric lane.
+pub fn check_cluster(mesh: &Mesh, spec: &ClusterSpec, strict: bool) -> PlanReport {
+    let mut rep = check_spec(mesh.len(), spec, strict);
+    if rep.has_errors() {
+        return rep; // the plan below would be built from refused inputs
+    }
+    let nodes = spec.nodes.max(1);
+    let total = nodes + spec.spare_nodes;
+    let node_part = Partition { assignment: splice(mesh, nodes).assignment, nparts: total };
+    let k_node = (mesh.len() / nodes).max(1);
+    let frac = spec.mic_fraction.unwrap_or_else(|| {
+        let sol = solve_mic_fraction(&calib::stampede_node(), spec.order, k_node);
+        sol.k_mic as f64 / k_node as f64
+    });
+    if let Some(d) = fraction_diag(frac) {
+        rep.diags.push(d);
+        return rep;
+    }
+    let fractions = vec![frac; total];
+    let np = nested_partition_fractions(mesh, &node_part, &fractions);
+    let owners = np.owners();
+    let (lblocks, plan) = build_local_blocks(mesh, &owners, np.n_owners());
+    rep.merge(check_blocks(&lblocks, &plan, mesh.len()));
+    rep.merge(check_silence(&plan));
+    rep
+}
+
+/// Slice-budget sanity for a serve spec: slices exist and have lanes,
+/// the lane total fits the machine, and every job's mesh is at least as
+/// large as its cluster node count (a smaller one fails at job launch).
+pub fn check_serve(spec: &ServeSpec, _strict: bool) -> PlanReport {
+    let mut rep = PlanReport::default();
+    if spec.slices.is_empty() {
+        rep.diags.push(PlanDiag::error(
+            DiagCode::EmptySliceBudget,
+            "serve spec has no slices — the scheduler needs at least one".to_string(),
+        ));
+    }
+    for (i, &lanes) in spec.slices.iter().enumerate() {
+        if lanes == 0 {
+            rep.diags.push(PlanDiag::warning(
+                DiagCode::EmptySliceBudget,
+                format!("slice {i} has 0 lanes; the scheduler floors it to 1"),
+            ));
+        }
+    }
+    let total: usize = spec.slices.iter().map(|&l| l.max(1)).sum();
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if total > hw {
+        rep.diags.push(PlanDiag::warning(
+            DiagCode::SliceOversubscribed,
+            format!("slices request {total} lanes on a {hw}-thread machine"),
+        ));
+    }
+    for job in &spec.jobs {
+        if job.nodes >= 2 && job.elems() < job.nodes {
+            rep.diags.push(PlanDiag::error(
+                DiagCode::JobMeshSmallerThanNodes,
+                format!(
+                    "job {:?}: mesh has {} element(s) but asks for {} cluster nodes",
+                    job.name,
+                    job.elems(),
+                    job.nodes
+                ),
+            ));
+        }
+    }
+    rep
+}
+
+// ---------------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fault::{KillMode, KillSpec};
+    use crate::coordinator::serve::JobSpec;
+    use crate::mesh::unit_cube_geometry;
+
+    fn built(nodes: usize) -> (Mesh, Vec<LocalBlock>, ExchangePlan) {
+        let mesh = unit_cube_geometry(2); // 8 elements
+        let node_part =
+            Partition { assignment: splice(&mesh, nodes).assignment, nparts: nodes };
+        let fractions = vec![0.5; nodes];
+        let np = nested_partition_fractions(&mesh, &node_part, &fractions);
+        let owners = np.owners();
+        let (blocks, plan) = build_local_blocks(&mesh, &owners, np.n_owners());
+        (mesh, blocks, plan)
+    }
+
+    #[test]
+    fn clean_plan_passes() {
+        let (mesh, blocks, plan) = built(2);
+        let rep = check_blocks(&blocks, &plan, mesh.len());
+        assert!(!rep.has_errors(), "{}", rep.render_errors());
+        assert!(!check_silence(&plan).has_errors());
+        let spec = ClusterSpec::new(2, 2);
+        let rep = check_cluster(&mesh, &spec, true);
+        assert!(!rep.has_errors(), "{}", rep.render_errors());
+    }
+
+    #[test]
+    fn overlapping_ownership_is_rejected() {
+        let (mesh, mut blocks, plan) = built(2);
+        // duplicate one element into a second owner's block
+        let stolen = blocks[1].global_ids[0];
+        blocks[0].global_ids.push(stolen);
+        let rep = check_blocks(&blocks, &plan, mesh.len());
+        assert!(rep.has_errors());
+        assert!(rep.find(DiagCode::OverlappingOwnership).is_some(), "{:?}", rep.diags);
+    }
+
+    #[test]
+    fn unowned_element_is_rejected() {
+        let (mesh, mut blocks, plan) = built(2);
+        blocks[0].global_ids.pop();
+        let rep = check_blocks(&blocks, &plan, mesh.len());
+        assert!(rep.find(DiagCode::UnownedElement).is_some(), "{:?}", rep.diags);
+    }
+
+    #[test]
+    fn out_of_range_id_is_rejected() {
+        let (mesh, mut blocks, plan) = built(2);
+        let huge = mesh.len() + 7;
+        blocks[0].global_ids[0] = huge; // also leaves the real element unowned
+        let rep = check_blocks(&blocks, &plan, mesh.len());
+        assert!(rep.find(DiagCode::ElementIdOutOfRange).is_some(), "{:?}", rep.diags);
+    }
+
+    #[test]
+    fn asymmetric_route_is_rejected() {
+        let (mesh, blocks, mut plan) = built(2);
+        // drop one direction of one exchanged pair
+        let dst = plan
+            .copies
+            .iter()
+            .position(|c| !c.is_empty())
+            .expect("a 2-node plan exchanges faces");
+        plan.copies[dst].pop();
+        let rep = check_blocks(&blocks, &plan, mesh.len());
+        assert!(rep.find(DiagCode::AsymmetricRoute).is_some(), "{:?}", rep.diags);
+    }
+
+    #[test]
+    fn accelerator_on_inter_node_lane_is_rejected() {
+        // owner 1 = node 0 accelerator, owner 2 = node 1 CPU: a copy
+        // between them crosses nodes on an accelerator endpoint. Keep it
+        // symmetric so only the §5.5 check can fire.
+        let mut plan = ExchangePlan { copies: vec![Vec::new(); 4] };
+        plan.copies[2].push((1, 0, 0, 0));
+        plan.copies[1].push((2, 0, 0, 0));
+        let rep = check_silence(&plan);
+        let d = rep.find(DiagCode::AcceleratorOnInterNodeLane).expect("must be refused");
+        assert_eq!(d.severity, Severity::Error);
+        // the CLI/tests key on this substring — keep it stable
+        assert!(d.message.contains("inter-node"), "{}", d.message);
+    }
+
+    #[test]
+    fn kill_without_checkpoint_strictness() {
+        let mut spec = ClusterSpec::new(2, 2);
+        spec.faults.kills.push(KillSpec { node: 0, step: 3, mode: KillMode::Crash });
+        // strict (repro check): rejected outright
+        let rep = check_spec(64, &spec, true);
+        let d = rep.find(DiagCode::KillWithoutCheckpoint).expect("diagnosed");
+        assert_eq!(d.severity, Severity::Error);
+        assert!(rep.has_errors());
+        // launch mode: surfaced as a warning, still launchable (the
+        // fault-injection tests rely on observing the typed failure live)
+        let rep = check_spec(64, &spec, false);
+        let d = rep.find(DiagCode::KillWithoutCheckpoint).expect("diagnosed");
+        assert_eq!(d.severity, Severity::Warning);
+        assert!(!rep.has_errors());
+        // with checkpointing on, every kill step is recoverable
+        spec.checkpoint_every = Some(2);
+        let rep = check_spec(64, &spec, true);
+        assert!(rep.find(DiagCode::KillWithoutCheckpoint).is_none());
+    }
+
+    #[test]
+    fn spec_shape_diagnostics() {
+        let mut spec = ClusterSpec::new(4, 2);
+        spec.mic_fraction = Some(1.5);
+        spec.faults.kills.push(KillSpec { node: 9, step: 1, mode: KillMode::Crash });
+        spec.node_backends = Some(Vec::new());
+        spec.checkpoint_every = Some(1);
+        let rep = check_spec(2, &spec, false); // mesh of 2 < 4 nodes
+        assert!(rep.find(DiagCode::MeshSmallerThanNodes).is_some());
+        assert!(rep.find(DiagCode::KillTargetsUnknownNode).is_some());
+        assert!(rep.find(DiagCode::MicFractionOutOfRange).is_some());
+        assert!(rep.find(DiagCode::NodeBackendsLengthMismatch).is_some());
+        assert!(rep.has_errors());
+        let err = rep.into_result().unwrap_err();
+        assert!(err.to_string().contains("fewer elements"), "{err}");
+    }
+
+    #[test]
+    fn serve_budget_diagnostics() {
+        let jobs = vec![JobSpec { name: "tiny".into(), n: 1, order: 2, steps: 1, nodes: 8 }];
+        let mut spec = ServeSpec::new(jobs);
+        spec.slices = vec![2, 0];
+        let rep = check_serve(&spec, true);
+        assert!(rep.find(DiagCode::JobMeshSmallerThanNodes).is_some(), "{:?}", rep.diags);
+        assert!(rep.find(DiagCode::EmptySliceBudget).is_some());
+        assert!(rep.has_errors());
+    }
+
+    #[test]
+    fn diagnostics_render_as_json_lines() {
+        let d = PlanDiag::error(DiagCode::OverlappingOwnership, "element 3 owned \"twice\"");
+        let line = d.to_json_line();
+        assert_eq!(
+            line,
+            "{\"severity\":\"error\",\"code\":\"overlapping-ownership\",\
+             \"message\":\"element 3 owned \\\"twice\\\"\"}"
+        );
+    }
+}

@@ -35,11 +35,14 @@
 use std::io::BufReader;
 use std::net::Shutdown;
 use std::os::unix::net::UnixStream;
-use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+// The FabricCtl poison/halt flags come through the util::sync shim so
+// the loom suite can model the poison-vs-blocked-recv teardown.
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+use crate::util::sync::Arc;
 
 use anyhow::{anyhow, bail};
 

@@ -66,6 +66,13 @@
 //!   per-job reports and fabric-poison cancellation (`repro serve`);
 //!   experiments (incl. the live-vs-sim cross-check with per-kernel
 //!   drift), reports
+//! * [`analysis`]   — static plan checking: `analysis::plan_check` walks
+//!   an `ExchangePlan`/`ClusterSpec` without launching anything and
+//!   reports typed diagnostics (ownership disjointness/exhaustiveness,
+//!   route symmetry, §5.5 accelerator silence, checkpoint-vs-kill
+//!   feasibility, serve slice budgets) — surfaced as `repro check` and
+//!   as the launch preflight; see CORRECTNESS.md for how it fits the
+//!   loom / Miri / TSan layers
 //! * [`util`]       — offline-build utilities: bench harness + JSON sink,
 //!   json, rng, `util::pool` — the persistent execution substrate
 //!   (`WorkerPool` fork-join pool with phased barriers, participant-
@@ -74,8 +81,14 @@
 //!   overlap work), `util::ring::History` — the bounded report ring —
 //!   plus the transport building blocks `util::shm` (lock-free SPSC
 //!   slot rings) and `util::framing` (length-prefixed delivery-group
-//!   frames)
+//!   frames), and `util::sync` — the std/loom shim every hand-rolled
+//!   concurrent structure imports its primitives through (CORRECTNESS.md)
 
+// Every unsafe block must carry a `// SAFETY:` contract; CI enforces
+// this via clippy (the attribute is inert under plain rustc).
+#![deny(clippy::undocumented_unsafe_blocks)]
+
+pub mod analysis;
 pub mod coordinator;
 pub mod costmodel;
 pub mod mesh;

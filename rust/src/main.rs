@@ -5,6 +5,7 @@
 //! repro run         solve a wave problem end to end (PJRT or rust-ref)
 //! repro cluster     N-node cluster runtime with adaptive rebalancing
 //! repro serve       co-schedule many independent simulations on one pool
+//! repro check       static plan checker (no launch) with JSON diagnostics
 //! repro partition   print nested-partition statistics for a workload
 //! repro balance     solve the CPU/MIC load-balance split (paper §5.6)
 //! repro experiment  regenerate a paper table/figure (fig4-1, fig5-2, ...)
@@ -14,6 +15,10 @@
 //!
 //! Flag parsing is hand-rolled (the build is offline; no clap): every
 //! subcommand takes `--key value` pairs and boolean `--flag`s.
+
+// Match the library crate's unsafe-contract policy (this binary has no
+// unsafe code; the deny keeps it that way or documented).
+#![deny(clippy::undocumented_unsafe_blocks)]
 
 use std::collections::HashMap;
 
@@ -69,6 +74,19 @@ COMMANDS
               serial on one full-width slice — and writes per-job records
               plus the serve_aggregate_over_serial scalar to --out;
               --smoke caps every job at 4 steps for CI)
+  check       static plan checker: validate a cluster plan — and, with
+              --jobs, a serve spec — without launching a single worker
+                takes the same shape flags as `cluster` (--n --order
+                --nodes --mic-fraction --kill-node --join-node
+                --spare-nodes --checkpoint-every --two-tree ...)
+                [--jobs spec.json]
+              (walks the exact launch construction — level-1 splice,
+              MIC-fraction solve, nested level-2 split, exchange plan —
+              and audits ownership disjointness/exhaustiveness, route
+              symmetry, the paper's §5.5 accelerator-silence rule, and
+              checkpoint-vs-kill feasibility; prints one JSON diagnostic
+              per line and exits nonzero when any error-severity
+              diagnostic fires. See CORRECTNESS.md)
   partition   nested-partition statistics
                 --n 16  --nodes 4  --order 7  [--mic-fraction F]
   balance     CPU/MIC load-balance solve   --order 7  --elems 8192
@@ -167,22 +185,7 @@ fn main() -> repro::Result<()> {
                 Some(v) => v.parse::<TransportKind>()?,
                 None => TransportKind::InProc,
             };
-            let mut faults = FaultPlan {
-                seed: a.get("seed", 0u64),
-                drop_prob: a.get("drop-prob", 0.0f64),
-                delay_us: a.get("delay-us", 0u64),
-                ..FaultPlan::default()
-            };
-            if let Some(spec) = a.kv.get("kill-node") {
-                for tok in spec.split(',') {
-                    faults.kills.push(tok.trim().parse()?);
-                }
-            }
-            if let Some(spec) = a.kv.get("join-node") {
-                for tok in spec.split(',') {
-                    faults.joins.push(tok.trim().parse()?);
-                }
-            }
+            let faults = fault_plan(&a)?;
             let spare_default = faults.joins.len();
             run_cluster(
                 a.get("n", 6),
@@ -213,6 +216,13 @@ fn main() -> repro::Result<()> {
                 &a.get_str("out", "BENCH_serve.json"),
                 a.flag("smoke"),
             )
+        }
+        "check" => {
+            let a = Args::parse(
+                rest,
+                &["rust-ref", "parallel", "two-tree", "sync-per-step", "no-level1", "pin-cores"],
+            );
+            run_check(&a)
         }
         "partition" => {
             let a = Args::parse(rest, &[]);
@@ -336,6 +346,82 @@ fn main() -> repro::Result<()> {
             anyhow::bail!("unknown command {other}\n{USAGE}");
         }
     }
+}
+
+/// The `--seed/--drop-prob/--delay-us/--kill-node/--join-node` flags as a
+/// [`FaultPlan`], shared by `cluster` and `check`.
+fn fault_plan(a: &Args) -> repro::Result<FaultPlan> {
+    let mut faults = FaultPlan {
+        seed: a.get("seed", 0u64),
+        drop_prob: a.get("drop-prob", 0.0f64),
+        delay_us: a.get("delay-us", 0u64),
+        ..FaultPlan::default()
+    };
+    if let Some(spec) = a.kv.get("kill-node") {
+        for tok in spec.split(',') {
+            faults.kills.push(tok.trim().parse()?);
+        }
+    }
+    if let Some(spec) = a.kv.get("join-node") {
+        for tok in spec.split(',') {
+            faults.joins.push(tok.trim().parse()?);
+        }
+    }
+    Ok(faults)
+}
+
+/// `repro check` — the static plan checker: build the same ClusterSpec the
+/// `cluster` subcommand would launch, run the full no-launch audit in
+/// strict mode, print one JSON diagnostic per line, and fail on errors.
+/// With `--jobs` the serve spec gets the slice-budget audit too.
+fn run_check(a: &Args) -> repro::Result<()> {
+    use repro::analysis::plan_check;
+    use repro::coordinator::cluster::ClusterSpec;
+    use repro::coordinator::serve::ServeSpec;
+
+    let n = a.get("n", 6usize);
+    let nodes = a.get("nodes", 2usize);
+    let mesh = if a.flag("two-tree") { two_tree_geometry(n) } else { unit_cube_geometry(n) };
+    let faults = fault_plan(a)?;
+    let spare_default = faults.joins.len();
+    let mut spec = ClusterSpec::new(nodes, a.get("order", 2usize));
+    spec.mic_fraction = a.get_opt::<f64>("mic-fraction");
+    spec.rebalance_every = a.get_opt::<usize>("rebalance-every");
+    spec.level1_rebalance = !a.flag("no-level1");
+    if let Some(t) = a.kv.get("transport") {
+        spec.transport = t.parse::<TransportKind>()?;
+    }
+    let backend = worker_backend(a);
+    spec.cpu_backend = backend.clone();
+    spec.mic_backend = backend;
+    spec.exchange_every_stage = !a.flag("sync-per-step");
+    spec.pin_cores = a.flag("pin-cores");
+    spec.faults = faults;
+    spec.spare_nodes = a.get("spare-nodes", spare_default);
+    spec.checkpoint_every = a.get_opt::<usize>("checkpoint-every");
+    if let Some(ms) = a.get_opt::<u64>("stage-deadline-ms") {
+        spec.stage_deadline = Some(std::time::Duration::from_millis(ms));
+    }
+
+    let mut rep = plan_check::check_cluster(&mesh, &spec, true);
+    if let Some(path) = a.kv.get("jobs") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let serve_spec = ServeSpec::parse(&text)?;
+        rep.merge(plan_check::check_serve(&serve_spec, true));
+    }
+    for d in &rep.diags {
+        println!("{}", d.to_json_line());
+    }
+    let errors = rep.errors().count();
+    let warnings = rep.diags.len() - errors;
+    eprintln!(
+        "check: {} element(s), {} node(s): {errors} error(s), {warnings} warning(s)",
+        mesh.len(),
+        spec.nodes
+    );
+    anyhow::ensure!(errors == 0, "plan check failed with {errors} error(s)");
+    Ok(())
 }
 
 /// Backend selection shared by run/validate/ablation:

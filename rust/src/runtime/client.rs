@@ -100,6 +100,9 @@ impl PjrtRuntime {
 fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
     let n: usize = dims.iter().product();
     debug_assert_eq!(n, data.len());
+    // SAFETY: viewing an f32 slice as bytes — same allocation, exact
+    // byte length (4 per element), u8 has no alignment or validity
+    // requirements, and the borrow ends with this statement.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)?)
@@ -108,6 +111,9 @@ fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
 fn lit_i32(data: &[i32], dims: &[usize]) -> Result<Literal> {
     let n: usize = dims.iter().product();
     debug_assert_eq!(n, data.len());
+    // SAFETY: viewing an i32 slice as bytes — same allocation, exact
+    // byte length (4 per element), u8 has no alignment or validity
+    // requirements, and the borrow ends with this statement.
     let bytes =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     Ok(Literal::create_from_shape_and_untyped_data(ElementType::S32, dims, bytes)?)

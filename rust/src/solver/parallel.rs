@@ -562,8 +562,13 @@ struct RawMut {
     len: usize,
 }
 
-// SAFETY: access discipline documented on the type and argued at each use.
+// SAFETY: the pointer is only dereferenced through `slice`/`slice_mut`,
+// whose disjointness discipline is documented on the type and argued at
+// each use; sending the pointer value itself is unrestricted.
 unsafe impl Send for RawMut {}
+// SAFETY: concurrent `&RawMut` use is exactly the documented access
+// discipline (disjoint ranges per worker, phases barrier-separated);
+// every dereference stays `unsafe` and re-argues it.
 unsafe impl Sync for RawMut {}
 
 impl RawMut {

@@ -258,11 +258,22 @@ pub(crate) fn axpy(lanes: Lanes, dst: &mut [f32], src: &[f32], c: f32) {
                 #[cfg(feature = "simd-fma")]
                 {
                     if fma_active() {
+                        // SAFETY: `fma_active` is only true when CPUID
+                        // reported FMA (and W8 implies AVX2, see
+                        // `check_lanes`), satisfying the kernel's
+                        // target_feature contract; lengths are checked
+                        // above and the kernel handles any tail.
                         return unsafe { axpy_avx2_fma(dst, src, c) };
                     }
                 }
+                // SAFETY: Lanes::W8 is only produced by `detect`/
+                // `set_forced` when AVX2 is present (`check_lanes`
+                // debug-asserts it), satisfying the target_feature
+                // contract; unaligned loads, tail handled in-kernel.
                 return unsafe { axpy_avx2(dst, src, c) };
             }
+            // SAFETY: Lanes::W4 requires SSE2, unconditionally present
+            // on x86_64 (and re-checked by `check_lanes`).
             Lanes::W4 => return unsafe { axpy_sse2(dst, src, c) },
             Lanes::Scalar => {}
         }
@@ -356,18 +367,29 @@ pub(crate) fn matvec_rows(
                 #[cfg(feature = "simd-fma")]
                 {
                     if fma_active() {
+                        // SAFETY: `fma_active` is only true with CPUID
+                        // FMA (W8 implies AVX2 via `check_lanes`); the
+                        // m == 8 arm and the dt_pad length debug-assert
+                        // match the kernel's 8x8 layout.
                         unsafe { matvec8_avx2_fma(dt_pad, src, dst, scale) };
                         return true;
                     }
                 }
+                // SAFETY: Lanes::W8 is only produced when AVX2 is
+                // present (`check_lanes`); m == 8 and the dt_pad
+                // debug-assert match the kernel's 8x8 layout.
                 unsafe { matvec8_avx2(dt_pad, src, dst, scale) };
                 return true;
             }
             (Lanes::W4, 8) => {
+                // SAFETY: SSE2 is unconditionally present on x86_64;
+                // m == 8 matches the kernel's layout expectations.
                 unsafe { matvec8_sse2(dt_pad, src, dst, scale) };
                 return true;
             }
             (Lanes::W8, 4) | (Lanes::W4, 4) => {
+                // SAFETY: SSE2 is unconditionally present on x86_64;
+                // m == 4 matches the kernel's layout expectations.
                 unsafe { matvec4_sse2(dt_pad, src, dst, scale) };
                 return true;
             }
@@ -492,11 +514,19 @@ pub(crate) fn stress(lanes: Lanes, q: &[f32], out: &mut [f32], vol: usize, lam: 
                 #[cfg(feature = "simd-fma")]
                 {
                     if fma_active() {
+                        // SAFETY: `fma_active` is only true with CPUID
+                        // FMA (W8 implies AVX2 via `check_lanes`);
+                        // slice lengths are checked by the caller and
+                        // the kernel's tail loop.
                         return unsafe { stress_avx2_fma(q, out, vol, lam, mu) };
                     }
                 }
+                // SAFETY: Lanes::W8 is only produced when AVX2 is
+                // present (`check_lanes` debug-asserts it); unaligned
+                // loads, tail handled in-kernel.
                 return unsafe { stress_avx2(q, out, vol, lam, mu) };
             }
+            // SAFETY: SSE2 is unconditionally present on x86_64.
             Lanes::W4 => return unsafe { stress_sse2(q, out, vol, lam, mu) },
             Lanes::Scalar => {}
         }
@@ -609,11 +639,18 @@ pub(crate) fn rk_update(
                 #[cfg(feature = "simd-fma")]
                 {
                     if fma_active() {
+                        // SAFETY: `fma_active` is only true with CPUID
+                        // FMA (W8 implies AVX2 via `check_lanes`);
+                        // equal lengths checked above, tail in-kernel.
                         return unsafe { rk_avx2_fma(q, res, dq, dt, a, b) };
                     }
                 }
+                // SAFETY: Lanes::W8 is only produced when AVX2 is
+                // present (`check_lanes` debug-asserts it); unaligned
+                // loads, tail handled in-kernel.
                 return unsafe { rk_avx2(q, res, dq, dt, a, b) };
             }
+            // SAFETY: SSE2 is unconditionally present on x86_64.
             Lanes::W4 => return unsafe { rk_sse2(q, res, dq, dt, a, b) },
             Lanes::Scalar => {}
         }
@@ -729,16 +766,25 @@ pub(crate) fn riemann_vec(
                 #[cfg(feature = "simd-fma")]
                 {
                     if fma_active() {
+                        // SAFETY: `fma_active` is only true with CPUID
+                        // FMA (W8 implies AVX2 via `check_lanes`);
+                        // face >= 8 gives the kernel a full first
+                        // vector, the tail is handled in-kernel.
                         return unsafe {
                             riemann_avx2_fma(tr_m, tr_p, mirror, matm, matp, axis, sign, face, out)
                         };
                     }
                 }
+                // SAFETY: Lanes::W8 is only produced when AVX2 is
+                // present (`check_lanes` debug-asserts it); face >= 8
+                // gives a full first vector, tail handled in-kernel.
                 return unsafe {
                     riemann_avx2(tr_m, tr_p, mirror, matm, matp, axis, sign, face, out)
                 };
             }
             Lanes::W4 | Lanes::W8 if face >= 4 => {
+                // SAFETY: SSE2 is unconditionally present on x86_64;
+                // face >= 4 gives a full first vector, tail in-kernel.
                 return unsafe {
                     riemann_sse2(tr_m, tr_p, mirror, matm, matp, axis, sign, face, out)
                 };

@@ -15,18 +15,75 @@
 //! `n_items == 0` is a valid frame: a failed worker ships empty groups so
 //! every peer's per-stage delivery count stays intact (the cluster
 //! lockstep never counts bytes, only groups).
+//!
+//! The decoder treats the wire as hostile: every malformed input —
+//! truncated header, oversized length prefix, EOF mid-frame — surfaces as
+//! a typed [`FrameError`], never a panic or an unbounded allocation
+//! (length prefixes are capped and never trusted for pre-allocation).
 
 use std::io::{Read, Write};
 
-use anyhow::{anyhow, bail};
+use anyhow::anyhow;
 
 use crate::Result;
 
 /// Leading word of every group frame ("FABR").
 pub const GROUP_MAGIC: u32 = 0x4641_4252;
 
+/// Cap on `n_items` in one group. A group carries at most one item per
+/// halo face between two workers; a prefix beyond this is corruption,
+/// not a big mesh.
+pub const MAX_GROUP_ITEMS: usize = 1 << 24;
+
+/// Cap on one item's payload length in f32 words (16 MiB). A trace is
+/// `NFIELDS * (order+1)^2` words — orders of magnitude below this.
+pub const MAX_ITEM_WORDS: usize = 1 << 22;
+
 /// One decoded halo installment: (dst local block, halo slot, trace data).
 pub type FrameItem = (usize, usize, Vec<f32>);
+
+/// Why a frame failed to decode, as a typed value (the vendored `anyhow`
+/// carries strings only, so branch on this *before* the `?` conversion —
+/// [`read_group_typed`] returns it directly).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// Leading word was not [`GROUP_MAGIC`]: the stream lost framing.
+    BadMagic(u32),
+    /// EOF inside the group header (magic arrived, src/n_items did not).
+    TruncatedHeader,
+    /// EOF inside an item header or payload.
+    MidFrameEof,
+    /// A length prefix exceeds the wire caps — corrupt or hostile frame,
+    /// refused before any allocation happens.
+    OversizedLength { what: &'static str, got: usize, max: usize },
+    /// Underlying transport error, rendered.
+    Io(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // "frame sync" is load-bearing: the transport tests key on it
+            FrameError::BadMagic(got) => write!(
+                f,
+                "socket lane lost frame sync (got {got:#x}, want {GROUP_MAGIC:#x})"
+            ),
+            FrameError::TruncatedHeader => {
+                write!(f, "socket lane group header truncated (EOF mid-header)")
+            }
+            FrameError::MidFrameEof => {
+                write!(f, "socket lane frame truncated (EOF mid-frame)")
+            }
+            FrameError::OversizedLength { what, got, max } => write!(
+                f,
+                "socket lane {what} length prefix {got} exceeds cap {max} (corrupt frame)"
+            ),
+            FrameError::Io(msg) => write!(f, "socket lane read: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
 
 /// Reusable group-frame encoder: one heap buffer per endpoint, reused
 /// across stages so the socket lane never allocates in steady state.
@@ -98,36 +155,80 @@ fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+/// `read_u32` with EOF mapped to the given typed error (a cut inside a
+/// frame is corruption, not a clean shutdown).
+fn read_u32_in_frame(
+    r: &mut impl Read,
+    on_eof: FrameError,
+) -> std::result::Result<u32, FrameError> {
+    read_u32(r).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            on_eof
+        } else {
+            FrameError::Io(e.to_string())
+        }
+    })
+}
+
 /// Read one group frame; `Ok(None)` on a clean EOF at a frame boundary
 /// (the peer shut the socket down). Returns `(src, items)`.
-pub fn read_group(r: &mut impl Read) -> Result<Option<(usize, Vec<FrameItem>)>> {
+///
+/// Typed-error twin of [`read_group`] — callers that need to branch on
+/// the failure mode use this; the transport uses the `anyhow` wrapper.
+pub fn read_group_typed(
+    r: &mut impl Read,
+) -> std::result::Result<Option<(usize, Vec<FrameItem>)>, FrameError> {
     let magic = match read_u32(r) {
         Ok(m) => m,
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => bail!("socket lane read: {e}"),
+        Err(e) => return Err(FrameError::Io(e.to_string())),
     };
     if magic != GROUP_MAGIC {
-        bail!("socket lane lost frame sync (got {magic:#x}, want {GROUP_MAGIC:#x})");
+        return Err(FrameError::BadMagic(magic));
     }
-    let src = read_u32(r)? as usize;
-    let n = read_u32(r)? as usize;
-    let mut items = Vec::with_capacity(n);
+    let src = read_u32_in_frame(r, FrameError::TruncatedHeader)? as usize;
+    let n = read_u32_in_frame(r, FrameError::TruncatedHeader)? as usize;
+    if n > MAX_GROUP_ITEMS {
+        return Err(FrameError::OversizedLength {
+            what: "group item-count",
+            got: n,
+            max: MAX_GROUP_ITEMS,
+        });
+    }
+    // Never trust a wire prefix for allocation: reserve a small floor and
+    // let the vec grow as items actually arrive, so a lying prefix costs
+    // a decode error, not an OOM.
+    let mut items = Vec::with_capacity(n.min(1024));
     for _ in 0..n {
-        let bi = read_u32(r)? as usize;
-        let slot = read_u32(r)? as usize;
-        let len = read_u32(r)? as usize;
-        let mut data = Vec::with_capacity(len);
+        let bi = read_u32_in_frame(r, FrameError::MidFrameEof)? as usize;
+        let slot = read_u32_in_frame(r, FrameError::MidFrameEof)? as usize;
+        let len = read_u32_in_frame(r, FrameError::MidFrameEof)? as usize;
+        if len > MAX_ITEM_WORDS {
+            return Err(FrameError::OversizedLength {
+                what: "item payload",
+                got: len,
+                max: MAX_ITEM_WORDS,
+            });
+        }
+        let mut data = Vec::with_capacity(len.min(4096));
         for _ in 0..len {
-            data.push(f32::from_bits(read_u32(r)?));
+            data.push(f32::from_bits(read_u32_in_frame(r, FrameError::MidFrameEof)?));
         }
         items.push((bi, slot, data));
     }
     Ok(Some((src, items)))
 }
 
+/// [`read_group_typed`] with the error hoisted into `anyhow` (the
+/// transport's error plumbing); the typed message text is preserved.
+pub fn read_group(r: &mut impl Read) -> Result<Option<(usize, Vec<FrameItem>)>> {
+    Ok(read_group_typed(r)?)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn roundtrip_two_groups() {
@@ -153,17 +254,129 @@ mod tests {
     fn bad_magic_is_an_error() {
         let mut wire = vec![0u8; 12];
         wire[0] = 0xde;
+        let err = read_group_typed(&mut wire.as_slice()).unwrap_err();
+        assert!(matches!(err, FrameError::BadMagic(_)), "{err:?}");
+        // the rendered form keeps the historical wording
+        assert!(err.to_string().contains("frame sync"), "{err}");
         let err = read_group(&mut wire.as_slice()).unwrap_err();
         assert!(err.to_string().contains("frame sync"), "{err}");
     }
 
     #[test]
-    fn truncated_frame_is_an_error_not_eof() {
+    fn truncated_header_is_typed() {
+        // magic alone, then EOF: the header (src, n_items) never arrives
+        let wire = GROUP_MAGIC.to_le_bytes();
+        let err = read_group_typed(&mut wire.as_slice()).unwrap_err();
+        assert_eq!(err, FrameError::TruncatedHeader);
+        // magic + src, still no n_items
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&GROUP_MAGIC.to_le_bytes());
+        wire.extend_from_slice(&7u32.to_le_bytes());
+        let err = read_group_typed(&mut wire.as_slice()).unwrap_err();
+        assert_eq!(err, FrameError::TruncatedHeader);
+    }
+
+    #[test]
+    fn mid_frame_eof_is_typed_not_clean() {
         let mut wire = Vec::new();
         let mut enc = FrameWriter::new();
         write_group(&mut wire, &mut enc, 0, std::iter::once((1, 2, vec![1.0f32; 8]))).unwrap();
-        wire.truncate(wire.len() - 3); // mid-payload cut
-        let res = read_group(&mut wire.as_slice());
-        assert!(res.is_err(), "torn frame must not read as clean EOF");
+        // cut at every possible offset inside the frame: each must be a
+        // typed truncation error, never Ok(None) and never a panic
+        for cut in 4..wire.len() {
+            let torn = &wire[..cut];
+            match read_group_typed(&mut &torn[..]) {
+                Err(FrameError::TruncatedHeader) | Err(FrameError::MidFrameEof) => {}
+                other => panic!("cut at {cut}: want typed truncation, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_refused_without_allocating() {
+        // group claims u32::MAX items
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&GROUP_MAGIC.to_le_bytes());
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_group_typed(&mut wire.as_slice()).unwrap_err();
+        assert!(
+            matches!(err, FrameError::OversizedLength { what: "group item-count", .. }),
+            "{err:?}"
+        );
+
+        // one item claims a u32::MAX-word payload
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&GROUP_MAGIC.to_le_bytes());
+        wire.extend_from_slice(&0u32.to_le_bytes());
+        wire.extend_from_slice(&1u32.to_le_bytes()); // n_items = 1
+        wire.extend_from_slice(&0u32.to_le_bytes()); // dst_block
+        wire.extend_from_slice(&0u32.to_le_bytes()); // halo_slot
+        wire.extend_from_slice(&u32::MAX.to_le_bytes()); // len_words
+        let err = read_group_typed(&mut wire.as_slice()).unwrap_err();
+        assert!(
+            matches!(err, FrameError::OversizedLength { what: "item payload", .. }),
+            "{err:?}"
+        );
+    }
+
+    /// Fuzz-style sweep: seeded random byte soup, plus random *valid*
+    /// frames with random corruption (bit flips, truncation, garbage
+    /// injection). The decoder must always return — Ok or a typed error —
+    /// and never panic or over-allocate.
+    #[test]
+    fn fuzzed_garbage_never_panics() {
+        let mut rng = Rng::seed_from_u64(0x46_41_42_52);
+        for case in 0..500 {
+            let wire: Vec<u8> = match case % 3 {
+                // pure garbage of random length
+                0 => {
+                    let len = rng.below(257);
+                    (0..len).map(|_| rng.next_u64() as u8).collect()
+                }
+                // a valid frame, then a random truncation
+                1 => {
+                    let mut wire = Vec::new();
+                    let mut enc = FrameWriter::new();
+                    let n_items = rng.below(4);
+                    let items: Vec<FrameItem> = (0..n_items)
+                        .map(|i| {
+                            let words = rng.below(16);
+                            (i, rng.below(8), vec![0.25f32; words])
+                        })
+                        .collect();
+                    let src = rng.below(32);
+                    write_group(&mut wire, &mut enc, src, items.into_iter()).unwrap();
+                    let keep = rng.below(wire.len() + 1);
+                    wire.truncate(keep);
+                    wire
+                }
+                // a valid frame with random bit flips
+                _ => {
+                    let mut wire = Vec::new();
+                    let mut enc = FrameWriter::new();
+                    write_group(
+                        &mut wire,
+                        &mut enc,
+                        1,
+                        std::iter::once((0, 0, vec![1.5f32; 1 + rng.below(8)])),
+                    )
+                    .unwrap();
+                    for _ in 0..1 + rng.below(4) {
+                        let byte = rng.below(wire.len());
+                        wire[byte] ^= 1 << rng.below(8);
+                    }
+                    wire
+                }
+            };
+            // decode until the stream errors or drains; must terminate
+            let mut r = wire.as_slice();
+            for _ in 0..8 {
+                match read_group_typed(&mut r) {
+                    Ok(Some(_)) => continue,
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
     }
 }

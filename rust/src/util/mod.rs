@@ -8,6 +8,7 @@ pub mod pool;
 pub mod ring;
 pub mod rng;
 pub mod shm;
+pub mod sync;
 
 pub use json::Json;
 pub use pool::{PoolSlice, TaskThread, WorkerPool};

@@ -38,10 +38,13 @@
 //! its pool (same generation), while rebuilt workers show a fresh one.
 
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex, Once};
 use std::thread::JoinHandle;
+
+// All blocking/atomic primitives come through the util::sync shim so the
+// loom suite can model-check this module's barrier and ledger.
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::{Arc, Condvar, Mutex, Once};
 
 /// Process-wide pool id source (1-based so 0 can mean "no pool").
 static NEXT_GENERATION: AtomicU64 = AtomicU64::new(1);
@@ -140,11 +143,12 @@ fn allowed_cpus() -> Vec<usize> {
 struct Job(*const (dyn Fn(usize, usize) + Sync + 'static));
 
 // SAFETY: the pointee is Sync (shared calls from many threads are fine)
-// and outlives every dereference (see Job docs). Sync on the wrapper is
-// needed because a Job rides inside an `Arc<Dispatch>` shared with every
-// engaged worker; `&Job` only exposes the pointer value, dereferencing
-// stays unsafe.
+// and outlives every dereference (see Job docs); sending the pointer
+// value itself between threads carries no extra obligation.
 unsafe impl Send for Job {}
+// SAFETY: Sync is needed because a Job rides inside an `Arc<Dispatch>`
+// shared with every engaged worker; `&Job` only exposes the pointer
+// value, dereferencing stays unsafe (argued at each deref site).
 unsafe impl Sync for Job {}
 
 fn erase_job<'a>(f: &'a (dyn Fn(usize, usize) + Sync + 'a)) -> Job {
@@ -161,7 +165,12 @@ fn erase_job<'a>(f: &'a (dyn Fn(usize, usize) + Sync + 'a)) -> Job {
 /// Sense-reversing barrier sized for one dispatch's participants
 /// (`std::sync::Barrier` would work here too, but this one tolerates a
 /// poisoned mutex after a participant panicked mid-phase).
-struct PhaseBarrier {
+///
+/// Public so the loom suite (`rust/tests/loom_models.rs`) can drive the
+/// sense reversal — including a participant arriving late into the next
+/// generation — under the model checker; the pool itself constructs one
+/// per dispatch and never exposes it.
+pub struct PhaseBarrier {
     state: Mutex<BarrierState>,
     cv: Condvar,
 }
@@ -173,14 +182,19 @@ struct BarrierState {
 }
 
 impl PhaseBarrier {
-    fn new(participants: usize) -> PhaseBarrier {
+    /// Barrier for exactly `participants` waiters per generation.
+    pub fn new(participants: usize) -> PhaseBarrier {
         PhaseBarrier {
             state: Mutex::new(BarrierState { arrived: 0, generation: 0, participants }),
             cv: Condvar::new(),
         }
     }
 
-    fn wait(&self) {
+    /// Block until all participants of the current generation arrived.
+    /// The last arrival resets the count and bumps the generation, so
+    /// the barrier is immediately reusable (sense reversal: waiters key
+    /// on the generation they entered with, never on `arrived == 0`).
+    pub fn wait(&self) {
         let mut s = self.state.lock().unwrap_or_else(|e| e.into_inner());
         s.arrived += 1;
         if s.arrived >= s.participants {
@@ -225,22 +239,29 @@ struct SlotCtl {
     shutdown: bool,
 }
 
-struct Shared {
-    /// One mailbox per OS worker (`threads - 1` of them).
-    slots: Vec<Slot>,
-    /// Which OS workers are currently engaged by a dispatch. A dispatcher
-    /// claims its whole slice all-or-nothing under this one mutex (no
-    /// hold-and-wait, hence no deadlock between overlapping slices) and
-    /// each worker frees its own flag when done.
-    ledger: Mutex<Vec<bool>>,
+/// Which OS workers are currently engaged by a dispatch. A dispatcher
+/// claims its whole slice all-or-nothing under one mutex (no
+/// hold-and-wait, hence no deadlock between overlapping slices) and each
+/// worker frees its own flag when done.
+///
+/// Public so the loom suite (`rust/tests/loom_models.rs`) can model two
+/// dispatchers racing for overlapping and disjoint slices; the pool
+/// itself keeps its ledger private inside `Shared`.
+pub struct SlotLedger {
+    busy: Mutex<Vec<bool>>,
     freed: Condvar,
 }
 
-impl Shared {
-    /// Block until every OS worker in `[start, start+count)` is free,
-    /// then claim them all atomically.
-    fn acquire(&self, start: usize, count: usize) {
-        let mut busy = self.ledger.lock().unwrap_or_else(|e| e.into_inner());
+impl SlotLedger {
+    /// Ledger over `slots` initially-free slots.
+    pub fn new(slots: usize) -> SlotLedger {
+        SlotLedger { busy: Mutex::new(vec![false; slots]), freed: Condvar::new() }
+    }
+
+    /// Block until every slot in `[start, start+count)` is free, then
+    /// claim them all atomically.
+    pub fn acquire(&self, start: usize, count: usize) {
+        let mut busy = self.busy.lock().unwrap_or_else(|e| e.into_inner());
         loop {
             if busy[start..start + count].iter().all(|b| !*b) {
                 for b in &mut busy[start..start + count] {
@@ -252,12 +273,25 @@ impl Shared {
         }
     }
 
-    fn free(&self, g: usize) {
-        let mut busy = self.ledger.lock().unwrap_or_else(|e| e.into_inner());
-        busy[g] = false;
+    /// Free one slot and wake blocked acquirers.
+    pub fn release(&self, slot: usize) {
+        let mut busy = self.busy.lock().unwrap_or_else(|e| e.into_inner());
+        busy[slot] = false;
         drop(busy);
         self.freed.notify_all();
     }
+
+    /// Copy of the busy flags (loom models assert on it; not used on
+    /// the hot path).
+    pub fn busy_snapshot(&self) -> Vec<bool> {
+        self.busy.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+struct Shared {
+    /// One mailbox per OS worker (`threads - 1` of them).
+    slots: Vec<Slot>,
+    ledger: SlotLedger,
 }
 
 /// The persistent fork-join pool (see module docs).
@@ -282,6 +316,8 @@ impl WorkerPool {
     /// kernel refuses.
     pub fn new(threads: usize, pin_base: Option<usize>) -> WorkerPool {
         let threads = threads.max(1);
+        // Relaxed: pure id allocation — only atomicity matters, no data
+        // is published under this counter.
         let generation = NEXT_GENERATION.fetch_add(1, Ordering::Relaxed);
         // resolve the whole pinned range up front: logical pool worker w
         // -> allowed_cpus[(pin_base + w) % n_allowed]; ranges straddling
@@ -300,8 +336,7 @@ impl WorkerPool {
                         work: Condvar::new(),
                     })
                     .collect(),
-                ledger: Mutex::new(vec![false; os_workers]),
-                freed: Condvar::new(),
+                ledger: SlotLedger::new(os_workers),
             });
             for g in 0..os_workers {
                 let sh = shared.clone();
@@ -413,7 +448,7 @@ impl WorkerPool {
             barrier: PhaseBarrier::new(os_count + 1),
             panicked: AtomicBool::new(false),
         });
-        shared.acquire(os_start, os_count);
+        shared.ledger.acquire(os_start, os_count);
         for g in os_start..os_start + os_count {
             let slot = &shared.slots[g];
             let mut ctl = slot.ctl.lock().unwrap_or_else(|e| e.into_inner());
@@ -424,6 +459,9 @@ impl WorkerPool {
         }
         let mut caller_panic: Option<Box<dyn std::any::Any + Send>> = None;
         for phase in 0..phases {
+            // Relaxed: best-effort skip of further phases after a worker
+            // panic; the phase barrier supplies the happens-before edge,
+            // and the authoritative post-dispatch check is SeqCst below.
             if caller_panic.is_none() && !d.panicked.load(Ordering::Relaxed) {
                 if let Err(p) = catch_unwind(AssertUnwindSafe(|| f(0, phase))) {
                     caller_panic = Some(p);
@@ -476,6 +514,9 @@ fn worker_main(shared: Arc<Shared>, g: usize, pin: Option<usize>) {
             }
         };
         for phase in 0..d.phases {
+            // Relaxed: same best-effort skip as the caller's loop — the
+            // barrier orders phases, so a stale false only costs one
+            // extra (harmless) phase of work.
             if !d.panicked.load(Ordering::Relaxed) {
                 // SAFETY: see Job — the dispatcher blocks in
                 // run_phased_slice until the final barrier, which this
@@ -490,7 +531,7 @@ fn worker_main(shared: Arc<Shared>, g: usize, pin: Option<usize>) {
         drop(d);
         // only after dropping the dispatch: a freed slot may be re-claimed
         // and re-published immediately
-        shared.free(g);
+        shared.ledger.release(g);
     }
 }
 
@@ -923,6 +964,7 @@ mod tests {
         guard.join();
         assert_eq!(data[7], 49);
         // reusable across submissions
+        // SAFETY: the guard is joined on this frame
         let guard = unsafe {
             t.run_scoped(|| {
                 data[0] = 1;
@@ -936,12 +978,14 @@ mod tests {
     fn task_thread_propagates_panics() {
         let mut t = TaskThread::new("test-panic");
         let r = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: the guard is joined on this frame
             let guard = unsafe { t.run_scoped(|| panic!("task boom")) };
             guard.join();
         }));
         assert!(r.is_err());
         // the thread survives a panicked task
         let flag = AtomicBool::new(false);
+        // SAFETY: the guard is joined on this frame
         let guard = unsafe {
             t.run_scoped(|| {
                 flag.store(true, Ordering::SeqCst);

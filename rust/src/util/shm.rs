@@ -15,8 +15,11 @@
 //! Lamport-style SPSC queue, specialized to fixed slots.
 
 use std::cell::UnsafeCell;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+
+// Atomics come through the util::sync shim so the loom suite can
+// model-check the push/pop pair (`rust/tests/loom_models.rs`).
+use crate::util::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::util::sync::Arc;
 
 /// Pad to a cache line so the producer's tail and the consumer's head
 /// never false-share.
@@ -40,11 +43,16 @@ struct RingShared {
     closed: AtomicBool,
 }
 
-// The UnsafeCell storage is only ever touched by the single producer
-// (slots in [head, tail) are owned by the consumer, the rest by the
-// producer) with release/acquire handoff on tail/head — the same
-// argument as std's mpsc internals.
+// SAFETY: the UnsafeCell storage is partitioned by the head/tail
+// indices — slots in [head, tail) are owned by the consumer, the rest
+// by the producer — with release/acquire handoff on tail/head (the same
+// argument as std's mpsc internals), so moving the shared state to
+// another thread is sound.
 unsafe impl Send for RingShared {}
+// SAFETY: shared access is the whole point — exactly one producer and
+// one consumer exist by construction (`slot_ring` returns one
+// non-Clone handle each) and they touch disjoint slots per the
+// ownership argument above.
 unsafe impl Sync for RingShared {}
 
 /// Producer half: `try_push` is wait-free (fails fast when full).
@@ -91,12 +99,23 @@ impl RingProducer {
         if r.closed.load(Ordering::Acquire) {
             return Err(RingClosed);
         }
+        // Relaxed: tail is producer-owned — only this thread stores it,
+        // so its own last value is always visible; no data rides on it.
         let tail = r.tail.0.load(Ordering::Relaxed);
+        // Acquire: pairs with the consumer's Release store of head, so
+        // the consumer's reads of a recycled slot happen-before our
+        // writes into it.
         let head = r.head.0.load(Ordering::Acquire);
         if tail.wrapping_sub(head) > r.mask {
             return Ok(false); // full
         }
         let base = (tail & r.mask) * r.stride;
+        // SAFETY: slot `tail & mask` is producer-owned (not in
+        // [head, tail), per the full check above), so no concurrent
+        // reader exists; `base + 3 + payload.len()` stays within the
+        // slot because `payload.len() <= payload_words` was asserted and
+        // stride = 3 + payload_words. The u32/f32 cast is a bit copy of
+        // equal-size Pod types.
         unsafe {
             *r.buf[base].get() = w0;
             *r.buf[base + 1].get() = w1;
@@ -104,6 +123,8 @@ impl RingProducer {
             let dst = r.buf[base + 3].get();
             std::ptr::copy_nonoverlapping(payload.as_ptr() as *const u32, dst, payload.len());
         }
+        // Release: publishes the slot writes above to the consumer's
+        // Acquire load of tail.
         r.tail.0.store(tail.wrapping_add(1), Ordering::Release);
         Ok(true)
     }
@@ -140,12 +161,21 @@ impl RingConsumer {
     /// drained-and-closed from momentarily-empty).
     pub fn try_pop_with<T>(&mut self, f: impl FnOnce(u32, u32, &[f32]) -> T) -> Option<T> {
         let r = &*self.ring;
+        // Relaxed: head is consumer-owned — only this thread stores it,
+        // so its own last value is always visible; no data rides on it.
         let head = r.head.0.load(Ordering::Relaxed);
+        // Acquire: pairs with the producer's Release store of tail, so
+        // the producer's slot writes happen-before our reads below.
         let tail = r.tail.0.load(Ordering::Acquire);
         if head == tail {
             return None;
         }
         let base = (head & r.mask) * r.stride;
+        // SAFETY: slot `head & mask` is consumer-owned (in [head, tail),
+        // per the non-empty check above) and the producer's writes to it
+        // are published by the tail Acquire; `len <= payload_words`
+        // (enforced at push) keeps the borrowed slice inside the slot,
+        // and the slice dies with `f` before head is advanced.
         let out = unsafe {
             let w0 = *r.buf[base].get();
             let w1 = *r.buf[base + 1].get();
@@ -154,6 +184,8 @@ impl RingConsumer {
             let payload = std::slice::from_raw_parts(r.buf[base + 3].get() as *const f32, len);
             f(w0, w1, payload)
         };
+        // Release: returns the slot to the producer; pairs with its
+        // Acquire load of head before reusing the slot.
         r.head.0.store(head.wrapping_add(1), Ordering::Release);
         Some(out)
     }

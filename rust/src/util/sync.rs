@@ -1,0 +1,36 @@
+//! Synchronization shim: `std::sync` in real builds, `loom` under
+//! `--cfg loom`.
+//!
+//! Every hand-rolled concurrent structure in this crate — the
+//! [`crate::util::pool`] barrier/ledger, the [`crate::util::shm`] SPSC
+//! ring, the `FabricCtl` poison/halt flags in
+//! [`crate::coordinator::transport`] — imports its primitives from here
+//! instead of `std::sync` directly. A normal build re-exports the std
+//! types unchanged (zero behavior and zero cost difference); building
+//! with `RUSTFLAGS="--cfg loom"` swaps in the model-checked equivalents
+//! from the in-tree `loom` shim so `rust/tests/loom_models.rs` can
+//! exhaustively explore their interleavings. See CORRECTNESS.md for
+//! what the model checker does and does not prove.
+//!
+//! Types loom does not model (`mpsc` channels, `Once`) come from std
+//! under both cfgs: the loom suite drives only the primitives above and
+//! models channel-shaped protocols with `Mutex` + `Condvar` + flags.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(not(loom))]
+pub mod atomic {
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub mod atomic {
+    pub use loom::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+}
+
+// Not modeled: always std, under either cfg.
+pub use std::sync::{mpsc, LockResult, Once, PoisonError};

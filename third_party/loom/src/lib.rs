@@ -1,0 +1,980 @@
+//! In-tree minimal stand-in for the `loom` model checker (offline build).
+//!
+//! The real `loom` crate instruments `std::sync` look-alikes and
+//! exhaustively explores thread interleavings under the C11 memory
+//! model. This shim reproduces the *shape* of that API — `loom::model`,
+//! `loom::thread`, `loom::sync::{Mutex, Condvar, Arc, atomic}` — with a
+//! CHESS-style bounded-preemption explorer over real OS threads:
+//!
+//! * Exactly one model thread runs at a time; every synchronization
+//!   operation (atomic access, mutex lock/unlock, condvar wait/notify,
+//!   spawn/join/yield) is a *scheduling point* where the explorer picks
+//!   the next thread to run.
+//! * [`model`] re-runs the closure once per distinct schedule,
+//!   enumerating the schedule tree depth-first. Alternatives that would
+//!   exceed the preemption budget (`LOOM_MAX_PREEMPTIONS`, default 2)
+//!   are pruned, which is the CHESS iterative-context-bound argument
+//!   for why small bounds find most bugs.
+//! * Blocking (contended mutex, condvar wait, join on a live thread) is
+//!   modeled explicitly, so a schedule in which every live thread is
+//!   blocked is reported as a **deadlock** with the blocked set.
+//! * A panic on any model thread (assertion failure in the model body)
+//!   aborts the execution and is re-raised from [`model`] together with
+//!   the schedule that produced it.
+//!
+//! **What this does not prove.** All atomic operations are executed
+//! sequentially consistent regardless of the `Ordering` argument, so
+//! the explorer checks *interleavings under SC*, not weak-memory
+//! reorderings — too-weak `Ordering` choices are the sanitizer job's
+//! department (TSan), not this shim's. Spurious condvar wakeups are not
+//! injected, and `notify_one` deterministically wakes the
+//! lowest-numbered waiter. See CORRECTNESS.md at the repo root.
+//!
+//! Outside [`model`] every type degrades to a thin passthrough over the
+//! `std::sync` equivalent, so a crate compiled with `--cfg loom` still
+//! behaves normally when executed without a model context.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex};
+
+/// Hard cap on scheduling decisions in a single execution; exceeding it
+/// means the model body has a schedule-dependent unbounded loop (spin
+/// loops must be bounded or use blocking primitives).
+const MAX_DECISIONS_PER_EXEC: usize = 20_000;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+// ---------------------------------------------------------------------------
+// scheduler
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    Runnable,
+    /// Waiting on the resource identified by `key` (a mutex address, a
+    /// condvar address, or a join key); woken by `unblock_*`.
+    Blocked(usize),
+    Finished,
+}
+
+/// One scheduling decision: which thread ran, which could have.
+struct Choice {
+    chosen: usize,
+    /// Exploration order: the preferred default first (continue the
+    /// current thread when runnable), then the other enabled threads in
+    /// ascending id order.
+    candidates: Vec<usize>,
+    /// Preemptions consumed by the schedule prefix *before* this choice.
+    preemptions_before: usize,
+    /// The thread that made the decision, and whether it was itself
+    /// still runnable (if so, choosing another thread is a preemption).
+    prev: usize,
+    prev_enabled: bool,
+}
+
+struct State {
+    threads: Vec<Run>,
+    active: usize,
+    /// Prescribed choice prefix for this execution (from backtracking).
+    replay: Vec<usize>,
+    /// Choices actually taken this execution.
+    log: Vec<Choice>,
+    preemptions: usize,
+    failure: Option<String>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct Scheduler {
+    state: StdMutex<State>,
+    cv: StdCondvar,
+}
+
+thread_local! {
+    static CURRENT: std::cell::RefCell<Option<StdArc<Scheduler>>> =
+        const { std::cell::RefCell::new(None) };
+    static MY_ID: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+fn current() -> Option<StdArc<Scheduler>> {
+    CURRENT.with(|c| c.borrow().clone())
+}
+
+fn set_current(s: Option<StdArc<Scheduler>>, id: usize) {
+    CURRENT.with(|c| *c.borrow_mut() = s);
+    MY_ID.with(|c| c.set(id));
+}
+
+fn my_id() -> usize {
+    MY_ID.with(|c| c.get())
+}
+
+/// Key a joining thread blocks on. Thread ids are small; real resource
+/// keys are object addresses (>= page size), so `id + 1` cannot collide.
+fn join_key(id: usize) -> usize {
+    id + 1
+}
+
+/// Unwind out of a model thread after the execution failed elsewhere.
+/// The runner catches this; `record_panic` never overwrites an existing
+/// failure, so the original diagnosis survives.
+fn abort_execution() -> ! {
+    panic!("loom: execution aborted after model failure")
+}
+
+fn payload_msg(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "model thread panicked".to_string()
+    }
+}
+
+impl Scheduler {
+    fn new(replay: Vec<usize>) -> StdArc<Scheduler> {
+        StdArc::new(Scheduler {
+            state: StdMutex::new(State {
+                threads: vec![Run::Runnable], // thread 0 = the model body
+                active: usize::MAX,
+                replay,
+                log: Vec::new(),
+                preemptions: 0,
+                failure: None,
+                handles: Vec::new(),
+            }),
+            cv: StdCondvar::new(),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        // the scheduler holds no user data; a panic while holding it is
+        // itself a scheduler bug, surface it
+        self.state.lock().expect("loom scheduler state poisoned")
+    }
+
+    /// Pick the next thread to run. Pushes the decision onto the log.
+    /// `Err(())` means the execution just failed (deadlock, decision
+    /// budget, or replay divergence) and `failure` is set.
+    fn decide(st: &mut State, me: usize, yield_pref: bool) -> Result<usize, ()> {
+        let enabled: Vec<usize> = st
+            .threads
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| (*t == Run::Runnable).then_some(i))
+            .collect();
+        if enabled.is_empty() {
+            let blocked: Vec<(usize, usize)> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter_map(|(i, t)| match t {
+                    Run::Blocked(k) => Some((i, *k)),
+                    _ => None,
+                })
+                .collect();
+            st.failure = Some(format!(
+                "deadlock: no runnable thread; blocked (thread, key): {blocked:?}"
+            ));
+            return Err(());
+        }
+        if st.log.len() >= MAX_DECISIONS_PER_EXEC {
+            st.failure = Some(format!(
+                "execution exceeded {MAX_DECISIONS_PER_EXEC} scheduling decisions — \
+                 unbounded loop in the model body?"
+            ));
+            return Err(());
+        }
+        let me_runnable = st.threads.get(me) == Some(&Run::Runnable);
+        let default = if yield_pref {
+            *enabled.iter().find(|&&t| t != me).unwrap_or(&enabled[0])
+        } else if me_runnable {
+            me
+        } else {
+            enabled[0]
+        };
+        let mut candidates = Vec::with_capacity(enabled.len());
+        candidates.push(default);
+        for &e in &enabled {
+            if e != default {
+                candidates.push(e);
+            }
+        }
+        let d = st.log.len();
+        let chosen = if d < st.replay.len() {
+            let c = st.replay[d];
+            if !enabled.contains(&c) {
+                st.failure = Some(format!(
+                    "non-deterministic model: replayed choice {c} is not enabled at decision {d}"
+                ));
+                return Err(());
+            }
+            c
+        } else {
+            default
+        };
+        let preemptions_before = st.preemptions;
+        if me_runnable && chosen != me {
+            st.preemptions += 1;
+        }
+        st.log.push(Choice { chosen, candidates, preemptions_before, prev: me, prev_enabled: me_runnable });
+        Ok(chosen)
+    }
+
+    /// A scheduling point for the currently-active thread `me`. With
+    /// `may_panic` false (drop paths) a failed execution returns instead
+    /// of unwinding, so drops never double-panic.
+    fn point_inner(&self, yield_pref: bool, may_panic: bool) {
+        if std::thread::panicking() {
+            return;
+        }
+        let me = my_id();
+        let mut st = self.lock();
+        if st.failure.is_some() {
+            drop(st);
+            if may_panic {
+                abort_execution();
+            }
+            return;
+        }
+        match Self::decide(&mut st, me, yield_pref) {
+            Err(()) => {
+                drop(st);
+                self.cv.notify_all();
+                if may_panic {
+                    abort_execution();
+                }
+            }
+            Ok(next) => {
+                if next == me {
+                    return;
+                }
+                st.active = next;
+                drop(st);
+                self.cv.notify_all();
+                let mut st = self.lock();
+                while st.failure.is_none() && st.active != me {
+                    st = self.cv.wait(st).expect("loom scheduler state poisoned");
+                }
+                let failed = st.failure.is_some();
+                drop(st);
+                if failed && may_panic {
+                    abort_execution();
+                }
+            }
+        }
+    }
+
+    fn point(&self, yield_pref: bool) {
+        self.point_inner(yield_pref, true);
+    }
+
+    /// Block the active thread on `key` until some thread runs
+    /// `unblock_*` for that key *and* the explorer schedules it again.
+    fn block_on(&self, key: usize) {
+        if std::thread::panicking() {
+            return;
+        }
+        let me = my_id();
+        let mut st = self.lock();
+        if st.failure.is_some() {
+            drop(st);
+            abort_execution();
+        }
+        st.threads[me] = Run::Blocked(key);
+        self.switch_away(st, me);
+    }
+
+    /// Atomically (w.r.t. the model) move `me` onto condvar `cv_key`
+    /// and release mutex `mutex_key`'s waiters — the no-lost-wakeup
+    /// half of `Condvar::wait`.
+    fn cv_wait(&self, cv_key: usize, mutex_key: usize) {
+        if std::thread::panicking() {
+            return;
+        }
+        let me = my_id();
+        let mut st = self.lock();
+        if st.failure.is_some() {
+            drop(st);
+            abort_execution();
+        }
+        st.threads[me] = Run::Blocked(cv_key);
+        for t in st.threads.iter_mut() {
+            if *t == Run::Blocked(mutex_key) {
+                *t = Run::Runnable;
+            }
+        }
+        self.switch_away(st, me);
+    }
+
+    /// Schedule another thread and sleep until `me` is runnable again
+    /// and scheduled. `me` must not be in the enabled set.
+    fn switch_away(&self, mut st: std::sync::MutexGuard<'_, State>, me: usize) {
+        match Self::decide(&mut st, me, false) {
+            Err(()) => {
+                drop(st);
+                self.cv.notify_all();
+                abort_execution();
+            }
+            Ok(next) => {
+                st.active = next;
+                drop(st);
+                self.cv.notify_all();
+                let mut st = self.lock();
+                while st.failure.is_none()
+                    && !(st.active == me && st.threads[me] == Run::Runnable)
+                {
+                    st = self.cv.wait(st).expect("loom scheduler state poisoned");
+                }
+                let failed = st.failure.is_some();
+                drop(st);
+                if failed {
+                    abort_execution();
+                }
+            }
+        }
+    }
+
+    fn unblock_all(&self, key: usize) {
+        let mut st = self.lock();
+        for t in st.threads.iter_mut() {
+            if *t == Run::Blocked(key) {
+                *t = Run::Runnable;
+            }
+        }
+    }
+
+    fn unblock_one(&self, key: usize) {
+        let mut st = self.lock();
+        for t in st.threads.iter_mut() {
+            if *t == Run::Blocked(key) {
+                *t = Run::Runnable;
+                break;
+            }
+        }
+    }
+
+    /// Mutex release from a guard drop: wake waiters, then yield the
+    /// schedule — without ever panicking (drops may run during unwind).
+    fn release_point(&self, key: usize) {
+        if std::thread::panicking() {
+            return;
+        }
+        self.unblock_all(key);
+        self.point_inner(false, false);
+    }
+
+    fn register_thread(&self) -> usize {
+        let mut st = self.lock();
+        st.threads.push(Run::Runnable);
+        st.threads.len() - 1
+    }
+
+    fn adopt_handle(&self, h: std::thread::JoinHandle<()>) {
+        self.lock().handles.push(h);
+    }
+
+    /// First wait of a freshly-spawned model thread: park until the
+    /// explorer schedules it for the first time.
+    fn wait_first_schedule(&self, me: usize) {
+        let mut st = self.lock();
+        while st.failure.is_none() && st.active != me {
+            st = self.cv.wait(st).expect("loom scheduler state poisoned");
+        }
+        let failed = st.failure.is_some();
+        drop(st);
+        if failed {
+            abort_execution();
+        }
+    }
+
+    fn start(&self) {
+        let mut st = self.lock();
+        st.active = 0;
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn record_panic(&self, e: &(dyn std::any::Any + Send)) {
+        let mut st = self.lock();
+        if st.failure.is_none() {
+            st.failure = Some(payload_msg(e));
+        }
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    fn finish(&self, me: usize) {
+        let mut st = self.lock();
+        st.threads[me] = Run::Finished;
+        let jk = join_key(me);
+        for t in st.threads.iter_mut() {
+            if *t == Run::Blocked(jk) {
+                *t = Run::Runnable;
+            }
+        }
+        if st.failure.is_some() || st.threads.iter().all(|t| *t == Run::Finished) {
+            drop(st);
+            self.cv.notify_all();
+            return;
+        }
+        match Self::decide(&mut st, me, false) {
+            Err(()) => {
+                drop(st);
+                self.cv.notify_all();
+            }
+            Ok(next) => {
+                st.active = next;
+                drop(st);
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    fn is_finished(&self, id: usize) -> bool {
+        self.lock().threads[id] == Run::Finished
+    }
+
+    /// Driver-side wait (the `model` caller is not a model thread).
+    /// Every thread ends in `Finished` even on failure, so this always
+    /// returns.
+    fn wait_complete(&self) {
+        let mut st = self.lock();
+        while !st.threads.iter().all(|t| *t == Run::Finished) {
+            st = self.cv.wait(st).expect("loom scheduler state poisoned");
+        }
+    }
+
+    fn take_handles(&self) -> Vec<std::thread::JoinHandle<()>> {
+        std::mem::take(&mut self.lock().handles)
+    }
+
+    fn take_outcome(&self) -> (Vec<Choice>, Option<String>) {
+        let mut st = self.lock();
+        (std::mem::take(&mut st.log), st.failure.take())
+    }
+}
+
+/// The deepest not-yet-explored alternative within the preemption
+/// budget, or `None` when the schedule tree is exhausted.
+fn next_replay(log: &[Choice], max_preemptions: usize) -> Option<Vec<usize>> {
+    for d in (0..log.len()).rev() {
+        let c = &log[d];
+        let cur = c
+            .candidates
+            .iter()
+            .position(|&x| x == c.chosen)
+            .expect("chosen is always a candidate");
+        for &alt in &c.candidates[cur + 1..] {
+            let preempt = usize::from(c.prev_enabled && alt != c.prev);
+            if c.preemptions_before + preempt <= max_preemptions {
+                let mut r: Vec<usize> = log[..d].iter().map(|c| c.chosen).collect();
+                r.push(alt);
+                return Some(r);
+            }
+        }
+    }
+    None
+}
+
+/// Run `f` once per distinct schedule under the bounded-preemption
+/// explorer. Panics (with the failing schedule) if any execution
+/// deadlocks or panics.
+///
+/// Environment knobs: `LOOM_MAX_PREEMPTIONS` (default 2) bounds how
+/// many times a schedule may switch away from a still-runnable thread;
+/// `LOOM_MAX_ITERATIONS` (default 500000) caps the number of explored
+/// schedules.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    let f = StdArc::new(f);
+    let max_preemptions = env_usize("LOOM_MAX_PREEMPTIONS", 2);
+    let max_iterations = env_usize("LOOM_MAX_ITERATIONS", 500_000);
+    let mut replay: Vec<usize> = Vec::new();
+    let mut iterations = 0usize;
+    loop {
+        iterations += 1;
+        if iterations > max_iterations {
+            panic!(
+                "loom: exceeded LOOM_MAX_ITERATIONS={max_iterations} schedules; \
+                 shrink the model or lower LOOM_MAX_PREEMPTIONS"
+            );
+        }
+        let sched = Scheduler::new(replay.clone());
+        let s2 = sched.clone();
+        let f2 = f.clone();
+        let main = std::thread::Builder::new()
+            .name("loom-main".into())
+            .spawn(move || {
+                set_current(Some(s2.clone()), 0);
+                s2.wait_first_schedule(0);
+                if let Err(e) = catch_unwind(AssertUnwindSafe(|| (*f2)())) {
+                    s2.record_panic(e.as_ref());
+                }
+                s2.finish(0);
+                set_current(None, usize::MAX);
+            })
+            .expect("spawning loom main thread");
+        sched.start();
+        sched.wait_complete();
+        let _ = main.join();
+        for h in sched.take_handles() {
+            let _ = h.join();
+        }
+        let (log, failure) = sched.take_outcome();
+        if let Some(msg) = failure {
+            panic!(
+                "loom model failed on iteration {iterations} (schedule prefix {replay:?}): {msg}"
+            );
+        }
+        match next_replay(&log, max_preemptions) {
+            Some(r) => replay = r,
+            None => break,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// thread
+// ---------------------------------------------------------------------------
+
+pub mod thread {
+    use super::*;
+
+    /// Handle to a model thread; `join` is a modeled blocking point.
+    pub struct JoinHandle<T> {
+        id: usize,
+        result: StdArc<StdMutex<Option<T>>>,
+    }
+
+    /// Spawn a model thread. Must be called inside [`crate::model`];
+    /// the new thread becomes schedulable at the next decision.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let s = current().expect("loom::thread::spawn outside loom::model");
+        let id = s.register_thread();
+        let result: StdArc<StdMutex<Option<T>>> = StdArc::new(StdMutex::new(None));
+        let r2 = result.clone();
+        let s2 = s.clone();
+        let os = std::thread::Builder::new()
+            .name(format!("loom-{id}"))
+            .spawn(move || {
+                set_current(Some(s2.clone()), id);
+                s2.wait_first_schedule(id);
+                match catch_unwind(AssertUnwindSafe(f)) {
+                    Ok(v) => {
+                        *r2.lock().unwrap_or_else(|e| e.into_inner()) = Some(v);
+                    }
+                    Err(e) => s2.record_panic(e.as_ref()),
+                }
+                s2.finish(id);
+                set_current(None, usize::MAX);
+            })
+            .expect("spawning loom model thread");
+        s.adopt_handle(os);
+        s.point(false);
+        JoinHandle { id, result }
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Wait for the thread. A panic on the joined thread aborts the
+        /// whole model (and is re-raised from [`crate::model`]), so on
+        /// return the value is always present.
+        pub fn join(self) -> std::thread::Result<T> {
+            let s = current().expect("loom JoinHandle::join outside loom::model");
+            s.point(false);
+            while !s.is_finished(self.id) {
+                s.block_on(join_key(self.id));
+            }
+            let v = self
+                .result
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .take()
+                .expect("joined thread finished without a result or a model abort");
+            Ok(v)
+        }
+    }
+
+    /// A scheduling point that prefers switching to another runnable
+    /// thread (and explores staying put as the alternative).
+    pub fn yield_now() {
+        match current() {
+            Some(s) => s.point(true),
+            None => std::thread::yield_now(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// sync
+// ---------------------------------------------------------------------------
+
+pub mod sync {
+    use super::*;
+    use std::ops::{Deref, DerefMut};
+    use std::sync::{LockResult, PoisonError, TryLockError};
+
+    pub use std::sync::Arc;
+
+    /// Mutex whose lock/unlock are scheduling points; contention is
+    /// modeled as an explicit Blocked state (deadlocks are detected).
+    /// Passthrough over `std::sync::Mutex` outside a model.
+    #[derive(Debug, Default)]
+    pub struct Mutex<T> {
+        inner: StdMutex<T>,
+    }
+
+    pub struct MutexGuard<'a, T> {
+        mutex: &'a Mutex<T>,
+        inner: Option<std::sync::MutexGuard<'a, T>>,
+    }
+
+    impl<T> Mutex<T> {
+        pub const fn new(t: T) -> Mutex<T> {
+            Mutex { inner: StdMutex::new(t) }
+        }
+
+        fn key(&self) -> usize {
+            self as *const Mutex<T> as *const () as usize
+        }
+
+        fn guard<'a>(&'a self, g: std::sync::MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+            MutexGuard { mutex: self, inner: Some(g) }
+        }
+
+        fn lock_in_model<'a>(&'a self, s: &StdArc<Scheduler>) -> LockResult<MutexGuard<'a, T>> {
+            loop {
+                match self.inner.try_lock() {
+                    Ok(g) => return Ok(self.guard(g)),
+                    Err(TryLockError::Poisoned(p)) => {
+                        return Err(PoisonError::new(self.guard(p.into_inner())))
+                    }
+                    Err(TryLockError::WouldBlock) => s.block_on(self.key()),
+                }
+            }
+        }
+
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            match current() {
+                Some(s) => {
+                    s.point(false);
+                    self.lock_in_model(&s)
+                }
+                None => match self.inner.lock() {
+                    Ok(g) => Ok(self.guard(g)),
+                    Err(p) => Err(PoisonError::new(self.guard(p.into_inner()))),
+                },
+            }
+        }
+
+        pub fn try_lock(&self) -> Result<MutexGuard<'_, T>, TryLockError<MutexGuard<'_, T>>> {
+            if let Some(s) = current() {
+                s.point(false);
+            }
+            match self.inner.try_lock() {
+                Ok(g) => Ok(self.guard(g)),
+                Err(TryLockError::Poisoned(p)) => Err(TryLockError::Poisoned(PoisonError::new(
+                    self.guard(p.into_inner()),
+                ))),
+                Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+            }
+        }
+
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+
+        pub fn get_mut(&mut self) -> LockResult<&mut T> {
+            self.inner.get_mut()
+        }
+    }
+
+    impl<'a, T> Deref for MutexGuard<'a, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard accessed after release")
+        }
+    }
+
+    impl<'a, T> DerefMut for MutexGuard<'a, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard accessed after release")
+        }
+    }
+
+    impl<'a, T> Drop for MutexGuard<'a, T> {
+        fn drop(&mut self) {
+            if self.inner.take().is_some() {
+                if let Some(s) = current() {
+                    s.release_point(self.mutex.key());
+                }
+            }
+        }
+    }
+
+    /// Condvar whose wait atomically (w.r.t. the model) releases the
+    /// mutex and parks; notify wakes modeled waiters. No spurious
+    /// wakeups are injected; `notify_one` wakes the lowest-numbered
+    /// waiter.
+    #[derive(Debug, Default)]
+    pub struct Condvar {
+        inner: StdCondvar,
+    }
+
+    impl Condvar {
+        pub const fn new() -> Condvar {
+            Condvar { inner: StdCondvar::new() }
+        }
+
+        fn key(&self) -> usize {
+            self as *const Condvar as *const () as usize
+        }
+
+        pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let mutex = guard.mutex;
+            match current() {
+                Some(s) => {
+                    let mut guard = guard;
+                    drop(guard.inner.take());
+                    std::mem::forget(guard);
+                    s.cv_wait(self.key(), mutex.key());
+                    mutex.lock_in_model(&s)
+                }
+                None => {
+                    let mut guard = guard;
+                    let inner = guard.inner.take().expect("guard accessed after release");
+                    std::mem::forget(guard);
+                    match self.inner.wait(inner) {
+                        Ok(g) => Ok(mutex.guard(g)),
+                        Err(p) => Err(PoisonError::new(mutex.guard(p.into_inner()))),
+                    }
+                }
+            }
+        }
+
+        pub fn notify_one(&self) {
+            match current() {
+                Some(s) => {
+                    s.unblock_one(self.key());
+                    s.point(false);
+                }
+                None => self.inner.notify_one(),
+            }
+        }
+
+        pub fn notify_all(&self) {
+            match current() {
+                Some(s) => {
+                    s.unblock_all(self.key());
+                    s.point(false);
+                }
+                None => self.inner.notify_all(),
+            }
+        }
+    }
+
+    pub mod atomic {
+        use super::super::current;
+
+        pub use std::sync::atomic::Ordering;
+
+        /// Inside a model, every access is a scheduling point and runs
+        /// SeqCst (the explorer checks interleavings under SC, not
+        /// weak-memory reorderings); outside, the given ordering is
+        /// passed through to the std atomic.
+        fn point() -> bool {
+            match current() {
+                Some(s) => {
+                    s.point(false);
+                    true
+                }
+                None => false,
+            }
+        }
+
+        fn eff(in_model: bool, o: Ordering) -> Ordering {
+            if in_model {
+                Ordering::SeqCst
+            } else {
+                o
+            }
+        }
+
+        macro_rules! atomic_common {
+            ($name:ident, $std:ident, $t:ty) => {
+                #[derive(Debug, Default)]
+                pub struct $name {
+                    inner: std::sync::atomic::$std,
+                }
+
+                impl $name {
+                    pub const fn new(v: $t) -> $name {
+                        $name { inner: std::sync::atomic::$std::new(v) }
+                    }
+
+                    pub fn load(&self, o: Ordering) -> $t {
+                        let m = point();
+                        self.inner.load(eff(m, o))
+                    }
+
+                    pub fn store(&self, v: $t, o: Ordering) {
+                        let m = point();
+                        self.inner.store(v, eff(m, o))
+                    }
+
+                    pub fn swap(&self, v: $t, o: Ordering) -> $t {
+                        let m = point();
+                        self.inner.swap(v, eff(m, o))
+                    }
+
+                    pub fn compare_exchange(
+                        &self,
+                        cur: $t,
+                        new: $t,
+                        ok: Ordering,
+                        err: Ordering,
+                    ) -> Result<$t, $t> {
+                        let m = point();
+                        self.inner.compare_exchange(cur, new, eff(m, ok), eff(m, err))
+                    }
+
+                    pub fn into_inner(self) -> $t {
+                        self.inner.into_inner()
+                    }
+                }
+            };
+        }
+
+        macro_rules! atomic_int_ops {
+            ($name:ident, $t:ty) => {
+                impl $name {
+                    pub fn fetch_add(&self, v: $t, o: Ordering) -> $t {
+                        let m = point();
+                        self.inner.fetch_add(v, eff(m, o))
+                    }
+
+                    pub fn fetch_sub(&self, v: $t, o: Ordering) -> $t {
+                        let m = point();
+                        self.inner.fetch_sub(v, eff(m, o))
+                    }
+
+                    pub fn fetch_max(&self, v: $t, o: Ordering) -> $t {
+                        let m = point();
+                        self.inner.fetch_max(v, eff(m, o))
+                    }
+                }
+            };
+        }
+
+        atomic_common!(AtomicBool, AtomicBool, bool);
+        atomic_common!(AtomicUsize, AtomicUsize, usize);
+        atomic_common!(AtomicU64, AtomicU64, u64);
+        atomic_common!(AtomicU32, AtomicU32, u32);
+        atomic_int_ops!(AtomicUsize, usize);
+        atomic_int_ops!(AtomicU64, u64);
+        atomic_int_ops!(AtomicU32, u32);
+
+        impl AtomicBool {
+            pub fn fetch_or(&self, v: bool, o: Ordering) -> bool {
+                let m = point();
+                self.inner.fetch_or(v, eff(m, o))
+            }
+
+            pub fn fetch_and(&self, v: bool, o: Ordering) -> bool {
+                let m = point();
+                self.inner.fetch_and(v, eff(m, o))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering as StdOrdering};
+
+    /// Two incrementers through a mutex: never loses an update, and the
+    /// explorer runs more than one schedule.
+    #[test]
+    fn mutex_counter_is_exact() {
+        static EXECS: StdAtomicUsize = StdAtomicUsize::new(0);
+        crate::model(|| {
+            EXECS.fetch_add(1, StdOrdering::SeqCst);
+            let n = crate::sync::Arc::new(crate::sync::Mutex::new(0usize));
+            let n2 = n.clone();
+            let t = crate::thread::spawn(move || {
+                *n2.lock().unwrap() += 1;
+            });
+            *n.lock().unwrap() += 1;
+            t.join().unwrap();
+            assert_eq!(*n.lock().unwrap(), 2);
+        });
+        assert!(
+            EXECS.load(StdOrdering::SeqCst) > 1,
+            "a 2-thread model must explore multiple schedules"
+        );
+    }
+
+    /// The classic unsynchronized load/modify/store race: some schedule
+    /// must lose an update, and the explorer must find it.
+    #[test]
+    #[should_panic(expected = "loom model failed")]
+    fn explorer_finds_a_lost_update() {
+        crate::model(|| {
+            use crate::sync::atomic::{AtomicUsize, Ordering};
+            let n = crate::sync::Arc::new(AtomicUsize::new(0));
+            let n2 = n.clone();
+            let t = crate::thread::spawn(move || {
+                let v = n2.load(Ordering::SeqCst);
+                n2.store(v + 1, Ordering::SeqCst);
+            });
+            let v = n.load(Ordering::SeqCst);
+            n.store(v + 1, Ordering::SeqCst);
+            t.join().unwrap();
+            assert_eq!(n.load(Ordering::SeqCst), 2, "lost update");
+        });
+    }
+
+    /// Self-deadlock is reported, not hung.
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn deadlock_is_detected() {
+        crate::model(|| {
+            let m = crate::sync::Mutex::new(());
+            let _g1 = m.lock().unwrap();
+            let _g2 = m.lock().unwrap();
+        });
+    }
+
+    /// Condvar handoff: no lost wakeup when the flag flips under the
+    /// mutex before notify.
+    #[test]
+    fn condvar_handoff_completes() {
+        crate::model(|| {
+            let pair = crate::sync::Arc::new((
+                crate::sync::Mutex::new(false),
+                crate::sync::Condvar::new(),
+            ));
+            let p2 = pair.clone();
+            let t = crate::thread::spawn(move || {
+                let (m, cv) = &*p2;
+                *m.lock().unwrap() = true;
+                cv.notify_all();
+            });
+            let (m, cv) = &*pair;
+            let mut done = m.lock().unwrap();
+            while !*done {
+                done = cv.wait(done).unwrap();
+            }
+            drop(done);
+            t.join().unwrap();
+        });
+    }
+}
